@@ -1,0 +1,131 @@
+//! End-to-end system validation — the EXPERIMENTS.md §E2E run.
+//!
+//! Exercises every layer on real (small) workloads and proves they
+//! compose:
+//!
+//! 1. **L1/L2 via PJRT**: builds the two-moons affinity matrix with the
+//!    AOT-compiled Pallas kernel and runs every screening trigger through
+//!    the compiled screen kernel (when `make artifacts` has run; falls
+//!    back to the rust backends otherwise, and says so).
+//! 2. **L3**: solves the paper's two workloads (two-moons sizes + one
+//!    segmentation scene) with MinNorm alone and with AES / IES / IAES.
+//! 3. Verifies losslessness (identical minima) everywhere and reports the
+//!    headline metric of the paper: the IAES speedup.
+//!
+//! ```bash
+//! cargo run --release --example e2e_driver            # default sizes
+//! cargo run --release --example e2e_driver -- --full  # paper sizes
+//! ```
+
+use sfm_screen::coordinator::experiments::{run_variant, BenchConfig};
+use sfm_screen::coordinator::jobs::{BackendChoice, WorkloadSpec};
+use sfm_screen::coordinator::report::{fnum, Table};
+use sfm_screen::runtime::{AffinityExec, XlaScreener};
+use sfm_screen::screening::iaes::{solve_sfm_with_screening, IaesOptions};
+use sfm_screen::screening::RuleSet;
+use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let mut cfg = BenchConfig::default();
+    cfg.quiet = true;
+    cfg.out_dir = std::env::temp_dir().join("e2e_out");
+    if full {
+        cfg = cfg.full();
+    }
+
+    // ---- Layer status ----
+    println!("== layer status ==");
+    let xla_ok = match XlaScreener::at_default() {
+        Ok(s) => {
+            println!("L1/L2 screen kernel : XLA/PJRT (buckets {:?})", s.buckets());
+            true
+        }
+        Err(_) => {
+            println!("L1/L2 screen kernel : rust fallback (run `make artifacts`)");
+            false
+        }
+    };
+    match AffinityExec::at_default() {
+        Ok(a) => println!("L1/L2 affinity      : XLA/PJRT (buckets {:?})", a.buckets()),
+        Err(_) => println!("L1/L2 affinity      : rust fallback"),
+    }
+
+    // ---- Affinity built by the compiled Pallas kernel, fed into L3 ----
+    if let Ok(aff) = AffinityExec::at_default() {
+        let tm = TwoMoons::generate(TwoMoonsParams { p: 200, ..Default::default() });
+        let k = aff.affinity(&tm.points, tm.params.alpha)?;
+        let f = tm.kernel_cut_with_affinity(k);
+        let rep = solve_sfm_with_screening(&f, &IaesOptions::default())?;
+        let rust_rep =
+            solve_sfm_with_screening(&tm.kernel_cut(), &IaesOptions::default())?;
+        assert_eq!(rep.minimizer, rust_rep.minimizer, "kernel-built ≠ rust-built");
+        println!(
+            "affinity cross-check: minimizer identical via XLA-built K (|A*|={})",
+            rep.minimizer.len()
+        );
+    }
+
+    // ---- XLA screening on the hot path: prove composition ----
+    {
+        let mut xcfg = cfg.clone();
+        xcfg.backend = BackendChoice::Auto;
+        xcfg.warmup(&[400]);
+        let wl = WorkloadSpec::TwoMoons { p: 400, use_mi: false, seed: cfg.seed };
+        let x = run_variant(&wl, RuleSet::all(), &xcfg)?;
+        let r = run_variant(&wl, RuleSet::all(), &cfg)?;
+        assert_eq!(x.report.minimizer, r.report.minimizer,
+            "xla and rust screening backends must agree");
+        println!(
+            "screen-backend cross-check: identical minimizer at p=400 \
+             (xla {:.1} ms vs rust {:.1} ms — the rule is O(p) flops, so \
+             PJRT call overhead dominates at CPU scale; see EXPERIMENTS.md §Perf)",
+            x.wall.as_secs_f64() * 1e3,
+            r.wall.as_secs_f64() * 1e3
+        );
+    }
+
+    // ---- Headline: IAES speedups, both workloads (rust backend) ----
+    println!("\n== two-moons (kernel-cut objective) ==");
+    let mut t = Table::new(&["p", "MinNorm ms", "IAES ms", "speedup", "screened", "lossless"]);
+    for &p in &cfg.sizes {
+        let wl = WorkloadSpec::TwoMoons { p, use_mi: false, seed: cfg.seed };
+        let base = run_variant(&wl, RuleSet::none(), &cfg)?;
+        let iaes = run_variant(&wl, RuleSet::all(), &cfg)?;
+        let lossless = (base.report.minimum - iaes.report.minimum).abs()
+            < 1e-5 * (1.0 + base.report.minimum.abs());
+        t.push_row(vec![
+            p.to_string(),
+            fnum(base.wall.as_secs_f64() * 1e3),
+            fnum(iaes.wall.as_secs_f64() * 1e3),
+            fnum(base.wall.as_secs_f64() / iaes.wall.as_secs_f64()),
+            format!(
+                "{}+{}",
+                iaes.report.screened_active, iaes.report.screened_inactive
+            ),
+            lossless.to_string(),
+        ]);
+        assert!(lossless, "screening changed the optimum at p={p}");
+    }
+    println!("{}", t.render());
+
+    println!("== image segmentation (one scene) ==");
+    let wl = WorkloadSpec::Image { index: 0, scale: cfg.image_scale };
+    let base = run_variant(&wl, RuleSet::none(), &cfg)?;
+    let iaes = run_variant(&wl, RuleSet::all(), &cfg)?;
+    let lossless = (base.report.minimum - iaes.report.minimum).abs()
+        < 1e-5 * (1.0 + base.report.minimum.abs());
+    assert!(lossless);
+    println!(
+        "image1: MinNorm {:.1} ms -> IAES {:.1} ms = {:.2}x speedup (lossless: {lossless})",
+        base.wall.as_secs_f64() * 1e3,
+        iaes.wall.as_secs_f64() * 1e3,
+        base.wall.as_secs_f64() / iaes.wall.as_secs_f64(),
+    );
+
+    println!(
+        "\nE2E OK — all layers composed ({} screening backend on the hot path).",
+        if xla_ok { "XLA/PJRT" } else { "rust" }
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Image segmentation via SFM (paper §4.2).
+//!
+//! Generates a synthetic scene (GrabCut-instance stand-in), minimizes
+//! `F(A) = u(A) + Σ_{i∈A, j∉A} exp(−‖x_i − x_j‖²)` with IAES screening,
+//! and renders the recovered mask as ASCII art next to the ground truth.
+//!
+//! ```bash
+//! cargo run --release --example image_segmentation -- [scale]
+//! ```
+
+use sfm_screen::prelude::*;
+use sfm_screen::workloads::images::{ImageInstance, ImageParams};
+use std::time::Instant;
+
+fn render(h: usize, w: usize, mask: &[bool]) -> String {
+    let mut out = String::new();
+    // Downsample to at most 60 columns for the terminal.
+    let stride = (w / 60).max(1);
+    for r in (0..h).step_by(stride) {
+        for c in (0..w).step_by(stride) {
+            out.push(if mask[r * w + c] { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(1.0);
+    let img = ImageInstance::generate(
+        "demo",
+        ImageParams {
+            h: (48.0 * scale) as usize,
+            w: (42.0 * scale) as usize,
+            fg_a: 0.28,
+            fg_b: 0.24,
+            fg_mean: 0.75,
+            bg_mean: 0.30,
+            noise: 0.06,
+            texture: 0.08,
+            beta: 0.35,
+            seed: 2018,
+        },
+    );
+    println!(
+        "scene: {}x{} = {} pixels, {} edges (8-neighbor grid)",
+        img.params.h,
+        img.params.w,
+        img.num_pixels(),
+        img.num_edges()
+    );
+
+    let f = img.cut_fn();
+
+    let t0 = Instant::now();
+    let base = solve_sfm_with_screening(
+        &f,
+        &IaesOptions { rules: RuleSet::none(), ..Default::default() },
+    )?;
+    let t_base = t0.elapsed();
+
+    let t1 = Instant::now();
+    let iaes = solve_sfm_with_screening(&f, &IaesOptions::default())?;
+    let t_iaes = t1.elapsed();
+
+    assert!((base.minimum - iaes.minimum).abs() < 1e-5 * (1.0 + base.minimum.abs()));
+    println!("cut value          : {:.3}", iaes.minimum);
+    println!("IoU vs ground truth: {:.3}", img.iou(&iaes.minimizer));
+    println!(
+        "MinNorm alone      : {:>8.1} ms ({} iters)",
+        t_base.as_secs_f64() * 1e3,
+        base.iters
+    );
+    println!(
+        "IAES + MinNorm     : {:>8.1} ms ({} iters) -> {:.2}x speedup",
+        t_iaes.as_secs_f64() * 1e3,
+        iaes.iters,
+        t_base.as_secs_f64() / t_iaes.as_secs_f64()
+    );
+    println!(
+        "screened           : {} active (fg), {} inactive (bg) — note the\n\
+         paper's observation: the foreground is small, so IES does the\n\
+         heavy lifting while AES alone would barely shrink the problem.",
+        iaes.screened_active, iaes.screened_inactive
+    );
+
+    let mut mask = vec![false; img.num_pixels()];
+    for &i in &iaes.minimizer {
+        mask[i] = true;
+    }
+    // Write PPM renders next to the terminal output.
+    use sfm_screen::coordinator::render::{grayscale, mask_overlay};
+    let out = std::env::temp_dir().join("sfm_segmentation");
+    grayscale(img.params.h, img.params.w, &img.pixels)
+        .write_ppm(out.join("scene.ppm"))?;
+    mask_overlay(img.params.h, img.params.w, &img.pixels, &mask)
+        .write_ppm(out.join("segmentation.ppm"))?;
+    println!("\nPPM renders: {}", out.display());
+    println!("recovered segmentation        vs ground truth");
+    let left = render(img.params.h, img.params.w, &mask);
+    let right = render(img.params.h, img.params.w, &img.truth);
+    for (a, b) in left.lines().zip(right.lines()) {
+        println!("{a}   {b}");
+    }
+    Ok(())
+}

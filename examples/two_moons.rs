@@ -1,0 +1,82 @@
+//! Semi-supervised clustering on two-moons (paper §4.1).
+//!
+//! Generates the paper's dataset, minimizes the smoothness + label
+//! objective with and without IAES, and reports clustering accuracy,
+//! speedup, and the screening trajectory.
+//!
+//! ```bash
+//! cargo run --release --example two_moons -- [p] [--mi]
+//! ```
+
+use sfm_screen::coordinator::experiments::{rejection_curve, run_variant, BenchConfig};
+use sfm_screen::coordinator::jobs::{BackendChoice, WorkloadSpec};
+use sfm_screen::prelude::*;
+use sfm_screen::workloads::two_moons::TwoMoonsParams;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p: usize = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(400);
+    let use_mi = args.iter().any(|a| a == "--mi");
+
+    let tm = TwoMoons::generate(TwoMoonsParams { p, ..Default::default() });
+    println!(
+        "two-moons: p = {p}, {} labeled, objective = {}",
+        tm.labels.iter().filter(|l| l.is_some()).count(),
+        if use_mi { "GP mutual information (exact)" } else { "Gaussian-kernel cut" }
+    );
+
+    let mut cfg = BenchConfig::default();
+    cfg.quiet = true;
+    cfg.backend = BackendChoice::Rust; // see BenchConfig::backend docs
+    cfg.out_dir = std::env::temp_dir().join("two_moons_example");
+    cfg.warmup(&[p]);
+    let wl = WorkloadSpec::TwoMoons { p, use_mi, seed: tm.params.seed };
+
+    let base = run_variant(&wl, RuleSet::none(), &cfg)?;
+    let iaes = run_variant(&wl, RuleSet::all(), &cfg)?;
+
+    assert!(
+        (base.report.minimum - iaes.report.minimum).abs()
+            < 1e-5 * (1.0 + base.report.minimum.abs()),
+        "screening must be lossless"
+    );
+
+    let acc = tm.clustering_accuracy(&iaes.report.minimizer);
+    let acc = acc.max(1.0 - acc);
+    println!("clustering accuracy : {:.1}%", acc * 100.0);
+    println!("minimum             : {:.4}", iaes.report.minimum);
+    println!(
+        "MinNorm alone       : {:>8.3} ms ({} iters)",
+        base.wall.as_secs_f64() * 1e3,
+        base.report.iters
+    );
+    println!(
+        "IAES + MinNorm      : {:>8.3} ms ({} iters, {} triggers)",
+        iaes.wall.as_secs_f64() * 1e3,
+        iaes.report.iters,
+        iaes.report.triggers.len()
+    );
+    println!(
+        "speedup             : {:.2}x  (screening overhead {:.3} ms)",
+        base.wall.as_secs_f64() / iaes.wall.as_secs_f64(),
+        iaes.report.screen_time.as_secs_f64() * 1e3
+    );
+
+    // Screening trajectory (Figure 2's curve, textual).
+    println!("\nrejection ratio over iterations:");
+    let curve = rejection_curve(&iaes.report, p);
+    let step = (curve.len() / 12).max(1);
+    let last_idx = curve.len().saturating_sub(1);
+    for (i, (it, ratio)) in curve.iter().enumerate() {
+        if i % step != 0 && i != last_idx {
+            continue;
+        }
+        let bars = (ratio * 50.0).round() as usize;
+        println!("  iter {it:>5}  {:<50} {:.0}%", "#".repeat(bars), ratio * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""AOT pipeline: lower the L2 model to HLO **text** artifacts.
+
+HLO text — not ``.serialize()`` protos — is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids, which the
+published ``xla`` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all f64, ``return_tuple=True``):
+
+* ``screen_p{P}.hlo.txt``   for P in SCREEN_BUCKETS — the fused screening
+  kernel; rust pads the reduced problem into the smallest bucket ≥ p̂.
+* ``affinity_n{N}.hlo.txt`` for N in AFFINITY_BUCKETS — the two-moons
+  similarity matrix builder.
+* ``manifest.txt`` — bucket inventory + jax version, so `make artifacts`
+  can skip rebuilds when inputs are unchanged.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+SCREEN_BUCKETS = (64, 256, 1024, 4096, 16384)
+AFFINITY_BUCKETS = (256, 512, 1024, 2048)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_screen(p: int) -> str:
+    vec = jax.ShapeDtypeStruct((p,), jnp.float64)
+    scal = jax.ShapeDtypeStruct((), jnp.float64)
+    lowered = jax.jit(model.screen_step).lower(
+        vec, vec, scal, scal, scal, scal, scal
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_affinity(n: int) -> str:
+    vec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    scal = jax.ShapeDtypeStruct((), jnp.float64)
+    lowered = jax.jit(model.affinity).lower(vec, vec, scal)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: pathlib.Path, screen_buckets=SCREEN_BUCKETS,
+          affinity_buckets=AFFINITY_BUCKETS, verbose: bool = True) -> list[str]:
+    """Emit every artifact; returns the list of written stems."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for p in screen_buckets:
+        stem = f"screen_p{p}"
+        text = lower_screen(p)
+        (out_dir / f"{stem}.hlo.txt").write_text(text)
+        written.append(stem)
+        if verbose:
+            print(f"  {stem}: {len(text)} chars", file=sys.stderr)
+    for n in affinity_buckets:
+        stem = f"affinity_n{n}"
+        text = lower_affinity(n)
+        (out_dir / f"{stem}.hlo.txt").write_text(text)
+        written.append(stem)
+        if verbose:
+            print(f"  {stem}: {len(text)} chars", file=sys.stderr)
+    manifest = [
+        f"jax {jax.__version__}",
+        "dtype f64",
+        *(f"screen {p}" for p in screen_buckets),
+        *(f"affinity {n}" for n in affinity_buckets),
+    ]
+    (out_dir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    return written
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--quick", action="store_true",
+        help="only the smallest bucket of each kind (CI smoke)",
+    )
+    args = parser.parse_args()
+    out = pathlib.Path(args.out_dir)
+    if args.quick:
+        written = build(out, screen_buckets=SCREEN_BUCKETS[:1],
+                        affinity_buckets=AFFINITY_BUCKETS[:1])
+    else:
+        written = build(out)
+    print(f"wrote {len(written)} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

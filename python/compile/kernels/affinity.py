@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: tiled Gaussian affinity matrix.
+
+Computes ``K[i, j] = exp(-alpha * ((x_i-x_j)^2 + (y_i-y_j)^2))`` with a
+zero diagonal — the two-moons similarity matrix (paper §4.1, kernel
+bandwidth α = 1.5).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the output is tiled into
+``(B, B)`` VMEM blocks; each grid step loads only the `B` row coordinates
+and `B` column coordinates (two tiny vectors), broadcasts them inside
+VMEM, and writes one dense tile — the classic "pairwise op as outer
+broadcast" pattern that keeps HBM traffic at O(N²) output + O(N·grid)
+input. d = 2, so this is VPU work; no MXU involvement.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _affinity_block_kernel(alpha_ref, xi_ref, yi_ref, xj_ref, yj_ref, out_ref):
+    """One (B, B) output tile."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    alpha = alpha_ref[0]
+    xi = xi_ref[...]
+    yi = yi_ref[...]
+    xj = xj_ref[...]
+    yj = yj_ref[...]
+    dx = xi[:, None] - xj[None, :]
+    dy = yi[:, None] - yj[None, :]
+    k = jnp.exp(-alpha * (dx * dx + dy * dy))
+    # Zero the global diagonal: lane (a, b) is global (i*B + a, j*B + b).
+    blk = xi.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0) + i * blk
+    cols = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1) + j * blk
+    out_ref[...] = jnp.where(rows == cols, 0.0, k)
+
+
+def pick_block(n: int) -> int:
+    """Tile edge: 128 when possible (128×128 f64 tile = 128 KiB VMEM)."""
+    for blk in (128, 64, 32, 16, 8, 4, 2, 1):
+        if n % blk == 0:
+            return blk
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def affinity_pallas(xs, ys, alpha, *, interpret: bool = True):
+    """Tiled affinity matrix.
+
+    Args:
+      xs, ys: f64[N] coordinates (padded lanes produce harmless rows the
+              caller crops).
+      alpha:  f64[1] bandwidth.
+
+    Returns:
+      f64[N, N].
+    """
+    n = xs.shape[0]
+    blk = pick_block(n)
+    grid = (n // blk, n // blk)
+    row_spec = pl.BlockSpec((blk,), lambda i, j: (i,))
+    col_spec = pl.BlockSpec((blk,), lambda i, j: (j,))
+    alpha_spec = pl.BlockSpec((1,), lambda i, j: (0,))
+    out_spec = pl.BlockSpec((blk, blk), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _affinity_block_kernel,
+        grid=grid,
+        in_specs=[alpha_spec, row_spec, row_spec, col_spec, col_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, n), xs.dtype),
+        interpret=interpret,
+    )(alpha, xs, ys, xs, ys)
+
+
+def vmem_bytes_per_block(block: int, dtype_bytes: int = 8) -> int:
+    """VMEM estimate: one (B,B) output tile + four B-vectors + scalar."""
+    return block * block * dtype_bytes + 4 * block * dtype_bytes + dtype_bytes

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+reference.
+
+These mirror, bit-for-bit in f64, the rust reference implementation in
+``rust/src/screening/rules.rs``; pytest checks the Pallas kernels against
+them (and the rust integration tests check the compiled artifacts against
+the rust rules), closing the three-way equivalence loop:
+
+    pallas kernel  ==  jnp oracle  ==  rust rules
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_screen(w, valid, gap, f_v, f_c, p_hat, margin,
+               sum_w=None, l1_w=None):
+    """Element-wise screening rules (Lemma 2 + Lemma 3, Theorems 4-5).
+
+    Args:
+      w:      f64[P] padded primal iterate (junk beyond ``p_hat`` lanes,
+              but ``valid`` masks it out of the reductions).
+      valid:  f64[P] 1.0/0.0 lane mask.
+      gap:    duality gap G(w, s) >= 0 (scalar).
+      f_v:    F-hat(V-hat) (scalar).
+      f_c:    best super-level-set value F-hat(C) (scalar).
+      p_hat:  true ground-set size (scalar, >= 2 on this path).
+      margin: strictness margin (scalar).
+
+    Returns:
+      (aes1, ies1, aes2, ies2, wmin, wmax) — masks as f64 0/1, all f64[P],
+      padded lanes forced to 0.
+    """
+    w = jnp.asarray(w)
+    valid = jnp.asarray(valid)
+    gap = jnp.maximum(gap, 0.0)
+    p = p_hat
+    if sum_w is None:
+        sum_w = jnp.sum(w * valid)
+    if l1_w is None:
+        l1_w = jnp.sum(jnp.abs(w) * valid)
+    two_g = 2.0 * gap
+    r = jnp.sqrt(two_g)
+    omega_lo = f_v - 2.0 * f_c
+
+    # ---- Lemma 2: extrema of [w]_j over B ∩ P ----
+    sum_except = sum_w - w
+    b = 2.0 * (sum_except + f_v - (p - 1.0) * w)
+    c = (sum_except + f_v) ** 2 - (p - 1.0) * (two_g - w * w)
+    disc = jnp.maximum(b * b - 4.0 * p * c, 0.0)
+    sq = jnp.sqrt(disc)
+    wmin = (-b - sq) / (2.0 * p)
+    wmax = (-b + sq) / (2.0 * p)
+
+    aes1 = wmin > margin
+    ies1 = wmax < -margin
+
+    # ---- Lemma 3: ℓ1 maxima over the sign-constrained half-balls ----
+    safe_rad = jnp.sqrt(jnp.maximum(two_g - w * w, 0.0))
+    sq_pm1 = jnp.sqrt(jnp.maximum(p - 1.0, 0.0))
+    sq_2pg = jnp.sqrt(2.0 * p * gap)
+    sq_2g_over_p = jnp.sqrt(two_g / p)
+
+    l1max_nonpos = jnp.where(
+        w - sq_2g_over_p < 0.0,
+        l1_w - 2.0 * w + sq_2pg,
+        l1_w - w + sq_pm1 * safe_rad,
+    )
+    aes2 = (w > 0.0) & (w <= r) & (l1max_nonpos < omega_lo - margin)
+
+    l1max_nonneg = jnp.where(
+        w + sq_2g_over_p > 0.0,
+        l1_w + 2.0 * w + sq_2pg,
+        l1_w + w + sq_pm1 * safe_rad,
+    )
+    ies2 = (w < 0.0) & (-w <= r) & (l1max_nonneg < omega_lo - margin)
+
+    def to_f(m):
+        return m.astype(w.dtype) * valid
+
+    return (
+        to_f(aes1),
+        to_f(ies1),
+        to_f(aes2),
+        to_f(ies2),
+        wmin * valid,
+        wmax * valid,
+    )
+
+
+def ref_affinity(xs, ys, alpha):
+    """Dense Gaussian affinity ``exp(-alpha * |xi-xj|^2)``, zero diagonal.
+
+    Args:
+      xs, ys: f64[N] point coordinates.
+      alpha:  bandwidth (scalar).
+
+    Returns:
+      f64[N, N].
+    """
+    xs = jnp.asarray(xs)
+    ys = jnp.asarray(ys)
+    dx = xs[:, None] - xs[None, :]
+    dy = ys[:, None] - ys[None, :]
+    k = jnp.exp(-alpha * (dx * dx + dy * dy))
+    n = xs.shape[0]
+    return k * (1.0 - jnp.eye(n, dtype=xs.dtype))

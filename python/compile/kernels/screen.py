@@ -1,0 +1,142 @@
+"""L1 Pallas kernel: the fused screening-rule evaluation.
+
+One pass over the (padded) primal vector computes, per element, the
+Lemma-2 closed-form extrema over B ∩ P and the Lemma-3 ℓ1-maximum tests
+over B ∩ Ω, emitting the four rule masks plus the extrema — i.e. the
+entire per-trigger screening math of the paper in a single VMEM-resident
+sweep.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the two global reductions
+(Σw, ‖w‖₁) are computed once at the L2 level and enter the kernel as
+scalars, so the vector is read exactly once per trigger; each block of
+``block`` lanes lives in VMEM while ~40 flops/element of rule math run on
+the VPU. There is no matmul — the MXU is idle by design; the kernel is
+bandwidth-bound and the win over a naive rule-by-rule implementation is
+the 6→1 reduction in passes over HBM.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; structure, not wallclock, is what we optimize here (see
+EXPERIMENTS.md §Perf for the roofline estimate).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Scalar-vector layout (single (8,) operand so the scalar bundle occupies
+# one tiny VMEM block): gap, f_v, f_c, p_hat, margin, sum_w, l1_w, unused.
+SCAL_GAP = 0
+SCAL_FV = 1
+SCAL_FC = 2
+SCAL_P = 3
+SCAL_MARGIN = 4
+SCAL_SUMW = 5
+SCAL_L1W = 6
+N_SCALARS = 8
+
+
+def _screen_block_kernel(w_ref, valid_ref, scal_ref, aes1_ref, ies1_ref,
+                         aes2_ref, ies2_ref, wmin_ref, wmax_ref):
+    """Per-block body: pure element-wise rule math."""
+    w = w_ref[...]
+    valid = valid_ref[...]
+    gap = scal_ref[SCAL_GAP]
+    f_v = scal_ref[SCAL_FV]
+    f_c = scal_ref[SCAL_FC]
+    p = scal_ref[SCAL_P]
+    margin = scal_ref[SCAL_MARGIN]
+    sum_w = scal_ref[SCAL_SUMW]
+    l1_w = scal_ref[SCAL_L1W]
+
+    two_g = 2.0 * gap
+    r = jnp.sqrt(two_g)
+    omega_lo = f_v - 2.0 * f_c
+
+    # Lemma 2: quadratic p t^2 + b t + c <= 0 in t = [w]_j over B ∩ P.
+    sum_except = sum_w - w
+    b = 2.0 * (sum_except + f_v - (p - 1.0) * w)
+    c = (sum_except + f_v) ** 2 - (p - 1.0) * (two_g - w * w)
+    disc = jnp.maximum(b * b - 4.0 * p * c, 0.0)
+    sq = jnp.sqrt(disc)
+    wmin = (-b - sq) / (2.0 * p)
+    wmax = (-b + sq) / (2.0 * p)
+
+    aes1 = wmin > margin
+    ies1 = wmax < -margin
+
+    # Lemma 3: closed-form ℓ1 maxima over the sign-constrained half-balls.
+    safe_rad = jnp.sqrt(jnp.maximum(two_g - w * w, 0.0))
+    sq_pm1 = jnp.sqrt(jnp.maximum(p - 1.0, 0.0))
+    sq_2pg = jnp.sqrt(2.0 * p * gap)
+    sq_2g_over_p = jnp.sqrt(two_g / p)
+
+    l1max_nonpos = jnp.where(
+        w - sq_2g_over_p < 0.0,
+        l1_w - 2.0 * w + sq_2pg,
+        l1_w - w + sq_pm1 * safe_rad,
+    )
+    aes2 = (w > 0.0) & (w <= r) & (l1max_nonpos < omega_lo - margin)
+
+    l1max_nonneg = jnp.where(
+        w + sq_2g_over_p > 0.0,
+        l1_w + 2.0 * w + sq_2pg,
+        l1_w + w + sq_pm1 * safe_rad,
+    )
+    ies2 = (w < 0.0) & (-w <= r) & (l1max_nonneg < omega_lo - margin)
+
+    dt = w.dtype
+    aes1_ref[...] = aes1.astype(dt) * valid
+    ies1_ref[...] = ies1.astype(dt) * valid
+    aes2_ref[...] = aes2.astype(dt) * valid
+    ies2_ref[...] = ies2.astype(dt) * valid
+    wmin_ref[...] = wmin * valid
+    wmax_ref[...] = wmax * valid
+
+
+def pick_block(p: int) -> int:
+    """Largest power-of-two block ≤ 512 dividing ``p`` (≈ 4 KiB f64 lanes,
+    comfortably VMEM-resident next to the five outputs)."""
+    for blk in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if p % blk == 0:
+            return blk
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def screen_pallas(w, valid, scal, *, interpret: bool = True):
+    """Run the fused screening kernel over a padded vector.
+
+    Args:
+      w:     f64[P] padded primal.
+      valid: f64[P] lane mask.
+      scal:  f64[8] scalar bundle (see module constants).
+
+    Returns:
+      Tuple of six f64[P]: aes1, ies1, aes2, ies2, wmin, wmax.
+    """
+    p = w.shape[0]
+    blk = pick_block(p)
+    grid = (p // blk,)
+    vec_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    scal_spec = pl.BlockSpec((N_SCALARS,), lambda i: (0,))
+    out_shape = tuple(
+        jax.ShapeDtypeStruct((p,), w.dtype) for _ in range(6)
+    )
+    return pl.pallas_call(
+        _screen_block_kernel,
+        grid=grid,
+        in_specs=[vec_spec, vec_spec, scal_spec],
+        out_specs=tuple(vec_spec for _ in range(6)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(w, valid, scal)
+
+
+def vmem_bytes_per_block(block: int, dtype_bytes: int = 8) -> int:
+    """VMEM footprint estimate: 2 input blocks + 6 output blocks + the
+    scalar bundle (used by the §Perf roofline notes)."""
+    return (2 + 6) * block * dtype_bytes + N_SCALARS * dtype_bytes

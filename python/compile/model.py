@@ -1,0 +1,78 @@
+"""L2: the JAX compute graph composed from the L1 Pallas kernels.
+
+Two entry points, both AOT-lowered by :mod:`compile.aot` to HLO text and
+executed from rust via PJRT (python never runs on the request path):
+
+* :func:`screen_step` — the per-trigger screening evaluation. The two
+  global reductions (Σw, ‖w‖₁) are computed here with masked ``jnp``
+  sums (XLA fuses them into the surrounding graph) and enter the fused
+  Pallas kernel as scalars, so the vector is swept exactly once.
+* :func:`affinity` — the two-moons Gaussian similarity matrix.
+
+All math is f64: screening certificates must not flip under round-off
+(the rust side additionally applies a strictness margin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import affinity as affinity_kernel
+from compile.kernels import screen as screen_kernel
+
+jax.config.update("jax_enable_x64", True)
+
+
+def screen_step(w, valid, gap, f_v, f_c, p_hat, margin):
+    """Evaluate all four screening rules on a padded problem.
+
+    Args:
+      w:      f64[P] padded primal iterate.
+      valid:  f64[P] 1.0/0.0 lane mask (first ``p_hat`` lanes valid).
+      gap:    f64[] duality gap.
+      f_v:    f64[] F-hat(V-hat).
+      f_c:    f64[] best super-level-set value.
+      p_hat:  f64[] true ground-set size.
+      margin: f64[] strictness margin.
+
+    Returns:
+      (aes1, ies1, aes2, ies2, wmin, wmax): six f64[P] arrays; the masks
+      are 0/1-valued and zero on padded lanes.
+    """
+    w = w * valid  # keep padded lanes inert even if the caller left junk
+    sum_w = jnp.sum(w * valid)
+    l1_w = jnp.sum(jnp.abs(w) * valid)
+    scal = jnp.stack(
+        [
+            jnp.maximum(gap, 0.0),
+            f_v,
+            f_c,
+            p_hat,
+            margin,
+            sum_w,
+            l1_w,
+            jnp.zeros_like(gap),
+        ]
+    )
+    return screen_kernel.screen_pallas(w, valid, scal)
+
+
+def affinity(xs, ys, alpha):
+    """Gaussian affinity matrix via the tiled Pallas kernel.
+
+    Args:
+      xs, ys: f64[N] coordinates.
+      alpha:  f64[] bandwidth.
+
+    Returns:
+      f64[N, N] with zero diagonal.
+    """
+    return affinity_kernel.affinity_pallas(xs, ys, jnp.reshape(alpha, (1,)))
+
+
+def screen_step_reference(w, valid, gap, f_v, f_c, p_hat, margin):
+    """jnp-oracle variant of :func:`screen_step` (pytest cross-check)."""
+    from compile.kernels.ref import ref_screen
+
+    return ref_screen(w * valid, valid, gap, f_v, f_c, p_hat, margin)

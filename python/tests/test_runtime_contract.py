@@ -1,0 +1,51 @@
+"""Contract tests between the python AOT pipeline and the rust runtime:
+artifact naming, bucket ladders, and input layout must match what
+`rust/src/runtime/mod.rs` expects (screen_p{P}/affinity_n{N}, 7/3 inputs,
+6/1 outputs, f64)."""
+
+import pathlib
+import re
+
+from compile import aot
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+
+def test_artifact_stems_match_rust_parsers():
+    """rust parses `screen_p{N}` / `affinity_n{N}` stems — the aot naming
+    must keep that contract."""
+    for p in aot.SCREEN_BUCKETS:
+        stem = f"screen_p{p}"
+        m = re.fullmatch(r"screen_p(\d+)", stem)
+        assert m and int(m.group(1)) == p
+    for n in aot.AFFINITY_BUCKETS:
+        stem = f"affinity_n{n}"
+        m = re.fullmatch(r"affinity_n(\d+)", stem)
+        assert m and int(m.group(1)) == n
+
+
+def test_rust_runtime_source_agrees_on_names():
+    src = (REPO / "rust" / "src" / "runtime" / "mod.rs").read_text()
+    assert 'format!("screen_p{bucket}")' in src
+    assert 'format!("affinity_n{bucket}")' in src
+    # rust builds exactly 7 inputs for screen and 3 for affinity.
+    assert src.count("xla::Literal::scalar") >= 5
+
+
+def test_bucket_ladders_are_sorted_and_padded_pow2ish():
+    assert list(aot.SCREEN_BUCKETS) == sorted(aot.SCREEN_BUCKETS)
+    assert list(aot.AFFINITY_BUCKETS) == sorted(aot.AFFINITY_BUCKETS)
+    # Each bucket must be divisible by its Pallas block (whole-grid tiling).
+    from compile.kernels.screen import pick_block as screen_block
+    from compile.kernels.affinity import pick_block as affinity_block
+
+    for p in aot.SCREEN_BUCKETS:
+        assert p % screen_block(p) == 0
+    for n in aot.AFFINITY_BUCKETS:
+        assert n % affinity_block(n) == 0
+
+
+def test_makefile_artifact_stamp_matches_manifest():
+    mk = (REPO / "Makefile").read_text()
+    assert "artifacts/manifest.txt" in mk, "make stamp must be the manifest"
+    assert "compile.aot" in mk

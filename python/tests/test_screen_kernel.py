@@ -1,0 +1,153 @@
+"""Pallas screening kernel vs the jnp oracle — the core L1 correctness
+signal, swept over shapes and regimes with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import ref_screen
+from compile.kernels.screen import (
+    N_SCALARS,
+    SCAL_FC,
+    SCAL_FV,
+    SCAL_GAP,
+    SCAL_L1W,
+    SCAL_MARGIN,
+    SCAL_P,
+    SCAL_SUMW,
+    pick_block,
+    screen_pallas,
+    vmem_bytes_per_block,
+)
+
+OUT_NAMES = ("aes1", "ies1", "aes2", "ies2", "wmin", "wmax")
+
+
+def run_both(w, p_hat, gap, f_v, f_c, margin=1e-10):
+    """Pad, build the scalar bundle, run kernel + oracle."""
+    p_pad = w.shape[0]
+    valid = np.zeros(p_pad)
+    valid[:p_hat] = 1.0
+    w = np.asarray(w, dtype=np.float64) * valid
+    sum_w = float(np.sum(w[:p_hat]))
+    l1_w = float(np.sum(np.abs(w[:p_hat])))
+    scal = np.zeros(N_SCALARS)
+    scal[SCAL_GAP] = max(gap, 0.0)
+    scal[SCAL_FV] = f_v
+    scal[SCAL_FC] = f_c
+    scal[SCAL_P] = p_hat
+    scal[SCAL_MARGIN] = margin
+    scal[SCAL_SUMW] = sum_w
+    scal[SCAL_L1W] = l1_w
+    got = screen_pallas(jnp.asarray(w), jnp.asarray(valid), jnp.asarray(scal))
+    # Feed the oracle the *same* reduction values the kernel receives, so
+    # the comparison isolates the element-wise math (summation order is
+    # the caller's concern; rust supplies its own reductions identically).
+    want = ref_screen(jnp.asarray(w), jnp.asarray(valid), scal[SCAL_GAP],
+                      f_v, f_c, float(p_hat), margin,
+                      sum_w=sum_w, l1_w=l1_w)
+    return got, want
+
+
+@hypothesis.settings(max_examples=40, deadline=None)
+@hypothesis.given(
+    p_hat=st.integers(min_value=2, max_value=96),
+    pad_to=st.sampled_from([0, 1, 2]),  # 0: exact, else next pow2-ish
+    gap=st.floats(min_value=0.0, max_value=5.0),
+    fv_off=st.floats(min_value=-3.0, max_value=3.0),
+    f_c=st.floats(min_value=-4.0, max_value=0.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_oracle(p_hat, pad_to, gap, fv_off, f_c, seed):
+    rng = np.random.default_rng(seed)
+    p_pad = p_hat if pad_to == 0 else 1 << (p_hat - 1).bit_length() + (pad_to - 1)
+    p_pad = max(p_pad, p_hat)
+    w = np.zeros(p_pad)
+    w[:p_hat] = rng.normal(size=p_hat)
+    f_v = -float(np.sum(w[:p_hat])) + fv_off
+    got, want = run_both(w, p_hat, gap, f_v, f_c)
+    # Extrema: the quadratic discriminant cancels catastrophically near
+    # ball/plane tangency, and XLA may contract to FMA inside the jitted
+    # kernel — allow a square-root-amplified tolerance there.
+    for name, g, r in zip(OUT_NAMES[4:], got[4:], want[4:]):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(r), rtol=1e-6, atol=1e-7,
+            err_msg=f"output {name}")
+    # Masks: must agree exactly except within that same numerical band of
+    # a decision boundary.
+    wmin, wmax = np.asarray(want[4]), np.asarray(want[5])
+    near = np.minimum(np.abs(wmin), np.abs(wmax)) < 1e-6
+    for name, g, r in zip(OUT_NAMES[:4], got[:4], want[:4]):
+        g, r = np.asarray(g), np.asarray(r)
+        mismatch = (g != r) & ~near
+        assert not mismatch.any(), f"{name} differs away from boundary"
+
+
+@pytest.mark.parametrize("p_pad", [2, 8, 64, 256, 1024])
+def test_shapes_and_padding(p_pad):
+    p_hat = max(2, p_pad - 3)
+    rng = np.random.default_rng(7)
+    w = np.zeros(p_pad)
+    w[:p_hat] = rng.normal(size=p_hat)
+    got, _ = run_both(w, p_hat, 0.3, -float(np.sum(w[:p_hat])), -0.5)
+    for name, g in zip(OUT_NAMES, got):
+        g = np.asarray(g)
+        assert g.shape == (p_pad,), name
+        assert np.all(g[p_hat:] == 0.0), f"{name} pollutes padded lanes"
+
+
+def test_masks_are_binary_and_disjoint():
+    rng = np.random.default_rng(11)
+    w = rng.normal(size=64)
+    got, _ = run_both(w, 64, 0.05, -float(w.sum()), -0.4)
+    aes1, ies1, aes2, ies2 = (np.asarray(g) for g in got[:4])
+    for m in (aes1, ies1, aes2, ies2):
+        assert set(np.unique(m)).issubset({0.0, 1.0})
+    # An element certified active by rule 1 can't be certified inactive
+    # by rule 1 (wmin > 0 and wmax < 0 are mutually exclusive).
+    assert not np.any((aes1 > 0) & (ies1 > 0))
+
+
+def test_tight_gap_decides_by_sign():
+    w = np.array([0.5, -0.3, 1.2, -2.0])
+    got, _ = run_both(w, 4, 1e-14, -float(w.sum()), 0.0)
+    aes1, ies1 = np.asarray(got[0]), np.asarray(got[1])
+    np.testing.assert_array_equal(aes1, [1.0, 0.0, 1.0, 0.0])
+    np.testing.assert_array_equal(ies1, [0.0, 1.0, 0.0, 1.0])
+
+
+def test_huge_gap_decides_nothing():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=32)
+    got, _ = run_both(w, 32, 1e6, -float(w.sum()), 0.0)
+    for name, m in zip(OUT_NAMES[:4], got[:4]):
+        assert not np.any(np.asarray(m) > 0), name
+
+
+def test_wmin_le_wmax_and_contains_center():
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=48)
+    got, _ = run_both(w, 48, 0.7, -float(w.sum()), -0.2)
+    wmin, wmax = np.asarray(got[4]), np.asarray(got[5])
+    assert np.all(wmin <= wmax + 1e-12)
+    # The plane passes through w-hat here, so w-hat ∈ B ∩ P and each
+    # coordinate must lie within its own extrema.
+    assert np.all(wmin <= w + 1e-9)
+    assert np.all(w <= wmax + 1e-9)
+
+
+@pytest.mark.parametrize("p,expect", [(512, 512), (96, 32), (7, 7), (1024, 512)])
+def test_pick_block(p, expect):
+    blk = pick_block(p)
+    assert p % blk == 0
+    if p == 7:
+        assert blk == 1
+    else:
+        assert blk == expect or p % expect != 0
+
+
+def test_vmem_estimate_reasonable():
+    # 512-lane f64 block: 8 streams -> 32 KiB — far under ~16 MiB VMEM.
+    assert vmem_bytes_per_block(512) < 64 * 1024

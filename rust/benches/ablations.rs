@@ -1,0 +1,65 @@
+//! Bench: the DESIGN.md ablations.
+//!
+//! * A1 — trigger frequency ρ (Remark 5): cost/benefit of screening more
+//!   or less often.
+//! * A2 — rule-pair contributions: ball∩plane (AES-1/IES-1) vs
+//!   ball∩annulus (AES-2/IES-2) vs both.
+//! * A3 — solver A: min-norm point vs pairwise Frank–Wolfe (Remark 2),
+//!   each with and without IAES.
+//! * A4 — deferred-contraction threshold (our engineering refinement of
+//!   the restart schedule; 0.0 = the literal Algorithm 2).
+
+mod common;
+
+use sfm_screen::coordinator::experiments as exp;
+use sfm_screen::coordinator::jobs::WorkloadSpec;
+use sfm_screen::coordinator::report::{fnum, Table};
+use sfm_screen::screening::RuleSet;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    let p = std::env::var("SFM_BENCH_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| *cfg.sizes.last().unwrap_or(&400));
+
+    println!("\nAblation A1 — trigger decay rho (Remark 5), p = {p}");
+    let t = exp::ablation_rho(&cfg, p, &[0.1, 0.3, 0.5, 0.7, 0.9])?;
+    println!("{}", t.render());
+
+    println!("Ablation A2 — rule-pair contributions, p = {p}");
+    let t = exp::ablation_rules(&cfg, p)?;
+    println!("{}", t.render());
+
+    println!("Ablation A3 — solver choice (Remark 2), p = {p}");
+    let t = exp::ablation_solver(&cfg, p)?;
+    println!("{}", t.render());
+
+    println!("Ablation A4 — deferred-contraction threshold, p = {p}");
+    let mut t4 = Table::new(&["frac", "wall(s)", "iters", "restarts"]);
+    let wl = WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed };
+    for frac in [0.0, 0.02, 0.05, 0.1, 0.2, 0.5] {
+        let mut c = cfg.clone();
+        c.min_reduction_frac = frac;
+        let run = exp::run_variant(&wl, RuleSet::all(), &c)?;
+        // Restarts = triggers that actually contracted (p_before changes).
+        let mut restarts = 0;
+        let mut last_p = None;
+        for tr in &run.report.triggers {
+            if last_p.is_some() && last_p != Some(tr.p_before) {
+                restarts += 1;
+            }
+            last_p = Some(tr.p_before);
+        }
+        t4.push_row(vec![
+            fnum(frac),
+            fnum(run.wall.as_secs_f64()),
+            run.report.iters.to_string(),
+            restarts.to_string(),
+        ]);
+    }
+    t4.write_csv(cfg.out_dir.join("ablation_contraction.csv"))?;
+    println!("{}", t4.render());
+    println!("CSV: {}/ablation_*.csv", cfg.out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Shared bench-harness plumbing (criterion is unavailable offline; each
+//! bench is a `harness = false` binary using [`coordinator::metrics`]).
+//!
+//! Environment knobs:
+//!
+//! * `SFM_BENCH_FULL=1`  — paper-scale sizes (two-moons 200..1000, ×4 images)
+//! * `SFM_BENCH_MI=1`    — exact GP mutual-information two-moons objective
+//! * `SFM_BENCH_SIZES=100,200` — explicit two-moons sizes
+//! * `SFM_BENCH_BACKEND=rust|xla|auto`
+//! * `SFM_BENCH_OUT=dir` — CSV output directory (default `bench_out`)
+//! * `SFM_BENCH_EPS`, `SFM_BENCH_RHO`, `SFM_BENCH_SEED`
+
+use sfm_screen::coordinator::experiments::BenchConfig;
+use sfm_screen::coordinator::jobs::BackendChoice;
+
+/// Build the bench configuration from the environment.
+pub fn config_from_env() -> BenchConfig {
+    let mut cfg = BenchConfig::default();
+    cfg.quiet = std::env::var("SFM_BENCH_VERBOSE").is_err();
+    if env_flag("SFM_BENCH_FULL") {
+        cfg = cfg.full();
+    }
+    if env_flag("SFM_BENCH_MI") {
+        cfg.use_mi = true;
+        // The exact O(p^3)-per-pass oracle needs smaller defaults.
+        if !env_flag("SFM_BENCH_FULL") && std::env::var("SFM_BENCH_SIZES").is_err() {
+            cfg.sizes = vec![50, 100, 150, 200];
+        }
+    }
+    if let Ok(s) = std::env::var("SFM_BENCH_SIZES") {
+        cfg.sizes = s
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect();
+    }
+    if let Ok(b) = std::env::var("SFM_BENCH_BACKEND") {
+        cfg.backend = BackendChoice::parse(&b).expect("SFM_BENCH_BACKEND");
+    }
+    if let Ok(d) = std::env::var("SFM_BENCH_OUT") {
+        cfg.out_dir = d.into();
+    }
+    if let Ok(v) = std::env::var("SFM_BENCH_EPS") {
+        cfg.eps = v.parse().expect("SFM_BENCH_EPS");
+    }
+    if let Ok(v) = std::env::var("SFM_BENCH_RHO") {
+        cfg.rho = v.parse().expect("SFM_BENCH_RHO");
+    }
+    if let Ok(v) = std::env::var("SFM_BENCH_SEED") {
+        cfg.seed = v.parse().expect("SFM_BENCH_SEED");
+    }
+    cfg
+}
+
+fn env_flag(name: &str) -> bool {
+    matches!(std::env::var(name).as_deref(), Ok("1") | Ok("true") | Ok("yes"))
+}

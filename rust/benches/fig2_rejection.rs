@@ -1,0 +1,13 @@
+//! Bench: **Figure 2** — rejection ratios of IAES over iterations on
+//! two-moons, one CSV per problem size (`bench_out/fig2_p{p}.csv`).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    let table = sfm_screen::coordinator::experiments::fig2(&cfg)?;
+    println!("\nFigure 2 — rejection ratio curves (summary)");
+    println!("{}", table.render());
+    println!("CSV curves: {}/fig2_p*.csv", cfg.out_dir.display());
+    Ok(())
+}

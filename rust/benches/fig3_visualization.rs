@@ -1,0 +1,18 @@
+//! Bench: **Figure 3** — visualization of the IAES screening process on
+//! two-moons (p = 400): point status (active / inactive / unknown) after
+//! every trigger, one CSV per snapshot (`bench_out/fig3_step{k}.csv`).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    let p = std::env::var("SFM_BENCH_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let table = sfm_screen::coordinator::experiments::fig3(&cfg, p)?;
+    println!("\nFigure 3 — screening process snapshots (p = {p})");
+    println!("{}", table.render());
+    println!("CSV snapshots: {}/fig3_step*.csv", cfg.out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Bench: **Figure 4** — rejection ratios of IAES over iterations on the
+//! five image-segmentation instances (`bench_out/fig4_image*.csv`).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    let table = sfm_screen::coordinator::experiments::fig4(&cfg)?;
+    println!("\nFigure 4 — rejection ratio curves on images (summary)");
+    println!("{}", table.render());
+    println!("CSV curves: {}/fig4_image*.csv", cfg.out_dir.display());
+    Ok(())
+}

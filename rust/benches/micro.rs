@@ -1,0 +1,122 @@
+//! Micro-benchmarks of the hot paths — the §Perf evidence base.
+//!
+//! * greedy `prefix_gains` oracle throughput per function family,
+//! * one full min-norm major iteration (greedy + corral update),
+//! * PAV refinement,
+//! * screening-rule evaluation: rust backend vs the AOT XLA kernel
+//!   (quantifies the PJRT call-overhead crossover discussed in
+//!   EXPERIMENTS.md §Perf).
+
+mod common;
+
+use sfm_screen::coordinator::metrics::{bench, fmt_duration, Summary};
+use sfm_screen::coordinator::report::Table;
+use sfm_screen::lovasz::{greedy_base_vertex, GreedyWorkspace};
+use sfm_screen::rng::Pcg64;
+use sfm_screen::screening::rules::RustScreener;
+use sfm_screen::screening::{RuleSet, ScreenInputs, Screener};
+use sfm_screen::solvers::minnorm::{MinNormOptions, MinNormPoint};
+use sfm_screen::solvers::pav::pav_nonincreasing_into;
+use sfm_screen::solvers::ProxSolver;
+use sfm_screen::submodular::Submodular;
+use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
+use std::time::Duration;
+
+fn row(name: &str, p: usize, s: &Summary) -> Vec<String> {
+    vec![
+        name.into(),
+        p.to_string(),
+        fmt_duration(Duration::from_secs_f64(s.median)),
+        fmt_duration(Duration::from_secs_f64(s.min)),
+        format!("{:.1}", 1.0 / s.median),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    let mut table = Table::new(&["op", "p", "median", "min", "ops/s"]);
+    let mut rng = Pcg64::seeded(77);
+
+    for &p in &[256usize, 1024, 4096] {
+        let tm = TwoMoons::generate(TwoMoonsParams { p, ..Default::default() });
+
+        // Greedy pass: dense kernel cut (O(p²)) and sparse kNN cut (O(pk)).
+        let dense = tm.kernel_cut();
+        let sparse = tm.knn_cut(10, 1.0);
+        let w = rng.normal_vec(p);
+        let mut ws = GreedyWorkspace::new(p);
+        let mut s_out = vec![0.0; p];
+        let (sum, _) = bench(3, 10, || {
+            greedy_base_vertex(&dense, &w, &mut ws, &mut s_out);
+            s_out[0]
+        });
+        table.push_row(row("greedy dense-cut", p, &sum));
+        let (sum, _) = bench(3, 20, || {
+            greedy_base_vertex(&sparse, &w, &mut ws, &mut s_out);
+            s_out[0]
+        });
+        table.push_row(row("greedy knn-cut", p, &sum));
+
+        // One min-norm major iteration on the sparse objective.
+        let mut solver = MinNormPoint::new(&sparse, MinNormOptions::default(), None);
+        let (sum, _) = bench(3, 20, || solver.step(&sparse).gap);
+        table.push_row(row("minnorm step", p, &sum));
+
+        // PAV refinement.
+        let t = rng.normal_vec(p);
+        let mut out = vec![0.0; p];
+        let (sum, _) = bench(3, 50, || {
+            pav_nonincreasing_into(&t, &mut out);
+            out[0]
+        });
+        table.push_row(row("pav", p, &sum));
+
+        // Screening rules: rust vs xla.
+        let wv = rng.normal_vec(p);
+        let gap = 0.3;
+        let f_v = -wv.iter().sum::<f64>();
+        let inputs = ScreenInputs { w: &wv, gap, f_v, f_c: -0.4 };
+        let rust = RustScreener::default();
+        let (sum, _) = bench(3, 50, || rust.screen(&inputs, RuleSet::all()).identified());
+        table.push_row(row("screen rust", p, &sum));
+        if let Ok(xla) = sfm_screen::runtime::XlaScreener::at_default() {
+            let _ = xla.screen(&inputs, RuleSet::all()); // compile warmup
+            let (sum, _) =
+                bench(3, 30, || xla.screen(&inputs, RuleSet::all()).identified());
+            table.push_row(row("screen xla", p, &sum));
+        }
+    }
+
+    // Queyranne baseline (combinatorial; requires symmetric F, so use the
+    // unlabeled two-moons cut — zero unaries).
+    for &p in &[32usize, 64] {
+        let tm =
+            TwoMoons::generate(TwoMoonsParams { p, labeled: 0, ..Default::default() });
+        let f = tm.knn_cut(10, 1.0);
+        let (sum, _) = bench(1, 3, || {
+            sfm_screen::solvers::queyranne::queyranne(&f).minimum
+        });
+        table.push_row(row("queyranne sym-cut", p, &sum));
+    }
+
+    // Gaussian-MI oracle (the paper-exact objective) at small p.
+    for &p in &[64usize, 128] {
+        let tm = TwoMoons::generate(TwoMoonsParams { p, ..Default::default() });
+        let mi = tm.gaussian_mi(0.1);
+        let w = rng.normal_vec(p);
+        let mut ws = GreedyWorkspace::new(p);
+        let mut s_out = vec![0.0; p];
+        let (sum, _) = bench(1, 5, || {
+            greedy_base_vertex(&mi, &w, &mut ws, &mut s_out);
+            s_out[0]
+        });
+        table.push_row(row("greedy gp-mi", p, &sum));
+        let _ = mi.ground_size();
+    }
+
+    println!("\nMicro-benchmarks (hot paths)");
+    println!("{}", table.render());
+    table.write_csv(cfg.out_dir.join("micro.csv"))?;
+    println!("CSV: {}", cfg.out_dir.join("micro.csv").display());
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! Bench: **Table 1** — running time for SFM on two-moons.
+//!
+//! Regenerates the paper's Table 1 rows (MinNorm vs AES+ / IES+ /
+//! IAES+MinNorm with per-variant screening cost and speedups). CSV lands
+//! in `bench_out/table1.csv`.
+//!
+//! ```bash
+//! cargo bench --bench table1_two_moons            # scaled-down sizes
+//! SFM_BENCH_FULL=1 cargo bench --bench table1_two_moons   # paper sizes
+//! SFM_BENCH_MI=1   cargo bench --bench table1_two_moons   # exact GP-MI objective
+//! ```
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    println!("\nTable 1 — two-moons running time (seconds) & speedups");
+    println!(
+        "objective: {}, eps = {:.0e}, rho = {}, backend = {:?}\n",
+        if cfg.use_mi { "GP mutual information (paper-exact)" } else { "kNN Gaussian cut" },
+        cfg.eps,
+        cfg.rho,
+        cfg.backend
+    );
+    let table = sfm_screen::coordinator::experiments::table1(&cfg)?;
+    println!("{}", table.render());
+    println!("CSV: {}", cfg.out_dir.join("table1.csv").display());
+    Ok(())
+}

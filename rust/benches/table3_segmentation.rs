@@ -1,0 +1,24 @@
+//! Bench: **Tables 2 + 3** — image-segmentation statistics and running
+//! times (synthetic GrabCut stand-ins; DESIGN.md §Substitutions).
+//!
+//! ```bash
+//! cargo bench --bench table3_segmentation
+//! SFM_BENCH_FULL=1 cargo bench --bench table3_segmentation  # ~paper pixel counts
+//! ```
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = common::config_from_env();
+    let (t2, t3) = sfm_screen::coordinator::experiments::table3(&cfg)?;
+    println!("\nTable 2 — image segmentation instance statistics");
+    println!("{}", t2.render());
+    println!("Table 3 — running time (seconds) & speedups");
+    println!("{}", t3.render());
+    println!(
+        "CSV: {} and {}",
+        cfg.out_dir.join("table2.csv").display(),
+        cfg.out_dir.join("table3.csv").display()
+    );
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Hand-rolled CLI (no `clap` in the offline environment).
+//!
+//! Grammar: `sfm-screen <command> [--key value | --flag]...`. Flags merge
+//! over an optional `--config <file>` into a [`Config`], from which the
+//! typed [`BenchConfig`] is built.
+
+use crate::config::Config;
+use crate::coordinator::jobs::BackendChoice;
+use crate::coordinator::BenchConfig;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    /// Subcommand (e.g. `table1`).
+    pub command: String,
+    /// Flag map (`--eps 1e-6` → `eps = 1e-6`; bare `--full` → `full = true`).
+    pub flags: Config,
+}
+
+/// Boolean-valued flags that take no argument.
+const BARE_FLAGS: &[&str] = &["full", "mi", "quiet", "help", "version", "json"];
+
+/// Parse an argument vector (without argv[0]).
+pub fn parse_args(args: &[String]) -> Result<Cli> {
+    let mut command = String::new();
+    let mut flags = Config::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if BARE_FLAGS.contains(&key) {
+                flags.set(key, "true");
+                i += 1;
+            } else {
+                let val = args
+                    .get(i + 1)
+                    .with_context(|| format!("flag --{key} needs a value"))?;
+                flags.set(key, val.clone());
+                i += 2;
+            }
+        } else if command.is_empty() {
+            command = a.clone();
+            i += 1;
+        } else {
+            bail!("unexpected positional argument `{a}`");
+        }
+    }
+    if command.is_empty() {
+        command = "help".into();
+    }
+    // Merge config file under explicit flags.
+    if let Some(path) = flags.get("config").map(PathBuf::from) {
+        let mut merged = Config::load(&path)?;
+        merged.merge(&flags);
+        flags = merged;
+    }
+    Ok(Cli { command, flags })
+}
+
+/// Build the typed bench configuration from parsed flags.
+pub fn bench_config(flags: &Config) -> Result<BenchConfig> {
+    let mut cfg = BenchConfig::default();
+    if flags.get_bool("full", false)? {
+        cfg = cfg.full();
+    }
+    cfg.sizes = flags.get_usize_list("sizes", &cfg.sizes)?;
+    cfg.image_scale = flags.get_f64("image-scale", cfg.image_scale)?;
+    cfg.eps = flags.get_f64("eps", cfg.eps)?;
+    cfg.rho = flags.get_f64("rho", cfg.rho)?;
+    cfg.seed = flags.get_u64("seed", cfg.seed)?;
+    cfg.out_dir = PathBuf::from(flags.get_str("out-dir", &cfg.out_dir.to_string_lossy()));
+    cfg.backend = BackendChoice::parse(&flags.get_str("backend", "auto"))?;
+    cfg.use_mi = flags.get_bool("mi", cfg.use_mi)?;
+    cfg.max_iters = flags.get_usize("max-iters", cfg.max_iters)?;
+    cfg.solver = flags.get_str("solver", &cfg.solver);
+    cfg.quiet = flags.get_bool("quiet", cfg.quiet)?;
+    Ok(cfg)
+}
+
+/// Usage text.
+pub const USAGE: &str = "\
+sfm-screen — safe element screening for submodular function minimization
+             (ICML 2018 reproduction; rust + JAX + Pallas via XLA/PJRT)
+
+USAGE:
+  sfm-screen <command> [flags]
+
+COMMANDS:
+  solve            solve one instance        (--workload two-moons|image1..5|iwata, --p, --rules, --json)
+  path             SFM' regularization path from one solve (--p)
+  table1           Table 1: two-moons running times & speedups
+  table3           Tables 2+3: image segmentation statistics & times
+  fig2             Figure 2: rejection ratios on two-moons
+  fig3             Figure 3: screening visualization (--p, default 400)
+  fig4             Figure 4: rejection ratios on images
+  ablation-rho     ρ trigger-frequency sweep (Remark 5)
+  ablation-rules   rule-pair contributions
+  ablation-solver  min-norm vs conditional gradient (Remark 2)
+  all              everything above, in order
+  info             artifact/backend status
+  help             this text
+
+COMMON FLAGS:
+  --config FILE    key = value config file (flags override)
+  --sizes LIST     two-moons sizes, e.g. 100,200,400
+  --image-scale X  image size multiplier (paper scale ≈ 4)
+  --eps X          duality-gap accuracy (default 1e-6)
+  --rho X          trigger decay (default 0.5)
+  --seed N         workload seed
+  --solver NAME    minnorm | fw | plain-fw
+  --backend NAME   auto | rust | xla
+  --out-dir DIR    CSV output directory (default bench_out)
+  --full           paper-scale sizes
+  --mi             exact GP mutual-information objective (slow)
+  --quiet          suppress progress logs
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let cli = parse_args(&v(&["table1", "--eps", "1e-4", "--full"])).unwrap();
+        assert_eq!(cli.command, "table1");
+        assert_eq!(cli.flags.get("eps"), Some("1e-4"));
+        assert_eq!(cli.flags.get("full"), Some("true"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse_args(&v(&["solve", "--eps"])).is_err());
+    }
+
+    #[test]
+    fn double_positional_errors() {
+        assert!(parse_args(&v(&["a", "b"])).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(parse_args(&[]).unwrap().command, "help");
+    }
+
+    #[test]
+    fn bench_config_from_flags() {
+        let cli =
+            parse_args(&v(&["table1", "--sizes", "10,20", "--rho", "0.3", "--quiet"])).unwrap();
+        let cfg = bench_config(&cli.flags).unwrap();
+        assert_eq!(cfg.sizes, vec![10, 20]);
+        assert_eq!(cfg.rho, 0.3);
+        assert!(cfg.quiet);
+    }
+
+    #[test]
+    fn full_flag_rescales() {
+        let cli = parse_args(&v(&["table1", "--full"])).unwrap();
+        let cfg = bench_config(&cli.flags).unwrap();
+        assert_eq!(cfg.sizes, vec![200, 400, 600, 800, 1000]);
+        assert_eq!(cfg.image_scale, 4.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Experiment configuration: a minimal `key = value` format plus typed
+//! accessors and CLI-override merging.
+//!
+//! No TOML/serde crates are available offline, so the launcher accepts a
+//! flat config file:
+//!
+//! ```text
+//! # two_moons.cfg
+//! workload = two-moons
+//! sizes    = 100,200,300,400
+//! eps      = 1e-6
+//! rho      = 0.5
+//! solver   = minnorm
+//! backend  = auto
+//! out_dir  = bench_out
+//! ```
+//!
+//! CLI flags (`--key value`) override file entries; the merged map feeds
+//! [`crate::coordinator`] job builders.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A flat, ordered key→value configuration.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse from file contents.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            entries.insert(key.to_string(), v.trim().to_string());
+        }
+        Ok(Config { entries })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Set (or override) a key.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.entries.insert(key.to_string(), value.into());
+    }
+
+    /// Merge `other` over `self` (other wins).
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed f64 lookup.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("config key `{key}` = `{s}`")),
+        }
+    }
+
+    /// Typed usize lookup.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("config key `{key}` = `{s}`")),
+        }
+    }
+
+    /// Typed u64 lookup.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().with_context(|| format!("config key `{key}` = `{s}`")),
+        }
+    }
+
+    /// Typed bool lookup (`true/false/1/0/yes/no`).
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => bail!("config key `{key}`: bad bool `{other}`"),
+            },
+        }
+    }
+
+    /// Comma-separated usize list.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .with_context(|| format!("config key `{key}` item `{t}`"))
+                })
+                .collect(),
+        }
+    }
+
+    /// All keys (for `--help`-style dumps).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+impl std::fmt::Display for Config {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (k, v) in &self.entries {
+            writeln!(f, "{k} = {v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let cfg = Config::parse("a = 1\n# comment\nb = two-moons # tail\n\n").unwrap();
+        assert_eq!(cfg.get("a"), Some("1"));
+        assert_eq!(cfg.get("b"), Some("two-moons"));
+        assert_eq!(cfg.get("c"), None);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let cfg = Config::parse("eps = 1e-6\nsizes = 100, 200,300\nfull = yes\n").unwrap();
+        assert_eq!(cfg.get_f64("eps", 0.0).unwrap(), 1e-6);
+        assert_eq!(cfg.get_usize_list("sizes", &[]).unwrap(), vec![100, 200, 300]);
+        assert!(cfg.get_bool("full", false).unwrap());
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let cfg = Config::parse("eps = banana\n").unwrap();
+        assert!(cfg.get_f64("eps", 0.0).is_err());
+        assert!(Config::parse("just a line\n").is_err());
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Config::parse("x = 1\ny = 2\n").unwrap();
+        let b = Config::parse("y = 3\nz = 4\n").unwrap();
+        a.merge(&b);
+        assert_eq!(a.get("y"), Some("3"));
+        assert_eq!(a.get("z"), Some("4"));
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn display_is_parseable() {
+        let cfg = Config::parse("a = 1\nb = 2\n").unwrap();
+        let re = Config::parse(&cfg.to_string()).unwrap();
+        assert_eq!(cfg, re);
+    }
+}

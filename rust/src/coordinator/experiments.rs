@@ -1,0 +1,584 @@
+//! The paper's evaluation, as reusable experiment functions.
+//!
+//! Every table and figure of the paper maps to one function here (see the
+//! per-experiment index in DESIGN.md); the `cargo bench` targets and the
+//! CLI subcommands are thin wrappers. Each function writes CSVs under
+//! `cfg.out_dir` and returns the rendered table for the terminal.
+
+use super::jobs::{solver_choice, BackendChoice, JobSpec, WorkloadSpec};
+use super::report::{fnum, write_csv_rows, Table};
+use crate::screening::iaes::{IaesOptions, IaesReport};
+use crate::screening::RuleSet;
+use crate::submodular::Submodular;
+use crate::workloads::images::benchmark_suite;
+use crate::workloads::two_moons::{TwoMoons, TwoMoonsParams};
+use anyhow::Result;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Shared bench configuration (CLI/config-file driven).
+#[derive(Clone)]
+pub struct BenchConfig {
+    /// Two-moons sizes (paper: 200..1000; defaults scaled down — see
+    /// DESIGN.md §Substitutions).
+    pub sizes: Vec<usize>,
+    /// Image scale multiplier (1.0 ≈ 2–4k pixels; paper ≈ 4.0).
+    pub image_scale: f64,
+    /// Duality-gap accuracy ε.
+    pub eps: f64,
+    /// Trigger decay ρ.
+    pub rho: f64,
+    /// Workload seed.
+    pub seed: u64,
+    /// Output directory for CSVs.
+    pub out_dir: PathBuf,
+    /// Screening backend.
+    pub backend: BackendChoice,
+    /// Use the exact GP mutual-information objective for two-moons.
+    pub use_mi: bool,
+    /// Iteration cap per solve.
+    pub max_iters: usize,
+    /// Solver name (`minnorm` | `fw` | `plain-fw`).
+    pub solver: String,
+    /// Suppress progress printing.
+    pub quiet: bool,
+    /// Deferred-contraction threshold (see [`IaesOptions`]).
+    pub min_reduction_frac: f64,
+    /// Lazily materialized screener, shared across every variant run so
+    /// PJRT executables compile exactly once per bucket.
+    screener_cache: std::sync::OnceLock<Option<std::sync::Arc<dyn crate::screening::Screener>>>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            sizes: vec![100, 200, 300, 400],
+            image_scale: 1.0,
+            eps: 1e-6,
+            rho: 0.5,
+            seed: 2018,
+            out_dir: PathBuf::from("bench_out"),
+            // The rule evaluation is O(p) flops; below p ~ 1e5 the PJRT
+            // call overhead dominates on CPU, so timing benches default to
+            // the rust backend. `--backend xla` exercises the compiled
+            // kernel (and the micro bench quantifies the crossover).
+            backend: BackendChoice::Rust,
+            use_mi: false,
+            max_iters: 200_000,
+            solver: "minnorm".into(),
+            quiet: false,
+            min_reduction_frac: 0.2,
+            screener_cache: std::sync::OnceLock::new(),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Paper-scale configuration (`--full`).
+    pub fn full(mut self) -> Self {
+        self.sizes = vec![200, 400, 600, 800, 1000];
+        self.image_scale = 4.0;
+        self
+    }
+
+    /// The shared screener (compiled once; `None` = rust default).
+    pub fn screener(&self) -> Option<std::sync::Arc<dyn crate::screening::Screener>> {
+        self.screener_cache
+            .get_or_init(|| match self.backend.screener() {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[bench] backend unavailable ({e:#}); using rust rules");
+                    None
+                }
+            })
+            .clone()
+    }
+
+    /// Pre-compile the PJRT executables for the buckets the given problem
+    /// sizes will hit, so compile time never lands inside a measured run.
+    pub fn warmup(&self, sizes: &[usize]) {
+        let Some(screener) = self.screener() else { return };
+        for &p in sizes {
+            if p < 2 {
+                continue;
+            }
+            let w = vec![0.5; p];
+            let inputs = crate::screening::ScreenInputs {
+                w: &w,
+                gap: 1.0,
+                f_v: -0.5 * p as f64,
+                f_c: 0.0,
+            };
+            let _ = screener.screen(&inputs, RuleSet::all());
+        }
+    }
+
+    fn options(&self, rules: RuleSet) -> Result<IaesOptions> {
+        Ok(IaesOptions {
+            eps: self.eps,
+            rho: self.rho,
+            rules,
+            solver: solver_choice(&self.solver)?,
+            max_iters: self.max_iters,
+            screener: self.screener(),
+            record_history: true,
+            min_reduction_frac: self.min_reduction_frac,
+        })
+    }
+
+    fn log(&self, msg: &str) {
+        if !self.quiet {
+            eprintln!("[bench] {msg}");
+        }
+    }
+}
+
+impl std::fmt::Debug for BenchConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BenchConfig")
+            .field("sizes", &self.sizes)
+            .field("image_scale", &self.image_scale)
+            .field("eps", &self.eps)
+            .field("rho", &self.rho)
+            .field("seed", &self.seed)
+            .field("out_dir", &self.out_dir)
+            .field("backend", &self.backend)
+            .field("use_mi", &self.use_mi)
+            .field("solver", &self.solver)
+            .field("min_reduction_frac", &self.min_reduction_frac)
+            .finish()
+    }
+}
+
+/// One measured variant run.
+#[derive(Clone, Debug)]
+pub struct VariantRun {
+    /// Wall time of the full solve.
+    pub wall: Duration,
+    /// Engine report.
+    pub report: IaesReport,
+}
+
+/// Run one (workload, rules) variant.
+pub fn run_variant(
+    workload: &WorkloadSpec,
+    rules: RuleSet,
+    cfg: &BenchConfig,
+) -> Result<VariantRun> {
+    let job = JobSpec {
+        name: workload.label(),
+        workload: workload.clone(),
+        opts: cfg.options(rules)?,
+    };
+    let res = job.run()?;
+    Ok(VariantRun { wall: res.wall, report: res.report })
+}
+
+fn speedup(base: Duration, other: Duration) -> f64 {
+    base.as_secs_f64() / other.as_secs_f64().max(1e-12)
+}
+
+fn secs(d: Duration) -> f64 {
+    d.as_secs_f64()
+}
+
+/// Check variant minima agree (screening must be lossless).
+fn check_consistent(label: &str, base: &IaesReport, variants: &[(&str, &IaesReport)]) {
+    for (name, rep) in variants {
+        let tol = 1e-4 * (1.0 + base.minimum.abs());
+        if (rep.minimum - base.minimum).abs() > tol {
+            eprintln!(
+                "[bench] WARNING {label}: {name} minimum {} differs from baseline {}",
+                rep.minimum, base.minimum
+            );
+        }
+    }
+}
+
+/// **Table 1** — running time for SFM on two-moons: MinNorm alone vs
+/// AES+ / IES+ / IAES+MinNorm, with per-variant screening overhead and
+/// speedup columns, one row per `p`.
+pub fn table1(cfg: &BenchConfig) -> Result<Table> {
+    let mut table = Table::new(&[
+        "p",
+        "MinNorm",
+        "AES",
+        "AES+MN",
+        "AES spdup",
+        "IES",
+        "IES+MN",
+        "IES spdup",
+        "IAES",
+        "IAES+MN",
+        "IAES spdup",
+    ]);
+    cfg.warmup(&cfg.sizes);
+    for &p in &cfg.sizes {
+        let wl = WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed };
+        cfg.log(&format!("table1: p = {p} baseline"));
+        let base = run_variant(&wl, RuleSet::none(), cfg)?;
+        cfg.log(&format!("table1: p = {p} AES"));
+        let aes = run_variant(&wl, RuleSet::aes_only(), cfg)?;
+        cfg.log(&format!("table1: p = {p} IES"));
+        let ies = run_variant(&wl, RuleSet::ies_only(), cfg)?;
+        cfg.log(&format!("table1: p = {p} IAES"));
+        let iaes = run_variant(&wl, RuleSet::all(), cfg)?;
+        check_consistent(
+            &format!("two-moons p={p}"),
+            &base.report,
+            &[("AES", &aes.report), ("IES", &ies.report), ("IAES", &iaes.report)],
+        );
+        table.push_row(vec![
+            p.to_string(),
+            fnum(secs(base.wall)),
+            fnum(secs(aes.report.screen_time)),
+            fnum(secs(aes.wall)),
+            fnum(speedup(base.wall, aes.wall)),
+            fnum(secs(ies.report.screen_time)),
+            fnum(secs(ies.wall)),
+            fnum(speedup(base.wall, ies.wall)),
+            fnum(secs(iaes.report.screen_time)),
+            fnum(secs(iaes.wall)),
+            fnum(speedup(base.wall, iaes.wall)),
+        ]);
+    }
+    table.write_csv(cfg.out_dir.join("table1.csv"))?;
+    Ok(table)
+}
+
+/// **Table 2 + Table 3** — image-segmentation statistics and running
+/// times. Returns `(table2, table3)`.
+pub fn table3(cfg: &BenchConfig) -> Result<(Table, Table)> {
+    let suite = benchmark_suite(cfg.image_scale);
+    let mut t2 = Table::new(&["image", "#pixels", "#edges"]);
+    for img in &suite {
+        t2.push_row(vec![
+            img.name.clone(),
+            img.num_pixels().to_string(),
+            img.num_edges().to_string(),
+        ]);
+    }
+    t2.write_csv(cfg.out_dir.join("table2.csv"))?;
+    cfg.warmup(&suite.iter().map(|i| i.num_pixels()).collect::<Vec<_>>());
+
+    let mut t3 = Table::new(&[
+        "image",
+        "MinNorm",
+        "AES",
+        "AES+MN",
+        "AES spdup",
+        "IES",
+        "IES+MN",
+        "IES spdup",
+        "IAES",
+        "IAES+MN",
+        "IAES spdup",
+    ]);
+    for (i, img) in suite.iter().enumerate() {
+        let wl = WorkloadSpec::Image { index: i, scale: cfg.image_scale };
+        cfg.log(&format!("table3: {} baseline", img.name));
+        let base = run_variant(&wl, RuleSet::none(), cfg)?;
+        cfg.log(&format!("table3: {} AES", img.name));
+        let aes = run_variant(&wl, RuleSet::aes_only(), cfg)?;
+        cfg.log(&format!("table3: {} IES", img.name));
+        let ies = run_variant(&wl, RuleSet::ies_only(), cfg)?;
+        cfg.log(&format!("table3: {} IAES", img.name));
+        let iaes = run_variant(&wl, RuleSet::all(), cfg)?;
+        check_consistent(
+            &img.name,
+            &base.report,
+            &[("AES", &aes.report), ("IES", &ies.report), ("IAES", &iaes.report)],
+        );
+        t3.push_row(vec![
+            img.name.clone(),
+            fnum(secs(base.wall)),
+            fnum(secs(aes.report.screen_time)),
+            fnum(secs(aes.wall)),
+            fnum(speedup(base.wall, aes.wall)),
+            fnum(secs(ies.report.screen_time)),
+            fnum(secs(ies.wall)),
+            fnum(speedup(base.wall, ies.wall)),
+            fnum(secs(iaes.report.screen_time)),
+            fnum(secs(iaes.wall)),
+            fnum(speedup(base.wall, iaes.wall)),
+        ]);
+    }
+    t3.write_csv(cfg.out_dir.join("table3.csv"))?;
+    Ok((t2, t3))
+}
+
+/// Rejection-ratio curve of one report: `(iter, (m_i+n_i)/p)` rows.
+pub fn rejection_curve(report: &IaesReport, p: usize) -> Vec<(usize, f64)> {
+    report
+        .history
+        .iter()
+        .map(|rec| (rec.iter, (rec.active + rec.inactive) as f64 / p as f64))
+        .collect()
+}
+
+/// **Figure 2** — rejection ratios over iterations on two-moons, one CSV
+/// per size. Returns a summary table (final ratio + iterations).
+pub fn fig2(cfg: &BenchConfig) -> Result<Table> {
+    let mut table = Table::new(&["p", "iters", "final ratio", "triggers"]);
+    cfg.warmup(&cfg.sizes);
+    for &p in &cfg.sizes {
+        let wl = WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed };
+        cfg.log(&format!("fig2: p = {p}"));
+        let run = run_variant(&wl, RuleSet::all(), cfg)?;
+        let curve = rejection_curve(&run.report, p);
+        write_csv_rows(
+            cfg.out_dir.join(format!("fig2_p{p}.csv")),
+            "iter,rejection_ratio",
+            curve.iter().map(|(i, r)| format!("{i},{r}")),
+        )?;
+        let final_ratio = curve.last().map(|&(_, r)| r).unwrap_or(0.0);
+        table.push_row(vec![
+            p.to_string(),
+            run.report.iters.to_string(),
+            fnum(final_ratio),
+            run.report.triggers.len().to_string(),
+        ]);
+    }
+    table.write_csv(cfg.out_dir.join("fig2_summary.csv"))?;
+    Ok(table)
+}
+
+/// **Figure 3** — visualization of the screening process on two-moons:
+/// point coordinates + certification status after each trigger.
+/// Writes `fig3_step{k}.csv` with columns `x,y,status` where status ∈
+/// {active, inactive, unknown}. Returns a per-step summary table.
+pub fn fig3(cfg: &BenchConfig, p: usize) -> Result<Table> {
+    let tm = TwoMoons::generate(TwoMoonsParams { p, seed: cfg.seed, ..Default::default() });
+    let f = tm.knn_cut(10, 1.0);
+    let opts = cfg.options(RuleSet::all())?;
+    let report = crate::screening::iaes::solve_sfm_with_screening(&f, &opts)?;
+
+    // Status evolves trigger by trigger.
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Unknown,
+        Active,
+        Inactive,
+    }
+    let mut status = vec![St::Unknown; p];
+    let mut table = Table::new(&["step", "iter", "active", "inactive", "unknown"]);
+    let points = tm.points.clone();
+    let mut emit = |step: usize, iter: usize, status: &[St]| -> Result<()> {
+        write_csv_rows(
+            cfg.out_dir.join(format!("fig3_step{step}.csv")),
+            "x,y,status",
+            (0..p).map(|i| {
+                let s = match status[i] {
+                    St::Unknown => "unknown",
+                    St::Active => "active",
+                    St::Inactive => "inactive",
+                };
+                format!("{},{},{}", tm.points[i][0], tm.points[i][1], s)
+            }),
+        )?;
+        // PPM panel (the paper's Figure 3 is exactly this scatter).
+        let st: Vec<crate::coordinator::render::PointStatus> = status
+            .iter()
+            .map(|s| match s {
+                St::Active => crate::coordinator::render::PointStatus::Active,
+                St::Inactive => crate::coordinator::render::PointStatus::Inactive,
+                St::Unknown => crate::coordinator::render::PointStatus::Unknown,
+            })
+            .collect();
+        crate::coordinator::render::scatter(&points, &st, 480)
+            .write_ppm(cfg.out_dir.join(format!("fig3_step{step}.ppm")))?;
+        let a = status.iter().filter(|&&s| s == St::Active).count();
+        let n = status.iter().filter(|&&s| s == St::Inactive).count();
+        table.push_row(vec![
+            step.to_string(),
+            iter.to_string(),
+            a.to_string(),
+            n.to_string(),
+            (p - a - n).to_string(),
+        ]);
+        Ok(())
+    };
+    emit(0, 0, &status)?;
+    for (step, trig) in report.triggers.iter().enumerate() {
+        for &i in &trig.new_active_ids {
+            status[i] = St::Active;
+        }
+        for &i in &trig.new_inactive_ids {
+            status[i] = St::Inactive;
+        }
+        emit(step + 1, trig.iter, &status)?;
+    }
+    table.write_csv(cfg.out_dir.join("fig3_summary.csv"))?;
+    Ok(table)
+}
+
+/// **Figure 4** — rejection ratios over iterations on the five images.
+pub fn fig4(cfg: &BenchConfig) -> Result<Table> {
+    let suite = benchmark_suite(cfg.image_scale);
+    let mut table = Table::new(&["image", "p", "iters", "final ratio", "triggers"]);
+    for (i, img) in suite.iter().enumerate() {
+        let p = img.num_pixels();
+        let wl = WorkloadSpec::Image { index: i, scale: cfg.image_scale };
+        cfg.log(&format!("fig4: {}", img.name));
+        let run = run_variant(&wl, RuleSet::all(), cfg)?;
+        let curve = rejection_curve(&run.report, p);
+        write_csv_rows(
+            cfg.out_dir.join(format!("fig4_{}.csv", img.name)),
+            "iter,rejection_ratio",
+            curve.iter().map(|(it, r)| format!("{it},{r}")),
+        )?;
+        let final_ratio = curve.last().map(|&(_, r)| r).unwrap_or(0.0);
+        table.push_row(vec![
+            img.name.clone(),
+            p.to_string(),
+            run.report.iters.to_string(),
+            fnum(final_ratio),
+            run.report.triggers.len().to_string(),
+        ]);
+    }
+    table.write_csv(cfg.out_dir.join("fig4_summary.csv"))?;
+    Ok(table)
+}
+
+/// **Ablation A1** — trigger frequency ρ (Remark 5).
+pub fn ablation_rho(cfg: &BenchConfig, p: usize, rhos: &[f64]) -> Result<Table> {
+    let mut table = Table::new(&["rho", "wall(s)", "screen(s)", "triggers", "iters"]);
+    for &rho in rhos {
+        let mut c = cfg.clone();
+        c.rho = rho;
+        let wl = WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed };
+        cfg.log(&format!("ablation_rho: rho = {rho}"));
+        let run = run_variant(&wl, RuleSet::all(), &c)?;
+        table.push_row(vec![
+            fnum(rho),
+            fnum(secs(run.wall)),
+            fnum(secs(run.report.screen_time)),
+            run.report.triggers.len().to_string(),
+            run.report.iters.to_string(),
+        ]);
+    }
+    table.write_csv(cfg.out_dir.join("ablation_rho.csv"))?;
+    Ok(table)
+}
+
+/// **Ablation A2** — contribution of the two rule pairs.
+pub fn ablation_rules(cfg: &BenchConfig, p: usize) -> Result<Table> {
+    let mut table = Table::new(&["rules", "wall(s)", "final ratio", "iters"]);
+    let wl = WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed };
+    for (name, rules) in [
+        ("none", RuleSet::none()),
+        ("pair1 (B∩P)", RuleSet::pair1_only()),
+        ("pair2 (B∩Ω)", RuleSet::pair2_only()),
+        ("all", RuleSet::all()),
+    ] {
+        cfg.log(&format!("ablation_rules: {name}"));
+        let run = run_variant(&wl, rules, cfg)?;
+        let ratio = run.report.final_rejection_ratio(p);
+        table.push_row(vec![
+            name.to_string(),
+            fnum(secs(run.wall)),
+            fnum(ratio),
+            run.report.iters.to_string(),
+        ]);
+    }
+    table.write_csv(cfg.out_dir.join("ablation_rules.csv"))?;
+    Ok(table)
+}
+
+/// **Ablation A3** — solver A choice (Remark 2).
+pub fn ablation_solver(cfg: &BenchConfig, p: usize) -> Result<Table> {
+    let mut table =
+        Table::new(&["solver", "screening", "wall(s)", "iters", "final gap"]);
+    let wl = WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed };
+    for solver in ["minnorm", "fw"] {
+        for (sname, rules) in [("off", RuleSet::none()), ("iaes", RuleSet::all())] {
+            let mut c = cfg.clone();
+            c.solver = solver.to_string();
+            // Conditional gradient converges sublinearly to tight gaps;
+            // cap the iteration budget and report the gap reached.
+            c.max_iters = c.max_iters.min(20_000);
+            cfg.log(&format!("ablation_solver: {solver}/{sname}"));
+            let run = run_variant(&wl, rules, &c)?;
+            table.push_row(vec![
+                solver.to_string(),
+                sname.to_string(),
+                fnum(secs(run.wall)),
+                run.report.iters.to_string(),
+                format!("{:.2e}", run.report.final_gap),
+            ]);
+        }
+    }
+    table.write_csv(cfg.out_dir.join("ablation_solver.csv"))?;
+    Ok(table)
+}
+
+/// Check that a submodular oracle's IAES minimum matches a screening-free
+/// solve (used by the e2e example and the micro bench sanity block).
+pub fn verify_lossless(f: &dyn Submodular, cfg: &BenchConfig) -> Result<(f64, f64)> {
+    let opts_off = cfg.options(RuleSet::none())?;
+    let opts_on = cfg.options(RuleSet::all())?;
+    let t0 = Instant::now();
+    let off = crate::screening::iaes::solve_sfm_with_screening(f, &opts_off)?;
+    let _t_off = t0.elapsed();
+    let on = crate::screening::iaes::solve_sfm_with_screening(f, &opts_on)?;
+    Ok((off.minimum, on.minimum))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(dir: &str) -> BenchConfig {
+        let mut c = BenchConfig::default();
+        c.sizes = vec![30, 40];
+        c.eps = 1e-5;
+        c.out_dir = std::env::temp_dir().join(dir);
+        c.quiet = true;
+        c.backend = BackendChoice::Rust;
+        c
+    }
+
+    #[test]
+    fn table1_smoke() {
+        let cfg = tiny_cfg("sfm_t1");
+        let t = table1(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert!(cfg.out_dir.join("table1.csv").is_file());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn fig2_and_fig3_smoke() {
+        let cfg = tiny_cfg("sfm_f23");
+        let t = fig2(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        let t3 = fig3(&cfg, 30).unwrap();
+        assert!(!t3.rows.is_empty());
+        assert!(cfg.out_dir.join("fig3_step0.csv").is_file());
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn ablations_smoke() {
+        let cfg = tiny_cfg("sfm_abl");
+        let t = ablation_rho(&cfg, 30, &[0.3, 0.7]).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        let t = ablation_rules(&cfg, 30).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn rejection_curve_monotone() {
+        let cfg = tiny_cfg("sfm_rc");
+        let wl = WorkloadSpec::TwoMoons { p: 40, use_mi: false, seed: 1 };
+        let run = run_variant(&wl, RuleSet::all(), &cfg).unwrap();
+        let curve = rejection_curve(&run.report, 40);
+        let mut last = 0.0;
+        for &(_, r) in &curve {
+            assert!(r >= last - 1e-12);
+            last = r;
+        }
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+}

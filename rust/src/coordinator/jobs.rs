@@ -1,0 +1,225 @@
+//! Declarative experiment jobs: workload × solver × rules × backend.
+
+use crate::screening::iaes::{solve_sfm_with_screening, IaesOptions, IaesReport, SolverChoice};
+use crate::screening::{RuleSet, Screener};
+use crate::solvers::frankwolfe::FwOptions;
+use crate::solvers::minnorm::MinNormOptions;
+use crate::submodular::Submodular;
+use crate::workloads::images::{benchmark_suite, ImageInstance};
+use crate::workloads::two_moons::{TwoMoons, TwoMoonsParams};
+use anyhow::{bail, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Screening backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// XLA if artifacts exist, rust otherwise.
+    Auto,
+    /// Reference rust rules.
+    Rust,
+    /// Require the AOT XLA kernel (error if artifacts are missing).
+    Xla,
+}
+
+impl BackendChoice {
+    /// Parse from a CLI/config string.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendChoice::Auto),
+            "rust" => Ok(BackendChoice::Rust),
+            "xla" => Ok(BackendChoice::Xla),
+            other => bail!("unknown backend `{other}` (auto|rust|xla)"),
+        }
+    }
+
+    /// Materialize the screener (None = engine default, i.e. rust rules).
+    pub fn screener(&self) -> Result<Option<Arc<dyn Screener>>> {
+        match self {
+            BackendChoice::Rust => Ok(None),
+            BackendChoice::Auto => Ok(Some(crate::runtime::best_screener())),
+            BackendChoice::Xla => {
+                let s = crate::runtime::XlaScreener::at_default()?;
+                Ok(Some(Arc::new(s)))
+            }
+        }
+    }
+}
+
+/// What problem instance a job solves.
+#[derive(Clone, Debug)]
+pub enum WorkloadSpec {
+    /// Two-moons with `p` points (kernel-cut objective unless `use_mi`).
+    TwoMoons {
+        /// Number of points.
+        p: usize,
+        /// Use the exact GP mutual-information objective.
+        use_mi: bool,
+        /// Seed.
+        seed: u64,
+    },
+    /// One of the five synthetic segmentation scenes, scaled.
+    Image {
+        /// Index into the benchmark suite (0..5).
+        index: usize,
+        /// Size multiplier.
+        scale: f64,
+    },
+    /// Iwata's test function (micro/ablation workload).
+    Iwata {
+        /// Ground-set size.
+        p: usize,
+    },
+}
+
+impl WorkloadSpec {
+    /// Build the submodular objective.
+    pub fn build(&self) -> Result<Box<dyn Submodular>> {
+        match *self {
+            WorkloadSpec::TwoMoons { p, use_mi, seed } => {
+                let tm = TwoMoons::generate(TwoMoonsParams { p, seed, ..Default::default() });
+                if use_mi {
+                    Ok(Box::new(tm.gaussian_mi(0.1)))
+                } else {
+                    Ok(Box::new(tm.knn_cut(10, 1.0)))
+                }
+            }
+            WorkloadSpec::Image { index, scale } => {
+                let mut suite = benchmark_suite(scale);
+                anyhow::ensure!(index < suite.len(), "image index out of range");
+                let img: ImageInstance = suite.swap_remove(index);
+                Ok(Box::new(img.cut_fn()))
+            }
+            WorkloadSpec::Iwata { p } => {
+                Ok(Box::new(crate::submodular::iwata::IwataFn::new(p)))
+            }
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(&self) -> String {
+        match *self {
+            WorkloadSpec::TwoMoons { p, use_mi, .. } => {
+                format!("two-moons(p={p}{})", if use_mi { ",mi" } else { "" })
+            }
+            WorkloadSpec::Image { index, scale } => {
+                format!("image{}(x{scale})", index + 1)
+            }
+            WorkloadSpec::Iwata { p } => format!("iwata(p={p})"),
+        }
+    }
+}
+
+/// Solver selection by name.
+pub fn solver_choice(name: &str) -> Result<SolverChoice> {
+    match name.to_ascii_lowercase().as_str() {
+        "minnorm" | "min-norm" => Ok(SolverChoice::MinNorm(MinNormOptions::default())),
+        "fw" | "frank-wolfe" | "pairwise-fw" => {
+            Ok(SolverChoice::FrankWolfe(FwOptions::default()))
+        }
+        "plain-fw" => Ok(SolverChoice::FrankWolfe(FwOptions {
+            variant: crate::solvers::frankwolfe::FwVariant::Plain,
+            ..Default::default()
+        })),
+        other => bail!("unknown solver `{other}` (minnorm|fw|plain-fw)"),
+    }
+}
+
+/// Rule-set selection by name.
+pub fn rule_set(name: &str) -> Result<RuleSet> {
+    match name.to_ascii_lowercase().as_str() {
+        "all" | "iaes" => Ok(RuleSet::all()),
+        "aes" => Ok(RuleSet::aes_only()),
+        "ies" => Ok(RuleSet::ies_only()),
+        "pair1" => Ok(RuleSet::pair1_only()),
+        "pair2" => Ok(RuleSet::pair2_only()),
+        "none" | "off" => Ok(RuleSet::none()),
+        other => bail!("unknown rule set `{other}` (all|aes|ies|pair1|pair2|none)"),
+    }
+}
+
+/// One experiment job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Display name.
+    pub name: String,
+    /// Problem instance.
+    pub workload: WorkloadSpec,
+    /// IAES engine options.
+    pub opts: IaesOptions,
+}
+
+/// A completed job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Job name.
+    pub name: String,
+    /// Total wall time of the solve.
+    pub wall: Duration,
+    /// Full engine report.
+    pub report: IaesReport,
+}
+
+impl JobSpec {
+    /// Execute the job (builds the oracle, runs Algorithm 2).
+    pub fn run(&self) -> Result<JobResult> {
+        let f = self.workload.build()?;
+        let t0 = Instant::now();
+        let report = solve_sfm_with_screening(f.as_ref(), &self.opts)?;
+        Ok(JobResult { name: self.name.clone(), wall: t0.elapsed(), report })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("RUST").unwrap(), BackendChoice::Rust);
+        assert!(BackendChoice::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn rule_and_solver_parse() {
+        assert!(rule_set("all").unwrap().aes2);
+        assert!(!rule_set("aes").unwrap().ies1);
+        assert!(rule_set("banana").is_err());
+        assert!(solver_choice("minnorm").is_ok());
+        assert!(solver_choice("fw").is_ok());
+        assert!(solver_choice("simplex").is_err());
+    }
+
+    #[test]
+    fn iwata_job_runs() {
+        let job = JobSpec {
+            name: "iwata-20".into(),
+            workload: WorkloadSpec::Iwata { p: 20 },
+            opts: IaesOptions::default(),
+        };
+        let res = job.run().unwrap();
+        assert!(res.report.minimum < 0.0);
+        assert!(res.wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn two_moons_job_runs() {
+        let job = JobSpec {
+            name: "tm-40".into(),
+            workload: WorkloadSpec::TwoMoons { p: 40, use_mi: false, seed: 3 },
+            opts: IaesOptions::default(),
+        };
+        let res = job.run().unwrap();
+        assert!(res.report.final_gap < 1e-6 || res.report.emptied);
+    }
+
+    #[test]
+    fn workload_labels() {
+        assert_eq!(
+            WorkloadSpec::TwoMoons { p: 100, use_mi: true, seed: 0 }.label(),
+            "two-moons(p=100,mi)"
+        );
+        assert_eq!(WorkloadSpec::Image { index: 0, scale: 1.0 }.label(), "image1(x1)");
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal JSON emission (no serde offline): enough to export reports and
+//! bench results for downstream tooling, with correct string escaping and
+//! float formatting.
+
+use crate::screening::iaes::IaesReport;
+use std::fmt::Write as _;
+
+/// A JSON value builder.
+#[derive(Clone, Debug)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// Number (finite f64; NaN/inf serialize as null per common practice).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object (insertion-ordered).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object constructor from pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serialize to a compact string.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    if *x == x.trunc() && x.abs() < 1e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Export an [`IaesReport`] as JSON (history omitted unless `with_history`).
+pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
+    let mut pairs = vec![
+        ("minimum", Json::Num(report.minimum)),
+        (
+            "minimizer",
+            Json::Arr(report.minimizer.iter().map(|&i| Json::Num(i as f64)).collect()),
+        ),
+        ("iters", Json::Num(report.iters as f64)),
+        ("final_gap", Json::Num(report.final_gap)),
+        ("screened_active", Json::Num(report.screened_active as f64)),
+        ("screened_inactive", Json::Num(report.screened_inactive as f64)),
+        ("emptied", Json::Bool(report.emptied)),
+        ("solver_time_s", Json::Num(report.solver_time.as_secs_f64())),
+        ("screen_time_s", Json::Num(report.screen_time.as_secs_f64())),
+        (
+            "triggers",
+            Json::Arr(
+                report
+                    .triggers
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("iter", Json::Num(t.iter as f64)),
+                            ("gap", Json::Num(t.gap)),
+                            ("p_before", Json::Num(t.p_before as f64)),
+                            ("new_active", Json::Num(t.new_active as f64)),
+                            ("new_inactive", Json::Num(t.new_inactive as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if with_history {
+        pairs.push((
+            "history",
+            Json::Arr(
+                report
+                    .history
+                    .iter()
+                    .map(|h| {
+                        Json::obj(vec![
+                            ("iter", Json::Num(h.iter as f64)),
+                            ("gap", Json::Num(h.gap)),
+                            ("active", Json::Num(h.active as f64)),
+                            ("inactive", Json::Num(h.inactive as f64)),
+                            ("p_remaining", Json::Num(h.p_remaining as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::iaes::{solve_sfm_with_screening, IaesOptions};
+    use crate::submodular::iwata::IwataFn;
+
+    #[test]
+    fn scalar_serialization() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::Bool(true).to_string(), "true");
+        assert_eq!(Json::Num(3.0).to_string(), "3");
+        assert_eq!(Json::Num(3.5).to_string(), "3.5");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Str("a\"b\n".into()).to_string(), "\"a\\\"b\\n\"");
+    }
+
+    #[test]
+    fn nested_structure() {
+        let j = Json::obj(vec![
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+            ("name", Json::Str("t1".into())),
+        ]);
+        assert_eq!(j.to_string(), r#"{"xs":[1,2],"name":"t1"}"#);
+    }
+
+    #[test]
+    fn report_roundtrip_shape() {
+        let f = IwataFn::new(12);
+        let report = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        let j = report_to_json(&report, true).to_string();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"minimum\""));
+        assert!(j.contains("\"history\""));
+        // Balanced braces (cheap well-formedness check).
+        let opens = j.matches('{').count();
+        let closes = j.matches('}').count();
+        assert_eq!(opens, closes);
+    }
+}

@@ -1,0 +1,163 @@
+//! Wall-clock measurement utilities shared by the coordinator and the
+//! bench harness (criterion is unavailable offline — see DESIGN.md
+//! §Substitutions — so the harness carries its own warmup + robust-summary
+//! machinery).
+
+use std::time::{Duration, Instant};
+
+/// A simple resumable stopwatch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stopwatch {
+    total: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    /// New, stopped, zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or resume) timing.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop timing, accumulating the elapsed span.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+        }
+    }
+
+    /// Accumulated time (excludes a currently running span).
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+}
+
+/// Robust summary of repeated measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    /// Number of samples.
+    pub n: usize,
+    /// Arithmetic mean (seconds).
+    pub mean: f64,
+    /// Median (seconds).
+    pub median: f64,
+    /// Minimum (seconds).
+    pub min: f64,
+    /// Maximum (seconds).
+    pub max: f64,
+    /// Sample standard deviation (seconds).
+    pub std: f64,
+}
+
+impl Summary {
+    /// Summarize a set of durations. Panics on empty input.
+    pub fn of(samples: &[Duration]) -> Self {
+        assert!(!samples.is_empty());
+        let mut secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = secs.len();
+        let mean = secs.iter().sum::<f64>() / n as f64;
+        let median = if n % 2 == 1 {
+            secs[n / 2]
+        } else {
+            0.5 * (secs[n / 2 - 1] + secs[n / 2])
+        };
+        let var = if n > 1 {
+            secs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary { n, mean, median, min: secs[0], max: secs[n - 1], std: var.sqrt() }
+    }
+}
+
+/// Time one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Bench a closure: `warmup` unmeasured runs, then `reps` measured runs.
+/// Returns the summary and the last output.
+pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> (Summary, T) {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(reps);
+    let mut last = None;
+    for _ in 0..reps {
+        let (out, dt) = time_once(&mut f);
+        samples.push(dt);
+        last = Some(out);
+    }
+    (Summary::of(&samples), last.unwrap())
+}
+
+/// Human-readable duration (adaptive unit).
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let a = sw.total();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.total() > a);
+        assert!(sw.total() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn summary_stats() {
+        let samples: Vec<Duration> =
+            [1, 2, 3, 4, 100].iter().map(|&ms| Duration::from_millis(ms)).collect();
+        let s = Summary::of(&samples);
+        assert_eq!(s.n, 5);
+        assert!((s.median - 0.003).abs() < 1e-9);
+        assert!((s.min - 0.001).abs() < 1e-9);
+        assert!((s.max - 0.1).abs() < 1e-9);
+        assert!(s.mean > s.median, "outlier pulls mean up");
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0;
+        let (summary, out) = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(summary.n, 5);
+        assert_eq!(out, 7); // 2 warmup + 5 measured
+    }
+
+    #[test]
+    fn fmt_adapts() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_millis(2)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_micros(2)).ends_with("µs"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Experiment coordinator — the launcher a downstream user actually runs.
+//!
+//! * [`jobs`] — declarative experiment specs (workload × solver × rules ×
+//!   backend) and their results.
+//! * [`runner`] — a work-stealing thread pool for independent jobs.
+//! * [`metrics`] — wall-clock measurement utilities (stopwatch, robust
+//!   summaries) shared by the bench harness.
+//! * [`report`] — CSV and aligned-table writers for `bench_out/`.
+//! * [`experiments`] — the paper's evaluation: Table 1, Table 3,
+//!   Figures 2–4, and the DESIGN.md ablations, each as a reusable function
+//!   called by both the CLI and `cargo bench`.
+
+pub mod experiments;
+pub mod jobs;
+pub mod json;
+pub mod metrics;
+pub mod render;
+pub mod report;
+pub mod runner;
+
+pub use experiments::BenchConfig;
+pub use jobs::{BackendChoice, JobResult, JobSpec, WorkloadSpec};

@@ -1,0 +1,192 @@
+//! Minimal image output: binary PPM (P6) writers for the figure
+//! reproductions — segmentation masks, grayscale scenes, and two-moons
+//! scatter snapshots — with zero external dependencies.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// An RGB raster.
+#[derive(Clone, Debug)]
+pub struct Raster {
+    /// Width in pixels.
+    pub w: usize,
+    /// Height in pixels.
+    pub h: usize,
+    /// RGB bytes, row-major, 3 per pixel.
+    pub data: Vec<u8>,
+}
+
+impl Raster {
+    /// Solid-color raster.
+    pub fn filled(w: usize, h: usize, rgb: [u8; 3]) -> Self {
+        let mut data = Vec::with_capacity(w * h * 3);
+        for _ in 0..w * h {
+            data.extend_from_slice(&rgb);
+        }
+        Raster { w, h, data }
+    }
+
+    /// Set one pixel (no-op out of bounds — simplifies scatter plotting).
+    pub fn set(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
+        if x < self.w && y < self.h {
+            let i = (y * self.w + x) * 3;
+            self.data[i..i + 3].copy_from_slice(&rgb);
+        }
+    }
+
+    /// Draw a filled disc (for scatter markers).
+    pub fn disc(&mut self, cx: f64, cy: f64, r: f64, rgb: [u8; 3]) {
+        let lo_x = (cx - r).floor().max(0.0) as usize;
+        let hi_x = (cx + r).ceil().min(self.w as f64) as usize;
+        let lo_y = (cy - r).floor().max(0.0) as usize;
+        let hi_y = (cy + r).ceil().min(self.h as f64) as usize;
+        for y in lo_y..hi_y {
+            for x in lo_x..hi_x {
+                let dx = x as f64 + 0.5 - cx;
+                let dy = y as f64 + 0.5 - cy;
+                if dx * dx + dy * dy <= r * r {
+                    self.set(x, y, rgb);
+                }
+            }
+        }
+    }
+
+    /// Write as binary PPM (P6).
+    pub fn write_ppm(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        write!(f, "P6\n{} {}\n255\n", self.w, self.h)?;
+        f.write_all(&self.data)?;
+        Ok(())
+    }
+}
+
+/// Render a grayscale scene (values in [0,1], row-major `h×w`).
+pub fn grayscale(h: usize, w: usize, values: &[f64]) -> Raster {
+    assert_eq!(values.len(), h * w);
+    let mut r = Raster::filled(w, h, [0, 0, 0]);
+    for y in 0..h {
+        for x in 0..w {
+            let v = (values[y * w + x].clamp(0.0, 1.0) * 255.0) as u8;
+            r.set(x, y, [v, v, v]);
+        }
+    }
+    r
+}
+
+/// Render a binary mask over a grayscale scene (mask pixels tinted red).
+pub fn mask_overlay(h: usize, w: usize, values: &[f64], mask: &[bool]) -> Raster {
+    assert_eq!(mask.len(), h * w);
+    let mut r = grayscale(h, w, values);
+    for y in 0..h {
+        for x in 0..w {
+            if mask[y * w + x] {
+                let i = (y * w + x) * 3;
+                let g = r.data[i];
+                r.data[i] = 255;
+                r.data[i + 1] = g / 2;
+                r.data[i + 2] = g / 2;
+            }
+        }
+    }
+    r
+}
+
+/// Scatter statuses for [`scatter`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointStatus {
+    /// Certified active (magenta, as in the paper's Figure 3).
+    Active,
+    /// Certified inactive (blue).
+    Inactive,
+    /// Undecided (cyan).
+    Unknown,
+}
+
+/// Render a two-moons-style scatter (auto-scaled to the canvas) — the
+/// paper's Figure 3 panels.
+pub fn scatter(points: &[[f64; 2]], status: &[PointStatus], size: usize) -> Raster {
+    assert_eq!(points.len(), status.len());
+    let mut raster = Raster::filled(size, size, [255, 255, 255]);
+    if points.is_empty() {
+        return raster;
+    }
+    let (mut min_x, mut max_x) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut min_y, mut max_y) = (f64::INFINITY, f64::NEG_INFINITY);
+    for p in points {
+        min_x = min_x.min(p[0]);
+        max_x = max_x.max(p[0]);
+        min_y = min_y.min(p[1]);
+        max_y = max_y.max(p[1]);
+    }
+    let pad = 0.05;
+    let sx = (1.0 - 2.0 * pad) * size as f64 / (max_x - min_x).max(1e-9);
+    let sy = (1.0 - 2.0 * pad) * size as f64 / (max_y - min_y).max(1e-9);
+    let s = sx.min(sy);
+    let r = (size as f64 / 120.0).max(1.5);
+    for (p, st) in points.iter().zip(status) {
+        let x = pad * size as f64 + (p[0] - min_x) * s;
+        let y = size as f64 - (pad * size as f64 + (p[1] - min_y) * s);
+        let rgb = match st {
+            PointStatus::Active => [214, 40, 160],
+            PointStatus::Inactive => [40, 60, 214],
+            PointStatus::Unknown => [90, 200, 210],
+        };
+        raster.disc(x, y, r, rgb);
+    }
+    raster
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppm_header_and_size() {
+        let r = Raster::filled(7, 5, [1, 2, 3]);
+        let dir = std::env::temp_dir().join("sfm_render_test");
+        let path = dir.join("t.ppm");
+        r.write_ppm(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert!(bytes.starts_with(b"P6\n7 5\n255\n"));
+        assert_eq!(bytes.len(), b"P6\n7 5\n255\n".len() + 7 * 5 * 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grayscale_maps_values() {
+        let r = grayscale(1, 2, &[0.0, 1.0]);
+        assert_eq!(&r.data[0..3], &[0, 0, 0]);
+        assert_eq!(&r.data[3..6], &[255, 255, 255]);
+    }
+
+    #[test]
+    fn mask_overlay_tints_red() {
+        let r = mask_overlay(1, 2, &[0.5, 0.5], &[false, true]);
+        assert_eq!(r.data[0], r.data[1]); // untouched gray
+        assert_eq!(r.data[3], 255); // tinted
+        assert!(r.data[4] < 255);
+    }
+
+    #[test]
+    fn scatter_draws_within_canvas() {
+        let pts = vec![[0.0, 0.0], [1.0, 1.0], [-1.0, 2.0]];
+        let st = vec![PointStatus::Active, PointStatus::Inactive, PointStatus::Unknown];
+        let r = scatter(&pts, &st, 64);
+        assert_eq!(r.data.len(), 64 * 64 * 3);
+        // Not all white: markers were drawn.
+        assert!(r.data.iter().any(|&b| b != 255));
+    }
+
+    #[test]
+    fn disc_clips_at_edges() {
+        let mut r = Raster::filled(4, 4, [0, 0, 0]);
+        r.disc(0.0, 0.0, 10.0, [9, 9, 9]); // way out of bounds — must not panic
+        assert!(r.data.iter().any(|&b| b == 9));
+    }
+}

@@ -1,0 +1,99 @@
+//! Work-stealing job runner over OS threads.
+//!
+//! No tokio in the offline environment — and none needed: jobs are
+//! CPU-bound solves. `run_parallel` executes independent jobs on a scoped
+//! thread pool with an atomic work index; results come back in input
+//! order. Timing-sensitive benchmarks use `threads = 1` for fairness.
+
+use super::jobs::{JobResult, JobSpec};
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run all jobs with up to `threads` workers; results in input order.
+/// The first job error aborts the batch.
+pub fn run_parallel(jobs: &[JobSpec], threads: usize) -> Result<Vec<JobResult>> {
+    let threads = threads.max(1).min(jobs.len().max(1));
+    if threads == 1 {
+        return jobs.iter().map(|j| j.run()).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Result<JobResult>>>> =
+        (0..jobs.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let out = jobs[i].run();
+                *results[i].lock().expect("runner poisoned") = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|slot| slot.into_inner().expect("runner poisoned").expect("job not run"))
+        .collect()
+}
+
+/// Run jobs sequentially with a progress callback after each.
+pub fn run_with_progress(
+    jobs: &[JobSpec],
+    mut progress: impl FnMut(usize, &JobResult),
+) -> Result<Vec<JobResult>> {
+    let mut out = Vec::with_capacity(jobs.len());
+    for (i, job) in jobs.iter().enumerate() {
+        let res = job.run()?;
+        progress(i, &res);
+        out.push(res);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::jobs::WorkloadSpec;
+    use crate::screening::iaes::IaesOptions;
+
+    fn jobs(n: usize) -> Vec<JobSpec> {
+        (0..n)
+            .map(|i| JobSpec {
+                name: format!("iwata-{i}"),
+                workload: WorkloadSpec::Iwata { p: 15 + i },
+                opts: IaesOptions::default(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let js = jobs(6);
+        let seq = run_parallel(&js, 1).unwrap();
+        let par = run_parallel(&js, 4).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.name, b.name);
+            assert!((a.report.minimum - b.report.minimum).abs() < 1e-9);
+            assert_eq!(a.report.minimizer, b.report.minimizer);
+        }
+    }
+
+    #[test]
+    fn progress_callback_fires() {
+        let js = jobs(3);
+        let mut seen = Vec::new();
+        run_with_progress(&js, |i, r| seen.push((i, r.name.clone()))).unwrap();
+        assert_eq!(seen.len(), 3);
+        assert_eq!(seen[2].0, 2);
+    }
+
+    #[test]
+    fn empty_job_list() {
+        assert!(run_parallel(&[], 4).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,377 @@
+//! Cholesky factorizations: batch, and incrementally extended/downdated.
+//!
+//! Two consumers drive the design:
+//!
+//! * [`Cholesky`] — factor a full SPD matrix once and solve. Used by the
+//!   baseline min-norm affine-minimization step and by tests.
+//! * [`IncrementalCholesky`] — maintain `L` with `A = L Lᵀ` under two
+//!   operations: `push` (append one row/column — O(n²)) and `remove`
+//!   (delete one row/column, restoring triangularity with Givens
+//!   rotations — O(n²)). Used by (a) the Gaussian-process
+//!   mutual-information oracle, which needs log-determinants of *nested*
+//!   principal minors along a greedy order, and (b) the optimized
+//!   min-norm-point corral, which adds one base vertex per major cycle and
+//!   evicts vertices whose affine coefficient hits zero.
+
+use super::Mat;
+
+/// Batch Cholesky factorization `A = L Lᵀ` (lower-triangular `L`).
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    /// Lower-triangular factor, row-major dense (upper part zero).
+    pub l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Adds `jitter` to the diagonal if a pivot is
+    /// non-positive (returns `None` only if even the jittered pivot fails).
+    pub fn factor(a: &Mat, jitter: f64) -> Option<Self> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    let mut d = s;
+                    if d <= 0.0 {
+                        d = s + jitter;
+                    }
+                    if d <= 0.0 {
+                        return None;
+                    }
+                    l[(i, i)] = d.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Solve `A x = b` via forward/back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        // L y = b
+        for i in 0..n {
+            let mut s = y[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        // Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// `log det A = 2 Σ log L_ii`.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Incrementally maintained Cholesky factor of a growing/shrinking SPD
+/// matrix. Rows are stored as ragged vectors (`row[i].len() == i + 1`).
+#[derive(Clone, Debug, Default)]
+pub struct IncrementalCholesky {
+    rows: Vec<Vec<f64>>,
+}
+
+impl IncrementalCholesky {
+    /// Empty factor (0×0 matrix).
+    pub fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    /// Current dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// `L[i][j]` for `j <= i`.
+    #[inline]
+    pub fn l(&self, i: usize, j: usize) -> f64 {
+        self.rows[i][j]
+    }
+
+    /// Append one row/column of the underlying matrix: `cross[j] = A[n, j]`
+    /// for existing indices `j`, `diag = A[n, n]`. Returns the new diagonal
+    /// entry of `L` (useful for log-det accumulation), or `None` if the
+    /// extended matrix is not positive definite even after `jitter`.
+    pub fn push(&mut self, cross: &[f64], diag: f64, jitter: f64) -> Option<f64> {
+        let n = self.dim();
+        assert_eq!(cross.len(), n);
+        let mut new_row = Vec::with_capacity(n + 1);
+        for j in 0..n {
+            let mut s = cross[j];
+            let rj = &self.rows[j];
+            // dot of new_row[..j] with rows[j][..j]
+            for k in 0..j {
+                s -= new_row[k] * rj[k];
+            }
+            new_row.push(s / rj[j]);
+        }
+        let mut d = diag - new_row.iter().map(|v| v * v).sum::<f64>();
+        if d <= 0.0 {
+            d += jitter;
+        }
+        if d <= 0.0 {
+            return None;
+        }
+        let ld = d.sqrt();
+        new_row.push(ld);
+        self.rows.push(new_row);
+        Some(ld)
+    }
+
+    /// Remove row/column `k`, restoring lower-triangular form with Givens
+    /// rotations (the classic `choldelete`). O((n−k)²).
+    pub fn remove(&mut self, k: usize) {
+        let n = self.dim();
+        assert!(k < n);
+        self.rows.remove(k);
+        // Rows that were below k now each carry one extra entry (their old
+        // length). Apply Givens rotations on column pairs (j, j+1) to zero
+        // the out-of-triangle element on row j (new indexing).
+        for j in k..self.rows.len() {
+            // Row j currently has length j + 2 (old row j+1 had j+2 entries).
+            let (c, s);
+            {
+                let row = &self.rows[j];
+                let a = row[j];
+                let b = row[j + 1];
+                let r = (a * a + b * b).sqrt();
+                if r == 0.0 {
+                    c = 1.0;
+                    s = 0.0;
+                } else {
+                    c = a / r;
+                    s = b / r;
+                }
+            }
+            // Apply rotation to rows j.. on columns (j, j+1).
+            for i in j..self.rows.len() {
+                let row = &mut self.rows[i];
+                let a = row[j];
+                let b = row[j + 1];
+                row[j] = c * a + s * b;
+                row[j + 1] = -s * a + c * b;
+            }
+            // Row j's (j+1)-th entry is now ~0; truncate it.
+            let rj = &mut self.rows[j];
+            debug_assert!(rj[j + 1].abs() < 1e-8 * (1.0 + rj[j].abs()));
+            rj.truncate(j + 1);
+            // Keep the diagonal positive (Givens may flip sign).
+            if self.rows[j][j] < 0.0 {
+                for i in j..self.rows.len() {
+                    self.rows[i][j] = -self.rows[i][j];
+                }
+            }
+        }
+    }
+
+    /// Solve `A x = b` with the current factor.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = &self.rows[i];
+            let mut s = y[i];
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.rows[k][i] * y[k];
+            }
+            y[i] = s / self.rows[i][i];
+        }
+        y
+    }
+
+    /// `log det` of the current matrix.
+    pub fn logdet(&self) -> f64 {
+        self.rows.iter().enumerate().map(|(i, r)| r[i].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Reconstruct the dense matrix `L Lᵀ` (tests / debugging).
+    pub fn reconstruct(&self) -> Mat {
+        let n = self.dim();
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let m = i.min(j) + 1;
+                let mut s = 0.0;
+                for k in 0..m {
+                    s += self.rows[i].get(k).copied().unwrap_or(0.0)
+                        * self.rows[j].get(k).copied().unwrap_or(0.0);
+                }
+                a[(i, j)] = s;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        // A = G Gᵀ + n * I  (well conditioned)
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += g[(i, k)] * g[(j, k)];
+                }
+                a[(i, j)] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn factor_and_solve() {
+        let a = random_spd(8, 1);
+        let ch = Cholesky::factor(&a, 0.0).unwrap();
+        let x_true: Vec<f64> = (0..8).map(|i| (i as f64) - 3.5).collect();
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let mut a = Mat::zeros(2, 2);
+        a[(0, 0)] = 4.0;
+        a[(1, 1)] = 9.0;
+        a[(0, 1)] = 2.0;
+        a[(1, 0)] = 2.0;
+        let ch = Cholesky::factor(&a, 0.0).unwrap();
+        assert!((ch.logdet() - (4.0f64 * 9.0 - 4.0).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incremental_matches_batch() {
+        let n = 10;
+        let a = random_spd(n, 2);
+        let mut inc = IncrementalCholesky::new();
+        for i in 0..n {
+            let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            inc.push(&cross, a[(i, i)], 0.0).unwrap();
+        }
+        let batch = Cholesky::factor(&a, 0.0).unwrap();
+        for i in 0..n {
+            for j in 0..=i {
+                assert!(
+                    (inc.l(i, j) - batch.l[(i, j)]).abs() < 1e-9,
+                    "L[{i}][{j}]: {} vs {}",
+                    inc.l(i, j),
+                    batch.l[(i, j)]
+                );
+            }
+        }
+        assert!((inc.logdet() - batch.logdet()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn incremental_solve_matches() {
+        let n = 7;
+        let a = random_spd(n, 3);
+        let mut inc = IncrementalCholesky::new();
+        for i in 0..n {
+            let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            inc.push(&cross, a[(i, i)], 0.0).unwrap();
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
+        let b = a.matvec(&x_true);
+        let x = inc.solve(&b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn remove_restores_submatrix_factor() {
+        let n = 9;
+        let a = random_spd(n, 4);
+        for k in [0usize, 3, 8] {
+            let mut inc = IncrementalCholesky::new();
+            for i in 0..n {
+                let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+                inc.push(&cross, a[(i, i)], 0.0).unwrap();
+            }
+            inc.remove(k);
+            // Build the submatrix of A without row/col k and compare
+            // reconstruction.
+            let keep: Vec<usize> = (0..n).filter(|&i| i != k).collect();
+            let recon = inc.reconstruct();
+            for (ii, &i) in keep.iter().enumerate() {
+                for (jj, &j) in keep.iter().enumerate() {
+                    assert!(
+                        (recon[(ii, jj)] - a[(i, j)]).abs() < 1e-8,
+                        "k={k} A'[{ii},{jj}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_push_remove_stays_consistent() {
+        let n = 12;
+        let a = random_spd(n, 5);
+        let mut inc = IncrementalCholesky::new();
+        let mut members: Vec<usize> = Vec::new();
+        let mut rng = Pcg64::seeded(99);
+        for step in 0..60 {
+            if members.len() < 2 || (members.len() < n && rng.bernoulli(0.6)) {
+                // push a random non-member
+                let candidates: Vec<usize> =
+                    (0..n).filter(|i| !members.contains(i)).collect();
+                let v = candidates[rng.below(candidates.len())];
+                let cross: Vec<f64> = members.iter().map(|&j| a[(v, j)]).collect();
+                inc.push(&cross, a[(v, v)], 0.0).unwrap();
+                members.push(v);
+            } else {
+                let k = rng.below(members.len());
+                inc.remove(k);
+                members.remove(k);
+            }
+            let recon = inc.reconstruct();
+            for (ii, &i) in members.iter().enumerate() {
+                for (jj, &j) in members.iter().enumerate() {
+                    assert!(
+                        (recon[(ii, jj)] - a[(i, j)]).abs() < 1e-7,
+                        "step {step}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Small dense linear-algebra toolkit.
+//!
+//! The library needs exactly three things from linear algebra:
+//!
+//! 1. Cholesky factorization + triangular solves (min-norm-point affine
+//!    minimization over the corral Gram matrix),
+//! 2. *incrementally extended* Cholesky factors (GP log-determinants along
+//!    nested prefix sets for the Gaussian mutual-information oracle, and
+//!    rank-one corral updates in the optimized min-norm solver),
+//! 3. basic vector operations used across solvers and screening.
+//!
+//! No external BLAS: the corral dimension is small (≤ a few hundred) and the
+//! GP kernels are ≤ a few thousand, so straightforward cache-friendly loops
+//! are adequate and keep the build fully offline.
+
+pub mod cholesky;
+pub mod vecops;
+
+pub use cholesky::{Cholesky, IncrementalCholesky};
+pub use vecops::*;
+
+/// Dense row-major matrix, minimal by design.
+#[derive(Clone, Debug)]
+pub struct Mat {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major storage, `rows * cols` entries.
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Matrix–vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = vecops::dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Symmetrize in place: `A <- (A + A^T) / 2`. Requires square.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_basics() {
+        let mut m = Mat::zeros(2, 3);
+        m[(0, 1)] = 2.0;
+        m[(1, 2)] = -1.0;
+        assert_eq!(m.row(0), &[0.0, 2.0, 0.0]);
+        let y = m.matvec(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![2.0, -1.0]);
+    }
+
+    #[test]
+    fn eye_matvec_is_identity() {
+        let m = Mat::eye(4);
+        let x = [1.0, -2.0, 3.0, 0.5];
+        assert_eq!(m.matvec(&x), x.to_vec());
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut m = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        m.symmetrize();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(m[(i, j)], m[(j, i)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Vector primitives shared by the solvers and the screening engine.
+//!
+//! These are deliberately simple free functions over `&[f64]`; the hot loops
+//! are written so that LLVM auto-vectorizes them (no bounds checks inside,
+//! `chunks_exact` style accumulation where it matters).
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc0 += x[0] * y[0];
+        acc1 += x[1] * y[1];
+        acc2 += x[2] * y[2];
+        acc3 += x[3] * y[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    acc0 + acc1 + acc2 + acc3 + tail
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn norm2_sq(a: &[f64]) -> f64 {
+    dot(a, a)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    norm2_sq(a).sqrt()
+}
+
+/// ℓ1 norm.
+#[inline]
+pub fn norm1(a: &[f64]) -> f64 {
+    a.iter().map(|x| x.abs()).sum()
+}
+
+/// Sum of entries.
+#[inline]
+pub fn sum(a: &[f64]) -> f64 {
+    a.iter().sum()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = (1 - t) * y + t * x` (convex combination in place).
+#[inline]
+pub fn lerp_into(t: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = (1.0 - t) * *yi + t * xi;
+    }
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Squared Euclidean distance.
+#[inline]
+pub fn dist2_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Maximum absolute difference between two vectors.
+#[inline]
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Sum of negative parts: `Σ min(s_k, 0)` — the `s_-(V)` of Lemma 4.
+#[inline]
+pub fn sum_neg(a: &[f64]) -> f64 {
+    a.iter().map(|x| x.min(0.0)).sum()
+}
+
+/// Indices sorted by value, descending; ties broken by index (ascending)
+/// so the greedy ordering is deterministic.
+pub fn argsort_desc(w: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..w.len()).collect();
+    idx.sort_by(|&a, &b| {
+        w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Fill an existing index buffer with the descending argsort of `w`.
+/// Avoids allocation on the solver hot path.
+///
+/// Sorting uses the total-order bit trick (IEEE-754 doubles map to
+/// monotone u64 keys), which is ~2× faster than a `partial_cmp`
+/// comparator — the argsort is on the per-iteration greedy path.
+pub fn argsort_desc_into(w: &[f64], idx: &mut Vec<usize>) {
+    #[inline]
+    fn key(x: f64) -> u64 {
+        let bits = x.to_bits();
+        // Flip: negatives reverse, positives offset — total order.
+        if bits >> 63 == 1 {
+            !bits
+        } else {
+            bits | (1 << 63)
+        }
+    }
+    idx.clear();
+    idx.extend(0..w.len());
+    // Descending by value, ties ascending by index: sort ascending on
+    // (!key, index).
+    idx.sort_unstable_by_key(|&i| (!key(w[i]), i));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let b: Vec<f64> = (0..13).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        let a = [3.0, -4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-15);
+        assert!((norm1(&a) - 7.0).abs() < 1e-15);
+        assert!((norm2_sq(&a) - 25.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, [10.5, 21.0]);
+    }
+
+    #[test]
+    fn lerp_works() {
+        let x = [0.0, 10.0];
+        let mut y = [10.0, 0.0];
+        lerp_into(0.25, &x, &mut y);
+        assert_eq!(y, [7.5, 2.5]);
+    }
+
+    #[test]
+    fn argsort_desc_with_ties() {
+        let w = [1.0, 3.0, 3.0, -1.0];
+        assert_eq!(argsort_desc(&w), vec![1, 2, 0, 3]);
+        let mut buf = Vec::new();
+        argsort_desc_into(&w, &mut buf);
+        assert_eq!(buf, vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn sum_neg_works() {
+        assert_eq!(sum_neg(&[1.0, -2.0, 3.0, -0.5]), -2.5);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! The Lovász extension and Edmonds' greedy algorithm — the bridge between
+//! SFM and the proximal pair (Q-P)/(Q-D).
+//!
+//! For `w ∈ ℝ^p` sorted decreasingly along an order `j₁,…,j_p`, the greedy
+//! vertex `s` with `s_{j_k} = F({j₁..j_k}) − F({j₁..j_{k−1}})` maximizes
+//! `⟨w, s⟩` over the base polytope `B(F)`, and `f(w) = ⟨w, s⟩` is the
+//! Lovász extension (Definition 3). One greedy pass also yields, for free,
+//! the value of `F` at every super-level set of `w` (prefix sums of the
+//! gains) — which is exactly what Remark 1 of the paper exploits to obtain
+//! the set `C` used by the Ω estimate.
+
+use crate::linalg::vecops::{argsort_desc_into, dot};
+use crate::submodular::Submodular;
+
+/// Reusable buffers for greedy passes — the solver hot loop calls greedy
+/// every iteration and must not allocate.
+#[derive(Clone, Debug, Default)]
+pub struct GreedyWorkspace {
+    /// Descending argsort of the direction vector.
+    pub order: Vec<usize>,
+    /// Marginal gains along `order`.
+    pub gains: Vec<f64>,
+}
+
+impl GreedyWorkspace {
+    /// Workspace for ground-set size `p`.
+    pub fn new(p: usize) -> Self {
+        GreedyWorkspace { order: Vec::with_capacity(p), gains: vec![0.0; p] }
+    }
+}
+
+/// Summary of one greedy pass.
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyInfo {
+    /// `f(w) = ⟨w, s⟩` — the Lovász extension at `w`.
+    pub lovasz: f64,
+    /// `min_k F(prefix_k)` over `k = 0..=p` (the best super-level set seen;
+    /// `k = 0` gives `F(∅) = 0`, so this is always ≤ 0).
+    pub best_level_value: f64,
+    /// The `k` attaining `best_level_value` (`prefix_k` = first `k`
+    /// elements of the order).
+    pub best_level_k: usize,
+}
+
+/// One greedy pass: writes the base-polytope vertex maximizing `⟨w, s⟩`
+/// into `s_out` and returns the pass summary.
+///
+/// Ties in `w` are broken by index, so the result is deterministic.
+pub fn greedy_base_vertex<F: Submodular + ?Sized>(
+    f: &F,
+    w: &[f64],
+    ws: &mut GreedyWorkspace,
+    s_out: &mut [f64],
+) -> GreedyInfo {
+    let p = f.ground_size();
+    assert_eq!(w.len(), p);
+    assert_eq!(s_out.len(), p);
+    ws.gains.resize(p, 0.0);
+    argsort_desc_into(w, &mut ws.order);
+    f.prefix_gains(&ws.order, &mut ws.gains);
+
+    let mut lovasz = 0.0;
+    let mut prefix = 0.0;
+    let mut best = 0.0; // k = 0 → F(∅) = 0
+    let mut best_k = 0;
+    for (k, (&j, &g)) in ws.order.iter().zip(ws.gains.iter()).enumerate() {
+        s_out[j] = g;
+        lovasz += w[j] * g;
+        prefix += g;
+        if prefix < best {
+            best = prefix;
+            best_k = k + 1;
+        }
+    }
+    GreedyInfo { lovasz, best_level_value: best, best_level_k: best_k }
+}
+
+/// The Lovász extension `f(w)` (allocating convenience wrapper).
+pub fn lovasz_value<F: Submodular + ?Sized>(f: &F, w: &[f64]) -> f64 {
+    let p = f.ground_size();
+    let mut ws = GreedyWorkspace::new(p);
+    let mut s = vec![0.0; p];
+    greedy_base_vertex(f, w, &mut ws, &mut s).lovasz
+}
+
+/// The strict sup-level set `{w > α}` as ids.
+pub fn sup_level_set(w: &[f64], alpha: f64) -> Vec<usize> {
+    w.iter().enumerate().filter(|(_, &x)| x > alpha).map(|(i, _)| i).collect()
+}
+
+/// The weak sup-level set `{w ≥ α}` as ids.
+pub fn weak_sup_level_set(w: &[f64], alpha: f64) -> Vec<usize> {
+    w.iter().enumerate().filter(|(_, &x)| x >= alpha).map(|(i, _)| i).collect()
+}
+
+/// Verify `s ∈ B(F)` by checking `s(V) = F(V)` and `s(A) ≤ F(A)` for all
+/// subsets — O(2^p), test helper only.
+pub fn in_base_polytope<F: Submodular + ?Sized>(f: &F, s: &[f64], tol: f64) -> bool {
+    let p = f.ground_size();
+    assert!(p <= 22, "exponential check");
+    let total: f64 = s.iter().sum();
+    let full = f.eval(&vec![true; p]);
+    if (total - full).abs() > tol {
+        return false;
+    }
+    for mask in 0u64..(1 << p) {
+        let set: Vec<bool> = (0..p).map(|i| mask >> i & 1 == 1).collect();
+        let s_a: f64 = (0..p).filter(|&i| set[i]).map(|i| s[i]).sum();
+        if s_a > f.eval(&set) + tol {
+            return false;
+        }
+    }
+    true
+}
+
+/// `⟨w, s⟩` helper re-exported for solver code readability.
+#[inline]
+pub fn inner(w: &[f64], s: &[f64]) -> f64 {
+    dot(w, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::submodular::concave_card::ConcaveCardFn;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::modular::ModularFn;
+    use crate::testutil::forall_rng;
+
+    #[test]
+    fn greedy_vertex_in_base_polytope() {
+        forall_rng(20, |rng| {
+            let p = 2 + rng.below(7);
+            let m = rng.uniform_vec(p, -1.0, 1.0);
+            let f = ConcaveCardFn::sqrt(p, rng.uniform(0.5, 2.0), m);
+            let w = rng.normal_vec(p);
+            let mut ws = GreedyWorkspace::new(p);
+            let mut s = vec![0.0; p];
+            greedy_base_vertex(&f, &w, &mut ws, &mut s);
+            if in_base_polytope(&f, &s, 1e-9) {
+                Ok(())
+            } else {
+                Err("greedy vertex outside B(F)".into())
+            }
+        });
+    }
+
+    #[test]
+    fn lovasz_of_indicator_is_f() {
+        // f(1_A) = F(A) for any A (fundamental property).
+        let f = IwataFn::new(10);
+        let mut rng = Pcg64::seeded(91);
+        for _ in 0..30 {
+            let set: Vec<bool> = (0..10).map(|_| rng.bernoulli(0.5)).collect();
+            let w: Vec<f64> = set.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+            let expect = f.eval(&set);
+            assert!((lovasz_value(&f, &w) - expect).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lovasz_positive_homogeneous_and_convex_1d_slices() {
+        let f = IwataFn::new(8);
+        let mut rng = Pcg64::seeded(92);
+        for _ in 0..20 {
+            let w = rng.normal_vec(8);
+            let t = rng.uniform(0.1, 3.0);
+            let tw: Vec<f64> = w.iter().map(|x| t * x).collect();
+            assert!(
+                (lovasz_value(&f, &tw) - t * lovasz_value(&f, &w)).abs() < 1e-8
+            );
+            // Midpoint convexity along a random segment.
+            let v = rng.normal_vec(8);
+            let mid: Vec<f64> = w.iter().zip(&v).map(|(a, b)| 0.5 * (a + b)).collect();
+            let lhs = lovasz_value(&f, &mid);
+            let rhs = 0.5 * lovasz_value(&f, &w) + 0.5 * lovasz_value(&f, &v);
+            assert!(lhs <= rhs + 1e-9);
+        }
+    }
+
+    #[test]
+    fn greedy_maximizes_over_vertices() {
+        // ⟨w, s_greedy(w)⟩ ≥ ⟨w, s_greedy(u)⟩ for any direction u.
+        let f = IwataFn::new(7);
+        let mut rng = Pcg64::seeded(93);
+        let mut ws = GreedyWorkspace::new(7);
+        for _ in 0..25 {
+            let w = rng.normal_vec(7);
+            let u = rng.normal_vec(7);
+            let mut sw = vec![0.0; 7];
+            let mut su = vec![0.0; 7];
+            let info = greedy_base_vertex(&f, &w, &mut ws, &mut sw);
+            greedy_base_vertex(&f, &u, &mut ws, &mut su);
+            assert!(info.lovasz >= inner(&w, &su) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn best_level_value_matches_scan() {
+        let f = IwataFn::new(9);
+        let mut rng = Pcg64::seeded(94);
+        let mut ws = GreedyWorkspace::new(9);
+        let mut s = vec![0.0; 9];
+        for _ in 0..10 {
+            let w = rng.normal_vec(9);
+            let info = greedy_base_vertex(&f, &w, &mut ws, &mut s);
+            // Recompute F at all prefixes directly.
+            let mut best = 0.0f64;
+            for k in 0..=9 {
+                let ids: Vec<usize> = ws.order[..k].to_vec();
+                let v = crate::submodular::SubmodularExt::eval_ids(&f, &ids);
+                best = best.min(v);
+            }
+            assert!((info.best_level_value - best).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn modular_greedy_is_weights() {
+        let f = ModularFn::new(vec![2.0, -1.0, 0.5]);
+        let mut ws = GreedyWorkspace::new(3);
+        let mut s = vec![0.0; 3];
+        greedy_base_vertex(&f, &[0.3, 0.2, 0.9], &mut ws, &mut s);
+        assert_eq!(s, vec![2.0, -1.0, 0.5]);
+    }
+
+    #[test]
+    fn level_sets() {
+        let w = [0.5, -0.1, 0.0, 2.0];
+        assert_eq!(sup_level_set(&w, 0.0), vec![0, 3]);
+        assert_eq!(weak_sup_level_set(&w, 0.0), vec![0, 2, 3]);
+    }
+}

@@ -1,0 +1,198 @@
+//! `sfm-screen` — the experiment launcher (L3 leader binary).
+//!
+//! See `sfm-screen help` for the command reference. Every paper table and
+//! figure has a dedicated subcommand; `all` regenerates the full
+//! evaluation into `--out-dir`.
+
+use anyhow::{bail, Result};
+use sfm_screen::cli::{bench_config, parse_args, USAGE};
+use sfm_screen::coordinator::experiments as exp;
+use sfm_screen::coordinator::jobs::{rule_set, JobSpec, WorkloadSpec};
+use sfm_screen::screening::RuleSet;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(err) = run(&args) {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = parse_args(args)?;
+    if cli.flags.get("help").is_some() && cli.command != "help" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match cli.command.as_str() {
+        "help" => println!("{USAGE}"),
+        "version" => println!("sfm-screen {}", sfm_screen::VERSION),
+        "info" => info()?,
+        "solve" => solve(&cli.flags)?,
+        "path" => path(&cli.flags)?,
+        "table1" => {
+            let cfg = bench_config(&cli.flags)?;
+            println!("{}", exp::table1(&cfg)?.render());
+        }
+        "table3" => {
+            let cfg = bench_config(&cli.flags)?;
+            let (t2, t3) = exp::table3(&cfg)?;
+            println!("Table 2 — instance statistics\n{}", t2.render());
+            println!("Table 3 — running times\n{}", t3.render());
+        }
+        "fig2" => {
+            let cfg = bench_config(&cli.flags)?;
+            println!("{}", exp::fig2(&cfg)?.render());
+        }
+        "fig3" => {
+            let cfg = bench_config(&cli.flags)?;
+            let p = cli.flags.get_usize("p", 400)?;
+            println!("{}", exp::fig3(&cfg, p)?.render());
+        }
+        "fig4" => {
+            let cfg = bench_config(&cli.flags)?;
+            println!("{}", exp::fig4(&cfg)?.render());
+        }
+        "ablation-rho" => {
+            let cfg = bench_config(&cli.flags)?;
+            let p = cli.flags.get_usize("p", *cfg.sizes.last().unwrap_or(&400))?;
+            let rhos = [0.1, 0.3, 0.5, 0.7, 0.9];
+            println!("{}", exp::ablation_rho(&cfg, p, &rhos)?.render());
+        }
+        "ablation-rules" => {
+            let cfg = bench_config(&cli.flags)?;
+            let p = cli.flags.get_usize("p", *cfg.sizes.last().unwrap_or(&400))?;
+            println!("{}", exp::ablation_rules(&cfg, p)?.render());
+        }
+        "ablation-solver" => {
+            let cfg = bench_config(&cli.flags)?;
+            let p = cli.flags.get_usize("p", *cfg.sizes.last().unwrap_or(&400))?;
+            println!("{}", exp::ablation_solver(&cfg, p)?.render());
+        }
+        "all" => {
+            let cfg = bench_config(&cli.flags)?;
+            println!("== Table 1 ==\n{}", exp::table1(&cfg)?.render());
+            let (t2, t3) = exp::table3(&cfg)?;
+            println!("== Table 2 ==\n{}", t2.render());
+            println!("== Table 3 ==\n{}", t3.render());
+            println!("== Figure 2 ==\n{}", exp::fig2(&cfg)?.render());
+            let p = *cfg.sizes.last().unwrap_or(&400);
+            println!("== Figure 3 ==\n{}", exp::fig3(&cfg, p)?.render());
+            println!("== Figure 4 ==\n{}", exp::fig4(&cfg)?.render());
+            println!("== Ablation ρ ==\n{}", exp::ablation_rho(&cfg, p, &[0.1, 0.3, 0.5, 0.7, 0.9])?.render());
+            println!("== Ablation rules ==\n{}", exp::ablation_rules(&cfg, p)?.render());
+            println!("== Ablation solver ==\n{}", exp::ablation_solver(&cfg, p)?.render());
+            println!("CSV outputs under {}", cfg.out_dir.display());
+        }
+        other => bail!("unknown command `{other}` — try `sfm-screen help`"),
+    }
+    Ok(())
+}
+
+/// Compute the SFM′ regularization path (Theorem 2): one proximal solve
+/// yields `argmin F + α|A|` for every α.
+fn path(flags: &sfm_screen::config::Config) -> Result<()> {
+    use sfm_screen::screening::parametric::RegularizationPath;
+    let cfg = bench_config(flags)?;
+    let p = flags.get_usize("p", 200)?;
+    let tm = sfm_screen::workloads::two_moons::TwoMoons::generate(
+        sfm_screen::workloads::two_moons::TwoMoonsParams {
+            p,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+    );
+    let f = tm.knn_cut(10, 1.0);
+    let rp = RegularizationPath::compute(&f, cfg.eps, cfg.max_iters)?;
+    println!("regularization path on two-moons(p={p}):");
+    println!("  gap            : {:.3e}", rp.gap);
+    println!("  breakpoints    : {}", rp.breakpoints.len());
+    let certs = rp.certificates();
+    for alpha in [-2.0, -0.5, 0.0, 0.5, 2.0] {
+        let a = rp.minimizer_at(alpha);
+        println!(
+            "  alpha = {alpha:>5}: |A*_a| = {:>4}, certified {:.0}%",
+            a.len(),
+            100.0 * certs.decided_fraction(alpha, 1e-10)
+        );
+    }
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("sfm-screen {}", sfm_screen::VERSION);
+    let dir = sfm_screen::runtime::default_artifact_dir();
+    println!("artifact dir: {}", dir.display());
+    match sfm_screen::runtime::XlaScreener::new(&dir) {
+        Ok(s) => {
+            println!("screen backend: xla (buckets: {:?})", s.buckets());
+        }
+        Err(e) => {
+            println!("screen backend: rust fallback ({e:#})");
+        }
+    }
+    match sfm_screen::runtime::AffinityExec::new(&dir) {
+        Ok(a) => println!("affinity kernel: available (buckets: {:?})", a.buckets()),
+        Err(_) => println!("affinity kernel: unavailable (rust fallback)"),
+    }
+    Ok(())
+}
+
+fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
+    let cfg = bench_config(flags)?;
+    let workload = flags.get_str("workload", "two-moons");
+    let p = flags.get_usize("p", 400)?;
+    let wl = match workload.as_str() {
+        "two-moons" => WorkloadSpec::TwoMoons { p, use_mi: cfg.use_mi, seed: cfg.seed },
+        "iwata" => WorkloadSpec::Iwata { p },
+        img if img.starts_with("image") => {
+            let idx: usize = img
+                .trim_start_matches("image")
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad image name `{img}`"))?
+                .saturating_sub(1);
+            WorkloadSpec::Image { index: idx, scale: cfg.image_scale }
+        }
+        other => bail!("unknown workload `{other}`"),
+    };
+    let rules: RuleSet = rule_set(&flags.get_str("rules", "all"))?;
+    cfg.warmup(&[p]); // pre-compile PJRT executables outside the timed solve
+    let mut opts = sfm_screen::screening::iaes::IaesOptions {
+        eps: cfg.eps,
+        rho: cfg.rho,
+        rules,
+        solver: sfm_screen::coordinator::jobs::solver_choice(&cfg.solver)?,
+        max_iters: cfg.max_iters,
+        screener: cfg.screener(),
+        record_history: false,
+        min_reduction_frac: cfg.min_reduction_frac,
+    };
+    opts.record_history = false;
+    let job = JobSpec { name: wl.label(), workload: wl, opts };
+    let res = job.run()?;
+    if flags.get_bool("json", false)? {
+        println!(
+            "{}",
+            sfm_screen::coordinator::json::report_to_json(&res.report, false).to_string()
+        );
+        return Ok(());
+    }
+    println!("workload     : {}", res.name);
+    println!("minimum      : {:.6}", res.report.minimum);
+    println!("|A*|         : {}", res.report.minimizer.len());
+    println!("iterations   : {}", res.report.iters);
+    println!("final gap    : {:.3e}", res.report.final_gap);
+    println!(
+        "screened     : {} active + {} inactive",
+        res.report.screened_active, res.report.screened_inactive
+    );
+    println!("triggers     : {}", res.report.triggers.len());
+    println!(
+        "time         : {:.3}s total ({:.3}s solver, {:.3}s screening)",
+        res.wall.as_secs_f64(),
+        res.report.solver_time.as_secs_f64(),
+        res.report.screen_time.as_secs_f64()
+    );
+    println!("emptied      : {}", res.report.emptied);
+    Ok(())
+}

@@ -1,0 +1,387 @@
+//! XLA/PJRT runtime — executes the AOT-compiled JAX/Pallas artifacts from
+//! the rust hot path.
+//!
+//! `make artifacts` (build time, python) lowers the L2 model to **HLO
+//! text** at a ladder of padded bucket sizes; this module loads
+//! `artifacts/*.hlo.txt`, compiles each once on the PJRT CPU client, and
+//! caches the executables. Python never runs at request time.
+//!
+//! Two executors are exposed:
+//!
+//! * [`XlaScreener`] — the fused screening kernel (AES-1/IES-1/AES-2/IES-2
+//!   masks + Lemma-2 extrema) behind the [`Screener`] trait, bucket-padded.
+//! * [`AffinityExec`] — the tiled Gaussian-affinity kernel used by the
+//!   two-moons workload builder.
+//!
+//! When artifacts are missing the callers fall back to the pure-rust
+//! implementations ([`crate::screening::rules`] and the direct affinity
+//! loop); the integration tests cross-check both paths in f64.
+
+use crate::screening::{RuleSet, ScreenInputs, ScreenOutcome, Screener};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Resolve the artifacts directory: `$SFM_SCREEN_ARTIFACTS`, else
+/// `./artifacts`, else `<manifest dir>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SFM_SCREEN_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: the PJRT CPU client and its executables are thread-compatible
+// (the underlying C++ objects are internally synchronized for compilation
+// and execution); all rust-side access is additionally serialized through
+// the `Mutex` in `Engine`.
+unsafe impl Send for EngineInner {}
+
+/// A lazy, caching PJRT engine: one CPU client, one compiled executable
+/// per artifact file.
+pub struct Engine {
+    dir: PathBuf,
+    inner: Mutex<EngineInner>,
+}
+
+impl Engine {
+    /// Create an engine rooted at `dir` (must contain `*.hlo.txt`).
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Engine {
+            dir,
+            inner: Mutex::new(EngineInner { client, cache: HashMap::new() }),
+        })
+    }
+
+    /// Engine at the default artifact location.
+    pub fn at_default() -> Result<Self> {
+        Self::new(default_artifact_dir())
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether `name.hlo.txt` exists.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).is_file()
+    }
+
+    /// List available artifact stems.
+    pub fn list_artifacts(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name().to_string_lossy().to_string();
+                if let Some(stem) = name.strip_suffix(".hlo.txt") {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Execute artifact `name` with the given input literals; returns the
+    /// flattened output tuple. Compiles (and caches) on first use.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let mut inner = self.inner.lock().expect("engine poisoned");
+        if !inner.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let text_path = path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&text_path)
+                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            inner.cache.insert(name.to_string(), exe);
+        }
+        let exe = inner.cache.get(name).expect("just inserted");
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffers from {name}"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name} output: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+/// Screening-kernel artifact naming: `screen_p{bucket}`.
+fn screen_artifact(bucket: usize) -> String {
+    format!("screen_p{bucket}")
+}
+
+/// Affinity-kernel artifact naming: `affinity_n{bucket}`.
+fn affinity_artifact(bucket: usize) -> String {
+    format!("affinity_n{bucket}")
+}
+
+/// The XLA screening backend.
+pub struct XlaScreener {
+    engine: Engine,
+    /// Available padded sizes, ascending.
+    buckets: Vec<usize>,
+    /// Strictness margin (mirrors [`crate::screening::rules::RustScreener`]).
+    pub margin: f64,
+}
+
+impl XlaScreener {
+    /// Load from `dir`; errors if no screening artifacts are present.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let engine = Engine::new(dir)?;
+        let mut buckets: Vec<usize> = engine
+            .list_artifacts()
+            .iter()
+            .filter_map(|s| s.strip_prefix("screen_p").and_then(|n| n.parse().ok()))
+            .collect();
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            bail!(
+                "no screen_p*.hlo.txt artifacts under {} — run `make artifacts`",
+                engine.dir().display()
+            );
+        }
+        Ok(XlaScreener { engine, buckets, margin: 1e-10 })
+    }
+
+    /// Load from the default artifact location.
+    pub fn at_default() -> Result<Self> {
+        Self::new(default_artifact_dir())
+    }
+
+    /// The bucket ladder.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn bucket_for(&self, p: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= p)
+    }
+
+    /// Raw kernel evaluation: returns the four rule masks + extrema, all
+    /// truncated to `p̂`. Public for the backend-equivalence tests.
+    #[allow(clippy::type_complexity)]
+    pub fn run_kernel(
+        &self,
+        inputs: &ScreenInputs<'_>,
+    ) -> Result<(Vec<bool>, Vec<bool>, Vec<bool>, Vec<bool>, Vec<f64>, Vec<f64>)> {
+        let p = inputs.w.len();
+        let bucket = self
+            .bucket_for(p)
+            .ok_or_else(|| anyhow!("p-hat = {p} exceeds largest bucket"))?;
+        let mut w_pad = vec![0.0f64; bucket];
+        w_pad[..p].copy_from_slice(inputs.w);
+        let mut valid = vec![0.0f64; bucket];
+        valid[..p].iter_mut().for_each(|v| *v = 1.0);
+
+        let lits = [
+            xla::Literal::vec1(&w_pad),
+            xla::Literal::vec1(&valid),
+            xla::Literal::scalar(inputs.gap.max(0.0)),
+            xla::Literal::scalar(inputs.f_v),
+            xla::Literal::scalar(inputs.f_c),
+            xla::Literal::scalar(p as f64),
+            xla::Literal::scalar(self.margin),
+        ];
+        let outs = self
+            .engine
+            .execute(&screen_artifact(bucket), &lits)
+            .context("screen kernel")?;
+        anyhow::ensure!(outs.len() == 6, "expected 6 outputs, got {}", outs.len());
+        let as_mask = |l: &xla::Literal| -> Result<Vec<bool>> {
+            Ok(l.to_vec::<f64>()
+                .map_err(|e| anyhow!("{e:?}"))?[..p]
+                .iter()
+                .map(|&x| x > 0.5)
+                .collect())
+        };
+        let as_vec = |l: &xla::Literal| -> Result<Vec<f64>> {
+            Ok(l.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?[..p].to_vec())
+        };
+        Ok((
+            as_mask(&outs[0])?,
+            as_mask(&outs[1])?,
+            as_mask(&outs[2])?,
+            as_mask(&outs[3])?,
+            as_vec(&outs[4])?,
+            as_vec(&outs[5])?,
+        ))
+    }
+}
+
+impl Screener for XlaScreener {
+    fn screen(&self, inputs: &ScreenInputs<'_>, rules: RuleSet) -> ScreenOutcome {
+        let p = inputs.w.len();
+        // Degenerate / out-of-ladder sizes: reference backend.
+        if p < 2 || self.bucket_for(p).is_none() {
+            return crate::screening::rules::screen_rust(inputs, rules, self.margin);
+        }
+        match self.run_kernel(inputs) {
+            Ok((aes1, ies1, aes2, ies2, wmin, wmax)) => {
+                let mut active = vec![false; p];
+                let mut inactive = vec![false; p];
+                for j in 0..p {
+                    // Mirror the rust backend's precedence: pair-1 rules
+                    // decide first, pair-2 fills in the undecided band.
+                    if rules.aes1 && aes1[j] {
+                        active[j] = true;
+                    } else if rules.ies1 && ies1[j] {
+                        inactive[j] = true;
+                    } else if rules.aes2 && aes2[j] {
+                        active[j] = true;
+                    } else if rules.ies2 && ies2[j] {
+                        inactive[j] = true;
+                    }
+                }
+                ScreenOutcome { active, inactive, wmin, wmax }
+            }
+            Err(err) => {
+                // Never fail the solve because of the accelerator path.
+                eprintln!(
+                    "[sfm-screen] XLA backend error ({err:#}); falling back to rust rules"
+                );
+                crate::screening::rules::screen_rust(inputs, rules, self.margin)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// The AOT affinity-matrix executor (two-moons workload builder).
+pub struct AffinityExec {
+    engine: Engine,
+    buckets: Vec<usize>,
+}
+
+impl AffinityExec {
+    /// Load from `dir`; errors if no affinity artifacts are present.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let engine = Engine::new(dir)?;
+        let mut buckets: Vec<usize> = engine
+            .list_artifacts()
+            .iter()
+            .filter_map(|s| s.strip_prefix("affinity_n").and_then(|n| n.parse().ok()))
+            .collect();
+        buckets.sort_unstable();
+        if buckets.is_empty() {
+            bail!(
+                "no affinity_n*.hlo.txt artifacts under {} — run `make artifacts`",
+                engine.dir().display()
+            );
+        }
+        Ok(AffinityExec { engine, buckets })
+    }
+
+    /// Load from the default artifact location.
+    pub fn at_default() -> Result<Self> {
+        Self::new(default_artifact_dir())
+    }
+
+    /// Available padded sizes.
+    pub fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    /// Compute the `n x n` Gaussian affinity `exp(-a * |xi-xj|^2)` with zero
+    /// diagonal for 2-D points, via the compiled Pallas kernel.
+    pub fn affinity(&self, points: &[[f64; 2]], alpha: f64) -> Result<Vec<f64>> {
+        let n = points.len();
+        let bucket = self
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("n = {n} exceeds largest affinity bucket"))?;
+        let mut xs = vec![0.0f64; bucket];
+        let mut ys = vec![0.0f64; bucket];
+        for (i, pt) in points.iter().enumerate() {
+            xs[i] = pt[0];
+            ys[i] = pt[1];
+        }
+        let lits = [
+            xla::Literal::vec1(&xs),
+            xla::Literal::vec1(&ys),
+            xla::Literal::scalar(alpha),
+        ];
+        let outs = self.engine.execute(&affinity_artifact(bucket), &lits)?;
+        anyhow::ensure!(outs.len() == 1, "expected 1 output");
+        let full = outs[0].to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(full.len() == bucket * bucket, "bad affinity shape");
+        // Crop the padded bucket x bucket matrix to n x n; zero the diagonal
+        // (padded lanes produce exp(0)=1 there).
+        let mut out = vec![0.0f64; n * n];
+        for i in 0..n {
+            out[i * n..(i + 1) * n]
+                .copy_from_slice(&full[i * bucket..i * bucket + n]);
+            out[i * n + i] = 0.0;
+        }
+        Ok(out)
+    }
+}
+
+/// Convenience: build the best available screener (XLA if artifacts exist,
+/// reference rust backend otherwise).
+pub fn best_screener() -> std::sync::Arc<dyn Screener> {
+    match XlaScreener::at_default() {
+        Ok(s) => std::sync::Arc::new(s),
+        Err(_) => std::sync::Arc::new(crate::screening::rules::RustScreener::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that require compiled artifacts live in
+    // rust/tests/xla_backend.rs (integration), so unit `cargo test` stays
+    // green before `make artifacts`. Here: pure logic only.
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(screen_artifact(1024), "screen_p1024");
+        assert_eq!(affinity_artifact(256), "affinity_n256");
+    }
+
+    #[test]
+    fn default_dir_resolves() {
+        let d = default_artifact_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    #[test]
+    fn missing_artifacts_error_is_friendly() {
+        let err = match XlaScreener::new("/nonexistent-dir-xyz") {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts") || msg.contains("PJRT"), "{msg}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Theorem-3 optimum estimation: `ŵ* ∈ W = B ∩ Ω ∩ P`.
+//!
+//! This module packages the three certificates and provides membership
+//! checks used by the property tests ("the true optimum lies in W at every
+//! trigger") and by diagnostics. The derivation:
+//!
+//! * `B` — `P̂` is 1-strongly convex, so
+//!   `½‖ŵ − ŵ*‖² ≤ P̂(ŵ) − P̂(ŵ*) ≤ G(ŵ, ŝ)`;
+//! * `P` — `−ŵ* = ŝ* ∈ B(F̂)` implies `⟨ŵ*, 1⟩ = −F̂(V̂)`;
+//! * `Ω` — Lemma 4 (`min F̂ = ½(F̂(V̂) − min_{s∈B(F̂)} ‖s‖₁)`) sandwiches
+//!   `‖ŵ*‖₁` between `F̂(V̂) − 2F̂(C)` and `‖ŝ‖₁` for any feasible `ŝ`.
+
+use crate::linalg::vecops::{dist2_sq, norm1, sum};
+
+/// The Theorem-3 region `W = B ∩ Ω ∩ P`.
+#[derive(Clone, Debug)]
+pub struct OptimumEstimate {
+    /// Ball center `ŵ`.
+    pub center: Vec<f64>,
+    /// Ball radius `√(2 G(ŵ, ŝ))`.
+    pub radius: f64,
+    /// Plane offset: `⟨w, 1⟩ = plane_rhs` (`= −F̂(V̂)`).
+    pub plane_rhs: f64,
+    /// Ω lower bound `F̂(V̂) − 2 F̂(C) ≤ ‖w‖₁`.
+    pub l1_lo: f64,
+    /// Ω upper bound `‖w‖₁ ≤ ‖ŝ‖₁`.
+    pub l1_hi: f64,
+}
+
+impl OptimumEstimate {
+    /// Build the estimate from the solver state.
+    pub fn from_iterates(w: &[f64], s: &[f64], gap: f64, f_v: f64, f_c: f64) -> Self {
+        OptimumEstimate {
+            center: w.to_vec(),
+            radius: (2.0 * gap.max(0.0)).sqrt(),
+            plane_rhs: -f_v,
+            l1_lo: f_v - 2.0 * f_c,
+            l1_hi: norm1(s),
+        }
+    }
+
+    /// Membership test with tolerance.
+    pub fn contains(&self, x: &[f64], tol: f64) -> bool {
+        self.ball_contains(x, tol) && self.plane_contains(x, tol) && self.omega_contains(x, tol)
+    }
+
+    /// `x ∈ B`?
+    pub fn ball_contains(&self, x: &[f64], tol: f64) -> bool {
+        dist2_sq(x, &self.center).sqrt() <= self.radius + tol
+    }
+
+    /// `x ∈ P`?
+    pub fn plane_contains(&self, x: &[f64], tol: f64) -> bool {
+        (sum(x) - self.plane_rhs).abs() <= tol * (1.0 + self.plane_rhs.abs())
+    }
+
+    /// `x ∈ Ω`?
+    pub fn omega_contains(&self, x: &[f64], tol: f64) -> bool {
+        let l1 = norm1(x);
+        l1 >= self.l1_lo - tol && l1 <= self.l1_hi + tol
+    }
+
+    /// Volume proxy: the ball radius (the dominant shrinking term; the
+    /// event log records it so the benches can plot estimation tightness).
+    pub fn tightness(&self) -> f64 {
+        self.radius
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::lovasz::sup_level_set;
+    use crate::rng::Pcg64;
+    use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+    use crate::solvers::ProxSolver;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::kernel_cut::KernelCutFn;
+    use crate::submodular::{Submodular, SubmodularExt};
+
+    /// Solve (Q-P) to near-exactness and return w*.
+    fn near_exact_wstar(f: &dyn Submodular) -> Vec<f64> {
+        let mut solver = MinNormPoint::new(f, MinNormOptions::default(), None);
+        for _ in 0..5000 {
+            let ev = solver.step(f);
+            if ev.gap < 1e-13 {
+                break;
+            }
+        }
+        solver.w().to_vec()
+    }
+
+    #[test]
+    fn theorem3_contains_optimum_along_the_solve() {
+        // Track a fresh solve; at every iteration the estimate built from
+        // the current iterates must contain the (pre-computed) optimum.
+        let f = IwataFn::new(14);
+        let w_star = near_exact_wstar(&f);
+        let f_v = f.eval_full();
+        let mut solver = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        for _ in 0..60 {
+            let ev = solver.step(&f);
+            let est = OptimumEstimate::from_iterates(
+                solver.w(),
+                solver.s(),
+                ev.gap,
+                f_v,
+                solver.best_level_value(),
+            );
+            assert!(
+                est.ball_contains(&w_star, 1e-7),
+                "ball violated at iter {} (gap {})",
+                ev.iter,
+                ev.gap
+            );
+            assert!(est.plane_contains(&w_star, 1e-7), "plane violated");
+            assert!(est.omega_contains(&w_star, 1e-7), "omega violated");
+            if ev.gap < 1e-12 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn theorem3_on_random_kernel_cut() {
+        let mut rng = Pcg64::seeded(29);
+        let p = 12;
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -2.0, 2.0);
+        let f = KernelCutFn::new(p, k, unary);
+        let w_star = near_exact_wstar(&f);
+        // Sanity: {w* > 0} is a minimizer.
+        let brute = brute_force_sfm(&f, 1e-7);
+        let mut set = vec![false; p];
+        for i in sup_level_set(&w_star, 0.0) {
+            set[i] = true;
+        }
+        assert!((f.eval(&set) - brute.minimum).abs() < 1e-6);
+
+        let f_v = f.eval_full();
+        let mut solver = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        for _ in 0..200 {
+            let ev = solver.step(&f);
+            let est = OptimumEstimate::from_iterates(
+                solver.w(),
+                solver.s(),
+                ev.gap,
+                f_v,
+                solver.best_level_value(),
+            );
+            assert!(est.contains(&w_star, 1e-6), "W violated at iter {}", ev.iter);
+            if ev.gap < 1e-12 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn radius_shrinks_with_gap() {
+        let a = OptimumEstimate::from_iterates(&[0.0], &[0.0], 2.0, 0.0, 0.0);
+        let b = OptimumEstimate::from_iterates(&[0.0], &[0.0], 0.5, 0.0, 0.0);
+        assert!(b.tightness() < a.tightness());
+        assert!((a.tightness() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,574 @@
+//! Algorithm 2 — the IAES engine: Inactive and Active Element Screening.
+//!
+//! The engine drives a [`ProxSolver`] on the reduced pair (Q-P′)/(Q-D′)
+//! and fires the enabled screening rules every time the duality gap drops
+//! below `ρ ×` (gap at last trigger). Newly certified elements update the
+//! global active/inactive sets; the ground set is contracted via the
+//! Lemma-1 reduction ([`ScaledFn`]); the solver warm-restarts from the
+//! restricted primal with `ŝ ← argmax_{s∈B(F̂)} ⟨ŵ, s⟩` (step 14).
+//!
+//! Termination: either the residual ground set empties (`A* = Ê` — the
+//! paper's "no theoretical limit" property: screening can finish the whole
+//! problem), or the gap reaches `ε` and the remaining signs of `ŵ` decide
+//! the leftover elements (`A* = Ê ∪ {ŵ > 0}`).
+
+use super::rules::RustScreener;
+use super::{RuleSet, ScreenInputs, Screener};
+use crate::solvers::frankwolfe::{FrankWolfe, FwOptions};
+use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+use crate::solvers::ProxSolver;
+use crate::submodular::scaled::ScaledFn;
+use crate::submodular::{Submodular, SubmodularExt};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Solver selection for the engine.
+#[derive(Clone, Copy, Debug)]
+pub enum SolverChoice {
+    /// Fujishige–Wolfe minimum-norm point (the paper's choice).
+    MinNorm(MinNormOptions),
+    /// Conditional gradient (Remark 2 alternative).
+    FrankWolfe(FwOptions),
+}
+
+impl Default for SolverChoice {
+    fn default() -> Self {
+        SolverChoice::MinNorm(MinNormOptions::default())
+    }
+}
+
+impl SolverChoice {
+    fn build(&self, f: &dyn Submodular) -> Box<dyn ProxSolver> {
+        match self {
+            SolverChoice::MinNorm(o) => Box::new(MinNormPoint::new(f, *o, None)),
+            SolverChoice::FrankWolfe(o) => Box::new(FrankWolfe::new(f, *o, None)),
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone)]
+pub struct IaesOptions {
+    /// Duality-gap accuracy `ε` (paper: 1e−6).
+    pub eps: f64,
+    /// Trigger decay `ρ ∈ (0, 1)` (paper: 0.5; Remark 5).
+    pub rho: f64,
+    /// Which rules run (all / AES-only / IES-only / none).
+    pub rules: RuleSet,
+    /// Solver A.
+    pub solver: SolverChoice,
+    /// Hard cap on major iterations.
+    pub max_iters: usize,
+    /// Screening backend; `None` → reference rust backend.
+    pub screener: Option<Arc<dyn Screener>>,
+    /// Record per-iteration history (rejection-ratio curves).
+    pub record_history: bool,
+    /// Deferred-contraction threshold: certified elements are *removed*
+    /// (ground set contracted + solver warm-restarted, Algorithm 2 steps
+    /// 13–15) only once they make up at least this fraction of the
+    /// residual problem. Certification itself is never deferred — only
+    /// the restart. Remark 4 notes the restart "may increase the dual gap
+    /// slightly"; batching keeps that cost amortized against a reduction
+    /// that is actually worth it. `0.0` restarts on every certificate
+    /// (the literal Algorithm 2).
+    pub min_reduction_frac: f64,
+}
+
+impl Default for IaesOptions {
+    fn default() -> Self {
+        IaesOptions {
+            eps: 1e-6,
+            rho: 0.5,
+            rules: RuleSet::all(),
+            solver: SolverChoice::default(),
+            max_iters: 100_000,
+            screener: None,
+            record_history: true,
+            min_reduction_frac: 0.2,
+        }
+    }
+}
+
+impl std::fmt::Debug for IaesOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IaesOptions")
+            .field("eps", &self.eps)
+            .field("rho", &self.rho)
+            .field("rules", &self.rules)
+            .field("solver", &self.solver)
+            .field("max_iters", &self.max_iters)
+            .field("record_history", &self.record_history)
+            .finish()
+    }
+}
+
+/// One screening trigger event.
+#[derive(Clone, Debug)]
+pub struct TriggerRecord {
+    /// Global major-iteration index at which the trigger fired.
+    pub iter: usize,
+    /// Duality gap at the trigger.
+    pub gap: f64,
+    /// Residual ground-set size before screening.
+    pub p_before: usize,
+    /// Newly certified active elements.
+    pub new_active: usize,
+    /// Newly certified inactive elements.
+    pub new_inactive: usize,
+    /// Newly certified active elements (original ids) — drives the Figure-3
+    /// visualization.
+    pub new_active_ids: Vec<usize>,
+    /// Newly certified inactive elements (original ids).
+    pub new_inactive_ids: Vec<usize>,
+    /// Time spent inside the screening rules (this trigger).
+    pub screen_time: Duration,
+}
+
+/// Per-iteration history row (rejection-ratio curves).
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    /// Global major-iteration index (1-based).
+    pub iter: usize,
+    /// Duality gap after the iteration.
+    pub gap: f64,
+    /// Cumulative certified-active count.
+    pub active: usize,
+    /// Cumulative certified-inactive count.
+    pub inactive: usize,
+    /// Residual problem size.
+    pub p_remaining: usize,
+}
+
+/// Final report of a screened solve.
+#[derive(Clone, Debug)]
+pub struct IaesReport {
+    /// The minimizer `A*` (original ids, sorted).
+    pub minimizer: Vec<usize>,
+    /// `F(A*)`.
+    pub minimum: f64,
+    /// Total major iterations across all restarts.
+    pub iters: usize,
+    /// Final duality gap on the residual problem (0 if emptied).
+    pub final_gap: f64,
+    /// Elements certified active by screening (excludes sign-decided ones).
+    pub screened_active: usize,
+    /// Elements certified inactive by screening.
+    pub screened_inactive: usize,
+    /// Trigger log.
+    pub triggers: Vec<TriggerRecord>,
+    /// Per-iteration history (empty unless `record_history`).
+    pub history: Vec<IterRecord>,
+    /// Wall time inside the solver (greedy + updates).
+    pub solver_time: Duration,
+    /// Wall time inside the screening rules.
+    pub screen_time: Duration,
+    /// True when screening emptied the ground set before the gap hit ε.
+    pub emptied: bool,
+}
+
+impl IaesReport {
+    /// Rejection ratio `(m_i + n_i)/p` at the final iteration.
+    pub fn final_rejection_ratio(&self, p: usize) -> f64 {
+        (self.screened_active + self.screened_inactive) as f64 / p as f64
+    }
+}
+
+/// The Algorithm-2 engine.
+pub struct IaesEngine<'a> {
+    f: &'a dyn Submodular,
+    opts: IaesOptions,
+    /// Certified-active original ids.
+    active: Vec<usize>,
+    /// Certified-inactive original ids.
+    inactive: Vec<usize>,
+    /// Residual original ids (V̂).
+    kept: Vec<usize>,
+}
+
+impl<'a> IaesEngine<'a> {
+    /// Create an engine for `f`.
+    pub fn new(f: &'a dyn Submodular, opts: IaesOptions) -> Self {
+        let p = f.ground_size();
+        IaesEngine {
+            f,
+            opts,
+            active: Vec::new(),
+            inactive: Vec::new(),
+            kept: (0..p).collect(),
+        }
+    }
+
+    /// Run Algorithm 2 to completion.
+    pub fn run(mut self) -> anyhow::Result<IaesReport> {
+        let p_total = self.f.ground_size();
+        anyhow::ensure!(p_total > 0, "empty ground set");
+        anyhow::ensure!(
+            self.opts.rho > 0.0 && self.opts.rho < 1.0,
+            "rho must lie in (0,1)"
+        );
+        let screener: Arc<dyn Screener> = self
+            .opts
+            .screener
+            .clone()
+            .unwrap_or_else(|| Arc::new(RustScreener::default()));
+
+        let mut triggers = Vec::new();
+        let mut history = Vec::new();
+        let mut solver_time = Duration::ZERO;
+        let mut screen_time = Duration::ZERO;
+        let mut total_iters = 0usize;
+        let mut final_gap = f64::INFINITY;
+        let mut emptied = false;
+
+        // Residual primal (kept alive across restarts for warm starts).
+        let mut w_restricted: Vec<f64> = vec![0.0; self.kept.len()];
+        // Certified-but-not-yet-removed flags, aligned with `kept`.
+        let mut pending_a = vec![false; self.kept.len()];
+        let mut pending_i = vec![false; self.kept.len()];
+        let mut pending_a_count = 0usize;
+        let mut pending_i_count = 0usize;
+        let mut pending_total = 0usize;
+
+        'outer: while !self.kept.is_empty() {
+            let scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
+            let f_v = scaled.eval_full();
+            let mut solver = self.opts.solver.build(&scaled);
+            if total_iters > 0 {
+                // Warm restart from the restricted primal (step 14).
+                solver.reset(&scaled, &w_restricted);
+            }
+            let mut q_gate = solver.gap(); // gap at last trigger (q in Alg. 2)
+            if !q_gate.is_finite() {
+                q_gate = f64::INFINITY;
+            }
+
+            loop {
+                let t0 = Instant::now();
+                let ev = solver.step(&scaled);
+                solver_time += t0.elapsed();
+                total_iters += 1;
+                final_gap = ev.gap;
+
+                if self.opts.record_history {
+                    history.push(IterRecord {
+                        iter: total_iters,
+                        gap: ev.gap,
+                        active: self.active.len() + pending_a_count,
+                        inactive: self.inactive.len() + pending_i_count,
+                        p_remaining: self.kept.len(),
+                    });
+                }
+                if ev.gap < self.opts.eps || total_iters >= self.opts.max_iters {
+                    // Capture the final restricted primal: the leftover
+                    // elements are decided by its sign (Alg. 2, line 19),
+                    // except the ones already certified.
+                    w_restricted = solver.w().to_vec();
+                    break 'outer;
+                }
+
+                let should_screen = !self.opts.rules.is_empty()
+                    && ev.gap < self.opts.rho * q_gate;
+                if !should_screen {
+                    continue;
+                }
+
+                // ---- Screening trigger (steps 6–15) ----
+                let t1 = Instant::now();
+                let inputs = ScreenInputs {
+                    w: solver.w(),
+                    gap: ev.gap,
+                    f_v,
+                    f_c: solver.best_level_value(),
+                };
+                let outcome = screener.screen(&inputs, self.opts.rules);
+                let dt = t1.elapsed();
+                screen_time += dt;
+
+                // New certificates = fired rules minus already-pending.
+                let mut new_active_ids = Vec::new();
+                let mut new_inactive_ids = Vec::new();
+                for (j, &orig) in self.kept.iter().enumerate() {
+                    if pending_a[j] || pending_i[j] {
+                        continue;
+                    }
+                    if outcome.active[j] {
+                        pending_a[j] = true;
+                        pending_a_count += 1;
+                        pending_total += 1;
+                        new_active_ids.push(orig);
+                    } else if outcome.inactive[j] {
+                        pending_i[j] = true;
+                        pending_i_count += 1;
+                        pending_total += 1;
+                        new_inactive_ids.push(orig);
+                    }
+                }
+                triggers.push(TriggerRecord {
+                    iter: total_iters,
+                    gap: ev.gap,
+                    p_before: self.kept.len(),
+                    new_active: new_active_ids.len(),
+                    new_inactive: new_inactive_ids.len(),
+                    new_active_ids,
+                    new_inactive_ids,
+                    screen_time: dt,
+                });
+                q_gate = ev.gap;
+
+                // Contract only when the batch is worth a solver restart
+                // (Remark 4 cost/benefit; min_reduction_frac = 0 restarts
+                // on every certificate, the literal Algorithm 2).
+                let threshold = (self.opts.min_reduction_frac
+                    * self.kept.len() as f64)
+                    .ceil()
+                    .max(1.0) as usize;
+                if pending_total == 0
+                    || (pending_total < threshold && pending_total < self.kept.len())
+                {
+                    continue;
+                }
+
+                // Contract the ground set: move pending certificates out.
+                let w_now = solver.w();
+                let mut survivors = Vec::with_capacity(self.kept.len());
+                let mut w_surv = Vec::with_capacity(self.kept.len());
+                for (j, &orig) in self.kept.iter().enumerate() {
+                    if pending_a[j] {
+                        self.active.push(orig);
+                    } else if pending_i[j] {
+                        self.inactive.push(orig);
+                    } else {
+                        survivors.push(orig);
+                        w_surv.push(w_now[j]);
+                    }
+                }
+                self.kept = survivors;
+                w_restricted = w_surv;
+                pending_a = vec![false; self.kept.len()];
+                pending_i = vec![false; self.kept.len()];
+                pending_a_count = 0;
+                pending_i_count = 0;
+                pending_total = 0;
+
+                if self.kept.is_empty() {
+                    emptied = true;
+                    final_gap = 0.0;
+                }
+                // Rebuild the scaled problem + solver (outer loop).
+                continue 'outer;
+            }
+        }
+
+        // Assemble A* = Ê ∪ {pending-active} ∪ {ŵ > 0 among undecided}:
+        // certificates (removed or still pending) take precedence; the
+        // leftover elements are decided by sign (Alg. 2, line 19).
+        let mut minimizer = self.active.clone();
+        let mut screened_active = self.active.len();
+        let mut screened_inactive = self.inactive.len();
+        if !self.kept.is_empty() {
+            debug_assert_eq!(w_restricted.len(), self.kept.len());
+            for (j, &orig) in self.kept.iter().enumerate() {
+                if pending_a[j] {
+                    minimizer.push(orig);
+                    screened_active += 1;
+                } else if pending_i[j] {
+                    screened_inactive += 1;
+                } else if w_restricted[j] > 0.0 {
+                    minimizer.push(orig);
+                }
+            }
+        }
+        minimizer.sort_unstable();
+        let minimum = self.f.eval_ids(&minimizer);
+
+        Ok(IaesReport {
+            minimizer,
+            minimum,
+            iters: total_iters,
+            final_gap,
+            screened_active,
+            screened_inactive,
+            triggers,
+            history,
+            solver_time,
+            screen_time,
+            emptied,
+        })
+    }
+}
+
+/// Convenience: run Algorithm 2 on `f` with `opts`.
+pub fn solve_sfm_with_screening(
+    f: &dyn Submodular,
+    opts: &IaesOptions,
+) -> anyhow::Result<IaesReport> {
+    IaesEngine::new(f, opts.clone()).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::rng::Pcg64;
+    use crate::submodular::concave_card::ConcaveCardFn;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::kernel_cut::KernelCutFn;
+    use crate::testutil::forall_rng;
+
+    fn random_kernel_cut(p: usize, rng: &mut Pcg64) -> KernelCutFn {
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -2.0, 2.0);
+        KernelCutFn::new(p, k, unary)
+    }
+
+    #[test]
+    fn iaes_finds_minimum_iwata() {
+        let f = IwataFn::new(20);
+        let report = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert!((report.minimum - brute.minimum).abs() < 1e-7,
+            "IAES minimum {} vs brute {}", report.minimum, brute.minimum);
+    }
+
+    #[test]
+    fn iaes_safe_on_random_kernel_cuts() {
+        forall_rng(10, |rng| {
+            let p = 6 + rng.below(8);
+            let f = random_kernel_cut(p, rng);
+            let brute = brute_force_sfm(&f, 1e-7);
+            let report = solve_sfm_with_screening(&f, &IaesOptions::default())
+                .map_err(|e| e.to_string())?;
+            if (report.minimum - brute.minimum).abs() > 1e-6 {
+                return Err(format!(
+                    "not a minimizer: {} vs {}",
+                    report.minimum, brute.minimum
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn screening_identifies_everything_eventually() {
+        // The paper's headline property: the residual problem size can
+        // reach zero. With a tight eps the engine should empty or decide
+        // every element on a well-separated instance.
+        let mut m = vec![3.0; 15];
+        for (i, v) in m.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = -3.0;
+            }
+        }
+        let f = ConcaveCardFn::sqrt(15, 1.0, m);
+        let opts = IaesOptions { eps: 1e-12, ..Default::default() };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        assert!(
+            report.screened_active + report.screened_inactive > 0,
+            "screening identified nothing"
+        );
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert!((report.minimum - brute.minimum).abs() < 1e-7);
+    }
+
+    #[test]
+    fn aes_and_ies_subsets_are_safe() {
+        forall_rng(6, |rng| {
+            let p = 6 + rng.below(6);
+            let f = random_kernel_cut(p, rng);
+            let brute = brute_force_sfm(&f, 1e-7);
+            for rules in [RuleSet::aes_only(), RuleSet::ies_only(), RuleSet::pair1_only(), RuleSet::pair2_only()] {
+                let opts = IaesOptions { rules, ..Default::default() };
+                let report =
+                    solve_sfm_with_screening(&f, &opts).map_err(|e| e.to_string())?;
+                if (report.minimum - brute.minimum).abs() > 1e-6 {
+                    return Err(format!(
+                        "rules {rules:?} broke correctness: {} vs {}",
+                        report.minimum, brute.minimum
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn screened_elements_respect_lattice() {
+        // Every screened-active element must be in the minimal minimizer's
+        // closure (i.e. in EVERY minimizer ⊇ minimal); every screened-
+        // inactive element must be outside the maximal minimizer.
+        forall_rng(8, |rng| {
+            let p = 6 + rng.below(7);
+            let f = random_kernel_cut(p, rng);
+            let brute = brute_force_sfm(&f, 1e-7);
+            let opts = IaesOptions { eps: 1e-10, ..Default::default() };
+            let report =
+                solve_sfm_with_screening(&f, &opts).map_err(|e| e.to_string())?;
+            // Reconstruct which ids were certified (need engine internals:
+            // rerun manually to capture). Simpler: certified sets are
+            // implied by the minimizer only when everything is certified;
+            // here we check the final minimizer is sandwiched.
+            for &a in &report.minimizer {
+                if !brute.maximal.contains(&a) {
+                    return Err(format!("element {a} outside maximal minimizer"));
+                }
+            }
+            for &m in &brute.minimal {
+                if !report.minimizer.contains(&m) {
+                    return Err(format!("minimal-minimizer element {m} missing"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_screening_matches_plain_solver() {
+        let f = IwataFn::new(16);
+        let opts = IaesOptions { rules: RuleSet::none(), ..Default::default() };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert!((report.minimum - brute.minimum).abs() < 1e-7);
+        assert!(report.triggers.is_empty());
+        assert_eq!(report.screened_active + report.screened_inactive, 0);
+    }
+
+    #[test]
+    fn frank_wolfe_solver_choice_works() {
+        let f = IwataFn::new(14);
+        let opts = IaesOptions {
+            solver: SolverChoice::FrankWolfe(FwOptions::default()),
+            max_iters: 20_000,
+            ..Default::default()
+        };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert!((report.minimum - brute.minimum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn history_is_recorded_and_monotone() {
+        let f = IwataFn::new(18);
+        let report = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        assert!(!report.history.is_empty());
+        let mut last = 0usize;
+        for rec in &report.history {
+            let ident = rec.active + rec.inactive;
+            assert!(ident >= last, "identified count decreased");
+            last = ident;
+        }
+    }
+
+    #[test]
+    fn rho_validation() {
+        let f = IwataFn::new(5);
+        let opts = IaesOptions { rho: 1.5, ..Default::default() };
+        assert!(solve_sfm_with_screening(&f, &opts).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! The parametric family SFM′ and the regularization path (paper §2).
+//!
+//! Theorem 2: for `ψ_j(x) = ½x²`, solving the single proximal problem
+//! (Q-P) once yields the minimizers of the *entire* α-parameterized
+//! family
+//!
+//! ```text
+//! min_{A⊆V} F(A) + α|A|        (SFM′ with ∇ψ_j(α) = α)
+//! ```
+//!
+//! via the level sets of `w*`: `{w* > α} ⊆ A*_α ⊆ {w* ≥ α}`. The distinct
+//! sets as α sweeps ℝ form a nested chain — the regularization path.
+//!
+//! This module adds the screening view of that statement: from a *single*
+//! approximate solve (ŵ, ŝ, gap, F̂(C)), the Lemma-2 extrema `[w]_j^min`,
+//! `[w]_j^max` certify, **for every α simultaneously**, the elements with
+//! `[w]_j^min > α` (in `A*_α`) and `[w]_j^max < α` (out of `A*_α`) — a
+//! continuum of safe screenings for the price of one.
+
+use crate::linalg::vecops::sum;
+use crate::lovasz::{sup_level_set, weak_sup_level_set};
+use crate::screening::rules::ball_plane_extrema;
+use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+use crate::solvers::ProxSolver;
+use crate::submodular::{Submodular, SubmodularExt};
+
+/// The regularization path extracted from a proximal solve.
+#[derive(Clone, Debug)]
+pub struct RegularizationPath {
+    /// The (approximate) proximal optimum `w*`.
+    pub w: Vec<f64>,
+    /// Distinct breakpoints of the path (sorted descending): the values
+    /// of `w*` at which the minimizer changes.
+    pub breakpoints: Vec<f64>,
+    /// Duality gap of the solve (drives the per-α certificates).
+    pub gap: f64,
+    /// `F(V)` (plane offset used by the certificates).
+    pub f_v: f64,
+    /// Best super-level-set value (Ω bound).
+    pub f_c: f64,
+}
+
+/// Per-α certificate bands from one solve.
+#[derive(Clone, Debug)]
+pub struct AlphaCertificates {
+    /// `[w]_j^min` per element — `j ∈ A*_α` certified for all `α < wmin_j`.
+    pub wmin: Vec<f64>,
+    /// `[w]_j^max` per element — `j ∉ A*_α` certified for all `α > wmax_j`.
+    pub wmax: Vec<f64>,
+}
+
+impl RegularizationPath {
+    /// Solve (Q-P) for `f` to duality gap `eps` and extract the path.
+    pub fn compute<F: Submodular + ?Sized>(
+        f: &F,
+        eps: f64,
+        max_iters: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(f.ground_size() > 0, "empty ground set");
+        let fd: &dyn Submodular = &f; // `&F: Submodular` blanket impl
+        let mut solver = MinNormPoint::new(fd, MinNormOptions::default(), None);
+        let mut gap = f64::INFINITY;
+        for _ in 0..max_iters {
+            gap = solver.step(fd).gap;
+            if gap < eps {
+                break;
+            }
+        }
+        let w = solver.w().to_vec();
+        let mut breakpoints: Vec<f64> = w.clone();
+        breakpoints.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        breakpoints.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        Ok(RegularizationPath {
+            w,
+            breakpoints,
+            gap,
+            f_v: f.eval_full(),
+            f_c: solver.best_level_value(),
+        })
+    }
+
+    /// The minimal minimizer of `F + α|·|`: `{w* > α}` (Theorem 2).
+    pub fn minimizer_at(&self, alpha: f64) -> Vec<usize> {
+        sup_level_set(&self.w, alpha)
+    }
+
+    /// The maximal minimizer: `{w* ≥ α}`.
+    pub fn maximal_minimizer_at(&self, alpha: f64) -> Vec<usize> {
+        weak_sup_level_set(&self.w, alpha)
+    }
+
+    /// The nested chain of minimal minimizers across all breakpoints
+    /// (largest first). Consecutive entries differ by the elements whose
+    /// `w*` equals the crossed breakpoint.
+    pub fn nested_minimizers(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.breakpoints.len() + 1);
+        out.push(self.minimizer_at(f64::INFINITY)); // ∅
+        for &b in &self.breakpoints {
+            out.push(self.maximal_minimizer_at(b));
+        }
+        out
+    }
+
+    /// Lemma-2 certificate bands: safe for *every* α simultaneously.
+    pub fn certificates(&self) -> AlphaCertificates {
+        let p = self.w.len();
+        let sum_w = sum(&self.w);
+        let mut wmin = vec![0.0; p];
+        let mut wmax = vec![0.0; p];
+        for j in 0..p {
+            let (lo, hi) = ball_plane_extrema(&self.w, j, sum_w, self.gap, self.f_v);
+            wmin[j] = lo;
+            wmax[j] = hi;
+        }
+        AlphaCertificates { wmin, wmax }
+    }
+}
+
+impl AlphaCertificates {
+    /// Elements certified inside `A*_α`.
+    pub fn certified_active(&self, alpha: f64, margin: f64) -> Vec<usize> {
+        self.wmin
+            .iter()
+            .enumerate()
+            .filter(|(_, &lo)| lo > alpha + margin)
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// Elements certified outside `A*_α`.
+    pub fn certified_inactive(&self, alpha: f64, margin: f64) -> Vec<usize> {
+        self.wmax
+            .iter()
+            .enumerate()
+            .filter(|(_, &hi)| hi < alpha - margin)
+            .map(|(j, _)| j)
+            .collect()
+    }
+
+    /// Fraction of the ground set decided at `alpha`.
+    pub fn decided_fraction(&self, alpha: f64, margin: f64) -> f64 {
+        let p = self.wmin.len();
+        (self.certified_active(alpha, margin).len()
+            + self.certified_inactive(alpha, margin).len()) as f64
+            / p as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::rng::Pcg64;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::kernel_cut::KernelCutFn;
+    use crate::submodular::modular::PlusModular;
+    use crate::testutil::forall_rng;
+
+    fn random_kernel_cut(p: usize, rng: &mut Pcg64) -> KernelCutFn {
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -2.0, 2.0);
+        KernelCutFn::new(p, k, unary)
+    }
+
+    #[test]
+    fn path_minimizers_match_brute_force_tilts() {
+        forall_rng(6, |rng| {
+            let p = 6 + rng.below(5);
+            let f = random_kernel_cut(p, rng);
+            let path = RegularizationPath::compute(&f, 1e-12, 50_000)
+                .map_err(|e| e.to_string())?;
+            for &alpha in &[-1.5, -0.3, 0.0, 0.4, 2.0] {
+                // Brute-force the α-tilted function.
+                let tilt = PlusModular::new(&f, vec![alpha; p]);
+                let brute = brute_force_sfm(&tilt, 1e-7);
+                let a_min = path.minimizer_at(alpha);
+                // {w* > α} must BE the minimal minimizer (Theorem 2).
+                if a_min != brute.minimal {
+                    return Err(format!(
+                        "alpha={alpha}: {a_min:?} vs brute minimal {:?}",
+                        brute.minimal
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nested_chain_is_nested() {
+        let mut rng = Pcg64::seeded(404);
+        let f = random_kernel_cut(10, &mut rng);
+        let path = RegularizationPath::compute(&f, 1e-10, 50_000).unwrap();
+        let chain = path.nested_minimizers();
+        for w in chain.windows(2) {
+            let small: std::collections::HashSet<_> = w[0].iter().collect();
+            assert!(w[1].iter().filter(|i| small.contains(i)).count() == small.len());
+            assert!(w[1].len() >= w[0].len());
+        }
+        // Ends at the full set.
+        assert_eq!(chain.last().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn certificates_are_safe_for_every_alpha() {
+        forall_rng(5, |rng| {
+            let p = 6 + rng.below(5);
+            let f = random_kernel_cut(p, rng);
+            // Loose solve — certificates must still be safe.
+            let path = RegularizationPath::compute(&f, 1e-3, 10_000)
+                .map_err(|e| e.to_string())?;
+            let certs = path.certificates();
+            for &alpha in &[-1.0, 0.0, 0.7] {
+                let tilt = PlusModular::new(&f, vec![alpha; p]);
+                let brute = brute_force_sfm(&tilt, 1e-7);
+                let minimal: std::collections::HashSet<_> =
+                    brute.minimal.into_iter().collect();
+                let maximal: std::collections::HashSet<_> =
+                    brute.maximal.into_iter().collect();
+                for j in certs.certified_active(alpha, 1e-10) {
+                    if !minimal.contains(&j) {
+                        return Err(format!("alpha={alpha}: {j} wrongly certified in"));
+                    }
+                }
+                for j in certs.certified_inactive(alpha, 1e-10) {
+                    if maximal.contains(&j) {
+                        return Err(format!("alpha={alpha}: {j} wrongly certified out"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decided_fraction_increases_with_tighter_solve() {
+        let f = IwataFn::new(14);
+        let loose = RegularizationPath::compute(&f, 1e-1, 50_000).unwrap();
+        let tight = RegularizationPath::compute(&f, 1e-12, 50_000).unwrap();
+        let a = loose.certificates().decided_fraction(0.0, 1e-10);
+        let b = tight.certificates().decided_fraction(0.0, 1e-10);
+        assert!(b >= a, "tighter solve decided less: {b} < {a}");
+        assert!(b > 0.9, "tight solve should decide nearly everything ({b})");
+    }
+
+    #[test]
+    fn breakpoints_sorted_distinct() {
+        let f = IwataFn::new(12);
+        let path = RegularizationPath::compute(&f, 1e-10, 50_000).unwrap();
+        for w in path.breakpoints.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        assert!(!path.breakpoints.is_empty());
+    }
+}

@@ -1,0 +1,393 @@
+//! Conditional-gradient solvers for (Q-D) — Remark 2's alternative to the
+//! min-norm-point algorithm.
+//!
+//! Minimizing `½‖x‖²` over `B(F)` with the greedy linear oracle:
+//!
+//! * **Plain Frank–Wolfe** with exact line search
+//!   (`γ* = ⟨x, x−q⟩ / ‖x−q‖²` clipped to `[0,1]`) — O(1/t) convergence.
+//! * **Pairwise Frank–Wolfe**: moves mass directly from the worst active
+//!   atom to the new greedy atom, which restores linear convergence over
+//!   polytopes (Lacoste-Julien & Jaggi 2015) and in practice tracks the
+//!   min-norm-point algorithm much more closely.
+//!
+//! Both variants share the greedy/PAV/gap bookkeeping of
+//! [`super::PrimalState`], so the IAES engine can drive either
+//! interchangeably (ablation A3 in DESIGN.md).
+
+use super::{PrimalState, ProxSolver, SolverEvent};
+use crate::linalg::vecops::{axpy, dot, norm2_sq};
+use crate::submodular::Submodular;
+use std::collections::HashMap;
+
+/// Frank–Wolfe variant selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwVariant {
+    /// Classic FW with exact line search.
+    Plain,
+    /// Pairwise FW (atom-to-atom mass transfer).
+    Pairwise,
+    /// Away-step FW (Guélat–Marcotte; linear rate over polytopes).
+    Away,
+}
+
+/// Options for [`FrankWolfe`].
+#[derive(Clone, Copy, Debug)]
+pub struct FwOptions {
+    /// Variant to run.
+    pub variant: FwVariant,
+    /// Atom weights below this are dropped (pairwise only).
+    pub weight_tol: f64,
+}
+
+impl Default for FwOptions {
+    fn default() -> Self {
+        FwOptions { variant: FwVariant::Pairwise, weight_tol: 1e-14 }
+    }
+}
+
+/// Atom key: the greedy order that generated the vertex (vertices of B(F)
+/// correspond to permutations; equal orders ⇒ equal vertices).
+type AtomKey = Vec<u32>;
+
+/// Conditional-gradient solver state.
+pub struct FrankWolfe {
+    opts: FwOptions,
+    /// Current dual iterate.
+    x: Vec<f64>,
+    /// Active atoms (pairwise variant): key → (vertex, weight).
+    atoms: Vec<(AtomKey, Vec<f64>, f64)>,
+    atom_index: HashMap<AtomKey, usize>,
+    shared: PrimalState,
+    q: Vec<f64>,
+    dir: Vec<f64>,
+}
+
+impl FrankWolfe {
+    /// Initialize on `f` from the greedy vertex in direction `w_init`.
+    pub fn new(f: &dyn Submodular, opts: FwOptions, w_init: Option<&[f64]>) -> Self {
+        let p = f.ground_size();
+        let mut solver = FrankWolfe {
+            opts,
+            x: vec![0.0; p],
+            atoms: Vec::new(),
+            atom_index: HashMap::new(),
+            shared: PrimalState::new(p),
+            q: vec![0.0; p],
+            dir: vec![0.0; p],
+        };
+        let w0 = match w_init {
+            Some(w) => w.to_vec(),
+            None => vec![0.0; p],
+        };
+        solver.reset(f, &w0);
+        solver
+    }
+
+    /// Number of active atoms (pairwise variant; 0 for plain).
+    pub fn num_atoms(&self) -> usize {
+        self.atoms.len()
+    }
+
+    fn current_order_key(&self) -> AtomKey {
+        self.shared.greedy_ws.order.iter().map(|&i| i as u32).collect()
+    }
+
+    fn add_atom(&mut self, key: AtomKey, vertex: Vec<f64>, weight: f64) {
+        if let Some(&i) = self.atom_index.get(&key) {
+            self.atoms[i].2 += weight;
+        } else {
+            self.atom_index.insert(key.clone(), self.atoms.len());
+            self.atoms.push((key, vertex, weight));
+        }
+    }
+
+    fn drop_tiny_atoms(&mut self) {
+        let tol = self.opts.weight_tol;
+        if self.atoms.iter().all(|(_, _, w)| *w > tol) {
+            return;
+        }
+        self.atoms.retain(|(_, _, w)| *w > tol);
+        self.atom_index.clear();
+        for (i, (k, _, _)) in self.atoms.iter().enumerate() {
+            self.atom_index.insert(k.clone(), i);
+        }
+    }
+
+    fn step_plain(&mut self) {
+        // d = q − x; γ* = ⟨x, −d⟩/‖d‖² = ⟨x, x−q⟩/‖x−q‖².
+        for ((d, &qi), &xi) in self.dir.iter_mut().zip(&self.q).zip(&self.x) {
+            *d = qi - xi;
+        }
+        let denom = norm2_sq(&self.dir);
+        if denom <= 0.0 {
+            return;
+        }
+        let gamma = (-dot(&self.x, &self.dir) / denom).clamp(0.0, 1.0);
+        axpy(gamma, &self.dir, &mut self.x);
+    }
+
+    fn step_away(&mut self) {
+        // Choose between the FW direction (q − x) and the away direction
+        // (x − v_away) by alignment with the negative gradient −x.
+        let away = self
+            .atoms
+            .iter()
+            .enumerate()
+            .map(|(i, (_, v, _))| (i, dot(&self.x, v)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| i);
+        let Some(ai) = away else { return };
+        let fw_score = dot(&self.x, &self.x) - dot(&self.x, &self.q); // ⟨−∇, q−x⟩
+        let away_score = dot(&self.x, &self.atoms[ai].1) - dot(&self.x, &self.x);
+        if fw_score >= away_score {
+            // FW step toward q with atom bookkeeping.
+            for ((d, &qi), &xi) in self.dir.iter_mut().zip(&self.q).zip(&self.x) {
+                *d = qi - xi;
+            }
+            let denom = norm2_sq(&self.dir);
+            if denom <= 1e-300 {
+                return;
+            }
+            let gamma = (-dot(&self.x, &self.dir) / denom).clamp(0.0, 1.0);
+            if gamma == 0.0 {
+                return;
+            }
+            axpy(gamma, &self.dir, &mut self.x);
+            for (_, _, wgt) in self.atoms.iter_mut() {
+                *wgt *= 1.0 - gamma;
+            }
+            let key = self.current_order_key();
+            let q = self.q.clone();
+            self.add_atom(key, q, gamma);
+        } else {
+            // Away step: move off v_away; max step keeps weights ≥ 0.
+            let lam = self.atoms[ai].2;
+            if lam >= 1.0 - 1e-15 {
+                return; // single-atom corral: away direction is null
+            }
+            let gamma_max = lam / (1.0 - lam);
+            {
+                let v = &self.atoms[ai].1;
+                for ((d, &xi), &vi) in self.dir.iter_mut().zip(&self.x).zip(v) {
+                    *d = xi - vi;
+                }
+            }
+            let denom = norm2_sq(&self.dir);
+            if denom <= 1e-300 {
+                return;
+            }
+            let gamma = (-dot(&self.x, &self.dir) / denom).clamp(0.0, gamma_max);
+            if gamma == 0.0 {
+                return;
+            }
+            axpy(gamma, &self.dir, &mut self.x);
+            for (_, _, wgt) in self.atoms.iter_mut() {
+                *wgt *= 1.0 + gamma;
+            }
+            self.atoms[ai].2 -= gamma;
+        }
+        self.drop_tiny_atoms();
+    }
+
+    fn step_pairwise(&mut self) {
+        // Away atom: argmax ⟨x, v⟩ among active atoms.
+        let away = self
+            .atoms
+            .iter()
+            .enumerate()
+            .map(|(i, (_, v, _))| (i, dot(&self.x, v)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| i);
+        let Some(ai) = away else {
+            return;
+        };
+        // Direction q − v_away with max step = λ_away.
+        let gamma_max = self.atoms[ai].2;
+        {
+            let v_away = &self.atoms[ai].1;
+            for ((d, &qi), &vi) in self.dir.iter_mut().zip(&self.q).zip(v_away) {
+                *d = qi - vi;
+            }
+        }
+        let denom = norm2_sq(&self.dir);
+        if denom <= 1e-300 {
+            return;
+        }
+        let gamma = (-dot(&self.x, &self.dir) / denom).clamp(0.0, gamma_max);
+        if gamma == 0.0 {
+            return;
+        }
+        axpy(gamma, &self.dir, &mut self.x);
+        self.atoms[ai].2 -= gamma;
+        let key = self.current_order_key();
+        let q = self.q.clone();
+        self.add_atom(key, q, gamma);
+        self.drop_tiny_atoms();
+    }
+}
+
+impl ProxSolver for FrankWolfe {
+    fn step(&mut self, f: &dyn Submodular) -> SolverEvent {
+        let mut q = std::mem::take(&mut self.q);
+        let (_info, f_w) = self.shared.greedy_and_refine(f, &self.x, &mut q);
+        self.q = q;
+        let wolfe_gap = norm2_sq(&self.x) - dot(&self.x, &self.q);
+        if wolfe_gap > 0.0 {
+            match self.opts.variant {
+                FwVariant::Plain => self.step_plain(),
+                FwVariant::Pairwise => self.step_pairwise(),
+                FwVariant::Away => self.step_away(),
+            }
+        }
+        self.shared.finish_step(f_w, &self.x, wolfe_gap)
+    }
+
+    fn s(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.shared.w
+    }
+
+    fn gap(&self) -> f64 {
+        self.shared.gap
+    }
+
+    fn best_level_value(&self) -> f64 {
+        self.shared.fc
+    }
+
+    fn iters(&self) -> usize {
+        self.shared.iters
+    }
+
+    fn reset(&mut self, f: &dyn Submodular, w_init: &[f64]) {
+        let p = f.ground_size();
+        self.x.resize(p, 0.0);
+        self.q.resize(p, 0.0);
+        self.dir.resize(p, 0.0);
+        self.atoms.clear();
+        self.atom_index.clear();
+        let mut s0 = vec![0.0; p];
+        self.shared.reset_from(f, w_init, &mut s0);
+        self.x.copy_from_slice(&s0);
+        let key = self.current_order_key();
+        self.add_atom(key, s0, 1.0);
+    }
+
+    fn name(&self) -> &'static str {
+        match self.opts.variant {
+            FwVariant::Plain => "frank-wolfe",
+            FwVariant::Pairwise => "pairwise-fw",
+            FwVariant::Away => "away-fw",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::lovasz::sup_level_set;
+    use crate::rng::Pcg64;
+    use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::kernel_cut::KernelCutFn;
+
+    fn run(solver: &mut dyn ProxSolver, f: &dyn Submodular, iters: usize, eps: f64) {
+        for _ in 0..iters {
+            let ev = solver.step(f);
+            if ev.gap < eps {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_converges_on_iwata() {
+        let f = IwataFn::new(12);
+        let mut fw = FrankWolfe::new(&f, FwOptions::default(), None);
+        run(&mut fw, &f, 3000, 1e-8);
+        assert!(fw.gap() < 1e-8, "gap {}", fw.gap());
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert_eq!(sup_level_set(fw.w(), 0.0), brute.minimal);
+    }
+
+    #[test]
+    fn plain_fw_decreases_dual_objective() {
+        let f = IwataFn::new(10);
+        let mut fw = FrankWolfe::new(
+            &f,
+            FwOptions { variant: FwVariant::Plain, ..Default::default() },
+            None,
+        );
+        let mut last_norm = f64::INFINITY;
+        for _ in 0..200 {
+            fw.step(&f);
+            let n = norm2_sq(fw.s());
+            assert!(n <= last_norm + 1e-9, "‖x‖² increased");
+            last_norm = n;
+        }
+    }
+
+    #[test]
+    fn pairwise_matches_minnorm_solution() {
+        let mut rng = Pcg64::seeded(23);
+        let p = 10;
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -2.0, 2.0);
+        let f = KernelCutFn::new(p, k, unary);
+
+        let mut fw = FrankWolfe::new(&f, FwOptions::default(), None);
+        run(&mut fw, &f, 5000, 1e-10);
+        let mut mn = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        run(&mut mn, &f, 1000, 1e-10);
+
+        // Min-norm point is unique: both solvers must agree.
+        for (a, b) in fw.s().iter().zip(mn.s()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn away_variant_converges_and_weights_stay_convex() {
+        let f = IwataFn::new(10);
+        let mut fw = FrankWolfe::new(
+            &f,
+            FwOptions { variant: FwVariant::Away, ..Default::default() },
+            None,
+        );
+        for _ in 0..4000 {
+            let ev = fw.step(&f);
+            let total: f64 = fw.atoms.iter().map(|(_, _, w)| w).sum();
+            assert!((total - 1.0).abs() < 1e-6, "weights sum {total}");
+            assert!(fw.atoms.iter().all(|(_, _, w)| *w >= -1e-12));
+            if ev.gap < 1e-8 {
+                break;
+            }
+        }
+        assert!(fw.gap() < 1e-6, "away-step FW gap {}", fw.gap());
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert_eq!(sup_level_set(fw.w(), 0.0), brute.minimal);
+    }
+
+    #[test]
+    fn atom_weights_stay_convex() {
+        let f = IwataFn::new(9);
+        let mut fw = FrankWolfe::new(&f, FwOptions::default(), None);
+        for _ in 0..100 {
+            fw.step(&f);
+            let total: f64 = fw.atoms.iter().map(|(_, _, w)| w).sum();
+            assert!((total - 1.0).abs() < 1e-9, "weights sum {total}");
+            assert!(fw.atoms.iter().all(|(_, _, w)| *w >= 0.0));
+        }
+    }
+}

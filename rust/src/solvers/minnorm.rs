@@ -1,0 +1,427 @@
+//! Fujishige–Wolfe minimum-norm-point algorithm (the paper's solver A).
+//!
+//! Wolfe (1976) computes the nearest point to the origin of a polytope
+//! given only a linear-maximization oracle — here Edmonds' greedy over the
+//! base polytope `B(F)`. Fujishige's theorem then reads the SFM minimizers
+//! off the sign pattern of the min-norm point: `A*_min = {−x* > 0}`,
+//! `A*_max = {−x* ≥ 0}` — i.e. `w* = −x*` solves (Q-P).
+//!
+//! Implementation notes:
+//!
+//! * The corral Gram system is maintained as an incremental Cholesky
+//!   factor of `M = 11ᵀ + SᵀS` (positive definite while the corral is
+//!   affinely independent — Wolfe's classic trick). Adding a vertex is a
+//!   rank-one `push`, evicting one is a Givens `remove`; both O(|corral|²)
+//!   instead of the O(|corral|³) re-factorization a naive implementation
+//!   pays per minor cycle.
+//! * Affine weights solve `M ᾱ = 1`, normalized to `Σα = 1`.
+//! * Numerical breakdowns (affine dependence, cancellation) trigger a
+//!   from-scratch re-factorization with jitter; vertices whose pivot
+//!   vanishes are dropped. This is the standard robustness recipe
+//!   (Fujishige–Isotani 2011).
+
+use super::{PrimalState, ProxSolver, SolverEvent};
+use crate::linalg::vecops::{dot, norm2_sq};
+use crate::linalg::IncrementalCholesky;
+use crate::submodular::Submodular;
+
+/// Options for [`MinNormPoint`].
+#[derive(Clone, Copy, Debug)]
+pub struct MinNormOptions {
+    /// Wolfe-gap tolerance: a major cycle that improves `⟨x, x⟩ − ⟨x, q⟩`
+    /// by less than this declares `x` optimal.
+    pub wolfe_tol: f64,
+    /// Coefficients below this are treated as zero in minor cycles.
+    pub lambda_tol: f64,
+    /// Cholesky jitter used on rebuilds.
+    pub jitter: f64,
+    /// Safety cap on minor cycles per major cycle.
+    pub max_minor: usize,
+}
+
+impl Default for MinNormOptions {
+    fn default() -> Self {
+        MinNormOptions {
+            wolfe_tol: 1e-12,
+            lambda_tol: 1e-12,
+            jitter: 1e-12,
+            max_minor: 1000,
+        }
+    }
+}
+
+/// Fujishige–Wolfe solver state.
+pub struct MinNormPoint {
+    opts: MinNormOptions,
+    /// Current point `x = Σ λ_i v_i` (the dual iterate `ŝ`).
+    x: Vec<f64>,
+    /// Corral vertices.
+    corral: Vec<Vec<f64>>,
+    /// Convex weights over the corral.
+    lambda: Vec<f64>,
+    /// Cholesky factor of `11ᵀ + SᵀS`.
+    chol: IncrementalCholesky,
+    shared: PrimalState,
+    /// Scratch vertex buffer.
+    q: Vec<f64>,
+}
+
+impl MinNormPoint {
+    /// Initialize on `f`, starting from the greedy vertex in direction
+    /// `w_init` (zeros → index order, the paper's "choose ŝ ∈ B(F)").
+    pub fn new(f: &dyn Submodular, opts: MinNormOptions, w_init: Option<&[f64]>) -> Self {
+        let p = f.ground_size();
+        let mut solver = MinNormPoint {
+            opts,
+            x: vec![0.0; p],
+            corral: Vec::new(),
+            lambda: Vec::new(),
+            chol: IncrementalCholesky::new(),
+            shared: PrimalState::new(p),
+            q: vec![0.0; p],
+        };
+        let w0 = match w_init {
+            Some(w) => w.to_vec(),
+            None => vec![0.0; p],
+        };
+        solver.reset(f, &w0);
+        solver
+    }
+
+    /// Current corral size (diagnostics / benches).
+    pub fn corral_size(&self) -> usize {
+        self.corral.len()
+    }
+
+    fn push_vertex(&mut self, v: Vec<f64>) -> bool {
+        let cross: Vec<f64> =
+            self.corral.iter().map(|u| 1.0 + dot(u, &v)).collect();
+        let diag = 1.0 + norm2_sq(&v);
+        match self.chol.push(&cross, diag, self.opts.jitter) {
+            Some(_) => {
+                self.corral.push(v);
+                self.lambda.push(0.0);
+                true
+            }
+            None => false, // affinely dependent — skip
+        }
+    }
+
+    fn remove_vertex(&mut self, i: usize) {
+        self.corral.remove(i);
+        self.lambda.remove(i);
+        self.chol.remove(i);
+    }
+
+    /// Rebuild the Cholesky factor from the current corral (recovery path).
+    fn rebuild_chol(&mut self) {
+        self.chol = IncrementalCholesky::new();
+        let mut keep = Vec::with_capacity(self.corral.len());
+        let mut kept_vertices: Vec<Vec<f64>> = Vec::with_capacity(self.corral.len());
+        for (i, v) in self.corral.iter().enumerate() {
+            let cross: Vec<f64> =
+                kept_vertices.iter().map(|u| 1.0 + dot(u, v)).collect();
+            let diag = 1.0 + norm2_sq(v);
+            if self.chol.push(&cross, diag, self.opts.jitter).is_some() {
+                keep.push(i);
+                kept_vertices.push(v.clone());
+            }
+        }
+        if keep.len() != self.corral.len() {
+            let mut new_corral = Vec::with_capacity(keep.len());
+            let mut new_lambda = Vec::with_capacity(keep.len());
+            for &i in &keep {
+                new_corral.push(self.corral[i].clone());
+                new_lambda.push(self.lambda[i]);
+            }
+            let total: f64 = new_lambda.iter().sum();
+            if total > 0.0 {
+                for l in new_lambda.iter_mut() {
+                    *l /= total;
+                }
+            } else if !new_lambda.is_empty() {
+                let u = 1.0 / new_lambda.len() as f64;
+                new_lambda.iter_mut().for_each(|l| *l = u);
+            }
+            self.corral = new_corral;
+            self.lambda = new_lambda;
+        }
+    }
+
+    /// Affine minimizer weights over the current corral: solve
+    /// `(11ᵀ + SᵀS) ᾱ = 1`, normalize. Returns `None` on breakdown.
+    fn affine_weights(&self) -> Option<Vec<f64>> {
+        let m = self.corral.len();
+        if m == 0 {
+            return None;
+        }
+        let ones = vec![1.0; m];
+        let raw = self.chol.solve(&ones);
+        let total: f64 = raw.iter().sum();
+        if !total.is_finite() || total.abs() < 1e-300 {
+            return None;
+        }
+        Some(raw.iter().map(|a| a / total).collect())
+    }
+
+    fn recompute_x(&mut self) {
+        self.x.iter_mut().for_each(|v| *v = 0.0);
+        for (l, v) in self.lambda.iter().zip(&self.corral) {
+            if *l != 0.0 {
+                for (xi, vi) in self.x.iter_mut().zip(v) {
+                    *xi += l * vi;
+                }
+            }
+        }
+    }
+
+    /// Wolfe minor cycles: move `x` to the min-norm point of the corral's
+    /// convex hull, evicting vertices whose weight hits zero.
+    fn minor_cycles(&mut self) {
+        for _ in 0..self.opts.max_minor {
+            let alpha = match self.affine_weights() {
+                Some(a) => a,
+                None => {
+                    self.rebuild_chol();
+                    match self.affine_weights() {
+                        Some(a) => a,
+                        None => break,
+                    }
+                }
+            };
+            let min_alpha = alpha.iter().cloned().fold(f64::INFINITY, f64::min);
+            if min_alpha >= -self.opts.lambda_tol {
+                // Affine minimizer is feasible — adopt it.
+                self.lambda = alpha.into_iter().map(|a| a.max(0.0)).collect();
+                let total: f64 = self.lambda.iter().sum();
+                for l in self.lambda.iter_mut() {
+                    *l /= total;
+                }
+                break;
+            }
+            // Line search toward the affine minimizer, stopping at the
+            // first coefficient that hits zero.
+            let mut theta = f64::INFINITY;
+            for (&l, &a) in self.lambda.iter().zip(&alpha) {
+                if a < l {
+                    let t = l / (l - a);
+                    if t < theta {
+                        theta = t;
+                    }
+                }
+            }
+            let theta = theta.clamp(0.0, 1.0);
+            for (l, &a) in self.lambda.iter_mut().zip(&alpha) {
+                *l = (1.0 - theta) * *l + theta * a;
+            }
+            // Evict zeros (largest index first keeps removal cheap-ish).
+            let mut evicted = false;
+            let mut i = self.lambda.len();
+            while i > 0 {
+                i -= 1;
+                if self.lambda[i] <= self.opts.lambda_tol {
+                    self.remove_vertex(i);
+                    evicted = true;
+                }
+            }
+            if !evicted {
+                // θ hit 1 without eviction (numerical): we're at the affine
+                // minimizer already.
+                break;
+            }
+            if self.corral.len() <= 1 {
+                break;
+            }
+        }
+        // Renormalize for safety.
+        let total: f64 = self.lambda.iter().sum();
+        if total > 0.0 && (total - 1.0).abs() > 1e-12 {
+            for l in self.lambda.iter_mut() {
+                *l /= total;
+            }
+        }
+        self.recompute_x();
+    }
+}
+
+impl ProxSolver for MinNormPoint {
+    fn step(&mut self, f: &dyn Submodular) -> SolverEvent {
+        let p = f.ground_size();
+        debug_assert_eq!(self.x.len(), p);
+        // One greedy pass in direction −x: vertex q + PAV primal + fc.
+        let mut q = std::mem::take(&mut self.q);
+        let (_info, f_w) = self.shared.greedy_and_refine(f, &self.x, &mut q);
+        let wolfe_gap = norm2_sq(&self.x) - dot(&self.x, &q);
+        if wolfe_gap > self.opts.wolfe_tol {
+            if self.push_vertex(q.clone()) {
+                self.minor_cycles();
+            }
+        }
+        self.q = q;
+        self.shared.finish_step(f_w, &self.x, wolfe_gap)
+    }
+
+    fn s(&self) -> &[f64] {
+        &self.x
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.shared.w
+    }
+
+    fn gap(&self) -> f64 {
+        self.shared.gap
+    }
+
+    fn best_level_value(&self) -> f64 {
+        self.shared.fc
+    }
+
+    fn iters(&self) -> usize {
+        self.shared.iters
+    }
+
+    fn reset(&mut self, f: &dyn Submodular, w_init: &[f64]) {
+        let p = f.ground_size();
+        self.x.resize(p, 0.0);
+        self.q.resize(p, 0.0);
+        self.corral.clear();
+        self.lambda.clear();
+        self.chol = IncrementalCholesky::new();
+        let mut s0 = vec![0.0; p];
+        self.shared.reset_from(f, w_init, &mut s0);
+        self.x.copy_from_slice(&s0);
+        self.push_vertex(s0);
+        if !self.lambda.is_empty() {
+            self.lambda[0] = 1.0;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "min-norm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::lovasz::sup_level_set;
+    use crate::rng::Pcg64;
+    use crate::submodular::concave_card::ConcaveCardFn;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::kernel_cut::KernelCutFn;
+    use crate::submodular::modular::ModularFn;
+    use crate::testutil::forall_rng;
+
+    fn solve(f: &dyn Submodular, max_iter: usize, eps: f64) -> MinNormPoint {
+        let mut solver = MinNormPoint::new(f, MinNormOptions::default(), None);
+        for _ in 0..max_iter {
+            let ev = solver.step(f);
+            if ev.gap < eps {
+                break;
+            }
+        }
+        solver
+    }
+
+    #[test]
+    fn modular_min_norm_is_clipped_weights() {
+        // For modular F, B(F) = {w} is a point: x* = w.
+        let w = vec![1.0, -2.0, 0.5];
+        let f = ModularFn::new(w.clone());
+        let solver = solve(&f, 50, 1e-12);
+        for (a, b) in solver.s().iter().zip(&w) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn iwata_minimizer_matches_brute_force() {
+        let f = IwataFn::new(12);
+        let brute = brute_force_sfm(&f, 1e-9);
+        let solver = solve(&f, 400, 1e-10);
+        assert!(solver.gap() < 1e-10, "gap {}", solver.gap());
+        let a_min = sup_level_set(solver.w(), 0.0);
+        assert_eq!(a_min, brute.minimal, "minimal minimizer mismatch");
+    }
+
+    #[test]
+    fn gap_reaches_tolerance_on_random_kernel_cuts() {
+        forall_rng(10, |rng| {
+            let p = 5 + rng.below(10);
+            let mut k = vec![0.0; p * p];
+            for i in 0..p {
+                for j in (i + 1)..p {
+                    let w = rng.uniform(0.0, 1.0);
+                    k[i * p + j] = w;
+                    k[j * p + i] = w;
+                }
+            }
+            let unary = rng.uniform_vec(p, -2.0, 2.0);
+            let f = KernelCutFn::new(p, k, unary);
+            let solver = solve(&f, 2000, 1e-9);
+            if solver.gap() >= 1e-9 {
+                return Err(format!("gap did not converge: {}", solver.gap()));
+            }
+            // w* must recover a true minimizer.
+            let brute = brute_force_sfm(&f, 1e-7);
+            let a = sup_level_set(solver.w(), 0.0);
+            let mut set = vec![false; p];
+            for &i in &a {
+                set[i] = true;
+            }
+            let val = f.eval(&set);
+            if (val - brute.minimum).abs() > 1e-6 {
+                return Err(format!("recovered set not minimal: {val} vs {}", brute.minimum));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dual_value_monotone_nondecreasing() {
+        // −½‖x‖² must not decrease across iterations (Wolfe is monotone).
+        let f = IwataFn::new(15);
+        let mut solver = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        let mut last = f64::NEG_INFINITY;
+        for _ in 0..100 {
+            let ev = solver.step(&f);
+            assert!(
+                ev.dual_value >= last - 1e-9,
+                "dual decreased: {last} -> {}",
+                ev.dual_value
+            );
+            last = ev.dual_value;
+            if ev.gap < 1e-11 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn concave_card_converges() {
+        let mut rng = Pcg64::seeded(17);
+        let p = 14;
+        let m = rng.uniform_vec(p, -1.5, 1.5);
+        let f = ConcaveCardFn::sqrt(p, 2.0, m);
+        let solver = solve(&f, 1000, 1e-10);
+        assert!(solver.gap() < 1e-10);
+        let brute = brute_force_sfm(&f, 1e-9);
+        let a = sup_level_set(solver.w(), 0.0);
+        assert_eq!(a, brute.minimal);
+    }
+
+    #[test]
+    fn reset_on_reduced_problem() {
+        let f = IwataFn::new(10);
+        let mut solver = solve(&f, 50, 1e-6);
+        // Pretend screening reduced to 6 elements: reset with a small init.
+        let g = IwataFn::new(6);
+        let w0 = vec![0.0; 6];
+        solver.reset(&g, &w0);
+        assert_eq!(solver.s().len(), 6);
+        let ev = solver.step(&g);
+        assert!(ev.gap.is_finite());
+    }
+}

@@ -1,0 +1,219 @@
+//! Solvers for the proximal pair (Q-P)/(Q-D).
+//!
+//! Both solvers optimize the dual `max_{s∈B(F)} −½‖s‖²` (equivalently: find
+//! the minimum-norm point of the base polytope) using only greedy
+//! linear-maximization oracles, and maintain a primal iterate `ŵ` via the
+//! pool-adjacent-violators refinement of Remark 2. Each major iteration
+//! performs exactly **one** greedy pass, from which it extracts, for free:
+//!
+//! * the Frank–Wolfe/Wolfe vertex `q = argmax_{s∈B} ⟨−x, s⟩`,
+//! * the best super-level-set value `F̂(C)` (Remark 1 — feeds the Ω
+//!   estimate of Theorem 3),
+//! * the PAV-refined primal `ŵ` and the duality gap
+//!   `G(ŵ, x) = f(ŵ) + ½‖ŵ‖² + ½‖x‖²`.
+//!
+//! The IAES engine drives solvers through the [`ProxSolver`] trait and
+//! rebuilds them on the reduced problem after every successful screening
+//! round (Algorithm 2, step 14).
+
+pub mod frankwolfe;
+pub mod minnorm;
+pub mod pav;
+pub mod queyranne;
+
+use crate::linalg::vecops::{dot, norm2_sq};
+use crate::lovasz::{greedy_base_vertex, GreedyInfo, GreedyWorkspace};
+use crate::solvers::pav::PavWorkspace;
+use crate::submodular::Submodular;
+
+/// Per-iteration summary emitted by [`ProxSolver::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct SolverEvent {
+    /// Major-iteration counter (1-based after the first step).
+    pub iter: usize,
+    /// Duality gap `G(ŵ, ŝ) = P(ŵ) − D(ŝ)`.
+    pub gap: f64,
+    /// Wolfe gap `⟨x, x − q⟩` (exactness certificate for the min-norm
+    /// point; ≤ 0 means `x` is optimal up to numerics).
+    pub wolfe_gap: f64,
+    /// Best super-level-set value `F̂(C)` observed so far (≤ 0).
+    pub fc: f64,
+    /// Dual objective `−½‖ŝ‖²`.
+    pub dual_value: f64,
+    /// Primal objective `f(ŵ) + ½‖ŵ‖²`.
+    pub primal_value: f64,
+}
+
+/// A dual solver for (Q-D) that also maintains the PAV-refined primal.
+pub trait ProxSolver {
+    /// One major iteration (exactly one greedy oracle pass).
+    fn step(&mut self, f: &dyn Submodular) -> SolverEvent;
+
+    /// Current dual iterate `ŝ ∈ B(F̂)`.
+    fn s(&self) -> &[f64];
+
+    /// Current primal iterate `ŵ` (PAV refinement of `−ŝ`).
+    fn w(&self) -> &[f64];
+
+    /// Current duality gap (`+∞` before the first step).
+    fn gap(&self) -> f64;
+
+    /// Best super-level-set value `F̂(C)` seen so far (0 before any step).
+    fn best_level_value(&self) -> f64;
+
+    /// Major iterations performed.
+    fn iters(&self) -> usize;
+
+    /// Re-initialize on a (typically reduced) problem: `ŝ ← argmax_{s ∈
+    /// B(F̂)} ⟨w_init, s⟩` (one greedy pass), primal `ŵ ← w_init`
+    /// (Algorithm 2, step 14).
+    fn reset(&mut self, f: &dyn Submodular, w_init: &[f64]);
+
+    /// Human-readable solver name (reports/benches).
+    fn name(&self) -> &'static str;
+}
+
+/// Shared primal/dual bookkeeping used by both solver implementations.
+///
+/// Owns the greedy + PAV workspaces and the `ŵ`/gap state; solvers keep
+/// their own dual representation (`x`, corral / atom weights).
+#[derive(Clone, Debug)]
+pub(crate) struct PrimalState {
+    pub w: Vec<f64>,
+    pub gap: f64,
+    pub fc: f64,
+    pub iters: usize,
+    pub greedy_ws: GreedyWorkspace,
+    pub pav_ws: PavWorkspace,
+    pav_buf: Vec<f64>,
+    neg_gain_buf: Vec<f64>,
+}
+
+impl PrimalState {
+    pub fn new(p: usize) -> Self {
+        PrimalState {
+            w: vec![0.0; p],
+            gap: f64::INFINITY,
+            fc: 0.0,
+            iters: 0,
+            greedy_ws: GreedyWorkspace::new(p),
+            pav_ws: PavWorkspace::default(),
+            pav_buf: vec![0.0; p],
+            neg_gain_buf: vec![0.0; p],
+        }
+    }
+
+    pub fn resize(&mut self, p: usize) {
+        self.w.resize(p, 0.0);
+        self.pav_buf.resize(p, 0.0);
+        self.neg_gain_buf.resize(p, 0.0);
+        self.gap = f64::INFINITY;
+        self.fc = 0.0;
+        self.iters = 0;
+    }
+
+    /// One greedy pass in direction `−x`; writes the maximizing vertex into
+    /// `q`, updates `fc`, recomputes the PAV primal `ŵ` and its Lovász
+    /// value. Returns `(info, f(ŵ))`.
+    pub fn greedy_and_refine(
+        &mut self,
+        f: &dyn Submodular,
+        x: &[f64],
+        q: &mut [f64],
+    ) -> (GreedyInfo, f64) {
+        let p = x.len();
+        debug_assert_eq!(self.w.len(), p);
+        // Direction −x (no allocation: reuse pav_buf temporarily).
+        for (d, &xi) in self.pav_buf.iter_mut().zip(x) {
+            *d = -xi;
+        }
+        let dir = std::mem::take(&mut self.pav_buf);
+        let info = greedy_base_vertex(f, &dir, &mut self.greedy_ws, q);
+        self.pav_buf = dir;
+        self.fc = self.fc.min(info.best_level_value);
+
+        // PAV refinement along the greedy order: targets are −gains.
+        for (t, &g) in self.neg_gain_buf.iter_mut().zip(&self.greedy_ws.gains) {
+            *t = -g;
+        }
+        self.pav_ws.run(&self.neg_gain_buf[..p], &mut self.pav_buf[..p]);
+        // f(ŵ) = Σ_k ŵ_sorted[k] · gains[k] (order-consistent by PAV).
+        let mut f_w = 0.0;
+        for (k, &j) in self.greedy_ws.order.iter().enumerate() {
+            let v = self.pav_buf[k];
+            self.w[j] = v;
+            f_w += v * self.greedy_ws.gains[k];
+        }
+        (info, f_w)
+    }
+
+    /// Finalize the iteration: compute the gap against the (updated) dual
+    /// point and emit the event.
+    pub fn finish_step(&mut self, f_w: f64, x: &[f64], wolfe_gap: f64) -> SolverEvent {
+        self.iters += 1;
+        let primal = f_w + 0.5 * norm2_sq(&self.w);
+        let dual = -0.5 * norm2_sq(x);
+        self.gap = primal - dual;
+        SolverEvent {
+            iter: self.iters,
+            gap: self.gap,
+            wolfe_gap,
+            fc: self.fc,
+            dual_value: dual,
+            primal_value: primal,
+        }
+    }
+
+    /// Algorithm 2 step 14: adopt `w_init` as the primal and run one greedy
+    /// pass to obtain the matching dual vertex (returned in `s_out`).
+    pub fn reset_from(
+        &mut self,
+        f: &dyn Submodular,
+        w_init: &[f64],
+        s_out: &mut [f64],
+    ) {
+        let p = f.ground_size();
+        self.resize(p);
+        self.w.copy_from_slice(w_init);
+        let info = greedy_base_vertex(f, w_init, &mut self.greedy_ws, s_out);
+        self.fc = self.fc.min(info.best_level_value);
+        // Gap for the fresh pair (w_init, s): f(w_init) = ⟨w_init, s⟩.
+        let f_w = dot(w_init, s_out);
+        let primal = f_w + 0.5 * norm2_sq(w_init);
+        let dual = -0.5 * norm2_sq(s_out);
+        self.gap = primal - dual;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::iwata::IwataFn;
+
+    #[test]
+    fn primal_state_reset_gap_nonnegative() {
+        let f = IwataFn::new(12);
+        let mut st = PrimalState::new(12);
+        let w0 = vec![0.0; 12];
+        let mut s = vec![0.0; 12];
+        st.reset_from(&f, &w0, &mut s);
+        assert!(st.gap >= -1e-9, "gap {}", st.gap);
+        assert!(st.gap.is_finite());
+    }
+
+    #[test]
+    fn greedy_and_refine_gap_monotone_vs_unrefined() {
+        // PAV primal must be at least as good as w = −x.
+        let f = IwataFn::new(10);
+        let mut st = PrimalState::new(10);
+        let x: Vec<f64> = (0..10).map(|i| (i as f64) - 4.5).collect();
+        let mut q = vec![0.0; 10];
+        let (_, f_w) = st.greedy_and_refine(&f, &x, &mut q);
+        let primal_refined = f_w + 0.5 * norm2_sq(&st.w);
+        // Unrefined primal at w = −x:
+        let neg_x: Vec<f64> = x.iter().map(|v| -v).collect();
+        let f_negx = crate::lovasz::lovasz_value(&f, &neg_x);
+        let primal_unrefined = f_negx + 0.5 * norm2_sq(&neg_x);
+        assert!(primal_refined <= primal_unrefined + 1e-9);
+    }
+}

@@ -1,0 +1,152 @@
+//! Pool-adjacent-violators isotonic regression.
+//!
+//! Remark 2 of the paper: solvers that only maintain the dual iterate
+//! `s ∈ B(F)` obtain a primal iterate by setting `w = −s` and *refining* it
+//! with PAV. The refinement solves
+//!
+//! ```text
+//! min_w  f(w) + ½‖w‖²   s.t.  w is measurable w.r.t. the greedy order
+//! ```
+//!
+//! i.e. `min Σ_k (g_k w_k + ½ w_k²)` subject to `w_{k}` non-increasing in
+//! the order positions, where `g_k` are the greedy marginal gains. The
+//! unconstrained optimum is `w_k = −g_k`; the order constraint makes it the
+//! **non-increasing isotonic regression of `−g`**, solved exactly by PAV in
+//! O(n). This never increases the primal objective relative to `w = −s`,
+//! so the duality gap — and therefore every screening ball — only tightens.
+
+/// Non-increasing isotonic regression: returns `w` minimizing
+/// `Σ (w_k − t_k)²` subject to `w_0 ≥ w_1 ≥ … ≥ w_{n−1}`.
+pub fn pav_nonincreasing(t: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; t.len()];
+    pav_nonincreasing_into(t, &mut out);
+    out
+}
+
+/// In-place variant of [`pav_nonincreasing`] (no allocation beyond the
+/// block stack, which is reused by callers via [`PavWorkspace`]).
+pub fn pav_nonincreasing_into(t: &[f64], out: &mut [f64]) {
+    let mut ws = PavWorkspace::default();
+    ws.run(t, out);
+}
+
+/// Reusable block stack for PAV.
+#[derive(Clone, Debug, Default)]
+pub struct PavWorkspace {
+    /// (sum, count) per merged block.
+    blocks: Vec<(f64, usize)>,
+}
+
+impl PavWorkspace {
+    /// Run non-increasing PAV on `t`, writing the fit into `out`.
+    pub fn run(&mut self, t: &[f64], out: &mut [f64]) {
+        assert_eq!(t.len(), out.len());
+        self.blocks.clear();
+        for &x in t {
+            let mut sum = x;
+            let mut count = 1usize;
+            // Non-increasing fit: a later block's mean must not exceed an
+            // earlier block's mean; merge while violated.
+            while let Some(&(psum, pcount)) = self.blocks.last() {
+                if sum / count as f64 > psum / pcount as f64 - 0.0 {
+                    self.blocks.pop();
+                    sum += psum;
+                    count += pcount;
+                } else {
+                    break;
+                }
+            }
+            self.blocks.push((sum, count));
+        }
+        let mut k = 0;
+        for &(sum, count) in &self.blocks {
+            let mean = sum / count as f64;
+            for _ in 0..count {
+                out[k] = mean;
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, t.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil::forall_rng;
+
+    fn is_nonincreasing(w: &[f64]) -> bool {
+        w.windows(2).all(|p| p[0] >= p[1] - 1e-12)
+    }
+
+    fn sse(w: &[f64], t: &[f64]) -> f64 {
+        w.iter().zip(t).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    #[test]
+    fn already_sorted_is_identity() {
+        let t = [5.0, 3.0, 1.0, -2.0];
+        assert_eq!(pav_nonincreasing(&t), t.to_vec());
+    }
+
+    #[test]
+    fn single_violator_pools() {
+        let t = [1.0, 3.0];
+        assert_eq!(pav_nonincreasing(&t), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn constant_input() {
+        let t = [2.0; 5];
+        assert_eq!(pav_nonincreasing(&t), t.to_vec());
+    }
+
+    #[test]
+    fn fit_is_feasible_and_not_worse_than_constant() {
+        forall_rng(50, |rng| {
+            let n = 1 + rng.below(40);
+            let t = rng.normal_vec(n);
+            let w = pav_nonincreasing(&t);
+            if !is_nonincreasing(&w) {
+                return Err("fit not non-increasing".into());
+            }
+            // PAV is optimal; at minimum it beats the best constant fit.
+            let mean = t.iter().sum::<f64>() / n as f64;
+            let const_fit = vec![mean; n];
+            if sse(&w, &t) > sse(&const_fit, &t) + 1e-9 {
+                return Err("worse than constant fit".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fit_is_optimal_vs_random_feasible_points() {
+        forall_rng(30, |rng| {
+            let n = 2 + rng.below(10);
+            let t = rng.normal_vec(n);
+            let w = pav_nonincreasing(&t);
+            let base = sse(&w, &t);
+            // Random non-increasing candidates must not beat PAV.
+            for _ in 0..20 {
+                let mut c = rng.normal_vec(n);
+                c.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                if sse(&c, &t) < base - 1e-9 {
+                    return Err(format!("candidate beats PAV: {} < {base}", sse(&c, &t)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_means_preserve_total() {
+        let mut rng = Pcg64::seeded(7);
+        let t = rng.normal_vec(100);
+        let w = pav_nonincreasing(&t);
+        let st: f64 = t.iter().sum();
+        let sw: f64 = w.iter().sum();
+        assert!((st - sw).abs() < 1e-9, "PAV preserves block sums");
+    }
+}

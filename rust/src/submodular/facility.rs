@@ -1,0 +1,171 @@
+//! Facility-location-style functions: soft coverage via maxima.
+//!
+//! `F(A) = Σ_u w_u · max_{j∈A} s_{uj} − c(A)` (with `max_∅ = 0`): each
+//! client `u` is served at the quality of the best open facility in `A`,
+//! facilities cost `c_j`. The service term is monotone submodular (max of
+//! nonnegative scores), so `F` is submodular; minimizing `−F`… here SFM
+//! *minimizes* `F` directly, so negative costs model subsidies and the
+//! minimizer balances service value against cost. A standard oracle
+//! family with structure quite unlike cuts (per-client maxima), which is
+//! exactly why the screening test battery includes it.
+
+use super::Submodular;
+
+/// Weighted facility-location value minus modular facility costs.
+#[derive(Clone, Debug)]
+pub struct FacilityLocationFn {
+    /// `scores[u * p + j] = s_{uj} ≥ 0`, row-major clients × facilities.
+    scores: Vec<f64>,
+    /// Client weights `w_u ≥ 0`.
+    client_w: Vec<f64>,
+    /// Facility costs (subtracted; sign free).
+    cost: Vec<f64>,
+    /// Number of facilities `p`.
+    p: usize,
+}
+
+impl FacilityLocationFn {
+    /// Build from a dense score matrix (`clients × facilities`).
+    pub fn new(clients: usize, p: usize, scores: Vec<f64>, client_w: Vec<f64>, cost: Vec<f64>) -> Self {
+        assert_eq!(scores.len(), clients * p);
+        assert_eq!(client_w.len(), clients);
+        assert_eq!(cost.len(), p);
+        assert!(scores.iter().all(|&s| s >= 0.0), "scores must be ≥ 0");
+        assert!(client_w.iter().all(|&w| w >= 0.0), "client weights must be ≥ 0");
+        FacilityLocationFn { scores, client_w, cost, p }
+    }
+
+    /// Random instance: facilities and clients as 2-D points, scores =
+    /// Gaussian similarity, costs uniform.
+    pub fn random(
+        clients: usize,
+        p: usize,
+        rng: &mut crate::rng::Pcg64,
+    ) -> Self {
+        let fac: Vec<[f64; 2]> =
+            (0..p).map(|_| [rng.uniform(0.0, 1.0), rng.uniform(0.0, 1.0)]).collect();
+        let mut scores = Vec::with_capacity(clients * p);
+        for _ in 0..clients {
+            let c = [rng.uniform(0.0, 1.0), rng.uniform(0.0, 1.0)];
+            for fj in &fac {
+                let d2 = (c[0] - fj[0]).powi(2) + (c[1] - fj[1]).powi(2);
+                scores.push((-4.0 * d2).exp());
+            }
+        }
+        let client_w = rng.uniform_vec(clients, 0.2, 1.0);
+        let cost = rng.uniform_vec(p, 0.0, 1.5);
+        FacilityLocationFn::new(clients, p, scores, client_w, cost)
+    }
+
+    #[inline]
+    fn num_clients(&self) -> usize {
+        self.client_w.len()
+    }
+}
+
+impl Submodular for FacilityLocationFn {
+    fn ground_size(&self) -> usize {
+        self.p
+    }
+
+    fn eval(&self, set: &[bool]) -> f64 {
+        assert_eq!(set.len(), self.p);
+        let mut v = 0.0;
+        for u in 0..self.num_clients() {
+            let row = &self.scores[u * self.p..(u + 1) * self.p];
+            let mut best = 0.0f64;
+            for (j, &inside) in set.iter().enumerate() {
+                if inside && row[j] > best {
+                    best = row[j];
+                }
+            }
+            v += self.client_w[u] * best;
+        }
+        for (j, &inside) in set.iter().enumerate() {
+            if inside {
+                v -= self.cost[j];
+            }
+        }
+        v
+    }
+
+    fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        // cur[u] = current best score for client u; adding facility j
+        // contributes Σ_u w_u · max(0, s_uj − cur[u]) − c_j.
+        let clients = self.num_clients();
+        let mut cur = vec![0.0f64; clients];
+        for (j, &inb) in base.iter().enumerate() {
+            if inb {
+                for u in 0..clients {
+                    let s = self.scores[u * self.p + j];
+                    if s > cur[u] {
+                        cur[u] = s;
+                    }
+                }
+            }
+        }
+        for (o, &j) in out.iter_mut().zip(order) {
+            let mut gain = -self.cost[j];
+            for u in 0..clients {
+                let s = self.scores[u * self.p + j];
+                if s > cur[u] {
+                    gain += self.client_w[u] * (s - cur[u]);
+                    cur[u] = s;
+                }
+            }
+            *o = gain;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::rng::Pcg64;
+    use crate::screening::iaes::{solve_sfm_with_screening, IaesOptions};
+    use crate::submodular::test_support::{check_axioms, check_gains_match_eval};
+    use crate::submodular::SubmodularExt;
+
+    #[test]
+    fn axioms_and_gains() {
+        let mut rng = Pcg64::seeded(606);
+        let f = FacilityLocationFn::random(20, 9, &mut rng);
+        check_axioms(&f, 607, 1e-9);
+        check_gains_match_eval(&f, 608, 1e-12);
+    }
+
+    #[test]
+    fn simple_instance_values() {
+        // One client, two facilities.
+        let f = FacilityLocationFn::new(
+            1,
+            2,
+            vec![0.8, 0.5],
+            vec![1.0],
+            vec![0.1, 0.2],
+        );
+        assert_eq!(f.eval_ids(&[]), 0.0);
+        assert!((f.eval_ids(&[0]) - 0.7).abs() < 1e-12);
+        assert!((f.eval_ids(&[1]) - 0.3).abs() < 1e-12);
+        // Both: max(0.8, 0.5) − 0.3 = 0.5.
+        assert!((f.eval_full() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iaes_is_safe_on_facility_location() {
+        let mut rng = Pcg64::seeded(609);
+        for _ in 0..4 {
+            let f = FacilityLocationFn::random(15, 8, &mut rng);
+            let brute = brute_force_sfm(&f, 1e-9);
+            let report =
+                solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+            assert!(
+                (report.minimum - brute.minimum).abs() < 1e-6,
+                "{} vs {}",
+                report.minimum,
+                brute.minimum
+            );
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Gaussian-process mutual information — the paper's exact two-moons
+//! objective (§4.1).
+//!
+//! `F(A) = I(f_A; f_{V∖A}) + m(A)` where `f ~ GP(0, K)` with a Gaussian
+//! kernel `K_ij = exp(−α‖x_i−x_j‖²)` (+ observation noise σ² on the
+//! diagonal for conditioning) and the modular label term
+//! `m_j = −log η_j + log(1 − η_j)` from the semi-supervised labels.
+//!
+//! The mutual information between the restriction of a GP to `A` and its
+//! complement is
+//!
+//! ```text
+//! I(f_A; f_{V∖A}) = H(A) + H(V∖A) − H(V),   H(A) = ½ log det K_AA
+//! ```
+//!
+//! (entropies up to the common `½|A| log 2πe` terms, which cancel in `I`
+//! only partially — we keep them implicitly by folding noise into `K`;
+//! symmetric-submodularity holds either way since entropy is submodular).
+//!
+//! **Greedy pass**: along an order, the prefix sets are nested, so `H(A_k)`
+//! comes from one *extending* Cholesky; the complements `V∖A_k` are nested
+//! along the *reversed* order, so `H(V∖A_k)` comes from a second extending
+//! Cholesky run backwards. One greedy pass is therefore two O(p³/3)
+//! factorizations — exactly the cost profile the paper's Matlab experiment
+//! pays, which is why their `p = 1000` baseline takes 5400 s.
+
+use super::Submodular;
+use crate::linalg::{Cholesky, IncrementalCholesky, Mat};
+
+/// GP mutual-information + modular labels.
+#[derive(Clone, Debug)]
+pub struct GaussianMiFn {
+    p: usize,
+    /// Row-major `p×p` kernel matrix including the noise diagonal.
+    k: Vec<f64>,
+    /// Modular term.
+    m: Vec<f64>,
+    /// Cached `H(V) = ½ log det K` (constant).
+    h_full: f64,
+}
+
+impl GaussianMiFn {
+    /// Build from a PSD kernel matrix (row-major, `p×p`), observation noise
+    /// `sigma2 > 0` added to the diagonal, and a modular vector.
+    pub fn new(p: usize, mut k: Vec<f64>, sigma2: f64, m: Vec<f64>) -> Self {
+        assert_eq!(k.len(), p * p);
+        assert_eq!(m.len(), p);
+        assert!(sigma2 > 0.0, "need positive noise for conditioning");
+        for i in 0..p {
+            k[i * p + i] += sigma2;
+        }
+        let mat = Mat { rows: p, cols: p, data: k.clone() };
+        let ch = Cholesky::factor(&mat, 1e-10).expect("kernel matrix not PD");
+        let h_full = 0.5 * ch.logdet();
+        GaussianMiFn { p, k, m, h_full }
+    }
+
+    /// Build from points with a Gaussian kernel `exp(−α‖xi−xj‖²)`.
+    pub fn from_points(points: &[[f64; 2]], alpha: f64, sigma2: f64, m: Vec<f64>) -> Self {
+        let p = points.len();
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in 0..p {
+                let dx = points[i][0] - points[j][0];
+                let dy = points[i][1] - points[j][1];
+                k[i * p + j] = (-alpha * (dx * dx + dy * dy)).exp();
+            }
+        }
+        Self::new(p, k, sigma2, m)
+    }
+
+    #[inline]
+    fn kk(&self, i: usize, j: usize) -> f64 {
+        self.k[i * self.p + j]
+    }
+
+    /// `H(A) = ½ log det K_AA` for ids.
+    fn entropy_ids(&self, ids: &[usize]) -> f64 {
+        if ids.is_empty() {
+            return 0.0;
+        }
+        let n = ids.len();
+        let sub = Mat::from_fn(n, n, |a, b| self.kk(ids[a], ids[b]));
+        let ch = Cholesky::factor(&sub, 1e-10).expect("principal minor not PD");
+        0.5 * ch.logdet()
+    }
+}
+
+impl Submodular for GaussianMiFn {
+    fn ground_size(&self) -> usize {
+        self.p
+    }
+
+    fn eval(&self, set: &[bool]) -> f64 {
+        assert_eq!(set.len(), self.p);
+        let a_ids: Vec<usize> = (0..self.p).filter(|&i| set[i]).collect();
+        let b_ids: Vec<usize> = (0..self.p).filter(|&i| !set[i]).collect();
+        let modular: f64 = a_ids.iter().map(|&i| self.m[i]).sum();
+        self.entropy_ids(&a_ids) + self.entropy_ids(&b_ids) - self.h_full + modular
+    }
+
+    fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let n = order.len();
+        if n == 0 {
+            return;
+        }
+        let base_ids: Vec<usize> = (0..self.p).filter(|&i| base[i]).collect();
+
+        // Forward pass: H(base ∪ prefix_k) for k = 0..=n via one extending
+        // Cholesky seeded with the base set.
+        let mut h_fwd = vec![0.0; n + 1]; // h_fwd[k] = H(base ∪ prefix_k)
+        {
+            let mut inc = IncrementalCholesky::new();
+            let mut members: Vec<usize> = Vec::with_capacity(base_ids.len() + n);
+            let mut logdet = 0.0;
+            for &i in &base_ids {
+                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
+                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+                logdet += 2.0 * ld.ln();
+                members.push(i);
+            }
+            h_fwd[0] = 0.5 * logdet;
+            for (k, &i) in order.iter().enumerate() {
+                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
+                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+                logdet += 2.0 * ld.ln();
+                members.push(i);
+                h_fwd[k + 1] = 0.5 * logdet;
+            }
+        }
+
+        // Backward pass: the complements C_k = V ∖ (base ∪ prefix_k) are
+        // nested decreasing; equivalently C_k = rest ∪ suffix_k where
+        // rest = V ∖ (base ∪ order). Build from rest, then append order
+        // reversed: after pushing t elements we have C_{n−t}.
+        let in_order = {
+            let mut b = vec![false; self.p];
+            for &i in order {
+                b[i] = true;
+            }
+            b
+        };
+        let rest_ids: Vec<usize> =
+            (0..self.p).filter(|&i| !base[i] && !in_order[i]).collect();
+        let mut h_bwd = vec![0.0; n + 1]; // h_bwd[k] = H(V ∖ (base ∪ prefix_k))
+        {
+            let mut inc = IncrementalCholesky::new();
+            let mut members: Vec<usize> = Vec::with_capacity(rest_ids.len() + n);
+            let mut logdet = 0.0;
+            for &i in &rest_ids {
+                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
+                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+                logdet += 2.0 * ld.ln();
+                members.push(i);
+            }
+            h_bwd[n] = 0.5 * logdet;
+            for (t, &i) in order.iter().rev().enumerate() {
+                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
+                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+                logdet += 2.0 * ld.ln();
+                members.push(i);
+                h_bwd[n - 1 - t] = 0.5 * logdet;
+            }
+        }
+
+        for k in 0..n {
+            let j = order[k];
+            out[k] =
+                (h_fwd[k + 1] - h_fwd[k]) + (h_bwd[k + 1] - h_bwd[k]) + self.m[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::submodular::test_support::{check_axioms, check_gains_match_eval};
+    use crate::submodular::SubmodularExt;
+
+    fn random_mi(p: usize, seed: u64) -> GaussianMiFn {
+        let mut rng = Pcg64::seeded(seed);
+        let points: Vec<[f64; 2]> =
+            (0..p).map(|_| [rng.uniform(-2.0, 2.0), rng.uniform(-2.0, 2.0)]).collect();
+        let m = rng.uniform_vec(p, -0.5, 0.5);
+        GaussianMiFn::from_points(&points, 1.5, 0.1, m)
+    }
+
+    #[test]
+    fn axioms_and_gains() {
+        let f = random_mi(9, 61);
+        check_axioms(&f, 62, 1e-7);
+        check_gains_match_eval(&f, 63, 1e-7);
+    }
+
+    #[test]
+    fn normalized_and_symmetric_without_modular() {
+        let mut rng = Pcg64::seeded(64);
+        let points: Vec<[f64; 2]> =
+            (0..8).map(|_| [rng.normal(), rng.normal()]).collect();
+        let f = GaussianMiFn::from_points(&points, 1.0, 0.2, vec![0.0; 8]);
+        assert!(f.eval_ids(&[]).abs() < 1e-9);
+        assert!(f.eval_full().abs() < 1e-9);
+        // MI is symmetric: F(A) = F(V∖A).
+        for _ in 0..10 {
+            let set: Vec<bool> = (0..8).map(|_| rng.bernoulli(0.5)).collect();
+            let comp: Vec<bool> = set.iter().map(|&b| !b).collect();
+            assert!((f.eval(&set) - f.eval(&comp)).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn mutual_information_nonnegative() {
+        let f = random_mi(10, 65);
+        let mut rng = Pcg64::seeded(66);
+        for _ in 0..20 {
+            let set: Vec<bool> = (0..10).map(|_| rng.bernoulli(0.5)).collect();
+            // Strip modular part: evaluate with m and subtract.
+            let m_sum: f64 = (0..10).filter(|&i| set[i]).map(|i| f.m[i]).sum();
+            assert!(f.eval(&set) - m_sum > -1e-8, "MI must be ≥ 0");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Modular (additive) set functions `F(A) = Σ_{j∈A} w_j`.
+//!
+//! Modular functions are both submodular and supermodular; they are the
+//! building block for the paper's parameterized family SFM′
+//! (`F(A) + Σ_{j∈A} ∇ψ_j(α)`) and for the unary terms of the experiment
+//! objectives.
+
+use super::Submodular;
+
+/// `F(A) = w(A)`.
+#[derive(Clone, Debug)]
+pub struct ModularFn {
+    w: Vec<f64>,
+}
+
+impl ModularFn {
+    /// Build from per-element weights.
+    pub fn new(w: Vec<f64>) -> Self {
+        ModularFn { w }
+    }
+
+    /// The weight vector.
+    pub fn weights(&self) -> &[f64] {
+        &self.w
+    }
+}
+
+impl Submodular for ModularFn {
+    fn ground_size(&self) -> usize {
+        self.w.len()
+    }
+
+    fn eval(&self, set: &[bool]) -> f64 {
+        assert_eq!(set.len(), self.w.len());
+        set.iter().zip(&self.w).filter(|(&b, _)| b).map(|(_, &w)| w).sum()
+    }
+
+    fn prefix_gains_from(&self, _base: &[bool], order: &[usize], out: &mut [f64]) {
+        for (o, &j) in out.iter_mut().zip(order) {
+            *o = self.w[j];
+        }
+    }
+}
+
+/// The sum `F + m` of a submodular function and a modular function, sharing
+/// the same ground set. Used to express SFM′ and the unary-augmented
+/// experiment objectives without copying oracles.
+pub struct PlusModular<F> {
+    inner: F,
+    m: Vec<f64>,
+}
+
+impl<F: Submodular> PlusModular<F> {
+    /// `F(A) + m(A)`.
+    pub fn new(inner: F, m: Vec<f64>) -> Self {
+        assert_eq!(inner.ground_size(), m.len());
+        PlusModular { inner, m }
+    }
+
+    /// The wrapped submodular part.
+    pub fn inner(&self) -> &F {
+        &self.inner
+    }
+
+    /// The modular weights.
+    pub fn modular(&self) -> &[f64] {
+        &self.m
+    }
+}
+
+impl<F: Submodular> Submodular for PlusModular<F> {
+    fn ground_size(&self) -> usize {
+        self.inner.ground_size()
+    }
+
+    fn eval(&self, set: &[bool]) -> f64 {
+        let mut v = self.inner.eval(set);
+        for (j, &b) in set.iter().enumerate() {
+            if b {
+                v += self.m[j];
+            }
+        }
+        v
+    }
+
+    fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        self.inner.prefix_gains_from(base, order, out);
+        for (o, &j) in out.iter_mut().zip(order) {
+            *o += self.m[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submodular::test_support::{check_axioms, check_gains_match_eval};
+    use crate::submodular::SubmodularExt;
+
+    #[test]
+    fn modular_axioms() {
+        let f = ModularFn::new(vec![0.3, -1.0, 2.0, 0.0, -0.7]);
+        check_axioms(&f, 11, 1e-12);
+        check_gains_match_eval(&f, 12, 1e-12);
+    }
+
+    #[test]
+    fn plus_modular_matches_sum() {
+        let f = ModularFn::new(vec![1.0, 2.0, 3.0]);
+        let g = PlusModular::new(f, vec![-1.0, 0.5, 0.0]);
+        assert_eq!(g.eval_ids(&[0]), 0.0);
+        assert_eq!(g.eval_ids(&[0, 1]), 2.5);
+        check_gains_match_eval(&g, 13, 1e-12);
+    }
+}

@@ -1,0 +1,188 @@
+//! The Lemma-1 ground-set reduction `F̂(C) = F(Ê ∪ C) − F(Ê)`.
+//!
+//! After IAES identifies active elements `Ê` (fixed *in* the minimizer) and
+//! inactive elements `Ĝ` (fixed *out*), the residual problem is SFM over
+//! `V̂ = V ∖ (Ê ∪ Ĝ)` with the contracted-and-restricted function `F̂`.
+//! Lemma 1 proves `F̂` is submodular, `F̂(∅) = 0`, and
+//! `A* = Ê ∪ argmin F̂`.
+//!
+//! [`ScaledFn`] keeps the *original* oracle plus a flat id mapping, so IAES
+//! re-scaling at every trigger never builds nested wrappers — there is one
+//! translation layer no matter how many times the problem shrank.
+
+use super::Submodular;
+
+/// `F̂` over the reduced ground set `V̂`, referencing the original oracle.
+pub struct ScaledFn<'a> {
+    inner: &'a dyn Submodular,
+    /// Membership of Ê in the original ground set.
+    base: Vec<bool>,
+    /// `kept[k]` = original id of reduced element `k` (sorted ascending).
+    kept: Vec<usize>,
+    /// `F(Ê)` cached.
+    f_base: f64,
+}
+
+impl<'a> ScaledFn<'a> {
+    /// Build the reduction. `active` and `kept` are original ids; `kept`
+    /// must be disjoint from `active` (and implicitly from the discarded
+    /// inactive set, which is simply "everything else").
+    pub fn new(inner: &'a dyn Submodular, active: &[usize], kept: Vec<usize>) -> Self {
+        let p = inner.ground_size();
+        let mut base = vec![false; p];
+        for &i in active {
+            assert!(i < p);
+            assert!(!base[i], "duplicate active id {i}");
+            base[i] = true;
+        }
+        for &k in &kept {
+            assert!(k < p && !base[k], "kept id {k} collides with active set");
+        }
+        let f_base = inner.eval(&base);
+        ScaledFn { inner, base, kept, f_base }
+    }
+
+    /// Reduced ground-set ids mapped back to original ids.
+    pub fn kept_ids(&self) -> &[usize] {
+        &self.kept
+    }
+
+    /// `F(Ê)` — the constant subtracted by the reduction.
+    pub fn base_value(&self) -> f64 {
+        self.f_base
+    }
+
+    /// Translate a reduced-id set into original ids (plus the base set).
+    pub fn to_original_ids(&self, reduced: &[usize]) -> Vec<usize> {
+        let mut ids: Vec<usize> =
+            self.base.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect();
+        ids.extend(reduced.iter().map(|&k| self.kept[k]));
+        ids.sort_unstable();
+        ids
+    }
+}
+
+impl Submodular for ScaledFn<'_> {
+    fn ground_size(&self) -> usize {
+        self.kept.len()
+    }
+
+    fn eval(&self, set: &[bool]) -> f64 {
+        assert_eq!(set.len(), self.kept.len());
+        let mut full = self.base.clone();
+        for (k, &b) in set.iter().enumerate() {
+            if b {
+                full[self.kept[k]] = true;
+            }
+        }
+        self.inner.eval(&full) - self.f_base
+    }
+
+    fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        // Translate: reduced base ∪ Ê is the original base; reduced order
+        // maps through `kept`. The −F(Ê) constant cancels in differences.
+        assert_eq!(base.len(), self.kept.len());
+        let mut full_base = self.base.clone();
+        for (k, &b) in base.iter().enumerate() {
+            if b {
+                full_base[self.kept[k]] = true;
+            }
+        }
+        let mapped: Vec<usize> = order.iter().map(|&k| self.kept[k]).collect();
+        self.inner.prefix_gains_from(&full_base, &mapped, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::kernel_cut::KernelCutFn;
+    use crate::submodular::test_support::{check_axioms, check_gains_match_eval};
+    use crate::submodular::SubmodularExt;
+
+    #[test]
+    fn reduction_matches_definition() {
+        let f = IwataFn::new(12);
+        let active = vec![1, 5];
+        let kept = vec![0, 2, 3, 7, 9];
+        let scaled = ScaledFn::new(&f, &active, kept.clone());
+        assert!(scaled.eval_ids(&[]).abs() < 1e-12, "F̂(∅) = 0");
+        // F̂({0,3}) = F({1,5} ∪ {kept[0],kept[3]}) − F({1,5})
+        let lhs = scaled.eval_ids(&[0, 3]);
+        let rhs = f.eval_ids(&[0, 1, 5, 7]) - f.eval_ids(&[1, 5]);
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_stays_submodular() {
+        let mut rng = Pcg64::seeded(81);
+        let p = 10;
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -1.0, 1.0);
+        let f = KernelCutFn::new(p, k, unary);
+        let scaled = ScaledFn::new(&f, &[2, 8], vec![0, 1, 4, 5, 9]);
+        check_axioms(&scaled, 82, 1e-9);
+        check_gains_match_eval(&scaled, 83, 1e-9);
+    }
+
+    #[test]
+    fn to_original_ids_merges_base() {
+        let f = IwataFn::new(8);
+        let scaled = ScaledFn::new(&f, &[6, 2], vec![0, 3, 5]);
+        assert_eq!(scaled.to_original_ids(&[1, 2]), vec![2, 3, 5, 6]);
+    }
+
+    #[test]
+    fn minimizer_recovery_lemma1() {
+        // Brute-force check of Lemma 1(iii) on a small instance.
+        let f = IwataFn::new(9);
+        // Compute the true minimum of F.
+        let p = 9;
+        let mut best = f64::INFINITY;
+        for mask in 0u32..(1 << p) {
+            let set: Vec<bool> = (0..p).map(|i| mask >> i & 1 == 1).collect();
+            best = best.min(f.eval(&set));
+        }
+        // Take Ê = elements in EVERY minimizer, Ĝ = in none (computed brute
+        // force), reduce, re-minimize, recover.
+        let mut always = vec![true; p];
+        let mut never = vec![true; p];
+        for mask in 0u32..(1 << p) {
+            let set: Vec<bool> = (0..p).map(|i| mask >> i & 1 == 1).collect();
+            if (f.eval(&set) - best).abs() < 1e-9 {
+                for i in 0..p {
+                    if !set[i] {
+                        always[i] = false;
+                    } else {
+                        never[i] = false;
+                    }
+                }
+            }
+        }
+        let active: Vec<usize> = (0..p).filter(|&i| always[i]).collect();
+        let kept: Vec<usize> = (0..p).filter(|&i| !always[i] && !never[i]).collect();
+        let scaled = ScaledFn::new(&f, &active, kept.clone());
+        let ph = scaled.ground_size();
+        let mut best_red = f64::INFINITY;
+        let mut best_set = Vec::new();
+        for mask in 0u32..(1 << ph) {
+            let ids: Vec<usize> = (0..ph).filter(|i| mask >> i & 1 == 1).collect();
+            let v = scaled.eval_ids(&ids);
+            if v < best_red {
+                best_red = v;
+                best_set = ids;
+            }
+        }
+        let recovered = scaled.to_original_ids(&best_set);
+        assert!((f.eval_ids(&recovered) - best).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal property-testing harness.
+//!
+//! `proptest` is not available in the offline build environment, so the
+//! test suites use this small substitute: run a property over many seeded
+//! random cases and, on failure, report the seed + case index so the case
+//! can be replayed deterministically. No shrinking — cases are generated
+//! small to begin with.
+
+use crate::rng::Pcg64;
+
+/// Run `prop` over `cases` seeded random inputs produced by `gen`.
+///
+/// Panics with the case index and seed on the first failure, so
+/// `forall(64, |rng| ...)` failures are reproducible by construction.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::seeded(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property receives the RNG directly (for
+/// properties that both generate and check).
+pub fn forall_rng(cases: usize, mut prop: impl FnMut(&mut Pcg64) -> Result<(), String>) {
+    for case in 0..cases {
+        let seed = 0xBADD_CAFE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg64::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two floats are within `tol`, with a useful message.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Membership vector (characteristic vector as bools) from sorted ids.
+pub fn set_from_ids(p: usize, ids: &[usize]) -> Vec<bool> {
+    let mut m = vec![false; p];
+    for &i in ids {
+        m[i] = true;
+    }
+    m
+}
+
+/// Sorted ids from a membership vector.
+pub fn ids_from_set(set: &[bool]) -> Vec<usize> {
+    set.iter().enumerate().filter(|(_, &b)| b).map(|(i, _)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            32,
+            |rng| rng.uniform(-1.0, 1.0),
+            |x| {
+                if x.abs() <= 1.0 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(8, |rng| rng.next_f64(), |_| Err("always fails".into()));
+    }
+
+    #[test]
+    fn set_roundtrip() {
+        let ids = vec![0, 3, 4];
+        let set = set_from_ids(6, &ids);
+        assert_eq!(ids_from_set(&set), ids);
+    }
+}

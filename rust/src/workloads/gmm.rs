@@ -1,0 +1,166 @@
+//! 1-D two-component Gaussian mixture model fit by EM.
+//!
+//! The §4.2 unary potentials come from a GMM over pixel intensities
+//! (GrabCut-style [22]): fit one component on foreground seed pixels and
+//! one on background seeds, then score every pixel by the log-likelihood
+//! ratio. This module implements the EM fit from scratch (no external
+//! stats crate in the offline environment).
+
+/// One Gaussian component.
+#[derive(Clone, Copy, Debug)]
+pub struct Gaussian {
+    /// Mean.
+    pub mean: f64,
+    /// Variance (floored for stability).
+    pub var: f64,
+    /// Mixture weight.
+    pub weight: f64,
+}
+
+impl Gaussian {
+    /// Log density.
+    pub fn log_pdf(&self, x: f64) -> f64 {
+        let d = x - self.mean;
+        -0.5 * (d * d / self.var) - 0.5 * (2.0 * std::f64::consts::PI * self.var).ln()
+    }
+}
+
+/// A two-component 1-D mixture.
+#[derive(Clone, Copy, Debug)]
+pub struct Gmm2 {
+    /// The two components.
+    pub components: [Gaussian; 2],
+}
+
+const VAR_FLOOR: f64 = 1e-6;
+
+impl Gmm2 {
+    /// Fit by EM from a deterministic split initialization (below/above the
+    /// median). `iters` EM rounds; data must be non-empty.
+    pub fn fit(data: &[f64], iters: usize) -> Self {
+        assert!(!data.is_empty());
+        let mut sorted = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let (lo, hi): (Vec<f64>, Vec<f64>) =
+            data.iter().partition(|&&x| x <= median);
+        let mut comps = [moments(&lo, 0.5), moments(&hi, 0.5)];
+
+        let n = data.len() as f64;
+        let mut resp = vec![0.0f64; data.len()];
+        for _ in 0..iters {
+            // E-step: responsibility of component 0.
+            for (r, &x) in resp.iter_mut().zip(data) {
+                let l0 = comps[0].weight.max(1e-12).ln() + comps[0].log_pdf(x);
+                let l1 = comps[1].weight.max(1e-12).ln() + comps[1].log_pdf(x);
+                let m = l0.max(l1);
+                let e0 = (l0 - m).exp();
+                let e1 = (l1 - m).exp();
+                *r = e0 / (e0 + e1);
+            }
+            // M-step.
+            for c in 0..2 {
+                let mut wsum = 0.0;
+                let mut msum = 0.0;
+                for (&r, &x) in resp.iter().zip(data) {
+                    let g = if c == 0 { r } else { 1.0 - r };
+                    wsum += g;
+                    msum += g * x;
+                }
+                if wsum < 1e-9 {
+                    continue; // collapsed component: keep previous params
+                }
+                let mean = msum / wsum;
+                let mut vsum = 0.0;
+                for (&r, &x) in resp.iter().zip(data) {
+                    let g = if c == 0 { r } else { 1.0 - r };
+                    vsum += g * (x - mean) * (x - mean);
+                }
+                comps[c] = Gaussian {
+                    mean,
+                    var: (vsum / wsum).max(VAR_FLOOR),
+                    weight: wsum / n,
+                };
+            }
+        }
+        Gmm2 { components: comps }
+    }
+
+    /// Mixture log density.
+    pub fn log_pdf(&self, x: f64) -> f64 {
+        let l0 = self.components[0].weight.max(1e-12).ln() + self.components[0].log_pdf(x);
+        let l1 = self.components[1].weight.max(1e-12).ln() + self.components[1].log_pdf(x);
+        let m = l0.max(l1);
+        m + ((l0 - m).exp() + (l1 - m).exp()).ln()
+    }
+}
+
+fn moments(data: &[f64], weight: f64) -> Gaussian {
+    if data.is_empty() {
+        return Gaussian { mean: 0.0, var: 1.0, weight };
+    }
+    let n = data.len() as f64;
+    let mean = data.iter().sum::<f64>() / n;
+    let var = data.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Gaussian { mean, var: var.max(VAR_FLOOR), weight }
+}
+
+/// GrabCut-style unary potentials: for each value, `β (log p_bg − log
+/// p_fg)` — negative where the foreground model fits better (pulling the
+/// pixel *into* the minimizer A = foreground).
+pub fn unary_potentials(values: &[f64], fg: &Gmm2, bg: &Gmm2, beta: f64) -> Vec<f64> {
+    values.iter().map(|&x| beta * (bg.log_pdf(x) - fg.log_pdf(x))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn em_separates_two_clear_modes() {
+        let mut rng = Pcg64::seeded(3);
+        let mut data = Vec::new();
+        for _ in 0..500 {
+            data.push(rng.normal_ms(0.2, 0.05));
+        }
+        for _ in 0..500 {
+            data.push(rng.normal_ms(0.8, 0.05));
+        }
+        let gmm = Gmm2::fit(&data, 30);
+        let mut means: Vec<f64> = gmm.components.iter().map(|c| c.mean).collect();
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((means[0] - 0.2).abs() < 0.03, "mean0 {}", means[0]);
+        assert!((means[1] - 0.8).abs() < 0.03, "mean1 {}", means[1]);
+    }
+
+    #[test]
+    fn log_pdf_integrates_roughly_to_one() {
+        let g = Gaussian { mean: 0.0, var: 1.0, weight: 1.0 };
+        // Riemann sum over [-6, 6].
+        let n = 2000;
+        let dx = 12.0 / n as f64;
+        let total: f64 =
+            (0..n).map(|i| (g.log_pdf(-6.0 + (i as f64 + 0.5) * dx)).exp() * dx).sum();
+        assert!((total - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn unary_sign_follows_likelihood() {
+        let mut rng = Pcg64::seeded(5);
+        let fg_data: Vec<f64> = (0..300).map(|_| rng.normal_ms(0.75, 0.06)).collect();
+        let bg_data: Vec<f64> = (0..300).map(|_| rng.normal_ms(0.25, 0.06)).collect();
+        let fg = Gmm2::fit(&fg_data, 20);
+        let bg = Gmm2::fit(&bg_data, 20);
+        let u = unary_potentials(&[0.75, 0.25], &fg, &bg, 1.0);
+        assert!(u[0] < 0.0, "fg-like pixel must be pulled in");
+        assert!(u[1] > 0.0, "bg-like pixel must be pushed out");
+    }
+
+    #[test]
+    fn fit_handles_constant_data() {
+        let data = vec![0.5; 64];
+        let gmm = Gmm2::fit(&data, 10);
+        assert!(gmm.log_pdf(0.5).is_finite());
+    }
+}

@@ -1,0 +1,99 @@
+//! 8-neighbor pixel-grid topology helpers (the §4.2 graph structure).
+
+/// Generate the undirected edge list of an `h × w` 8-neighbor grid.
+/// Vertices are row-major (`id = r * w + c`); each edge appears once.
+pub fn eight_neighbor_edges(h: usize, w: usize) -> Vec<(usize, usize)> {
+    let mut edges = Vec::with_capacity(4 * h * w);
+    let id = |r: usize, c: usize| r * w + c;
+    for r in 0..h {
+        for c in 0..w {
+            // Right, down, down-right, down-left: covers every undirected
+            // 8-neighbor pair exactly once.
+            if c + 1 < w {
+                edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < h {
+                edges.push((id(r, c), id(r + 1, c)));
+                if c + 1 < w {
+                    edges.push((id(r, c), id(r + 1, c + 1)));
+                }
+                if c > 0 {
+                    edges.push((id(r, c), id(r + 1, c - 1)));
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Expected 8-neighbor edge count: `(w−1)h + (h−1)w + 2(w−1)(h−1)`.
+pub fn eight_neighbor_edge_count(h: usize, w: usize) -> usize {
+    if h == 0 || w == 0 {
+        return 0;
+    }
+    (w - 1) * h + (h - 1) * w + 2 * (w - 1) * (h - 1)
+}
+
+/// Generate the undirected edge list of a 4-neighbor grid (ablations).
+pub fn four_neighbor_edges(h: usize, w: usize) -> Vec<(usize, usize)> {
+    let mut edges = Vec::with_capacity(2 * h * w);
+    let id = |r: usize, c: usize| r * w + c;
+    for r in 0..h {
+        for c in 0..w {
+            if c + 1 < w {
+                edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < h {
+                edges.push((id(r, c), id(r + 1, c)));
+            }
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_count_formula() {
+        for (h, w) in [(1, 1), (2, 2), (3, 5), (10, 7)] {
+            assert_eq!(
+                eight_neighbor_edges(h, w).len(),
+                eight_neighbor_edge_count(h, w),
+                "h={h} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn edges_unique_and_valid() {
+        let h = 6;
+        let w = 4;
+        let edges = eight_neighbor_edges(h, w);
+        let mut seen = std::collections::HashSet::new();
+        for &(a, b) in &edges {
+            assert!(a < h * w && b < h * w && a != b);
+            assert!(seen.insert((a.min(b), a.max(b))), "duplicate edge {a}-{b}");
+            // 8-neighborhood: |dr| ≤ 1 and |dc| ≤ 1.
+            let (ra, ca) = (a / w, a % w);
+            let (rb, cb) = (b / w, b % w);
+            assert!(ra.abs_diff(rb) <= 1 && ca.abs_diff(cb) <= 1);
+        }
+    }
+
+    #[test]
+    fn four_neighbor_count() {
+        assert_eq!(four_neighbor_edges(3, 3).len(), 12);
+    }
+
+    #[test]
+    fn paper_table2_scale_check() {
+        // Table 2: image1 has 50 246 pixels and 201 427 edges — consistent
+        // with an (approximately) 8-neighbor grid: edges ≈ 4·pixels.
+        let e = eight_neighbor_edge_count(223, 225); // 50 175 px
+        let px = 223 * 225;
+        let ratio = e as f64 / px as f64;
+        assert!(ratio > 3.9 && ratio < 4.0, "ratio {ratio}");
+    }
+}

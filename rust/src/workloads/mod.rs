@@ -1,0 +1,18 @@
+//! Experiment workload generators.
+//!
+//! Reproduces the paper's two experiment families:
+//!
+//! * [`two_moons`] — the §4.1 synthetic semi-supervised clustering dataset
+//!   (two noisy semicircles, 16 labeled points, Gaussian-kernel smoothness
+//!   + label unaries), with both the exact GP mutual-information objective
+//!   and the fast kernel-cut substitute (DESIGN.md §Substitutions).
+//! * [`images`] — §4.2 image segmentation: synthetic foreground/background
+//!   scenes standing in for the (unavailable) GrabCut instances, with GMM
+//!   unaries ([`gmm`]) and 8-neighbor grid pairwise weights ([`grid`]).
+//!
+//! All generators are deterministic in their seed.
+
+pub mod gmm;
+pub mod grid;
+pub mod images;
+pub mod two_moons;

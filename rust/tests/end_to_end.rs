@@ -1,0 +1,134 @@
+//! End-to-end integration: the full pipeline on both paper workloads,
+//! lossless-ness of every screening variant, and coordinator plumbing.
+
+use sfm_screen::coordinator::experiments::{rejection_curve, run_variant, BenchConfig};
+use sfm_screen::coordinator::jobs::{BackendChoice, WorkloadSpec};
+use sfm_screen::screening::iaes::{solve_sfm_with_screening, IaesOptions};
+use sfm_screen::screening::RuleSet;
+use sfm_screen::workloads::images::{benchmark_suite, ImageInstance, ImageParams};
+use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
+
+fn cfg() -> BenchConfig {
+    let mut c = BenchConfig::default();
+    c.sizes = vec![50];
+    c.eps = 1e-6;
+    c.quiet = true;
+    c.backend = BackendChoice::Rust;
+    c.out_dir = std::env::temp_dir().join("sfm_e2e_out");
+    c
+}
+
+#[test]
+fn two_moons_variants_agree_and_screening_accelerates_iterations() {
+    let c = cfg();
+    let wl = WorkloadSpec::TwoMoons { p: 80, use_mi: false, seed: 2018 };
+    let base = run_variant(&wl, RuleSet::none(), &c).unwrap();
+    let iaes = run_variant(&wl, RuleSet::all(), &c).unwrap();
+    assert!(
+        (base.report.minimum - iaes.report.minimum).abs() < 1e-5,
+        "screening changed the optimum"
+    );
+    // The reduced problems must shrink.
+    assert!(iaes.report.screened_active + iaes.report.screened_inactive > 0);
+}
+
+#[test]
+fn image_segmentation_pipeline() {
+    let img = ImageInstance::generate(
+        "e2e",
+        ImageParams {
+            h: 24,
+            w: 20,
+            fg_a: 0.3,
+            fg_b: 0.25,
+            fg_mean: 0.75,
+            bg_mean: 0.3,
+            noise: 0.05,
+            texture: 0.06,
+            beta: 0.35,
+            seed: 77,
+        },
+    );
+    let f = img.cut_fn();
+    let base = solve_sfm_with_screening(
+        &f,
+        &IaesOptions { rules: RuleSet::none(), ..Default::default() },
+    )
+    .unwrap();
+    let iaes = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+    assert!((base.minimum - iaes.minimum).abs() < 1e-5);
+    assert!(img.iou(&iaes.minimizer) > 0.5, "segmentation degraded");
+    // The paper's observation: foreground (active side) is small.
+    assert!(
+        iaes.screened_inactive > iaes.screened_active,
+        "IES should dominate on segmentation"
+    );
+}
+
+#[test]
+fn rejection_curves_hit_one_when_emptied() {
+    let c = cfg();
+    let wl = WorkloadSpec::TwoMoons { p: 60, use_mi: false, seed: 5 };
+    let mut tight = c.clone();
+    tight.eps = 1e-12;
+    let run = run_variant(&wl, RuleSet::all(), &tight).unwrap();
+    let curve = rejection_curve(&run.report, 60);
+    let last = curve.last().unwrap().1;
+    if run.report.emptied {
+        assert!((last - 1.0).abs() < 1e-12);
+    } else {
+        assert!(last <= 1.0);
+    }
+}
+
+#[test]
+fn gaussian_mi_objective_end_to_end() {
+    // The paper-exact objective on a small instance: lossless + aligned
+    // with the kernel-cut substitute's clustering.
+    let tm = TwoMoons::generate(TwoMoonsParams { p: 24, seed: 9, ..Default::default() });
+    let f = tm.gaussian_mi(0.1);
+    let base = solve_sfm_with_screening(
+        &f,
+        &IaesOptions { rules: RuleSet::none(), ..Default::default() },
+    )
+    .unwrap();
+    let iaes = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+    assert!(
+        (base.minimum - iaes.minimum).abs() < 1e-5,
+        "{} vs {}",
+        base.minimum,
+        iaes.minimum
+    );
+    let acc = tm.clustering_accuracy(&iaes.minimizer);
+    let acc = acc.max(1.0 - acc);
+    assert!(acc > 0.7, "MI clustering accuracy {acc}");
+}
+
+#[test]
+fn benchmark_suite_solvable_at_tiny_scale() {
+    let suite = benchmark_suite(0.35);
+    for img in suite.iter().take(2) {
+        let f = img.cut_fn();
+        let rep = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        assert!(rep.final_gap < 1e-6 || rep.emptied, "{} did not converge", img.name);
+    }
+}
+
+#[test]
+fn speedup_in_iterations_on_moderate_instance() {
+    // Wall-clock is noisy in CI; iteration-weighted work is the robust
+    // proxy: Σ_iters p̂ per iteration must shrink with screening.
+    let c = cfg();
+    let wl = WorkloadSpec::TwoMoons { p: 120, use_mi: false, seed: 31 };
+    let base = run_variant(&wl, RuleSet::none(), &c).unwrap();
+    let iaes = run_variant(&wl, RuleSet::all(), &c).unwrap();
+    let work = |r: &sfm_screen::screening::iaes::IaesReport| -> f64 {
+        r.history.iter().map(|h| (h.p_remaining * h.p_remaining) as f64).sum()
+    };
+    let w_base = work(&base.report);
+    let w_iaes = work(&iaes.report);
+    assert!(
+        w_iaes < w_base,
+        "screening did not reduce solver work: {w_iaes} vs {w_base}"
+    );
+}

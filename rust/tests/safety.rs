@@ -1,0 +1,180 @@
+//! Cross-family safety suite: the screening certificates must never
+//! contradict the brute-force lattice of minimizers, for every function
+//! family, rule subset, solver, and trigger schedule.
+//!
+//! This is the paper's central claim ("IAES is safe in the sense that it
+//! would never sacrifice any accuracy") tested end to end.
+
+use sfm_screen::brute::brute_force_sfm;
+use sfm_screen::rng::Pcg64;
+use sfm_screen::screening::iaes::{IaesEngine, IaesOptions, SolverChoice};
+use sfm_screen::screening::RuleSet;
+use sfm_screen::solvers::frankwolfe::FwOptions;
+use sfm_screen::solvers::minnorm::MinNormOptions;
+use sfm_screen::submodular::concave_card::ConcaveCardFn;
+use sfm_screen::submodular::coverage::CoverageFn;
+use sfm_screen::submodular::cut::CutFn;
+use sfm_screen::submodular::iwata::IwataFn;
+use sfm_screen::submodular::kernel_cut::KernelCutFn;
+use sfm_screen::submodular::Submodular;
+
+fn random_kernel_cut(p: usize, rng: &mut Pcg64) -> KernelCutFn {
+    let mut k = vec![0.0; p * p];
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let w = rng.uniform(0.0, 1.0);
+            k[i * p + j] = w;
+            k[j * p + i] = w;
+        }
+    }
+    let unary = rng.uniform_vec(p, -2.0, 2.0);
+    KernelCutFn::new(p, k, unary)
+}
+
+fn random_sparse_cut(p: usize, rng: &mut Pcg64) -> CutFn {
+    let mut edges = Vec::new();
+    for i in 0..p {
+        for j in (i + 1)..p {
+            if rng.bernoulli(0.3) {
+                edges.push((i, j, rng.uniform(0.0, 1.5)));
+            }
+        }
+    }
+    CutFn::from_edges(p, &edges, rng.uniform_vec(p, -1.5, 1.5))
+}
+
+/// Solve with screening and assert (a) the result is a true minimizer,
+/// (b) every trigger's certificates respect the minimizer lattice.
+fn assert_safe(f: &dyn Submodular, opts: &IaesOptions, label: &str) {
+    let brute = brute_force_sfm(f, 1e-7);
+    let report = IaesEngine::new(f, opts.clone()).run().unwrap();
+    assert!(
+        (report.minimum - brute.minimum).abs() < 1e-5 * (1.0 + brute.minimum.abs()),
+        "{label}: IAES minimum {} vs brute {}",
+        report.minimum,
+        brute.minimum
+    );
+    // Certificates vs lattice: active ⊆ maximal minimizer is NOT enough;
+    // active elements must appear in the *minimal* minimizer's closure —
+    // precisely: active ⇒ in every minimizer ⇒ in the minimal one.
+    let minimal: std::collections::HashSet<usize> =
+        brute.minimal.iter().copied().collect();
+    let maximal: std::collections::HashSet<usize> =
+        brute.maximal.iter().copied().collect();
+    for trig in &report.triggers {
+        for &a in &trig.new_active_ids {
+            assert!(
+                minimal.contains(&a),
+                "{label}: active certificate {a} not in minimal minimizer {:?}",
+                brute.minimal
+            );
+        }
+        for &n in &trig.new_inactive_ids {
+            assert!(
+                !maximal.contains(&n),
+                "{label}: inactive certificate {n} inside maximal minimizer {:?}",
+                brute.maximal
+            );
+        }
+    }
+}
+
+#[test]
+fn safety_across_function_families() {
+    let mut rng = Pcg64::seeded(7001);
+    let opts = IaesOptions { eps: 1e-9, ..Default::default() };
+    for trial in 0..6 {
+        let p = 8 + (trial % 5);
+        assert_safe(&random_kernel_cut(p, &mut rng), &opts, "kernel-cut");
+        assert_safe(&random_sparse_cut(p, &mut rng), &opts, "sparse-cut");
+        let m = rng.uniform_vec(p, -2.0, 2.0);
+        assert_safe(
+            &ConcaveCardFn::sqrt(p, rng.uniform(0.5, 2.5), m),
+            &opts,
+            "concave-card",
+        );
+        assert_safe(&CoverageFn::random(p, 3 * p, 4, &mut rng), &opts, "coverage");
+        assert_safe(&IwataFn::new(p), &opts, "iwata");
+    }
+}
+
+#[test]
+fn safety_under_all_rule_subsets() {
+    let mut rng = Pcg64::seeded(7002);
+    for rules in [
+        RuleSet::all(),
+        RuleSet::aes_only(),
+        RuleSet::ies_only(),
+        RuleSet::pair1_only(),
+        RuleSet::pair2_only(),
+    ] {
+        let f = random_kernel_cut(10, &mut rng);
+        let opts = IaesOptions { rules, eps: 1e-9, ..Default::default() };
+        assert_safe(&f, &opts, &format!("{rules:?}"));
+    }
+}
+
+#[test]
+fn safety_under_aggressive_and_lazy_triggering() {
+    let mut rng = Pcg64::seeded(7003);
+    for rho in [0.05, 0.3, 0.9, 0.99] {
+        let f = random_kernel_cut(9, &mut rng);
+        let opts = IaesOptions { rho, eps: 1e-9, ..Default::default() };
+        assert_safe(&f, &opts, &format!("rho={rho}"));
+    }
+}
+
+#[test]
+fn safety_with_frank_wolfe_solver() {
+    let mut rng = Pcg64::seeded(7004);
+    for _ in 0..3 {
+        let f = random_kernel_cut(9, &mut rng);
+        let opts = IaesOptions {
+            solver: SolverChoice::FrankWolfe(FwOptions::default()),
+            eps: 1e-8,
+            max_iters: 50_000,
+            ..Default::default()
+        };
+        assert_safe(&f, &opts, "fw-solver");
+    }
+}
+
+#[test]
+fn safety_with_loose_minnorm_tolerances() {
+    // Sloppier inner solves produce looser gaps — screening must stay safe.
+    let mut rng = Pcg64::seeded(7005);
+    let f = random_kernel_cut(10, &mut rng);
+    let opts = IaesOptions {
+        solver: SolverChoice::MinNorm(MinNormOptions {
+            wolfe_tol: 1e-6,
+            ..Default::default()
+        }),
+        eps: 1e-7,
+        ..Default::default()
+    };
+    assert_safe(&f, &opts, "loose-minnorm");
+}
+
+#[test]
+fn ground_set_reaches_zero_on_separable_instances() {
+    // The "no theoretical limit" property: with strong unaries everything
+    // is eventually certified and the residual problem empties.
+    let mut rng = Pcg64::seeded(7006);
+    let p = 12;
+    let mut k = vec![0.0; p * p];
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let w = rng.uniform(0.0, 0.05); // weak coupling
+            k[i * p + j] = w;
+            k[j * p + i] = w;
+        }
+    }
+    let unary: Vec<f64> =
+        (0..p).map(|i| if i % 2 == 0 { -3.0 } else { 3.0 }).collect();
+    let f = KernelCutFn::new(p, k, unary);
+    let opts = IaesOptions { eps: 1e-12, ..Default::default() };
+    let report = IaesEngine::new(&f, opts).run().unwrap();
+    assert!(report.emptied, "expected full screening, got {report:?}");
+    let brute = brute_force_sfm(&f, 1e-9);
+    assert!((report.minimum - brute.minimum).abs() < 1e-7);
+}
