@@ -14,6 +14,7 @@ use sfm_screen::coordinator::experiments::BenchConfig;
 use sfm_screen::coordinator::jobs::BackendChoice;
 
 /// Build the bench configuration from the environment.
+#[allow(clippy::field_reassign_with_default)]
 pub fn config_from_env() -> BenchConfig {
     let mut cfg = BenchConfig::default();
     cfg.quiet = std::env::var("SFM_BENCH_VERBOSE").is_err();
@@ -53,4 +54,21 @@ pub fn config_from_env() -> BenchConfig {
 
 fn env_flag(name: &str) -> bool {
     matches!(std::env::var(name).as_deref(), Ok("1") | Ok("true") | Ok("yes"))
+}
+
+/// Problem sizes for the `micro` bench: an explicit `SFM_BENCH_SIZES` /
+/// `SFM_BENCH_FULL` request wins (taken from `cfg.sizes`, which those
+/// knobs populate); otherwise the pinned trajectory sizes that the
+/// `BENCH_micro.json` regression rows are tracked at. An unparseable or
+/// empty `SFM_BENCH_SIZES` falls back to the pinned sizes rather than
+/// silently benching nothing.
+#[allow(dead_code)] // each bench binary compiles its own copy of this module
+pub fn micro_sizes(cfg: &sfm_screen::coordinator::BenchConfig) -> Vec<usize> {
+    let explicit = env_flag("SFM_BENCH_FULL")
+        || matches!(std::env::var("SFM_BENCH_SIZES"), Ok(ref s) if !s.trim().is_empty());
+    if explicit && !cfg.sizes.is_empty() {
+        cfg.sizes.clone()
+    } else {
+        vec![256, 1024, 4096]
+    }
 }

@@ -1,17 +1,27 @@
 //! Micro-benchmarks of the hot paths — the §Perf evidence base.
 //!
-//! * greedy `prefix_gains` oracle throughput per function family,
+//! * greedy `prefix_gains` oracle throughput per function family, both the
+//!   zero-allocation workspace path (`greedy/*`) and the allocating
+//!   reference path (`greedy/*-alloc`) so the speedup of the flat/scratch
+//!   engine is measurable from a single run,
 //! * one full min-norm major iteration (greedy + corral update),
 //! * PAV refinement,
 //! * screening-rule evaluation: rust backend vs the AOT XLA kernel
 //!   (quantifies the PJRT call-overhead crossover discussed in
 //!   EXPERIMENTS.md §Perf).
+//!
+//! Besides the terminal table and `micro.csv`, this bench writes the
+//! machine-readable `BENCH_micro.json` trajectory at the repo root
+//! (override the directory with `SFM_BENCH_JSON_DIR`) — the regression
+//! baseline for subsequent PRs. See BENCHMARKS.md for the schema.
 
 mod common;
 
-use sfm_screen::coordinator::metrics::{bench, fmt_duration, Summary};
+use sfm_screen::coordinator::metrics::{
+    bench, fmt_duration, write_bench_json, BenchRecord, Summary,
+};
 use sfm_screen::coordinator::report::Table;
-use sfm_screen::lovasz::{greedy_base_vertex, GreedyWorkspace};
+use sfm_screen::lovasz::{greedy_base_vertex, greedy_base_vertex_ref, GreedyWorkspace};
 use sfm_screen::rng::Pcg64;
 use sfm_screen::screening::rules::RustScreener;
 use sfm_screen::screening::{RuleSet, ScreenInputs, Screener};
@@ -22,25 +32,46 @@ use sfm_screen::submodular::Submodular;
 use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
 use std::time::Duration;
 
-fn row(name: &str, p: usize, s: &Summary) -> Vec<String> {
-    vec![
-        name.into(),
-        p.to_string(),
-        fmt_duration(Duration::from_secs_f64(s.median)),
-        fmt_duration(Duration::from_secs_f64(s.min)),
-        format!("{:.1}", 1.0 / s.median),
-    ]
+struct Rows {
+    table: Table,
+    records: Vec<BenchRecord>,
+}
+
+impl Rows {
+    fn new() -> Self {
+        Rows {
+            table: Table::new(&["op", "p", "median", "min", "ops/s"]),
+            records: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, op: &str, p: usize, s: &Summary) {
+        self.table.push_row(vec![
+            op.into(),
+            p.to_string(),
+            fmt_duration(Duration::from_secs_f64(s.median)),
+            fmt_duration(Duration::from_secs_f64(s.min)),
+            format!("{:.1}", 1.0 / s.median),
+        ]);
+        self.records.push(BenchRecord::new(op, p, s));
+    }
 }
 
 fn main() -> anyhow::Result<()> {
     let cfg = common::config_from_env();
-    let mut table = Table::new(&["op", "p", "median", "min", "ops/s"]);
+    let mut rows = Rows::new();
     let mut rng = Pcg64::seeded(77);
 
-    for &p in &[256usize, 1024, 4096] {
+    // Default sizes pin the regression-tracked rows (p = 4096 rows are the
+    // PR-1 acceptance baseline); SFM_BENCH_SIZES/SFM_BENCH_FULL override
+    // for smoke or paper-scale runs (resolved centrally in `common`).
+    let sizes = common::micro_sizes(&cfg);
+    for &p in &sizes {
         let tm = TwoMoons::generate(TwoMoonsParams { p, ..Default::default() });
 
-        // Greedy pass: dense kernel cut (O(p²)) and sparse kNN cut (O(pk)).
+        // Greedy pass: dense kernel cut (O(p²)) and sparse kNN cut (O(pk)),
+        // each as the workspace-reusing fast path and the allocating
+        // reference (fresh buffers + full sort every call).
         let dense = tm.kernel_cut();
         let sparse = tm.knn_cut(10, 1.0);
         let w = rng.normal_vec(p);
@@ -50,17 +81,27 @@ fn main() -> anyhow::Result<()> {
             greedy_base_vertex(&dense, &w, &mut ws, &mut s_out);
             s_out[0]
         });
-        table.push_row(row("greedy dense-cut", p, &sum));
+        rows.push("greedy/kernel-cut", p, &sum);
+        let (sum, _) = bench(3, 10, || {
+            greedy_base_vertex_ref(&dense, &w, &mut s_out);
+            s_out[0]
+        });
+        rows.push("greedy/kernel-cut-alloc", p, &sum);
         let (sum, _) = bench(3, 20, || {
             greedy_base_vertex(&sparse, &w, &mut ws, &mut s_out);
             s_out[0]
         });
-        table.push_row(row("greedy knn-cut", p, &sum));
+        rows.push("greedy/cut", p, &sum);
+        let (sum, _) = bench(3, 20, || {
+            greedy_base_vertex_ref(&sparse, &w, &mut s_out);
+            s_out[0]
+        });
+        rows.push("greedy/cut-alloc", p, &sum);
 
         // One min-norm major iteration on the sparse objective.
         let mut solver = MinNormPoint::new(&sparse, MinNormOptions::default(), None);
         let (sum, _) = bench(3, 20, || solver.step(&sparse).gap);
-        table.push_row(row("minnorm step", p, &sum));
+        rows.push("minnorm-iter", p, &sum);
 
         // PAV refinement.
         let t = rng.normal_vec(p);
@@ -69,7 +110,7 @@ fn main() -> anyhow::Result<()> {
             pav_nonincreasing_into(&t, &mut out);
             out[0]
         });
-        table.push_row(row("pav", p, &sum));
+        rows.push("pav", p, &sum);
 
         // Screening rules: rust vs xla.
         let wv = rng.normal_vec(p);
@@ -78,12 +119,12 @@ fn main() -> anyhow::Result<()> {
         let inputs = ScreenInputs { w: &wv, gap, f_v, f_c: -0.4 };
         let rust = RustScreener::default();
         let (sum, _) = bench(3, 50, || rust.screen(&inputs, RuleSet::all()).identified());
-        table.push_row(row("screen rust", p, &sum));
+        rows.push("screen/rust", p, &sum);
         if let Ok(xla) = sfm_screen::runtime::XlaScreener::at_default() {
             let _ = xla.screen(&inputs, RuleSet::all()); // compile warmup
             let (sum, _) =
                 bench(3, 30, || xla.screen(&inputs, RuleSet::all()).identified());
-            table.push_row(row("screen xla", p, &sum));
+            rows.push("screen/xla", p, &sum);
         }
     }
 
@@ -96,7 +137,7 @@ fn main() -> anyhow::Result<()> {
         let (sum, _) = bench(1, 3, || {
             sfm_screen::solvers::queyranne::queyranne(&f).minimum
         });
-        table.push_row(row("queyranne sym-cut", p, &sum));
+        rows.push("queyranne/sym-cut", p, &sum);
     }
 
     // Gaussian-MI oracle (the paper-exact objective) at small p.
@@ -110,13 +151,15 @@ fn main() -> anyhow::Result<()> {
             greedy_base_vertex(&mi, &w, &mut ws, &mut s_out);
             s_out[0]
         });
-        table.push_row(row("greedy gp-mi", p, &sum));
+        rows.push("greedy/gp-mi", p, &sum);
         let _ = mi.ground_size();
     }
 
     println!("\nMicro-benchmarks (hot paths)");
-    println!("{}", table.render());
-    table.write_csv(cfg.out_dir.join("micro.csv"))?;
+    println!("{}", rows.table.render());
+    rows.table.write_csv(cfg.out_dir.join("micro.csv"))?;
     println!("CSV: {}", cfg.out_dir.join("micro.csv").display());
+    let json_path = write_bench_json("micro", &rows.records)?;
+    println!("JSON trajectory: {}", json_path.display());
     Ok(())
 }

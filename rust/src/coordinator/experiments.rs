@@ -528,6 +528,7 @@ pub fn verify_lossless(f: &dyn Submodular, cfg: &BenchConfig) -> Result<(f64, f6
 mod tests {
     use super::*;
 
+    #[allow(clippy::field_reassign_with_default)]
     fn tiny_cfg(dir: &str) -> BenchConfig {
         let mut c = BenchConfig::default();
         c.sizes = vec![30, 40];

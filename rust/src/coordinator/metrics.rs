@@ -1,8 +1,12 @@
 //! Wall-clock measurement utilities shared by the coordinator and the
 //! bench harness (criterion is unavailable offline — see DESIGN.md
 //! §Substitutions — so the harness carries its own warmup + robust-summary
-//! machinery).
+//! machinery), plus the machine-readable `BENCH_*.json` trajectory writer
+//! that lets successive PRs track perf regressions (see BENCHMARKS.md).
 
+use crate::coordinator::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// A simple resumable stopwatch.
@@ -101,6 +105,93 @@ pub fn bench<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> (Summar
     (Summary::of(&samples), last.unwrap())
 }
 
+/// One machine-readable bench row (schema documented in BENCHMARKS.md).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Operation id, stable across PRs (e.g. `greedy/cut`, `minnorm-iter`).
+    pub op: String,
+    /// Problem size.
+    pub p: usize,
+    /// Median seconds per operation.
+    pub median_s: f64,
+    /// Minimum seconds per operation.
+    pub min_s: f64,
+    /// Throughput `1 / median_s`.
+    pub ops_per_s: f64,
+}
+
+impl BenchRecord {
+    /// Build from a measurement summary.
+    pub fn new(op: &str, p: usize, s: &Summary) -> Self {
+        BenchRecord {
+            op: op.to_string(),
+            p,
+            median_s: s.median,
+            min_s: s.min,
+            ops_per_s: 1.0 / s.median,
+        }
+    }
+}
+
+/// Default location of `BENCH_<name>.json`: `$SFM_BENCH_JSON_DIR` if set,
+/// else the repository root (one directory above the cargo manifest).
+pub fn bench_json_path(name: &str) -> PathBuf {
+    let dir = std::env::var("SFM_BENCH_JSON_DIR").ok();
+    bench_json_path_in(dir.as_deref(), name)
+}
+
+/// Environment-independent core of [`bench_json_path`] (unit-testable
+/// without mutating process-global state).
+fn bench_json_path_in(dir: Option<&str>, name: &str) -> PathBuf {
+    let file = format!("BENCH_{name}.json");
+    if let Some(dir) = dir {
+        return PathBuf::from(dir).join(file);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    match manifest.parent() {
+        Some(root) => root.join(file),
+        None => manifest.join(file),
+    }
+}
+
+/// Serialize bench records to the `BENCH_<name>.json` trajectory format.
+pub fn bench_records_to_json(name: &str, records: &[BenchRecord]) -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::Num(1.0)),
+        ("bench", Json::Str(name.to_string())),
+        (
+            "records",
+            Json::Arr(
+                records
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("op", Json::Str(r.op.clone())),
+                            ("p", Json::Num(r.p as f64)),
+                            ("median_s", Json::Num(r.median_s)),
+                            ("min_s", Json::Num(r.min_s)),
+                            ("ops_per_s", Json::Num(r.ops_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write `BENCH_<name>.json` (returns the path written).
+pub fn write_bench_json(name: &str, records: &[BenchRecord]) -> Result<PathBuf> {
+    let path = bench_json_path(name);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("creating {}", parent.display()))?;
+    }
+    let body = bench_records_to_json(name, records).to_string();
+    std::fs::write(&path, body + "\n")
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
 /// Human-readable duration (adaptive unit).
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -152,6 +243,34 @@ mod tests {
         });
         assert_eq!(summary.n, 5);
         assert_eq!(out, 7); // 2 warmup + 5 measured
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let samples: Vec<Duration> =
+            [2, 4, 8].iter().map(|&ms| Duration::from_millis(ms)).collect();
+        let s = Summary::of(&samples);
+        let rec = BenchRecord::new("greedy/cut", 4096, &s);
+        assert_eq!(rec.op, "greedy/cut");
+        assert!((rec.median_s - 0.004).abs() < 1e-12);
+        assert!((rec.ops_per_s - 250.0).abs() < 1e-6);
+        let j = bench_records_to_json("micro", &[rec]).to_string();
+        assert!(j.contains("\"bench\":\"micro\""), "{j}");
+        assert!(j.contains("\"op\":\"greedy/cut\""), "{j}");
+        assert!(j.contains("\"p\":4096"), "{j}");
+        assert!(j.contains("\"schema_version\":1"), "{j}");
+    }
+
+    #[test]
+    fn bench_json_path_resolution() {
+        let p = bench_json_path_in(Some("/tmp/bench-dir"), "unit");
+        assert_eq!(p, PathBuf::from("/tmp/bench-dir").join("BENCH_unit.json"));
+        let p = bench_json_path_in(None, "micro");
+        assert!(p.ends_with("BENCH_micro.json"), "{}", p.display());
+        // Default lands at the repo root, one above the cargo manifest.
+        assert!(!p.starts_with(env!("CARGO_MANIFEST_DIR")) || {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().is_none()
+        });
     }
 
     #[test]

@@ -6,16 +6,54 @@
 //! order. Timing-sensitive benchmarks use `threads = 1` for fairness.
 
 use super::jobs::{JobResult, JobSpec};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Render a `catch_unwind` payload (panics carry `&str` or `String`
+/// messages in practice; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one job, converting a panic into an error naming the job.
+fn run_caught(i: usize, job: &JobSpec) -> Result<JobResult> {
+    run_caught_with(i, job, || job.run())
+}
+
+/// Panic-catching wrapper around a job execution closure (split from
+/// [`run_caught`] so the unwind path is unit-testable).
+fn run_caught_with(
+    i: usize,
+    job: &JobSpec,
+    run: impl FnOnce() -> Result<JobResult>,
+) -> Result<JobResult> {
+    match catch_unwind(AssertUnwindSafe(run)) {
+        Ok(res) => res,
+        Err(payload) => Err(anyhow!(
+            "job {i} (`{}`, {}) panicked: {}",
+            job.name,
+            job.workload.label(),
+            panic_message(payload.as_ref())
+        )),
+    }
+}
+
 /// Run all jobs with up to `threads` workers; results in input order.
-/// The first job error aborts the batch.
+/// The first job error aborts the batch. A job that panics is caught and
+/// surfaced as an error naming the failing job index and spec — it never
+/// takes down the worker (or the collector) with an opaque unwind.
 pub fn run_parallel(jobs: &[JobSpec], threads: usize) -> Result<Vec<JobResult>> {
     let threads = threads.max(1).min(jobs.len().max(1));
     if threads == 1 {
-        return jobs.iter().map(|j| j.run()).collect();
+        return jobs.iter().enumerate().map(|(i, j)| run_caught(i, j)).collect();
     }
     let next = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<Result<JobResult>>>> =
@@ -28,7 +66,7 @@ pub fn run_parallel(jobs: &[JobSpec], threads: usize) -> Result<Vec<JobResult>> 
                 if i >= jobs.len() {
                     break;
                 }
-                let out = jobs[i].run();
+                let out = run_caught(i, &jobs[i]);
                 *results[i].lock().expect("runner poisoned") = Some(out);
             });
         }
@@ -36,7 +74,18 @@ pub fn run_parallel(jobs: &[JobSpec], threads: usize) -> Result<Vec<JobResult>> 
 
     results
         .into_iter()
-        .map(|slot| slot.into_inner().expect("runner poisoned").expect("job not run"))
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner()
+                .expect("runner poisoned")
+                .unwrap_or_else(|| {
+                    Err(anyhow!(
+                        "job {i} (`{}`, {}) was never executed (worker lost)",
+                        jobs[i].name,
+                        jobs[i].workload.label()
+                    ))
+                })
+        })
         .collect()
 }
 
@@ -95,5 +144,35 @@ mod tests {
     #[test]
     fn empty_job_list() {
         assert!(run_parallel(&[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn panic_payloads_render_with_message() {
+        let p = catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "boom 7");
+        let p = catch_unwind(|| panic!("static message")).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "static message");
+        let p = catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn panicking_job_surfaces_named_error() {
+        // A panicking job must come back as an error naming the job
+        // index and spec instead of poisoning the collector.
+        let job = JobSpec {
+            name: "exploder".into(),
+            workload: WorkloadSpec::Iwata { p: 12 },
+            opts: IaesOptions::default(),
+        };
+        let err = run_caught_with(3, &job, || panic!("oracle blew up")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("job 3"), "{msg}");
+        assert!(msg.contains("exploder"), "{msg}");
+        assert!(msg.contains("iwata(p=12)"), "{msg}");
+        assert!(msg.contains("oracle blew up"), "{msg}");
+        // Non-panicking path is unchanged.
+        let ok = run_caught(0, &job).unwrap();
+        assert_eq!(ok.name, "exploder");
     }
 }

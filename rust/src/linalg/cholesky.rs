@@ -84,145 +84,195 @@ impl Cholesky {
 }
 
 /// Incrementally maintained Cholesky factor of a growing/shrinking SPD
-/// matrix. Rows are stored as ragged vectors (`row[i].len() == i + 1`).
+/// matrix, stored as **packed lower-triangular rows in one contiguous
+/// `Vec<f64>`** (row `i` at offset `i(i+1)/2`, length `i+1`).
+///
+/// The flat layout is what makes the solver hot loop allocation-free:
+/// `push` appends to the packed vector (amortized zero-alloc once the
+/// high-water capacity is reached), `remove` compacts in place, and
+/// [`reset`](Self::reset) empties the factor while keeping the capacity —
+/// the per-pass factors of the GP mutual-information oracle and the
+/// min-norm corral Gram factor both reuse one buffer for their entire
+/// lifetime. All operations perform the same floating-point arithmetic in
+/// the same order as the classic ragged-row implementation they replace.
 #[derive(Clone, Debug, Default)]
 pub struct IncrementalCholesky {
-    rows: Vec<Vec<f64>>,
+    /// Packed rows: `data[off(i) + j] = L[i][j]` for `j <= i`.
+    data: Vec<f64>,
+    /// Current dimension.
+    n: usize,
+}
+
+/// Offset of packed row `i`.
+#[inline]
+fn off(i: usize) -> usize {
+    i * (i + 1) / 2
 }
 
 impl IncrementalCholesky {
     /// Empty factor (0×0 matrix).
     pub fn new() -> Self {
-        Self { rows: Vec::new() }
+        Self::default()
+    }
+
+    /// Empty factor with room for dimension `dim` without reallocating.
+    pub fn with_capacity(dim: usize) -> Self {
+        IncrementalCholesky { data: Vec::with_capacity(off(dim + 1)), n: 0 }
     }
 
     /// Current dimension.
     #[inline]
     pub fn dim(&self) -> usize {
-        self.rows.len()
+        self.n
+    }
+
+    /// Empty the factor, retaining the allocated capacity.
+    pub fn reset(&mut self) {
+        self.data.clear();
+        self.n = 0;
     }
 
     /// `L[i][j]` for `j <= i`.
     #[inline]
     pub fn l(&self, i: usize, j: usize) -> f64 {
-        self.rows[i][j]
+        debug_assert!(j <= i && i < self.n);
+        self.data[off(i) + j]
     }
 
     /// Append one row/column of the underlying matrix: `cross[j] = A[n, j]`
     /// for existing indices `j`, `diag = A[n, n]`. Returns the new diagonal
     /// entry of `L` (useful for log-det accumulation), or `None` if the
-    /// extended matrix is not positive definite even after `jitter`.
+    /// extended matrix is not positive definite even after `jitter` (the
+    /// factor is left unchanged in that case).
     pub fn push(&mut self, cross: &[f64], diag: f64, jitter: f64) -> Option<f64> {
-        let n = self.dim();
+        let n = self.n;
         assert_eq!(cross.len(), n);
-        let mut new_row = Vec::with_capacity(n + 1);
+        let start = self.data.len();
+        debug_assert_eq!(start, off(n));
         for j in 0..n {
+            let rj = off(j);
             let mut s = cross[j];
-            let rj = &self.rows[j];
-            // dot of new_row[..j] with rows[j][..j]
+            // dot of the new row's prefix (already appended) with row j
             for k in 0..j {
-                s -= new_row[k] * rj[k];
+                s -= self.data[start + k] * self.data[rj + k];
             }
-            new_row.push(s / rj[j]);
+            let v = s / self.data[rj + j];
+            self.data.push(v);
         }
-        let mut d = diag - new_row.iter().map(|v| v * v).sum::<f64>();
+        let mut d =
+            diag - self.data[start..start + n].iter().map(|v| v * v).sum::<f64>();
         if d <= 0.0 {
             d += jitter;
         }
         if d <= 0.0 {
+            self.data.truncate(start); // roll back the partial row
             return None;
         }
         let ld = d.sqrt();
-        new_row.push(ld);
-        self.rows.push(new_row);
+        self.data.push(ld);
+        self.n += 1;
         Some(ld)
     }
 
     /// Remove row/column `k`, restoring lower-triangular form with Givens
-    /// rotations (the classic `choldelete`). O((n−k)²).
+    /// rotations (the classic `choldelete`). O((n−k)²), fully in place.
     pub fn remove(&mut self, k: usize) {
-        let n = self.dim();
+        let n = self.n;
         assert!(k < n);
-        self.rows.remove(k);
-        // Rows that were below k now each carry one extra entry (their old
-        // length). Apply Givens rotations on column pairs (j, j+1) to zero
-        // the out-of-triangle element on row j (new indexing).
-        for j in k..self.rows.len() {
-            // Row j currently has length j + 2 (old row j+1 had j+2 entries).
-            let (c, s);
-            {
-                let row = &self.rows[j];
-                let a = row[j];
-                let b = row[j + 1];
-                let r = (a * a + b * b).sqrt();
-                if r == 0.0 {
-                    c = 1.0;
-                    s = 0.0;
-                } else {
-                    c = a / r;
-                    s = b / r;
-                }
-            }
+        // Drop row k's storage; rows below shift down one index but keep
+        // their old (one-too-long) lengths until the final compaction.
+        self.data.drain(off(k)..off(k + 1));
+        // Working offset of new row j (old row j+1, which has j+2 entries):
+        // off(k) + Σ_{i=k..j-1} (i+2) = off(j) + j − k.
+        let woff = |j: usize| off(j) + j - k;
+        let m = n - 1; // new dimension
+        for j in k..m {
+            // Givens rotation zeroing the out-of-triangle entry of row j.
+            let a = self.data[woff(j) + j];
+            let b = self.data[woff(j) + j + 1];
+            let r = (a * a + b * b).sqrt();
+            let (c, s) = if r == 0.0 { (1.0, 0.0) } else { (a / r, b / r) };
             // Apply rotation to rows j.. on columns (j, j+1).
-            for i in j..self.rows.len() {
-                let row = &mut self.rows[i];
-                let a = row[j];
-                let b = row[j + 1];
-                row[j] = c * a + s * b;
-                row[j + 1] = -s * a + c * b;
+            for i in j..m {
+                let o = woff(i);
+                let a = self.data[o + j];
+                let b = self.data[o + j + 1];
+                self.data[o + j] = c * a + s * b;
+                self.data[o + j + 1] = -s * a + c * b;
             }
-            // Row j's (j+1)-th entry is now ~0; truncate it.
-            let rj = &mut self.rows[j];
-            debug_assert!(rj[j + 1].abs() < 1e-8 * (1.0 + rj[j].abs()));
-            rj.truncate(j + 1);
+            // Row j's (j+1)-th entry is now ~0; it is dropped by the
+            // compaction below.
+            debug_assert!(
+                self.data[woff(j) + j + 1].abs()
+                    < 1e-8 * (1.0 + self.data[woff(j) + j].abs())
+            );
             // Keep the diagonal positive (Givens may flip sign).
-            if self.rows[j][j] < 0.0 {
-                for i in j..self.rows.len() {
-                    self.rows[i][j] = -self.rows[i][j];
+            if self.data[woff(j) + j] < 0.0 {
+                for i in j..m {
+                    let o = woff(i);
+                    self.data[o + j] = -self.data[o + j];
                 }
             }
         }
+        // Compact: final row j keeps entries 0..=j of working row j.
+        let mut write = off(k);
+        for j in k..m {
+            let src = woff(j);
+            debug_assert!(write <= src);
+            self.data.copy_within(src..src + j + 1, write);
+            write += j + 1;
+        }
+        self.data.truncate(write);
+        self.n = m;
     }
 
-    /// Solve `A x = b` with the current factor.
+    /// Solve `A x = b` with the current factor (allocating convenience).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
-        let n = self.dim();
+        let mut x = Vec::new();
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    /// Solve `A x = b` into a caller-owned buffer — no allocation once the
+    /// buffer capacity suffices (the min-norm minor cycles call this every
+    /// iteration).
+    pub fn solve_into(&self, b: &[f64], x: &mut Vec<f64>) {
+        let n = self.n;
         assert_eq!(b.len(), n);
-        let mut y = b.to_vec();
+        x.clear();
+        x.extend_from_slice(b);
         for i in 0..n {
-            let row = &self.rows[i];
-            let mut s = y[i];
+            let row = off(i);
+            let mut s = x[i];
             for k in 0..i {
-                s -= row[k] * y[k];
+                s -= self.data[row + k] * x[k];
             }
-            y[i] = s / row[i];
+            x[i] = s / self.data[row + i];
         }
         for i in (0..n).rev() {
-            let mut s = y[i];
+            let mut s = x[i];
             for k in (i + 1)..n {
-                s -= self.rows[k][i] * y[k];
+                s -= self.data[off(k) + i] * x[k];
             }
-            y[i] = s / self.rows[i][i];
+            x[i] = s / self.data[off(i) + i];
         }
-        y
     }
 
     /// `log det` of the current matrix.
     pub fn logdet(&self) -> f64 {
-        self.rows.iter().enumerate().map(|(i, r)| r[i].ln()).sum::<f64>() * 2.0
+        (0..self.n).map(|i| self.data[off(i) + i].ln()).sum::<f64>() * 2.0
     }
 
     /// Reconstruct the dense matrix `L Lᵀ` (tests / debugging).
     pub fn reconstruct(&self) -> Mat {
-        let n = self.dim();
+        let n = self.n;
         let mut a = Mat::zeros(n, n);
         for i in 0..n {
             for j in 0..n {
                 let m = i.min(j) + 1;
                 let mut s = 0.0;
                 for k in 0..m {
-                    s += self.rows[i].get(k).copied().unwrap_or(0.0)
-                        * self.rows[j].get(k).copied().unwrap_or(0.0);
+                    s += self.data[off(i) + k] * self.data[off(j) + k];
                 }
                 a[(i, j)] = s;
             }
@@ -340,6 +390,64 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_matches_fresh_factor() {
+        let n = 9;
+        let a = random_spd(n, 11);
+        let batch = Cholesky::factor(&a, 0.0).unwrap();
+        let mut inc = IncrementalCholesky::with_capacity(n);
+        for _round in 0..3 {
+            inc.reset();
+            assert_eq!(inc.dim(), 0);
+            for i in 0..n {
+                let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+                inc.push(&cross, a[(i, i)], 0.0).unwrap();
+            }
+            for i in 0..n {
+                for j in 0..=i {
+                    assert!((inc.l(i, j) - batch.l[(i, j)]).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        let n = 6;
+        let a = random_spd(n, 12);
+        let mut inc = IncrementalCholesky::new();
+        for i in 0..n {
+            let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            inc.push(&cross, a[(i, i)], 0.0).unwrap();
+        }
+        let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let x1 = inc.solve(&b);
+        let mut x2 = vec![9.0; 2]; // wrong size + garbage: must be reset
+        inc.solve_into(&b, &mut x2);
+        assert_eq!(x1, x2);
+    }
+
+    #[test]
+    fn failed_push_leaves_factor_unchanged() {
+        // Exact-arithmetic rank deficiency: the third variable is 2× the
+        // first, so its Schur complement is exactly 0 and the push must
+        // fail and roll back (small integers → no rounding anywhere).
+        let mut inc = IncrementalCholesky::new();
+        inc.push(&[], 4.0, 0.0).unwrap(); // L = [2]
+        inc.push(&[2.0], 9.0, 0.0).unwrap();
+        let before = inc.clone();
+        assert!(inc.push(&[8.0, 4.0], 16.0, 0.0).is_none());
+        assert_eq!(inc.dim(), 2);
+        for i in 0..2 {
+            for j in 0..=i {
+                assert_eq!(inc.l(i, j), before.l(i, j));
+            }
+        }
+        // The factor still works after the rolled-back push.
+        inc.push(&[1.0, 1.0], 7.0, 0.0).unwrap();
+        assert_eq!(inc.dim(), 3);
     }
 
     #[test]

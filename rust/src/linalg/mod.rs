@@ -96,6 +96,100 @@ impl Mat {
     }
 }
 
+/// Flat row-major storage for a dynamically sized set of fixed-length
+/// rows — the min-norm corral and the Frank–Wolfe atom set.
+///
+/// Replaces `Vec<Vec<f64>>`: rows live contiguously (`Vec<f64>` + stride),
+/// so iterating vertices streams memory instead of chasing pointers, and
+/// `push`/`remove` reuse the high-water capacity — steady-state solver
+/// iterations perform zero heap allocations. Removal is order-preserving
+/// (a contiguous `memmove`), matching the index bookkeeping of
+/// [`IncrementalCholesky::remove`].
+#[derive(Clone, Debug, Default)]
+pub struct CorralMat {
+    data: Vec<f64>,
+    stride: usize,
+    rows: usize,
+}
+
+impl CorralMat {
+    /// Empty matrix with rows of length `stride`.
+    pub fn new(stride: usize) -> Self {
+        CorralMat { data: Vec::new(), stride, rows: 0 }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// True when there are no rows.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row length.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// Append a row (copied into the flat storage; amortized
+    /// allocation-free once the high-water capacity is reached).
+    pub fn push(&mut self, v: &[f64]) {
+        assert_eq!(v.len(), self.stride, "row length mismatch");
+        self.data.extend_from_slice(v);
+        self.rows += 1;
+    }
+
+    /// Remove row `i`, preserving the order of the remaining rows
+    /// (contiguous in-place `memmove`; capacity retained).
+    pub fn remove(&mut self, i: usize) {
+        assert!(i < self.rows);
+        let s = self.stride;
+        self.data.copy_within((i + 1) * s.., i * s);
+        self.rows -= 1;
+        self.data.truncate(self.rows * s);
+    }
+
+    /// Keep only the rows at the (ascending, unique) indices in `keep`.
+    pub fn compact(&mut self, keep: &[usize]) {
+        let s = self.stride;
+        for (w, &r) in keep.iter().enumerate() {
+            debug_assert!(w <= r && r < self.rows);
+            if w != r {
+                self.data.copy_within(r * s..(r + 1) * s, w * s);
+            }
+        }
+        self.rows = keep.len();
+        self.data.truncate(self.rows * s);
+    }
+
+    /// Drop all rows and (if needed) change the row length; capacity is
+    /// retained for reuse across solver warm-restarts.
+    pub fn reset(&mut self, stride: usize) {
+        self.data.clear();
+        self.stride = stride;
+        self.rows = 0;
+    }
+
+    /// Iterate rows as slices.
+    pub fn iter(&self) -> impl Iterator<Item = &[f64]> {
+        // `max(1)`: chunks_exact panics on 0; a default-constructed
+        // (stride 0) matrix has no data and yields nothing either way.
+        self.data.chunks_exact(self.stride.max(1))
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -130,6 +224,33 @@ mod tests {
         let m = Mat::eye(4);
         let x = [1.0, -2.0, 3.0, 0.5];
         assert_eq!(m.matvec(&x), x.to_vec());
+    }
+
+    #[test]
+    fn corral_mat_push_remove_compact() {
+        let mut m = CorralMat::new(3);
+        assert!(m.is_empty());
+        m.push(&[1.0, 2.0, 3.0]);
+        m.push(&[4.0, 5.0, 6.0]);
+        m.push(&[7.0, 8.0, 9.0]);
+        m.push(&[10.0, 11.0, 12.0]);
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.row(2), &[7.0, 8.0, 9.0]);
+        m.remove(1); // order-preserving
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[7.0, 8.0, 9.0]);
+        assert_eq!(m.row(2), &[10.0, 11.0, 12.0]);
+        let rows: Vec<&[f64]> = m.iter().collect();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1], m.row(1));
+        m.compact(&[0, 2]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+        m.reset(2);
+        assert_eq!(m.len(), 0);
+        m.push(&[1.0, 2.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
     }
 
     #[test]

@@ -97,37 +97,90 @@ pub fn sum_neg(a: &[f64]) -> f64 {
 }
 
 /// Indices sorted by value, descending; ties broken by index (ascending)
-/// so the greedy ordering is deterministic.
+/// so the greedy ordering is deterministic. Delegates to
+/// [`argsort_desc_into`] so every argsort in the crate uses the *same*
+/// total order (bit-level: `-0.0` sorts before `+0.0`) and the adaptive
+/// fast path stays bit-identical to this reference.
 pub fn argsort_desc(w: &[f64]) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..w.len()).collect();
-    idx.sort_by(|&a, &b| {
-        w[b].partial_cmp(&w[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
-    });
+    let mut idx = Vec::new();
+    argsort_desc_into(w, &mut idx);
     idx
 }
 
-/// Fill an existing index buffer with the descending argsort of `w`.
-/// Avoids allocation on the solver hot path.
-///
-/// Sorting uses the total-order bit trick (IEEE-754 doubles map to
-/// monotone u64 keys), which is ~2× faster than a `partial_cmp`
-/// comparator — the argsort is on the per-iteration greedy path.
-pub fn argsort_desc_into(w: &[f64], idx: &mut Vec<usize>) {
-    #[inline]
-    fn key(x: f64) -> u64 {
-        let bits = x.to_bits();
-        // Flip: negatives reverse, positives offset — total order.
-        if bits >> 63 == 1 {
-            !bits
-        } else {
-            bits | (1 << 63)
-        }
+/// IEEE-754 total-order key: doubles map to monotone u64 keys, so the
+/// sort comparators below are branch-light integer compares (~2× faster
+/// than `partial_cmp` — the argsort is on the per-iteration greedy path).
+#[inline]
+fn total_order_key(x: f64) -> u64 {
+    let bits = x.to_bits();
+    // Flip: negatives reverse, positives offset — total order.
+    if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits | (1 << 63)
     }
+}
+
+/// The (descending value, ascending index) sort rank of element `i`:
+/// ascending on this tuple is exactly the deterministic greedy order.
+#[inline]
+fn desc_rank(w: &[f64], i: usize) -> (u64, usize) {
+    (!total_order_key(w[i]), i)
+}
+
+/// Fill an existing index buffer with the descending argsort of `w`.
+/// Avoids allocation on the solver hot path (the cold full-sort path of
+/// [`argsort_desc_adaptive`]).
+pub fn argsort_desc_into(w: &[f64], idx: &mut Vec<usize>) {
     idx.clear();
     idx.extend(0..w.len());
     // Descending by value, ties ascending by index: sort ascending on
     // (!key, index).
-    idx.sort_unstable_by_key(|&i| (!key(w[i]), i));
+    idx.sort_unstable_by_key(|&i| desc_rank(w, i));
+}
+
+/// Descending argsort that *reuses* the previous permutation in `idx`.
+///
+/// Between consecutive solver major iterations the direction vector moves
+/// by one convex-combination step, so the previous greedy order is almost
+/// sorted for the new vector. This fast path repairs it with a
+/// budget-bounded insertion sort — O(p + inversions) — and falls back to
+/// the full [`argsort_desc_into`] sort when `idx` has the wrong length
+/// (fresh/resized workspace) or the repair budget is exhausted (the order
+/// genuinely changed). The result is **always** the unique deterministic
+/// greedy order (descending by value, ties ascending by index): both
+/// paths sort by the same total order, so which path ran is unobservable.
+///
+/// `idx` must be a permutation of `0..w.len()` whenever its length
+/// matches (it always is when the buffer is only written by this function
+/// or [`argsort_desc_into`]).
+pub fn argsort_desc_adaptive(w: &[f64], idx: &mut Vec<usize>) {
+    let n = w.len();
+    if idx.len() != n {
+        argsort_desc_into(w, idx);
+        return;
+    }
+    // Insertion repair: cheap when nearly sorted; bail to the full sort
+    // once the shift work exceeds ~4 sweeps (a disordered input would
+    // otherwise degrade to O(n²)).
+    let budget = 4 * n + 16;
+    let mut work = 0usize;
+    for t in 1..n {
+        let cur = idx[t];
+        let rank_cur = desc_rank(w, cur);
+        let mut s = t;
+        while s > 0 && desc_rank(w, idx[s - 1]) > rank_cur {
+            idx[s] = idx[s - 1];
+            s -= 1;
+            work += 1;
+            if work > budget {
+                idx[s] = cur; // restore the permutation, then full sort
+                argsort_desc_into(w, idx);
+                return;
+            }
+        }
+        idx[s] = cur;
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +231,56 @@ mod tests {
     #[test]
     fn sum_neg_works() {
         assert_eq!(sum_neg(&[1.0, -2.0, 3.0, -0.5]), -2.5);
+    }
+
+    #[test]
+    fn adaptive_argsort_matches_full_sort() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(314);
+        let mut idx = Vec::new();
+        for case in 0..200 {
+            let n = 1 + rng.below(80);
+            let mut w = rng.normal_vec(n);
+            // Inject ties so the index tiebreak is exercised.
+            if n > 4 {
+                w[1] = w[0];
+                w[n - 1] = w[n / 2];
+            }
+            // Warm path: perturb a previously sorted order slightly…
+            argsort_desc_adaptive(&w, &mut idx);
+            for (a, b) in argsort_desc(&w).iter().zip(&idx) {
+                assert_eq!(a, b, "case {case} (cold/resized path)");
+            }
+            for round in 0..3 {
+                // small drift: nearly sorted input for the repair path
+                for x in w.iter_mut() {
+                    *x += 0.05 * rng.normal();
+                }
+                argsort_desc_adaptive(&w, &mut idx);
+                assert_eq!(idx, argsort_desc(&w), "case {case} round {round}");
+            }
+            // …and a complete reshuffle for the budget-bail path.
+            for x in w.iter_mut() {
+                *x = rng.normal();
+            }
+            argsort_desc_adaptive(&w, &mut idx);
+            assert_eq!(idx, argsort_desc(&w), "case {case} (reshuffled)");
+            // Different length next case forces the length-mismatch path.
+            if rng.bernoulli(0.5) {
+                idx.clear();
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_argsort_handles_reversed_input() {
+        // Fully reversed previous order: budget must trip, result exact.
+        let n = 257;
+        let w: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut idx: Vec<usize> = (0..n).collect(); // ascending = worst case
+        argsort_desc_adaptive(&w, &mut idx);
+        let expect: Vec<usize> = (0..n).rev().collect();
+        assert_eq!(idx, expect);
     }
 
     #[test]

@@ -9,23 +9,37 @@
 //! gains) — which is exactly what Remark 1 of the paper exploits to obtain
 //! the set `C` used by the Ω estimate.
 
-use crate::linalg::vecops::{argsort_desc_into, dot};
-use crate::submodular::Submodular;
+use crate::linalg::vecops::{argsort_desc, argsort_desc_adaptive, dot};
+use crate::submodular::{OracleScratch, Submodular};
 
 /// Reusable buffers for greedy passes — the solver hot loop calls greedy
 /// every iteration and must not allocate.
+///
+/// The workspace also persists the *previous* greedy order in `order`,
+/// which [`greedy_base_vertex`] reuses as the warm start for the adaptive
+/// argsort (consecutive solver directions are nearly co-sorted), and owns
+/// the [`OracleScratch`] threaded into every oracle pass.
 #[derive(Clone, Debug, Default)]
 pub struct GreedyWorkspace {
     /// Descending argsort of the direction vector.
     pub order: Vec<usize>,
     /// Marginal gains along `order`.
     pub gains: Vec<f64>,
+    /// All-false membership vector (greedy passes start from ∅).
+    empty_base: Vec<bool>,
+    /// Reusable oracle pass state.
+    pub scratch: OracleScratch,
 }
 
 impl GreedyWorkspace {
     /// Workspace for ground-set size `p`.
     pub fn new(p: usize) -> Self {
-        GreedyWorkspace { order: Vec::with_capacity(p), gains: vec![0.0; p] }
+        GreedyWorkspace {
+            order: Vec::with_capacity(p),
+            gains: vec![0.0; p],
+            empty_base: vec![false; p],
+            scratch: OracleScratch::new(),
+        }
     }
 }
 
@@ -45,7 +59,13 @@ pub struct GreedyInfo {
 /// One greedy pass: writes the base-polytope vertex maximizing `⟨w, s⟩`
 /// into `s_out` and returns the pass summary.
 ///
-/// Ties in `w` are broken by index, so the result is deterministic.
+/// Ties in `w` are broken by index, so the result is deterministic — and
+/// independent of the workspace history: the adaptive argsort and the
+/// oracle scratch are exact (bit-identical) accelerations of the cold
+/// path, which [`greedy_base_vertex_ref`] preserves for the tests.
+///
+/// Steady state (workspace and scratch at working size) performs **zero
+/// heap allocations**.
 pub fn greedy_base_vertex<F: Submodular + ?Sized>(
     f: &F,
     w: &[f64],
@@ -56,14 +76,45 @@ pub fn greedy_base_vertex<F: Submodular + ?Sized>(
     assert_eq!(w.len(), p);
     assert_eq!(s_out.len(), p);
     ws.gains.resize(p, 0.0);
-    argsort_desc_into(w, &mut ws.order);
-    f.prefix_gains(&ws.order, &mut ws.gains);
+    ws.empty_base.clear();
+    ws.empty_base.resize(p, false);
+    argsort_desc_adaptive(w, &mut ws.order);
+    f.prefix_gains_scratch(&ws.empty_base, &ws.order, &mut ws.gains, &mut ws.scratch);
+    accumulate_pass(w, &ws.order, &ws.gains, s_out)
+}
 
+/// Allocating reference implementation of [`greedy_base_vertex`]: fresh
+/// buffers, full sort, allocating oracle path. Kept as the comparison
+/// baseline for the determinism tests and the `greedy/*-alloc` bench rows;
+/// bit-identical to the fast path by construction (same accumulation, same
+/// total sort order).
+pub fn greedy_base_vertex_ref<F: Submodular + ?Sized>(
+    f: &F,
+    w: &[f64],
+    s_out: &mut [f64],
+) -> GreedyInfo {
+    let p = f.ground_size();
+    assert_eq!(w.len(), p);
+    assert_eq!(s_out.len(), p);
+    let order = argsort_desc(w);
+    let mut gains = vec![0.0; p];
+    f.prefix_gains(&order, &mut gains);
+    accumulate_pass(w, &order, &gains, s_out)
+}
+
+/// Shared pass accumulation: scatter gains into the vertex, accumulate the
+/// Lovász value and the best prefix (super-level-set) value.
+fn accumulate_pass(
+    w: &[f64],
+    order: &[usize],
+    gains: &[f64],
+    s_out: &mut [f64],
+) -> GreedyInfo {
     let mut lovasz = 0.0;
     let mut prefix = 0.0;
     let mut best = 0.0; // k = 0 → F(∅) = 0
     let mut best_k = 0;
-    for (k, (&j, &g)) in ws.order.iter().zip(ws.gains.iter()).enumerate() {
+    for (k, (&j, &g)) in order.iter().zip(gains.iter()).enumerate() {
         s_out[j] = g;
         lovasz += w[j] * g;
         prefix += g;
@@ -213,6 +264,52 @@ mod tests {
                 best = best.min(v);
             }
             assert!((info.best_level_value - best).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn warm_workspace_is_bit_identical_to_reference() {
+        // Simulate the solver's direction evolution: a slowly drifting
+        // vector with occasional jumps, one *reused* workspace. Every pass
+        // must match the allocating/full-sort reference bit for bit —
+        // order, gains, vertex, and summary.
+        use crate::submodular::cut::CutFn;
+        let mut rng = Pcg64::seeded(421);
+        let p = 60;
+        let mut edges = Vec::new();
+        for i in 0..p {
+            for j in (i + 1)..p {
+                if rng.bernoulli(0.15) {
+                    edges.push((i, j, rng.uniform(0.0, 1.5)));
+                }
+            }
+        }
+        let f = CutFn::from_edges(p, &edges, rng.uniform_vec(p, -1.0, 1.0));
+        let mut ws = GreedyWorkspace::new(p);
+        let mut w = rng.normal_vec(p);
+        let mut s_fast = vec![0.0; p];
+        let mut s_ref = vec![0.0; p];
+        for step in 0..60 {
+            let fast = greedy_base_vertex(&f, &w, &mut ws, &mut s_fast);
+            let refr = greedy_base_vertex_ref(&f, &w, &mut s_ref);
+            assert_eq!(ws.order, crate::linalg::vecops::argsort_desc(&w));
+            for j in 0..p {
+                assert_eq!(
+                    s_fast[j].to_bits(),
+                    s_ref[j].to_bits(),
+                    "vertex differs at {j} step {step}"
+                );
+            }
+            assert_eq!(fast.lovasz.to_bits(), refr.lovasz.to_bits());
+            assert_eq!(fast.best_level_k, refr.best_level_k);
+            // Drift (typical between major iterations), jump every 13th.
+            if step % 13 == 12 {
+                w = rng.normal_vec(p);
+            } else {
+                for x in w.iter_mut() {
+                    *x += 0.02 * rng.normal();
+                }
+            }
         }
     }
 

@@ -229,14 +229,20 @@ impl<'a> IaesEngine<'a> {
         let mut pending_i_count = 0usize;
         let mut pending_total = 0usize;
 
+        // One ScaledFn and one solver for the whole run: every restart
+        // re-targets them in place (set_reduction + reset), so the
+        // translation buffers, corral/atom storage, Gram factor, and
+        // greedy/PAV/oracle scratch all persist across contractions
+        // instead of being rebuilt from scratch.
+        let mut scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
+        let mut solver = self.opts.solver.build(&scaled);
         'outer: while !self.kept.is_empty() {
-            let scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
-            let f_v = scaled.eval_full();
-            let mut solver = self.opts.solver.build(&scaled);
             if total_iters > 0 {
                 // Warm restart from the restricted primal (step 14).
+                scaled.set_reduction(&self.active, &self.kept);
                 solver.reset(&scaled, &w_restricted);
             }
+            let f_v = scaled.eval_full();
             let mut q_gate = solver.gap(); // gap at last trigger (q in Alg. 2)
             if !q_gate.is_finite() {
                 q_gate = f64::INFINITY;

@@ -16,6 +16,7 @@
 
 use super::{PrimalState, ProxSolver, SolverEvent};
 use crate::linalg::vecops::{axpy, dot, norm2_sq};
+use crate::linalg::CorralMat;
 use crate::submodular::Submodular;
 use std::collections::HashMap;
 
@@ -50,13 +51,28 @@ impl Default for FwOptions {
 type AtomKey = Vec<u32>;
 
 /// Conditional-gradient solver state.
+///
+/// Atoms live in parallel flat arrays — vertices in a [`CorralMat`], keys
+/// and weights in plain `Vec`s — so steady-state steps (no atom birth, no
+/// eviction) allocate nothing: the key of the current greedy order is
+/// materialized into a reused buffer and looked up by slice, and a
+/// repeat-atom step only bumps a weight.
 pub struct FrankWolfe {
     opts: FwOptions,
     /// Current dual iterate.
     x: Vec<f64>,
-    /// Active atoms (pairwise variant): key → (vertex, weight).
-    atoms: Vec<(AtomKey, Vec<f64>, f64)>,
+    /// Atom vertices (pairwise/away variants), flat row-major.
+    atoms: CorralMat,
+    /// Atom weights, parallel to `atoms`.
+    weights: Vec<f64>,
+    /// Atom keys, parallel to `atoms`.
+    keys: Vec<AtomKey>,
+    /// Key → atom index (owned keys duplicate `keys` only at atom birth).
     atom_index: HashMap<AtomKey, usize>,
+    /// Scratch: the current greedy order as a key, reused every step.
+    key_buf: AtomKey,
+    /// Scratch: surviving-atom indices during eviction compaction.
+    keep_buf: Vec<usize>,
     shared: PrimalState,
     q: Vec<f64>,
     dir: Vec<f64>,
@@ -69,8 +85,12 @@ impl FrankWolfe {
         let mut solver = FrankWolfe {
             opts,
             x: vec![0.0; p],
-            atoms: Vec::new(),
+            atoms: CorralMat::new(p),
+            weights: Vec::new(),
+            keys: Vec::new(),
             atom_index: HashMap::new(),
+            key_buf: Vec::new(),
+            keep_buf: Vec::new(),
             shared: PrimalState::new(p),
             q: vec![0.0; p],
             dir: vec![0.0; p],
@@ -85,32 +105,75 @@ impl FrankWolfe {
 
     /// Number of active atoms (pairwise variant; 0 for plain).
     pub fn num_atoms(&self) -> usize {
-        self.atoms.len()
+        self.weights.len()
     }
 
-    fn current_order_key(&self) -> AtomKey {
-        self.shared.greedy_ws.order.iter().map(|&i| i as u32).collect()
+    /// Materialize the current greedy order into the reused key buffer.
+    fn fill_key_buf(&mut self) {
+        self.key_buf.clear();
+        self.key_buf
+            .extend(self.shared.greedy_ws.order.iter().map(|&i| i as u32));
     }
 
-    fn add_atom(&mut self, key: AtomKey, vertex: Vec<f64>, weight: f64) {
-        if let Some(&i) = self.atom_index.get(&key) {
-            self.atoms[i].2 += weight;
+    /// Add `weight` to the atom whose key is in `key_buf` and whose vertex
+    /// is in `q`, creating the atom if it is new (the only place a key is
+    /// cloned — atom birth, not steady state).
+    fn add_current_atom(&mut self, weight: f64) {
+        if let Some(&i) = self.atom_index.get(self.key_buf.as_slice()) {
+            self.weights[i] += weight;
         } else {
-            self.atom_index.insert(key.clone(), self.atoms.len());
-            self.atoms.push((key, vertex, weight));
+            let key = self.key_buf.clone();
+            self.atom_index.insert(key.clone(), self.weights.len());
+            self.keys.push(key);
+            self.atoms.push(&self.q);
+            self.weights.push(weight);
         }
     }
 
     fn drop_tiny_atoms(&mut self) {
         let tol = self.opts.weight_tol;
-        if self.atoms.iter().all(|(_, _, w)| *w > tol) {
+        if self.weights.iter().all(|&w| w > tol) {
             return;
         }
-        self.atoms.retain(|(_, _, w)| *w > tol);
-        self.atom_index.clear();
-        for (i, (k, _, _)) in self.atoms.iter().enumerate() {
-            self.atom_index.insert(k.clone(), i);
+        // Single-pass compaction of the parallel arrays: one sweep no
+        // matter how many atoms die at once (weights rescale together, so
+        // they can cross the tolerance in batches). Dead positions are
+        // only ever read — swaps target the current (surviving) read
+        // position — so `keys[read]` is the original key when removed
+        // from the index. The survivor index buffer is reused.
+        let mut keep = std::mem::take(&mut self.keep_buf);
+        keep.clear();
+        let mut write = 0usize;
+        for read in 0..self.weights.len() {
+            if self.weights[read] > tol {
+                keep.push(read);
+                if write != read {
+                    self.weights[write] = self.weights[read];
+                    self.keys.swap(write, read);
+                }
+                write += 1;
+            } else {
+                self.atom_index.remove(self.keys[read].as_slice());
+            }
         }
+        self.weights.truncate(write);
+        self.keys.truncate(write);
+        self.atoms.compact(&keep);
+        for (i, k) in self.keys.iter().enumerate() {
+            *self
+                .atom_index
+                .get_mut(k.as_slice())
+                .expect("surviving atom key must stay indexed") = i;
+        }
+        self.keep_buf = keep;
+    }
+
+    /// The away atom: argmax ⟨x, v⟩ among active atoms.
+    fn away_atom(&self) -> Option<usize> {
+        (0..self.weights.len())
+            .map(|i| (i, dot(&self.x, self.atoms.row(i))))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| i)
     }
 
     fn step_plain(&mut self) {
@@ -129,16 +192,9 @@ impl FrankWolfe {
     fn step_away(&mut self) {
         // Choose between the FW direction (q − x) and the away direction
         // (x − v_away) by alignment with the negative gradient −x.
-        let away = self
-            .atoms
-            .iter()
-            .enumerate()
-            .map(|(i, (_, v, _))| (i, dot(&self.x, v)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .map(|(i, _)| i);
-        let Some(ai) = away else { return };
+        let Some(ai) = self.away_atom() else { return };
         let fw_score = dot(&self.x, &self.x) - dot(&self.x, &self.q); // ⟨−∇, q−x⟩
-        let away_score = dot(&self.x, &self.atoms[ai].1) - dot(&self.x, &self.x);
+        let away_score = dot(&self.x, self.atoms.row(ai)) - dot(&self.x, &self.x);
         if fw_score >= away_score {
             // FW step toward q with atom bookkeeping.
             for ((d, &qi), &xi) in self.dir.iter_mut().zip(&self.q).zip(&self.x) {
@@ -153,21 +209,20 @@ impl FrankWolfe {
                 return;
             }
             axpy(gamma, &self.dir, &mut self.x);
-            for (_, _, wgt) in self.atoms.iter_mut() {
+            for wgt in self.weights.iter_mut() {
                 *wgt *= 1.0 - gamma;
             }
-            let key = self.current_order_key();
-            let q = self.q.clone();
-            self.add_atom(key, q, gamma);
+            self.fill_key_buf();
+            self.add_current_atom(gamma);
         } else {
             // Away step: move off v_away; max step keeps weights ≥ 0.
-            let lam = self.atoms[ai].2;
+            let lam = self.weights[ai];
             if lam >= 1.0 - 1e-15 {
                 return; // single-atom corral: away direction is null
             }
             let gamma_max = lam / (1.0 - lam);
             {
-                let v = &self.atoms[ai].1;
+                let v = self.atoms.row(ai);
                 for ((d, &xi), &vi) in self.dir.iter_mut().zip(&self.x).zip(v) {
                     *d = xi - vi;
                 }
@@ -181,30 +236,22 @@ impl FrankWolfe {
                 return;
             }
             axpy(gamma, &self.dir, &mut self.x);
-            for (_, _, wgt) in self.atoms.iter_mut() {
+            for wgt in self.weights.iter_mut() {
                 *wgt *= 1.0 + gamma;
             }
-            self.atoms[ai].2 -= gamma;
+            self.weights[ai] -= gamma;
         }
         self.drop_tiny_atoms();
     }
 
     fn step_pairwise(&mut self) {
-        // Away atom: argmax ⟨x, v⟩ among active atoms.
-        let away = self
-            .atoms
-            .iter()
-            .enumerate()
-            .map(|(i, (_, v, _))| (i, dot(&self.x, v)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .map(|(i, _)| i);
-        let Some(ai) = away else {
+        let Some(ai) = self.away_atom() else {
             return;
         };
         // Direction q − v_away with max step = λ_away.
-        let gamma_max = self.atoms[ai].2;
+        let gamma_max = self.weights[ai];
         {
-            let v_away = &self.atoms[ai].1;
+            let v_away = self.atoms.row(ai);
             for ((d, &qi), &vi) in self.dir.iter_mut().zip(&self.q).zip(v_away) {
                 *d = qi - vi;
             }
@@ -218,19 +265,16 @@ impl FrankWolfe {
             return;
         }
         axpy(gamma, &self.dir, &mut self.x);
-        self.atoms[ai].2 -= gamma;
-        let key = self.current_order_key();
-        let q = self.q.clone();
-        self.add_atom(key, q, gamma);
+        self.weights[ai] -= gamma;
+        self.fill_key_buf();
+        self.add_current_atom(gamma);
         self.drop_tiny_atoms();
     }
 }
 
 impl ProxSolver for FrankWolfe {
     fn step(&mut self, f: &dyn Submodular) -> SolverEvent {
-        let mut q = std::mem::take(&mut self.q);
-        let (_info, f_w) = self.shared.greedy_and_refine(f, &self.x, &mut q);
-        self.q = q;
+        let (_info, f_w) = self.shared.greedy_and_refine(f, &self.x, &mut self.q);
         let wolfe_gap = norm2_sq(&self.x) - dot(&self.x, &self.q);
         if wolfe_gap > 0.0 {
             match self.opts.variant {
@@ -267,13 +311,16 @@ impl ProxSolver for FrankWolfe {
         self.x.resize(p, 0.0);
         self.q.resize(p, 0.0);
         self.dir.resize(p, 0.0);
-        self.atoms.clear();
+        self.atoms.reset(p);
+        self.weights.clear();
+        self.keys.clear();
         self.atom_index.clear();
-        let mut s0 = vec![0.0; p];
-        self.shared.reset_from(f, w_init, &mut s0);
-        self.x.copy_from_slice(&s0);
-        let key = self.current_order_key();
-        self.add_atom(key, s0, 1.0);
+        // The initial greedy vertex lands in `q` (the next step overwrites
+        // it anyway), so warm restarts reuse every buffer.
+        self.shared.reset_from(f, w_init, &mut self.q);
+        self.x.copy_from_slice(&self.q);
+        self.fill_key_buf();
+        self.add_current_atom(1.0);
     }
 
     fn name(&self) -> &'static str {
@@ -367,9 +414,9 @@ mod tests {
         );
         for _ in 0..4000 {
             let ev = fw.step(&f);
-            let total: f64 = fw.atoms.iter().map(|(_, _, w)| w).sum();
+            let total: f64 = fw.weights.iter().sum();
             assert!((total - 1.0).abs() < 1e-6, "weights sum {total}");
-            assert!(fw.atoms.iter().all(|(_, _, w)| *w >= -1e-12));
+            assert!(fw.weights.iter().all(|&w| w >= -1e-12));
             if ev.gap < 1e-8 {
                 break;
             }
@@ -385,9 +432,16 @@ mod tests {
         let mut fw = FrankWolfe::new(&f, FwOptions::default(), None);
         for _ in 0..100 {
             fw.step(&f);
-            let total: f64 = fw.atoms.iter().map(|(_, _, w)| w).sum();
+            let total: f64 = fw.weights.iter().sum();
             assert!((total - 1.0).abs() < 1e-9, "weights sum {total}");
-            assert!(fw.atoms.iter().all(|(_, _, w)| *w >= 0.0));
+            assert!(fw.weights.iter().all(|&w| w >= 0.0));
+            // Parallel-array + index-map invariants.
+            assert_eq!(fw.weights.len(), fw.num_atoms());
+            assert_eq!(fw.keys.len(), fw.num_atoms());
+            assert_eq!(fw.atom_index.len(), fw.num_atoms());
+            for (i, k) in fw.keys.iter().enumerate() {
+                assert_eq!(fw.atom_index[k.as_slice()], i, "index map skewed");
+            }
         }
     }
 }

@@ -22,7 +22,7 @@
 
 use super::{PrimalState, ProxSolver, SolverEvent};
 use crate::linalg::vecops::{dot, norm2_sq};
-use crate::linalg::IncrementalCholesky;
+use crate::linalg::{CorralMat, IncrementalCholesky};
 use crate::submodular::Submodular;
 
 /// Options for [`MinNormPoint`].
@@ -51,12 +51,18 @@ impl Default for MinNormOptions {
 }
 
 /// Fujishige–Wolfe solver state.
+///
+/// Steady-state `step` calls perform **zero heap allocations**: the corral
+/// is a flat [`CorralMat`], the Gram factor is packed-flat, and every
+/// transient (cross row, ones RHS, affine weights, oracle scratch) lives
+/// in a reused buffer. Only genuine state growth (corral high-water mark,
+/// first pass at a new problem size) touches the allocator.
 pub struct MinNormPoint {
     opts: MinNormOptions,
     /// Current point `x = Σ λ_i v_i` (the dual iterate `ŝ`).
     x: Vec<f64>,
-    /// Corral vertices.
-    corral: Vec<Vec<f64>>,
+    /// Corral vertices, flat row-major (stride = p).
+    corral: CorralMat,
     /// Convex weights over the corral.
     lambda: Vec<f64>,
     /// Cholesky factor of `11ᵀ + SᵀS`.
@@ -64,6 +70,12 @@ pub struct MinNormPoint {
     shared: PrimalState,
     /// Scratch vertex buffer.
     q: Vec<f64>,
+    /// Scratch: cross-products row for Gram pushes (and reset's vertex).
+    cross: Vec<f64>,
+    /// Scratch: all-ones RHS for the affine system.
+    ones: Vec<f64>,
+    /// Scratch: affine minimizer weights.
+    alpha: Vec<f64>,
 }
 
 impl MinNormPoint {
@@ -74,11 +86,14 @@ impl MinNormPoint {
         let mut solver = MinNormPoint {
             opts,
             x: vec![0.0; p],
-            corral: Vec::new(),
+            corral: CorralMat::new(p),
             lambda: Vec::new(),
             chol: IncrementalCholesky::new(),
             shared: PrimalState::new(p),
             q: vec![0.0; p],
+            cross: Vec::new(),
+            ones: Vec::new(),
+            alpha: Vec::new(),
         };
         let w0 = match w_init {
             Some(w) => w.to_vec(),
@@ -93,11 +108,13 @@ impl MinNormPoint {
         self.corral.len()
     }
 
-    fn push_vertex(&mut self, v: Vec<f64>) -> bool {
-        let cross: Vec<f64> =
-            self.corral.iter().map(|u| 1.0 + dot(u, &v)).collect();
-        let diag = 1.0 + norm2_sq(&v);
-        match self.chol.push(&cross, diag, self.opts.jitter) {
+    /// Push `v` into the corral (copied into flat storage — the caller
+    /// keeps its buffer; nothing is cloned on the hot path).
+    fn push_vertex(&mut self, v: &[f64]) -> bool {
+        self.cross.clear();
+        self.cross.extend(self.corral.iter().map(|u| 1.0 + dot(u, v)));
+        let diag = 1.0 + norm2_sq(v);
+        match self.chol.push(&self.cross, diag, self.opts.jitter) {
             Some(_) => {
                 self.corral.push(v);
                 self.lambda.push(0.0);
@@ -113,60 +130,63 @@ impl MinNormPoint {
         self.chol.remove(i);
     }
 
-    /// Rebuild the Cholesky factor from the current corral (recovery path).
+    /// Rebuild the Cholesky factor from the current corral (recovery path —
+    /// rare, so the small `keep` allocation is acceptable here).
     fn rebuild_chol(&mut self) {
-        self.chol = IncrementalCholesky::new();
-        let mut keep = Vec::with_capacity(self.corral.len());
-        let mut kept_vertices: Vec<Vec<f64>> = Vec::with_capacity(self.corral.len());
-        for (i, v) in self.corral.iter().enumerate() {
-            let cross: Vec<f64> =
-                kept_vertices.iter().map(|u| 1.0 + dot(u, v)).collect();
-            let diag = 1.0 + norm2_sq(v);
-            if self.chol.push(&cross, diag, self.opts.jitter).is_some() {
+        self.chol.reset();
+        let mut keep: Vec<usize> = Vec::with_capacity(self.corral.len());
+        for i in 0..self.corral.len() {
+            self.cross.clear();
+            for &r in &keep {
+                self.cross.push(1.0 + dot(self.corral.row(r), self.corral.row(i)));
+            }
+            let diag = 1.0 + norm2_sq(self.corral.row(i));
+            if self.chol.push(&self.cross, diag, self.opts.jitter).is_some() {
                 keep.push(i);
-                kept_vertices.push(v.clone());
             }
         }
         if keep.len() != self.corral.len() {
-            let mut new_corral = Vec::with_capacity(keep.len());
-            let mut new_lambda = Vec::with_capacity(keep.len());
-            for &i in &keep {
-                new_corral.push(self.corral[i].clone());
-                new_lambda.push(self.lambda[i]);
+            for (w, &r) in keep.iter().enumerate() {
+                self.lambda[w] = self.lambda[r];
             }
-            let total: f64 = new_lambda.iter().sum();
+            self.lambda.truncate(keep.len());
+            self.corral.compact(&keep);
+            let total: f64 = self.lambda.iter().sum();
             if total > 0.0 {
-                for l in new_lambda.iter_mut() {
+                for l in self.lambda.iter_mut() {
                     *l /= total;
                 }
-            } else if !new_lambda.is_empty() {
-                let u = 1.0 / new_lambda.len() as f64;
-                new_lambda.iter_mut().for_each(|l| *l = u);
+            } else if !self.lambda.is_empty() {
+                let u = 1.0 / self.lambda.len() as f64;
+                self.lambda.iter_mut().for_each(|l| *l = u);
             }
-            self.corral = new_corral;
-            self.lambda = new_lambda;
         }
     }
 
     /// Affine minimizer weights over the current corral: solve
-    /// `(11ᵀ + SᵀS) ᾱ = 1`, normalize. Returns `None` on breakdown.
-    fn affine_weights(&self) -> Option<Vec<f64>> {
+    /// `(11ᵀ + SᵀS) ᾱ = 1` into `self.alpha`, normalize. Returns `false`
+    /// on breakdown. Allocation-free once the buffers reached size.
+    fn affine_weights(&mut self) -> bool {
         let m = self.corral.len();
         if m == 0 {
-            return None;
+            return false;
         }
-        let ones = vec![1.0; m];
-        let raw = self.chol.solve(&ones);
-        let total: f64 = raw.iter().sum();
+        self.ones.clear();
+        self.ones.resize(m, 1.0);
+        self.chol.solve_into(&self.ones, &mut self.alpha);
+        let total: f64 = self.alpha.iter().sum();
         if !total.is_finite() || total.abs() < 1e-300 {
-            return None;
+            return false;
         }
-        Some(raw.iter().map(|a| a / total).collect())
+        for a in self.alpha.iter_mut() {
+            *a /= total;
+        }
+        true
     }
 
     fn recompute_x(&mut self) {
         self.x.iter_mut().for_each(|v| *v = 0.0);
-        for (l, v) in self.lambda.iter().zip(&self.corral) {
+        for (l, v) in self.lambda.iter().zip(self.corral.iter()) {
             if *l != 0.0 {
                 for (xi, vi) in self.x.iter_mut().zip(v) {
                     *xi += l * vi;
@@ -179,20 +199,18 @@ impl MinNormPoint {
     /// convex hull, evicting vertices whose weight hits zero.
     fn minor_cycles(&mut self) {
         for _ in 0..self.opts.max_minor {
-            let alpha = match self.affine_weights() {
-                Some(a) => a,
-                None => {
-                    self.rebuild_chol();
-                    match self.affine_weights() {
-                        Some(a) => a,
-                        None => break,
-                    }
+            if !self.affine_weights() {
+                self.rebuild_chol();
+                if !self.affine_weights() {
+                    break;
                 }
-            };
-            let min_alpha = alpha.iter().cloned().fold(f64::INFINITY, f64::min);
+            }
+            let min_alpha =
+                self.alpha.iter().cloned().fold(f64::INFINITY, f64::min);
             if min_alpha >= -self.opts.lambda_tol {
                 // Affine minimizer is feasible — adopt it.
-                self.lambda = alpha.into_iter().map(|a| a.max(0.0)).collect();
+                self.lambda.clear();
+                self.lambda.extend(self.alpha.iter().map(|a| a.max(0.0)));
                 let total: f64 = self.lambda.iter().sum();
                 for l in self.lambda.iter_mut() {
                     *l /= total;
@@ -202,7 +220,7 @@ impl MinNormPoint {
             // Line search toward the affine minimizer, stopping at the
             // first coefficient that hits zero.
             let mut theta = f64::INFINITY;
-            for (&l, &a) in self.lambda.iter().zip(&alpha) {
+            for (&l, &a) in self.lambda.iter().zip(&self.alpha) {
                 if a < l {
                     let t = l / (l - a);
                     if t < theta {
@@ -211,7 +229,7 @@ impl MinNormPoint {
                 }
             }
             let theta = theta.clamp(0.0, 1.0);
-            for (l, &a) in self.lambda.iter_mut().zip(&alpha) {
+            for (l, &a) in self.lambda.iter_mut().zip(&self.alpha) {
                 *l = (1.0 - theta) * *l + theta * a;
             }
             // Evict zeros (largest index first keeps removal cheap-ish).
@@ -249,13 +267,13 @@ impl ProxSolver for MinNormPoint {
         let p = f.ground_size();
         debug_assert_eq!(self.x.len(), p);
         // One greedy pass in direction −x: vertex q + PAV primal + fc.
+        // `q` is moved out so `push_vertex` can borrow it — the corral
+        // copies it into flat storage, no clone.
         let mut q = std::mem::take(&mut self.q);
         let (_info, f_w) = self.shared.greedy_and_refine(f, &self.x, &mut q);
         let wolfe_gap = norm2_sq(&self.x) - dot(&self.x, &q);
-        if wolfe_gap > self.opts.wolfe_tol {
-            if self.push_vertex(q.clone()) {
-                self.minor_cycles();
-            }
+        if wolfe_gap > self.opts.wolfe_tol && self.push_vertex(&q) {
+            self.minor_cycles();
         }
         self.q = q;
         self.shared.finish_step(f_w, &self.x, wolfe_gap)
@@ -285,13 +303,19 @@ impl ProxSolver for MinNormPoint {
         let p = f.ground_size();
         self.x.resize(p, 0.0);
         self.q.resize(p, 0.0);
-        self.corral.clear();
+        self.corral.reset(p);
         self.lambda.clear();
-        self.chol = IncrementalCholesky::new();
-        let mut s0 = vec![0.0; p];
+        self.chol.reset();
+        // Reuse `cross` as the initial-vertex buffer (it is scratch, and
+        // the corral is empty so `push_vertex` won't need it for cross
+        // products) — warm restarts allocate nothing once buffers exist.
+        let mut s0 = std::mem::take(&mut self.cross);
+        s0.clear();
+        s0.resize(p, 0.0);
         self.shared.reset_from(f, w_init, &mut s0);
         self.x.copy_from_slice(&s0);
-        self.push_vertex(s0);
+        self.push_vertex(&s0);
+        self.cross = s0;
         if !self.lambda.is_empty() {
             self.lambda[0] = 1.0;
         }

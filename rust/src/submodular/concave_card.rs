@@ -55,6 +55,8 @@ impl Submodular for ConcaveCardFn {
         self.g[k] + modular
     }
 
+    // Already allocation-free, so the default `prefix_gains_scratch`
+    // (which forwards here) is the zero-allocation hot path too.
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
         let mut k = base.iter().filter(|&&b| b).count();
         for (o, &j) in out.iter_mut().zip(order) {

@@ -8,7 +8,7 @@
 //! for the screening rules because the optimum mixes "obviously in",
 //! "obviously out", and genuinely coupled elements.
 
-use super::Submodular;
+use super::{OracleScratch, Submodular};
 
 /// Weighted set coverage with modular costs.
 #[derive(Clone, Debug)]
@@ -79,7 +79,22 @@ impl Submodular for CoverageFn {
     }
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
-        let mut covered = vec![false; self.item_w.len()];
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
+        // `covered` is item-indexed (not ground-set-indexed) and rebuilt
+        // from `base` on entry.
+        let covered = &mut scratch.mem_bool;
+        covered.clear();
+        covered.resize(self.item_w.len(), false);
         for (j, &b) in base.iter().enumerate() {
             if b {
                 for &u in &self.sets[j] {

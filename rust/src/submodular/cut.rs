@@ -8,7 +8,7 @@
 //! a greedy pass costs O(p + E) — the whole point of using sparse cuts for
 //! large images.
 
-use super::Submodular;
+use super::{OracleScratch, Submodular};
 
 /// A weighted undirected graph cut plus unary terms.
 #[derive(Clone, Debug)]
@@ -101,13 +101,27 @@ impl Submodular for CutFn {
     }
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
         // Membership evolves as we walk the order; marginal gain of v:
         //   u_v + Σ_{j∉A} w_vj − Σ_{j∈A} w_vj = u_v + deg_v − 2 Σ_{j∈A} w_vj.
         // Membership is stored as f64 0/1 so the adjacency walk is a
         // branchless multiply-accumulate (membership is effectively random
-        // mid-solve, so an `if` mispredicts half the time).
-        let mut inside: Vec<f64> =
-            base.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+        // mid-solve, so an `if` mispredicts half the time). The membership
+        // buffer is rebuilt from `base` on entry, so the scratch carries no
+        // state between passes.
+        let inside = &mut scratch.mem_f64;
+        inside.clear();
+        inside.extend(base.iter().map(|&b| if b { 1.0 } else { 0.0 }));
         for (o, &v) in out.iter_mut().zip(order) {
             debug_assert_eq!(inside[v], 0.0);
             let (nbrs, ws) = self.adj(v);

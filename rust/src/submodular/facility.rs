@@ -9,7 +9,7 @@
 //! family with structure quite unlike cuts (per-client maxima), which is
 //! exactly why the screening test battery includes it.
 
-use super::Submodular;
+use super::{OracleScratch, Submodular};
 
 /// Weighted facility-location value minus modular facility costs.
 #[derive(Clone, Debug)]
@@ -90,10 +90,24 @@ impl Submodular for FacilityLocationFn {
     }
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
         // cur[u] = current best score for client u; adding facility j
-        // contributes Σ_u w_u · max(0, s_uj − cur[u]) − c_j.
+        // contributes Σ_u w_u · max(0, s_uj − cur[u]) − c_j. `cur` is
+        // client-indexed and rebuilt from `base` on entry.
         let clients = self.num_clients();
-        let mut cur = vec![0.0f64; clients];
+        let cur = &mut scratch.aux;
+        cur.clear();
+        cur.resize(clients, 0.0);
         for (j, &inb) in base.iter().enumerate() {
             if inb {
                 for u in 0..clients {

@@ -24,8 +24,8 @@
 //! factorizations — exactly the cost profile the paper's Matlab experiment
 //! pays, which is why their `p = 1000` baseline takes 5400 s.
 
-use super::Submodular;
-use crate::linalg::{Cholesky, IncrementalCholesky, Mat};
+use super::{OracleScratch, Submodular};
+use crate::linalg::{Cholesky, Mat};
 
 /// GP mutual-information + modular labels.
 #[derive(Clone, Debug)]
@@ -100,29 +100,59 @@ impl Submodular for GaussianMiFn {
     }
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
         let n = order.len();
         if n == 0 {
             return;
         }
-        let base_ids: Vec<usize> = (0..self.p).filter(|&i| base[i]).collect();
+        // Scratch layout: `ids` holds base ids then (reused) rest ids,
+        // `ids2` the incremental-factor member list, `acc`/`aux` the two
+        // entropy ladders, `aux2` the cross row, `mem_bool` the in-order
+        // mask, and `chol` the extending factor (the two passes run
+        // sequentially; reset between them, capacity retained).
+        let OracleScratch {
+            mem_bool: in_order,
+            ids,
+            ids2: members,
+            acc: h_fwd,
+            aux: h_bwd,
+            aux2: cross,
+            chol,
+            ..
+        } = scratch;
 
         // Forward pass: H(base ∪ prefix_k) for k = 0..=n via one extending
         // Cholesky seeded with the base set.
-        let mut h_fwd = vec![0.0; n + 1]; // h_fwd[k] = H(base ∪ prefix_k)
+        ids.clear();
+        ids.extend((0..self.p).filter(|&i| base[i]));
+        h_fwd.clear();
+        h_fwd.resize(n + 1, 0.0); // h_fwd[k] = H(base ∪ prefix_k)
         {
-            let mut inc = IncrementalCholesky::new();
-            let mut members: Vec<usize> = Vec::with_capacity(base_ids.len() + n);
+            chol.reset();
+            members.clear();
             let mut logdet = 0.0;
-            for &i in &base_ids {
-                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
-                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+            for &i in ids.iter() {
+                cross.clear();
+                cross.extend(members.iter().map(|&j| self.kk(i, j)));
+                let ld = chol.push(cross, self.kk(i, i), 1e-10).expect("PD");
                 logdet += 2.0 * ld.ln();
                 members.push(i);
             }
             h_fwd[0] = 0.5 * logdet;
             for (k, &i) in order.iter().enumerate() {
-                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
-                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+                cross.clear();
+                cross.extend(members.iter().map(|&j| self.kk(i, j)));
+                let ld = chol.push(cross, self.kk(i, i), 1e-10).expect("PD");
                 logdet += 2.0 * ld.ln();
                 members.push(i);
                 h_fwd[k + 1] = 0.5 * logdet;
@@ -133,30 +163,31 @@ impl Submodular for GaussianMiFn {
         // nested decreasing; equivalently C_k = rest ∪ suffix_k where
         // rest = V ∖ (base ∪ order). Build from rest, then append order
         // reversed: after pushing t elements we have C_{n−t}.
-        let in_order = {
-            let mut b = vec![false; self.p];
-            for &i in order {
-                b[i] = true;
-            }
-            b
-        };
-        let rest_ids: Vec<usize> =
-            (0..self.p).filter(|&i| !base[i] && !in_order[i]).collect();
-        let mut h_bwd = vec![0.0; n + 1]; // h_bwd[k] = H(V ∖ (base ∪ prefix_k))
+        in_order.clear();
+        in_order.resize(self.p, false);
+        for &i in order {
+            in_order[i] = true;
+        }
+        ids.clear();
+        ids.extend((0..self.p).filter(|&i| !base[i] && !in_order[i]));
+        h_bwd.clear();
+        h_bwd.resize(n + 1, 0.0); // h_bwd[k] = H(V ∖ (base ∪ prefix_k))
         {
-            let mut inc = IncrementalCholesky::new();
-            let mut members: Vec<usize> = Vec::with_capacity(rest_ids.len() + n);
+            chol.reset();
+            members.clear();
             let mut logdet = 0.0;
-            for &i in &rest_ids {
-                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
-                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+            for &i in ids.iter() {
+                cross.clear();
+                cross.extend(members.iter().map(|&j| self.kk(i, j)));
+                let ld = chol.push(cross, self.kk(i, i), 1e-10).expect("PD");
                 logdet += 2.0 * ld.ln();
                 members.push(i);
             }
             h_bwd[n] = 0.5 * logdet;
             for (t, &i) in order.iter().rev().enumerate() {
-                let cross: Vec<f64> = members.iter().map(|&j| self.kk(i, j)).collect();
-                let ld = inc.push(&cross, self.kk(i, i), 1e-10).expect("PD");
+                cross.clear();
+                cross.extend(members.iter().map(|&j| self.kk(i, j)));
+                let ld = chol.push(cross, self.kk(i, i), 1e-10).expect("PD");
                 logdet += 2.0 * ld.ln();
                 members.push(i);
                 h_bwd[n - 1 - t] = 0.5 * logdet;

@@ -10,7 +10,7 @@
 //! smoothness term plus the same modular label term, which is the structure
 //! the two-moons experiment probes. See DESIGN.md §Substitutions.
 
-use super::Submodular;
+use super::{OracleScratch, Submodular};
 
 /// Dense symmetric cut + unary potentials.
 #[derive(Clone, Debug)]
@@ -84,6 +84,17 @@ impl Submodular for KernelCutFn {
     }
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
         // acc[v] = Σ_{j ∈ A} K_vj, maintained as the prefix grows.
         // gain(v) = u_v + rowsum_v − 2 · acc[v].
         //
@@ -94,7 +105,9 @@ impl Submodular for KernelCutFn {
         // see EXPERIMENTS.md §Perf). The in-block gain corrections are
         // the scalar K[v_e][v_i] terms for e < i within the block.
         let p = self.p;
-        let mut acc = vec![0.0f64; p];
+        let acc = &mut scratch.acc;
+        acc.clear();
+        acc.resize(p, 0.0);
         for (j, &inb) in base.iter().enumerate() {
             if inb {
                 let row = self.row(j);

@@ -28,6 +28,52 @@ pub mod kernel_cut;
 pub mod modular;
 pub mod scaled;
 
+/// Reusable per-pass buffers for [`Submodular::prefix_gains_scratch`].
+///
+/// Every oracle family needs some transient state per greedy pass
+/// (membership weights, coverage flags, client maxima, entropy ladders…).
+/// Allocating it per pass puts `malloc` on the solver hot loop — one pass
+/// per major iteration, thousands of iterations per solve — so the solver
+/// workspace owns one `OracleScratch` and threads it through every pass.
+/// The buffers are written before they are read on each call, so a scratch
+/// can be shared freely across oracles and problem sizes; oracles resize
+/// on entry and never rely on previous contents.
+#[derive(Clone, Debug, Default)]
+pub struct OracleScratch {
+    /// 0/1 membership weights (sparse/dense cut adjacency walks).
+    pub mem_f64: Vec<f64>,
+    /// Boolean membership / coverage flags.
+    pub mem_bool: Vec<bool>,
+    /// Primary id list (reduced→original translation, base/rest ids).
+    pub ids: Vec<usize>,
+    /// Secondary id list (incremental-factor member lists).
+    pub ids2: Vec<usize>,
+    /// Primary f64 accumulator (kernel row sums, forward entropy ladder).
+    pub acc: Vec<f64>,
+    /// Secondary f64 accumulator (client maxima, backward entropy ladder).
+    pub aux: Vec<f64>,
+    /// Tertiary f64 buffer (cross rows for incremental factors).
+    pub aux2: Vec<f64>,
+    /// Incremental Cholesky workspace (log-det oracles; the forward and
+    /// backward entropy ladders run sequentially, so one factor —
+    /// reset between passes — serves both).
+    pub chol: crate::linalg::IncrementalCholesky,
+    /// Nested scratch for wrapper oracles (`ScaledFn` → inner oracle).
+    pub inner: Option<Box<OracleScratch>>,
+}
+
+impl OracleScratch {
+    /// Fresh scratch; buffers grow lazily to whatever each oracle needs.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The nested scratch, created on first use (wrapper oracles).
+    pub fn nested(&mut self) -> &mut OracleScratch {
+        self.inner.get_or_insert_with(Default::default)
+    }
+}
+
 /// A normalized submodular set function `F: 2^V → ℝ` with `F(∅) = 0`.
 ///
 /// Implementations must be deterministic and thread-safe (`Sync`): the
@@ -62,6 +108,33 @@ pub trait Submodular: Sync {
     fn prefix_gains(&self, order: &[usize], out: &mut [f64]) {
         let base = vec![false; self.ground_size()];
         self.prefix_gains_from(&base, order, out);
+    }
+
+    /// Allocation-free variant of [`prefix_gains_from`]: identical
+    /// semantics and **bit-identical results**, but all transient pass
+    /// state lives in `scratch`, which the caller owns and reuses.
+    ///
+    /// This is the solver hot path — `greedy_base_vertex` calls it once
+    /// per major iteration. Implementations must not allocate once the
+    /// scratch buffers have grown to the working size, and must perform
+    /// the same floating-point operations in the same order as
+    /// [`prefix_gains_from`] so the two paths stay bit-identical (the
+    /// property tests enforce this for every oracle family).
+    ///
+    /// The default forwards to [`prefix_gains_from`] — correct for
+    /// oracles whose gains path is already allocation-free
+    /// (`modular`, `iwata`, `concave_card`).
+    ///
+    /// [`prefix_gains_from`]: Submodular::prefix_gains_from
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
+        let _ = scratch;
+        self.prefix_gains_from(base, order, out);
     }
 }
 
@@ -136,6 +209,15 @@ impl<F: Submodular + ?Sized> Submodular for &F {
     fn prefix_gains(&self, order: &[usize], out: &mut [f64]) {
         (**self).prefix_gains(order, out)
     }
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
+        (**self).prefix_gains_scratch(base, order, out, scratch)
+    }
 }
 
 #[cfg(test)]
@@ -144,10 +226,15 @@ pub(crate) mod test_support {
     use crate::rng::Pcg64;
 
     /// Check `prefix_gains_from` against the default eval-based path for a
-    /// bunch of random (base, order) splits.
+    /// bunch of random (base, order) splits, and `prefix_gains_scratch`
+    /// against `prefix_gains_from` **bit-for-bit** — including a second
+    /// scratch call to catch state leaking between passes. One shared
+    /// dirty scratch is reused across all cases, exactly like the solver
+    /// hot loop does.
     pub fn check_gains_match_eval<F: Submodular>(f: &F, seed: u64, tol: f64) {
         let p = f.ground_size();
         let mut rng = Pcg64::seeded(seed);
+        let mut scratch = OracleScratch::new();
         for _ in 0..8 {
             let mut base = vec![false; p];
             for x in base.iter_mut() {
@@ -175,6 +262,21 @@ pub(crate) mod test_support {
                     fast[k],
                     slow[k]
                 );
+            }
+            // Scratch path: bit-identical to the allocating fast path,
+            // on the first call and again with the now-dirty scratch.
+            let mut with_scratch = vec![0.0; rest.len()];
+            for round in 0..2 {
+                with_scratch.iter_mut().for_each(|x| *x = f64::NAN);
+                f.prefix_gains_scratch(&base, &rest, &mut with_scratch, &mut scratch);
+                for k in 0..rest.len() {
+                    assert!(
+                        with_scratch[k].to_bits() == fast[k].to_bits(),
+                        "scratch gain {k} (round {round}): {} vs {}",
+                        with_scratch[k],
+                        fast[k]
+                    );
+                }
             }
         }
     }
@@ -215,5 +317,17 @@ mod tests {
         let d: &dyn Submodular = &f;
         assert_eq!(d.ground_size(), 2);
         assert_eq!(d.eval(&[true, false]), 1.0);
+    }
+
+    #[test]
+    fn default_scratch_path_matches_allocating_path() {
+        let f = ModularFn::new(vec![1.0, -2.0, 0.5]);
+        let d: &dyn Submodular = &f;
+        let base = [false, false, false];
+        let order = [2usize, 0, 1];
+        let mut scratch = OracleScratch::new();
+        let mut out = [0.0; 3];
+        d.prefix_gains_scratch(&base, &order, &mut out, &mut scratch);
+        assert_eq!(out, [0.5, 1.0, -2.0]);
     }
 }

@@ -5,7 +5,7 @@
 //! (`F(A) + Σ_{j∈A} ∇ψ_j(α)`) and for the unary terms of the experiment
 //! objectives.
 
-use super::Submodular;
+use super::{OracleScratch, Submodular};
 
 /// `F(A) = w(A)`.
 #[derive(Clone, Debug)]
@@ -85,6 +85,22 @@ impl<F: Submodular> Submodular for PlusModular<F> {
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
         self.inner.prefix_gains_from(base, order, out);
+        for (o, &j) in out.iter_mut().zip(order) {
+            *o += self.m[j];
+        }
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
+        // The modular layer has no pass state of its own — thread the
+        // scratch straight into the wrapped oracle so composed objectives
+        // stay on the zero-allocation path.
+        self.inner.prefix_gains_scratch(base, order, out, scratch);
         for (o, &j) in out.iter_mut().zip(order) {
             *o += self.m[j];
         }

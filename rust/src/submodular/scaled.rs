@@ -10,7 +10,7 @@
 //! re-scaling at every trigger never builds nested wrappers — there is one
 //! translation layer no matter how many times the problem shrank.
 
-use super::Submodular;
+use super::{OracleScratch, Submodular};
 
 /// `F̂` over the reduced ground set `V̂`, referencing the original oracle.
 pub struct ScaledFn<'a> {
@@ -40,6 +40,28 @@ impl<'a> ScaledFn<'a> {
         }
         let f_base = inner.eval(&base);
         ScaledFn { inner, base, kept, f_base }
+    }
+
+    /// Re-target the reduction in place: same inner oracle, new
+    /// active/kept split. Reuses the membership and id buffers, so IAES
+    /// warm restarts never rebuild the translation layer from scratch.
+    /// Same contract as [`ScaledFn::new`]: `kept` must be disjoint from
+    /// `active`.
+    pub fn set_reduction(&mut self, active: &[usize], kept: &[usize]) {
+        let p = self.inner.ground_size();
+        self.base.clear();
+        self.base.resize(p, false);
+        for &i in active {
+            assert!(i < p);
+            assert!(!self.base[i], "duplicate active id {i}");
+            self.base[i] = true;
+        }
+        for &k in kept {
+            assert!(k < p && !self.base[k], "kept id {k} collides with active set");
+        }
+        self.kept.clear();
+        self.kept.extend_from_slice(kept);
+        self.f_base = self.inner.eval(&self.base);
     }
 
     /// Reduced ground-set ids mapped back to original ids.
@@ -79,17 +101,36 @@ impl Submodular for ScaledFn<'_> {
     }
 
     fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
         // Translate: reduced base ∪ Ê is the original base; reduced order
         // maps through `kept`. The −F(Ê) constant cancels in differences.
+        // The translation buffers and the inner oracle's pass state all
+        // live in `scratch` (the inner oracle gets the nested scratch), so
+        // the one translation layer stays allocation-free no matter how
+        // many times the problem shrank.
         assert_eq!(base.len(), self.kept.len());
-        let mut full_base = self.base.clone();
+        let OracleScratch { mem_bool: full_base, ids: mapped, inner, .. } = scratch;
+        full_base.clear();
+        full_base.extend_from_slice(&self.base);
         for (k, &b) in base.iter().enumerate() {
             if b {
                 full_base[self.kept[k]] = true;
             }
         }
-        let mapped: Vec<usize> = order.iter().map(|&k| self.kept[k]).collect();
-        self.inner.prefix_gains_from(&full_base, &mapped, out);
+        mapped.clear();
+        mapped.extend(order.iter().map(|&k| self.kept[k]));
+        let nested = inner.get_or_insert_with(Default::default);
+        self.inner.prefix_gains_scratch(full_base, mapped, out, nested);
     }
 }
 
@@ -132,6 +173,21 @@ mod tests {
         let scaled = ScaledFn::new(&f, &[2, 8], vec![0, 1, 4, 5, 9]);
         check_axioms(&scaled, 82, 1e-9);
         check_gains_match_eval(&scaled, 83, 1e-9);
+    }
+
+    #[test]
+    fn set_reduction_matches_fresh_construction() {
+        let f = IwataFn::new(12);
+        let mut scaled = ScaledFn::new(&f, &[1, 5], vec![0, 2, 3, 7, 9]);
+        // Re-target to a different split and compare against a fresh build.
+        scaled.set_reduction(&[0, 4], &[2, 5, 6, 11]);
+        let fresh = ScaledFn::new(&f, &[0, 4], vec![2, 5, 6, 11]);
+        assert_eq!(scaled.ground_size(), fresh.ground_size());
+        assert_eq!(scaled.kept_ids(), fresh.kept_ids());
+        assert_eq!(scaled.base_value(), fresh.base_value());
+        for ids in [vec![], vec![0], vec![1, 3], vec![0, 1, 2, 3]] {
+            assert_eq!(scaled.eval_ids(&ids), fresh.eval_ids(&ids));
+        }
     }
 
     #[test]

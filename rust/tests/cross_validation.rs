@@ -173,10 +173,8 @@ fn deferred_contraction_zero_matches_literal_algorithm2_result() {
     // the minimum — the schedule is a performance knob, not a semantic one.
     let tm = TwoMoons::generate(TwoMoonsParams { p: 100, seed: 23, ..Default::default() });
     let f = tm.knn_cut(10, 1.0);
-    let mut a = IaesOptions::default();
-    a.min_reduction_frac = 0.0;
-    let mut b = IaesOptions::default();
-    b.min_reduction_frac = 0.5;
+    let a = IaesOptions { min_reduction_frac: 0.0, ..Default::default() };
+    let b = IaesOptions { min_reduction_frac: 0.5, ..Default::default() };
     let ra = solve_sfm_with_screening(&f, &a).unwrap();
     let rb = solve_sfm_with_screening(&f, &b).unwrap();
     assert!((ra.minimum - rb.minimum).abs() < 1e-6);

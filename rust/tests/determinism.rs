@@ -1,0 +1,147 @@
+//! Trajectory determinism for the zero-allocation solver engine.
+//!
+//! The flat corral (`CorralMat`), the packed Gram factor, the adaptive
+//! re-sort, and the oracle scratch are all *exact* accelerations: they
+//! must not change a single bit of the iterate trajectory. These tests
+//! pin that down by running solvers in lockstep — a fresh instance vs. a
+//! warm-reset instance whose buffers are dirty from a different problem —
+//! and by checking the final minimizer against brute force.
+
+use sfm_screen::brute::brute_force_sfm;
+use sfm_screen::lovasz::sup_level_set;
+use sfm_screen::rng::Pcg64;
+use sfm_screen::solvers::frankwolfe::{FrankWolfe, FwOptions};
+use sfm_screen::solvers::minnorm::{MinNormOptions, MinNormPoint};
+use sfm_screen::solvers::ProxSolver;
+use sfm_screen::submodular::cut::CutFn;
+use sfm_screen::submodular::iwata::IwataFn;
+use sfm_screen::submodular::Submodular;
+
+fn seeded_cut(p: usize, seed: u64) -> CutFn {
+    let mut rng = Pcg64::seeded(seed);
+    let mut edges = Vec::new();
+    for i in 0..p {
+        for j in (i + 1)..p {
+            if rng.bernoulli(0.3) {
+                edges.push((i, j, rng.uniform(0.0, 1.5)));
+            }
+        }
+    }
+    CutFn::from_edges(p, &edges, rng.uniform_vec(p, -1.5, 1.5))
+}
+
+/// Step `a` and `b` in lockstep on `f`; every event and iterate must be
+/// bit-identical at every iteration.
+fn assert_lockstep(
+    a: &mut dyn ProxSolver,
+    b: &mut dyn ProxSolver,
+    f: &dyn Submodular,
+    iters: usize,
+    label: &str,
+) {
+    for t in 0..iters {
+        let ea = a.step(f);
+        let eb = b.step(f);
+        assert_eq!(
+            ea.gap.to_bits(),
+            eb.gap.to_bits(),
+            "{label}: gap diverged at iter {t}: {} vs {}",
+            ea.gap,
+            eb.gap
+        );
+        assert_eq!(
+            ea.wolfe_gap.to_bits(),
+            eb.wolfe_gap.to_bits(),
+            "{label}: wolfe gap diverged at iter {t}"
+        );
+        assert_eq!(ea.fc.to_bits(), eb.fc.to_bits(), "{label}: fc diverged at {t}");
+        for (j, (x, y)) in a.s().iter().zip(b.s()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: dual iterate diverged at iter {t}, coord {j}"
+            );
+        }
+        for (j, (x, y)) in a.w().iter().zip(b.w()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: primal iterate diverged at iter {t}, coord {j}"
+            );
+        }
+        if ea.gap < 1e-12 {
+            break;
+        }
+    }
+}
+
+/// Fresh solver vs. warm-reset solver (dirty workspaces from a different
+/// problem size): identical trajectories, correct minimizer.
+fn check_minnorm_on(f: &dyn Submodular, label: &str) {
+    let p = f.ground_size();
+    let mut fresh = MinNormPoint::new(f, MinNormOptions::default(), None);
+    // Dirty the second solver on an unrelated problem, then warm-reset.
+    let other = IwataFn::new(9);
+    let mut warm = MinNormPoint::new(&other, MinNormOptions::default(), None);
+    for _ in 0..30 {
+        warm.step(&other);
+    }
+    warm.reset(f, &vec![0.0; p]);
+    assert_lockstep(&mut fresh, &mut warm, f, 600, label);
+    // Final minimizer against brute force.
+    let brute = brute_force_sfm(f, 1e-9);
+    let a_min = sup_level_set(fresh.w(), 0.0);
+    assert_eq!(a_min, brute.minimal, "{label}: minimizer mismatch");
+}
+
+#[test]
+fn minnorm_trajectory_deterministic_on_iwata() {
+    check_minnorm_on(&IwataFn::new(14), "min-norm/iwata");
+}
+
+#[test]
+fn minnorm_trajectory_deterministic_on_seeded_cut() {
+    let f = seeded_cut(14, 2024);
+    let p = f.ground_size();
+    let mut fresh = MinNormPoint::new(&f, MinNormOptions::default(), None);
+    let other = seeded_cut(7, 11);
+    let mut warm = MinNormPoint::new(&other, MinNormOptions::default(), None);
+    for _ in 0..20 {
+        warm.step(&other);
+    }
+    warm.reset(&f, &vec![0.0; p]);
+    assert_lockstep(&mut fresh, &mut warm, &f, 600, "min-norm/cut");
+    let brute = brute_force_sfm(&f, 1e-7);
+    let mut set = vec![false; p];
+    for &i in &sup_level_set(fresh.w(), 0.0) {
+        set[i] = true;
+    }
+    assert!(
+        (f.eval(&set) - brute.minimum).abs() < 1e-6,
+        "min-norm/cut: recovered set is not a minimizer"
+    );
+}
+
+#[test]
+fn frankwolfe_trajectory_deterministic_after_reset() {
+    let f = seeded_cut(12, 77);
+    let p = f.ground_size();
+    let mut fresh = FrankWolfe::new(&f, FwOptions::default(), None);
+    let other = IwataFn::new(8);
+    let mut warm = FrankWolfe::new(&other, FwOptions::default(), None);
+    for _ in 0..50 {
+        warm.step(&other);
+    }
+    warm.reset(&f, &vec![0.0; p]);
+    assert_lockstep(&mut fresh, &mut warm, &f, 2000, "pairwise-fw/cut");
+}
+
+#[test]
+fn repeated_runs_are_bitwise_identical() {
+    // Same problem, two fresh solvers: byte-for-byte identical event
+    // streams (no hidden global state, no allocation-address dependence).
+    let f = IwataFn::new(16);
+    let mut a = MinNormPoint::new(&f, MinNormOptions::default(), None);
+    let mut b = MinNormPoint::new(&f, MinNormOptions::default(), None);
+    assert_lockstep(&mut a, &mut b, &f, 400, "min-norm/repeat");
+}

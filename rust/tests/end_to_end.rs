@@ -8,6 +8,7 @@ use sfm_screen::screening::RuleSet;
 use sfm_screen::workloads::images::{benchmark_suite, ImageInstance, ImageParams};
 use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
 
+#[allow(clippy::field_reassign_with_default)]
 fn cfg() -> BenchConfig {
     let mut c = BenchConfig::default();
     c.sizes = vec![50];

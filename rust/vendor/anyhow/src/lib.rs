@@ -1,0 +1,166 @@
+//! Offline shim implementing the subset of the `anyhow` API this workspace
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment has no crates.io access, so the real crate cannot
+//! be fetched; this shim is API-compatible for every call site in the tree
+//! (error construction from format strings, `?` on any
+//! `std::error::Error + Send + Sync + 'static`, context chaining, `{:#}`
+//! display). Swap the `[dependencies]` path entry for the real crate when
+//! building online — no source changes needed.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error: a message plus an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with the same default-parameter shape as the
+/// real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro calls this).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error value, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` — that
+// is what allows the blanket `From` below to coexist with the reflexive
+// `From<Error> for Error` (same design as the real crate).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result` and
+/// `Option`, mirroring `anyhow::Context`.
+pub trait Context<T, E>: Sized {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("not an integer")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        assert_eq!(parse("4").unwrap(), 4);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not an integer"));
+        let e = parse("-2").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -2");
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e: Error = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+        assert_eq!(format!("{e:#}"), "code 7");
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "io boom");
+        let dbg = format!("{:?}", Error::new(io));
+        assert!(dbg.contains("io boom"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<i32> = None;
+        let e = none.with_context(|| "missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+}

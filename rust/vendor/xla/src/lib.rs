@@ -1,0 +1,138 @@
+//! Offline stub of the `xla-rs` PJRT surface consumed by
+//! `sfm_screen::runtime`.
+//!
+//! The real crate links libxla/PJRT, which cannot be built in the offline
+//! environment. This stub type-checks the runtime module unchanged and
+//! reports the backend as unavailable: [`PjRtClient::cpu`] always errors,
+//! so `Engine::new` fails, `XlaScreener`/`AffinityExec` construction fails,
+//! and every caller takes its documented pure-rust fallback
+//! (`best_screener()` → `RustScreener`, affinity → direct loop).
+//!
+//! Swap the `[dependencies]` path entry for the real `xla` crate to enable
+//! the compiled-kernel path — no changes in `sfm_screen` are needed.
+
+use std::borrow::Borrow;
+
+/// Stub error carrying a human-readable reason.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const STUB_MSG: &str =
+    "xla backend not compiled in: offline stub; vendor the real xla-rs crate to enable PJRT";
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+/// Host literal (stub: never materialized — construction is only reachable
+/// after a successful client, which the stub never produces).
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 f64 literal.
+    pub fn vec1(_values: &[f64]) -> Literal {
+        Literal
+    }
+
+    /// Scalar f64 literal.
+    pub fn scalar(_value: f64) -> Literal {
+        Literal
+    }
+
+    /// Flatten a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to the host.
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host-literal arguments; per-device output buffers.
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client — unavailable in the offline stub.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    /// Compile a computation.
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.0.contains("offline stub"));
+        assert!(Literal::vec1(&[1.0]).to_vec::<f64>().is_err());
+    }
+}
