@@ -21,13 +21,18 @@ use sfm_screen::coordinator::metrics::{
     bench, fmt_duration, write_bench_json, BenchRecord, Summary,
 };
 use sfm_screen::coordinator::report::Table;
-use sfm_screen::lovasz::{greedy_base_vertex, greedy_base_vertex_ref, GreedyWorkspace};
+use sfm_screen::linalg::vecops::{argsort_desc, argsort_desc_into, argsort_desc_remap};
+use sfm_screen::linalg::{IncrementalCholesky, Mat};
+use sfm_screen::lovasz::{
+    greedy_base_vertex, greedy_base_vertex_ref, ContractionMap, GreedyWorkspace,
+};
 use sfm_screen::rng::Pcg64;
 use sfm_screen::screening::rules::RustScreener;
 use sfm_screen::screening::{RuleSet, ScreenInputs, Screener};
 use sfm_screen::solvers::minnorm::{MinNormOptions, MinNormPoint};
 use sfm_screen::solvers::pav::pav_nonincreasing_into;
 use sfm_screen::solvers::ProxSolver;
+use sfm_screen::submodular::scaled::ScaledFn;
 use sfm_screen::submodular::Submodular;
 use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
 use std::time::Duration;
@@ -103,6 +108,72 @@ fn main() -> anyhow::Result<()> {
         let (sum, _) = bench(3, 20, || solver.step(&sparse).gap);
         rows.push("minnorm-iter", p, &sum);
 
+        // Contraction restart (restart/* rows, schema in BENCHMARKS.md):
+        // each rep runs one IAES-style cycle — cold rebuild at full size,
+        // 5 major iterations, drop 20% of the elements, restart. The
+        // `warm` row projects the corral through the survivor map
+        // (`reset_mapped`); the `cold` row discards it (`set_reduction` +
+        // `reset`). The shared prefix is identical, so the row delta is
+        // the restart cost itself.
+        let kept_full: Vec<usize> = (0..p).collect();
+        let kept_small: Vec<usize> = (0..p).filter(|&i| i % 5 != 0).collect();
+        let mut scaled = ScaledFn::new(&sparse, &[], kept_full.clone());
+        let mut rsolver = MinNormPoint::new(&scaled, MinNormOptions::default(), None);
+        let w0 = vec![0.0; p];
+        let mut map = ContractionMap::new();
+        let mut w_surv: Vec<f64> = Vec::new();
+        let (sum, _) = bench(1, 10, || {
+            scaled.set_reduction(&[], &kept_full);
+            rsolver.reset(&scaled, &w0);
+            for _ in 0..5 {
+                rsolver.step(&scaled);
+            }
+            w_surv.clear();
+            w_surv.extend(kept_small.iter().map(|&i| rsolver.w()[i]));
+            scaled.contract(&[], &kept_small, &mut map);
+            rsolver.reset_mapped(&scaled, &w_surv, &map);
+            rsolver.gap()
+        });
+        rows.push("restart/warm", p, &sum);
+        let (sum, _) = bench(1, 10, || {
+            scaled.set_reduction(&[], &kept_full);
+            rsolver.reset(&scaled, &w0);
+            for _ in 0..5 {
+                rsolver.step(&scaled);
+            }
+            w_surv.clear();
+            w_surv.extend(kept_small.iter().map(|&i| rsolver.w()[i]));
+            scaled.set_reduction(&[], &kept_small);
+            rsolver.reset(&scaled, &w_surv);
+            rsolver.gap()
+        });
+        rows.push("restart/cold", p, &sum);
+
+        // Post-contraction greedy argsort: survivor remap + O(p) repair
+        // vs the full re-sort it replaces.
+        let w_old = rng.normal_vec(p);
+        let idx_old = argsort_desc(&w_old);
+        let mut new_of_old = vec![usize::MAX; p];
+        let mut w_new = Vec::new();
+        for (i, &x) in w_old.iter().enumerate() {
+            if i % 5 != 0 {
+                new_of_old[i] = w_new.len();
+                w_new.push(x);
+            }
+        }
+        let mut idx = idx_old.clone();
+        let (sum, _) = bench(3, 30, || {
+            idx.clone_from(&idx_old);
+            argsort_desc_remap(&w_new, &mut idx, &new_of_old);
+            idx[0]
+        });
+        rows.push("restart/argsort-remap", p, &sum);
+        let (sum, _) = bench(3, 30, || {
+            argsort_desc_into(&w_new, &mut idx);
+            idx[0]
+        });
+        rows.push("restart/argsort-full", p, &sum);
+
         // PAV refinement.
         let t = rng.normal_vec(p);
         let mut out = vec![0.0; p];
@@ -138,6 +209,47 @@ fn main() -> anyhow::Result<()> {
             sfm_screen::solvers::queyranne::queyranne(&f).minimum
         });
         rows.push("queyranne/sym-cut", p, &sum);
+    }
+
+    // Batched corral-Gram downdate (restart/chol-*): retain() compacting
+    // 12 evictions in one sweep vs 12 sequential remove() calls, at a
+    // representative corral size. Both reps clone the base factor, so the
+    // row delta is the downdate itself.
+    {
+        let m = 96usize;
+        let mut srng = Pcg64::seeded(4242);
+        let g = Mat::from_fn(m, m, |_, _| srng.normal());
+        let mut a = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                let mut s = 0.0;
+                for k in 0..m {
+                    s += g[(i, k)] * g[(j, k)];
+                }
+                a[(i, j)] = s + if i == j { m as f64 } else { 0.0 };
+            }
+        }
+        let mut base = IncrementalCholesky::with_capacity(m);
+        for i in 0..m {
+            let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            base.push(&cross, a[(i, i)], 0.0).unwrap();
+        }
+        let keep: Vec<usize> = (0..m).filter(|i| i % 8 != 0).collect();
+        let drop: Vec<usize> = (0..m).filter(|i| i % 8 == 0).collect();
+        let (sum, _) = bench(3, 30, || {
+            let mut c = base.clone();
+            c.retain(&keep);
+            c.dim()
+        });
+        rows.push("restart/chol-retain", m, &sum);
+        let (sum, _) = bench(3, 30, || {
+            let mut c = base.clone();
+            for &k in drop.iter().rev() {
+                c.remove(k);
+            }
+            c.dim()
+        });
+        rows.push("restart/chol-remove-seq", m, &sum);
     }
 
     // Gaussian-MI oracle (the paper-exact objective) at small p.

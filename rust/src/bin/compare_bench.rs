@@ -1,0 +1,155 @@
+//! Bench-trajectory comparator: diff two `BENCH_*.json` files and fail
+//! (exit 1) on any per-op median regression beyond a tolerance.
+//!
+//! ```sh
+//! compare_bench BASELINE.json NEW.json [--tol 0.10]
+//! ```
+//!
+//! Ops present in only one trajectory are ignored (adding or retiring a
+//! bench row is not a regression); everything else is matched on
+//! `(op, p)` and compared by `median_s`. CI wires this after the micro
+//! bench smoke run — see `.github/workflows/ci.yml` and BENCHMARKS.md.
+
+use anyhow::{Context, Result};
+use sfm_screen::coordinator::json::Json;
+use sfm_screen::coordinator::metrics::{
+    compare_bench_records, parse_bench_records, BenchRecord,
+};
+
+fn load(path: &str) -> Result<Vec<BenchRecord>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let json = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+    parse_bench_records(&json).with_context(|| format!("decoding {path}"))
+}
+
+fn run(baseline: &str, new: &str, tol: f64) -> Result<bool> {
+    let base = load(baseline)?;
+    let fresh = load(new)?;
+    let matched = fresh
+        .iter()
+        .filter(|n| base.iter().any(|b| b.op == n.op && b.p == n.p))
+        .count();
+    // Disjoint (op, p) sets mean the gate is comparing nothing — e.g. a
+    // baseline recorded at the pinned trajectory sizes vs a smoke run at
+    // SFM_BENCH_SIZES=64,128. That's a misconfiguration, not a pass.
+    if matched == 0 && !base.is_empty() && !fresh.is_empty() {
+        anyhow::bail!(
+            "no overlapping (op, p) rows between {baseline} and {new} — were the \
+             two trajectories recorded at different SFM_BENCH_SIZES?"
+        );
+    }
+    let regressions = compare_bench_records(&base, &fresh, tol);
+    println!(
+        "compare_bench: {} baseline rows, {} new rows, {} matched, tol {:.0}%",
+        base.len(),
+        fresh.len(),
+        matched,
+        tol * 100.0
+    );
+    for r in &regressions {
+        println!(
+            "REGRESSION {}@p={}: median {:.3e}s -> {:.3e}s ({:+.1}%)",
+            r.op,
+            r.p,
+            r.base_median_s,
+            r.new_median_s,
+            (r.ratio - 1.0) * 100.0
+        );
+    }
+    if regressions.is_empty() {
+        println!("compare_bench: OK — no median regression beyond the gate");
+    }
+    Ok(regressions.is_empty())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut tol = 0.10;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--tol" {
+            let v = it.next().map(|s| s.parse::<f64>());
+            match v {
+                Some(Ok(t)) if t >= 0.0 => tol = t,
+                _ => {
+                    eprintln!("compare_bench: --tol needs a non-negative number");
+                    std::process::exit(2);
+                }
+            }
+        } else {
+            paths.push(a.clone());
+        }
+    }
+    if paths.len() != 2 {
+        eprintln!("usage: compare_bench BASELINE.json NEW.json [--tol 0.10]");
+        std::process::exit(2);
+    }
+    match run(&paths[0], &paths[1], tol) {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("compare_bench: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use sfm_screen::coordinator::metrics::bench_records_to_json;
+
+    fn write_traj(dir: &std::path::Path, name: &str, medians: &[(&str, f64)]) -> String {
+        let records: Vec<BenchRecord> = medians
+            .iter()
+            .map(|&(op, m)| BenchRecord {
+                op: op.to_string(),
+                p: 256,
+                median_s: m,
+                min_s: m,
+                ops_per_s: 1.0 / m,
+            })
+            .collect();
+        let path = dir.join(name);
+        std::fs::write(&path, bench_records_to_json("micro", &records).to_string())
+            .unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn self_compare_passes_and_regression_fails() {
+        let dir = std::env::temp_dir().join("sfm_compare_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = write_traj(&dir, "base.json", &[("greedy/cut", 1e-3), ("pav", 2e-3)]);
+        let same = run(&base, &base, 0.10).unwrap();
+        assert!(same, "self-comparison must pass");
+        let slow = write_traj(&dir, "slow.json", &[("greedy/cut", 1.3e-3)]);
+        assert!(!run(&base, &slow, 0.10).unwrap(), "30% slowdown must fail");
+        let fast = write_traj(&dir, "fast.json", &[("greedy/cut", 0.7e-3)]);
+        assert!(run(&base, &fast, 0.10).unwrap(), "speedups must pass");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disjoint_trajectories_are_a_loud_error() {
+        // A baseline at different sizes matches nothing — that must fail
+        // the gate, not silently pass with 0 comparisons.
+        let dir = std::env::temp_dir().join("sfm_compare_bench_disjoint");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = write_traj(&dir, "base.json", &[("greedy/cut", 1e-3)]);
+        let other = write_traj(&dir, "other.json", &[("pav", 1e-3)]);
+        assert!(run(&base, &other, 0.10).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_input_is_an_error() {
+        let dir = std::env::temp_dir().join("sfm_compare_bench_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("bad.json");
+        std::fs::write(&bad, "{not json").unwrap();
+        assert!(run(bad.to_str().unwrap(), bad.to_str().unwrap(), 0.1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

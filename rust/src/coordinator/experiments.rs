@@ -123,6 +123,7 @@ impl BenchConfig {
             screener: self.screener(),
             record_history: true,
             min_reduction_frac: self.min_reduction_frac,
+            ..Default::default()
         })
     }
 

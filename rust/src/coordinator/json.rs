@@ -1,8 +1,10 @@
-//! Minimal JSON emission (no serde offline): enough to export reports and
-//! bench results for downstream tooling, with correct string escaping and
-//! float formatting.
+//! Minimal JSON emission *and parsing* (no serde offline): enough to
+//! export reports and bench results for downstream tooling — with correct
+//! string escaping and float formatting — and to read `BENCH_*.json`
+//! trajectories back for the regression comparator.
 
 use crate::screening::iaes::IaesReport;
+use anyhow::{bail, Result};
 use std::fmt::Write as _;
 
 /// A JSON value builder.
@@ -26,6 +28,63 @@ impl Json {
     /// Object constructor from pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Object field lookup (first match; `None` for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The number inside a `Num`. `Null` — which is how the emitter
+    /// serializes NaN/inf — reads back as NaN so numeric fields
+    /// round-trip without erroring; everything else is `None`.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    /// The string inside a `Str`, else `None`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The bool inside a `Bool`, else `None`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The items of an `Arr`, else `None`.
+    pub fn as_array(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (recursive descent over the subset this
+    /// module emits: null/bool/number/string/array/object, `\uXXXX`
+    /// escapes included). Rejects trailing garbage.
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(value)
     }
 
     /// Serialize to a compact string.
@@ -94,6 +153,158 @@ impl Json {
     }
 }
 
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected `{lit}` at byte {}", *pos);
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'n') => expect(b, pos, "null").map(|()| Json::Null),
+        Some(b't') => expect(b, pos, "true").map(|()| Json::Bool(true)),
+        Some(b'f') => expect(b, pos, "false").map(|()| Json::Bool(false)),
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected `,` or `]` at byte {}", *pos),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(pairs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                let value = parse_value(b, pos)?;
+                pairs.push((key, value));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(pairs));
+                    }
+                    _ => bail!("expected `,` or `}}` at byte {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at byte {}", *pos);
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => bail!("unterminated string"),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex)
+                                .map_err(|_| anyhow::anyhow!("bad \\u escape"))?,
+                            16,
+                        )
+                        .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or_else(|| anyhow::anyhow!("bad \\u code point"))?,
+                        );
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at byte {}", *pos),
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (multi-byte sequences copied
+                // verbatim).
+                let start = *pos;
+                *pos += 1;
+                while *pos < b.len() && b[*pos] & 0xC0 == 0x80 {
+                    *pos += 1;
+                }
+                out.push_str(
+                    std::str::from_utf8(&b[start..*pos])
+                        .map_err(|_| anyhow::anyhow!("invalid UTF-8 in string"))?,
+                );
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    if *pos == start {
+        bail!("expected a value at byte {start}");
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).expect("ascii number");
+    let x: f64 = text
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad number `{text}` at byte {start}"))?;
+    Ok(Json::Num(x))
+}
+
 /// Export an [`IaesReport`] as JSON (history omitted unless `with_history`).
 pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
     let mut pairs = vec![
@@ -107,6 +318,7 @@ pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
         ("screened_active", Json::Num(report.screened_active as f64)),
         ("screened_inactive", Json::Num(report.screened_inactive as f64)),
         ("emptied", Json::Bool(report.emptied)),
+        ("converged", Json::Bool(report.converged)),
         ("solver_time_s", Json::Num(report.solver_time.as_secs_f64())),
         ("screen_time_s", Json::Num(report.screen_time.as_secs_f64())),
         (
@@ -184,9 +396,59 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"minimum\""));
         assert!(j.contains("\"history\""));
+        assert!(j.contains("\"converged\":true"));
         // Balanced braces (cheap well-formedness check).
         let opens = j.matches('{').count();
         let closes = j.matches('}').count();
         assert_eq!(opens, closes);
+        // And the emitted document parses back into the same shape.
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("converged").and_then(Json::as_bool), Some(true));
+        assert!(parsed.get("minimum").and_then(Json::as_num).is_some());
+        assert!(parsed.get("history").and_then(Json::as_array).is_some());
+    }
+
+    #[test]
+    fn parse_scalars_and_structure() {
+        assert!(matches!(Json::parse("null").unwrap(), Json::Null));
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("-3.5e2").unwrap().as_num(), Some(-350.0));
+        assert_eq!(
+            Json::parse("\"a\\\"b\\n\\u0041\"").unwrap().as_str(),
+            Some("a\"b\nA")
+        );
+        let v = Json::parse(r#"{ "xs": [1, 2.5, null], "name": "t1" }"#).unwrap();
+        let xs = v.get("xs").and_then(Json::as_array).unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[1].as_num(), Some(2.5));
+        assert!(matches!(xs[2], Json::Null));
+        // Null (serialized NaN/inf) reads back as NaN, not an error.
+        assert!(xs[2].as_num().is_some_and(f64::is_nan));
+        assert_eq!(v.get("name").and_then(Json::as_str), Some("t1"));
+        assert!(v.get("missing").is_none());
+        // Empty containers and unicode pass-through.
+        assert!(Json::parse("[]").unwrap().as_array().unwrap().is_empty());
+        assert!(matches!(Json::parse("{}").unwrap(), Json::Obj(ref p) if p.is_empty()));
+        assert_eq!(Json::parse("\"é←\"").unwrap().as_str(), Some("é←"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in ["", "{", "[1,", "tru", "\"open", "{\"a\" 1}", "1 2", "[1] x"] {
+            assert!(Json::parse(bad).is_err(), "`{bad}` should not parse");
+        }
+    }
+
+    #[test]
+    fn emit_parse_roundtrip_is_stable() {
+        let j = Json::obj(vec![
+            ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(0.25)])),
+            ("s", Json::Str("q\"\\\n".into())),
+            ("flag", Json::Bool(false)),
+            ("none", Json::Null),
+        ]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.to_string(), text);
     }
 }

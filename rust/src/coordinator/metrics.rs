@@ -63,8 +63,17 @@ impl Summary {
     /// Summarize a set of durations. Panics on empty input.
     pub fn of(samples: &[Duration]) -> Self {
         assert!(!samples.is_empty());
-        let mut secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
-        secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        Self::of_secs(secs)
+    }
+
+    /// Summarize raw seconds. Degenerate samples (NaN from a downstream
+    /// division, infinities) are ordered by `f64::total_cmp` — NaN sorts
+    /// last — instead of panicking mid-report the way the old
+    /// `partial_cmp(..).unwrap()` comparator did. Panics on empty input.
+    pub fn of_secs(mut secs: Vec<f64>) -> Self {
+        assert!(!secs.is_empty());
+        secs.sort_by(f64::total_cmp);
         let n = secs.len();
         let mean = secs.iter().sum::<f64>() / n as f64;
         let median = if n % 2 == 1 {
@@ -192,6 +201,84 @@ pub fn write_bench_json(name: &str, records: &[BenchRecord]) -> Result<PathBuf> 
     Ok(path)
 }
 
+/// Parse the records of a `BENCH_*.json` trajectory (see BENCHMARKS.md)
+/// back into [`BenchRecord`]s — the read half of the regression
+/// comparator.
+pub fn parse_bench_records(json: &Json) -> Result<Vec<BenchRecord>> {
+    let records = json
+        .get("records")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow::anyhow!("missing `records` array"))?;
+    let mut out = Vec::with_capacity(records.len());
+    for (i, rec) in records.iter().enumerate() {
+        let op = rec
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("record {i}: missing `op`"))?;
+        let num = |key: &str| -> Result<f64> {
+            rec.get(key)
+                .and_then(Json::as_num)
+                .ok_or_else(|| anyhow::anyhow!("record {i} ({op}): missing `{key}`"))
+        };
+        let median_s = num("median_s")?;
+        out.push(BenchRecord {
+            op: op.to_string(),
+            p: num("p")? as usize,
+            median_s,
+            min_s: num("min_s")?,
+            ops_per_s: num("ops_per_s")?,
+        });
+    }
+    Ok(out)
+}
+
+/// One op that regressed between two bench trajectories.
+#[derive(Clone, Debug)]
+pub struct BenchRegression {
+    /// Operation id (`op@p`).
+    pub op: String,
+    /// Problem size.
+    pub p: usize,
+    /// Baseline median seconds.
+    pub base_median_s: f64,
+    /// New median seconds.
+    pub new_median_s: f64,
+    /// `new / base` ratio (> 1 is slower).
+    pub ratio: f64,
+}
+
+/// Diff two bench trajectories: every `(op, p)` present in both is
+/// compared by median, and any slowdown beyond `1 + tol_frac` (e.g.
+/// `0.10` for the CI gate's 10%) is reported. Ops present in only one
+/// trajectory are ignored — adding or retiring a bench row is not a
+/// regression.
+pub fn compare_bench_records(
+    base: &[BenchRecord],
+    new: &[BenchRecord],
+    tol_frac: f64,
+) -> Vec<BenchRegression> {
+    let mut regressions = Vec::new();
+    for b in base {
+        let Some(n) = new.iter().find(|n| n.op == b.op && n.p == b.p) else {
+            continue;
+        };
+        if !(b.median_s.is_finite() && n.median_s.is_finite()) || b.median_s <= 0.0 {
+            continue;
+        }
+        let ratio = n.median_s / b.median_s;
+        if ratio > 1.0 + tol_frac {
+            regressions.push(BenchRegression {
+                op: b.op.clone(),
+                p: b.p,
+                base_median_s: b.median_s,
+                new_median_s: n.median_s,
+                ratio,
+            });
+        }
+    }
+    regressions
+}
+
 /// Human-readable duration (adaptive unit).
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -232,6 +319,69 @@ mod tests {
         assert!((s.min - 0.001).abs() < 1e-9);
         assert!((s.max - 0.1).abs() < 1e-9);
         assert!(s.mean > s.median, "outlier pulls mean up");
+    }
+
+    #[test]
+    fn summary_of_secs_survives_degenerate_samples() {
+        // NaN (e.g. a zero-duration rep divided downstream) must not
+        // panic the sort; total_cmp sends it to the tail.
+        let s = Summary::of_secs(vec![0.002, f64::NAN, 0.001, 0.003]);
+        assert_eq!(s.n, 4);
+        assert!((s.min - 0.001).abs() < 1e-12);
+        assert!(s.max.is_nan(), "NaN must sort last into max");
+        // Median of [0.001, 0.002, 0.003, NaN] = avg of slots 1,2.
+        assert!((s.median - 0.0025).abs() < 1e-12);
+        // All-finite behaviour is unchanged.
+        let s = Summary::of_secs(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        // Signed zeros and infinities order totally as well.
+        let s = Summary::of_secs(vec![f64::INFINITY, -0.0, 0.0]);
+        assert_eq!(s.min, -0.0);
+        assert!(s.max.is_infinite());
+    }
+
+    fn rec(op: &str, p: usize, median: f64) -> BenchRecord {
+        BenchRecord {
+            op: op.into(),
+            p,
+            median_s: median,
+            min_s: median * 0.9,
+            ops_per_s: 1.0 / median,
+        }
+    }
+
+    #[test]
+    fn comparator_flags_only_real_regressions() {
+        let base = vec![rec("greedy/cut", 256, 1e-3), rec("pav", 256, 2e-3)];
+        let new = vec![
+            rec("greedy/cut", 256, 1.05e-3), // +5%: within the gate
+            rec("pav", 256, 2.4e-3),         // +20%: regression
+            rec("restart/warm", 256, 1e-4),  // new row: ignored
+        ];
+        let regs = compare_bench_records(&base, &new, 0.10);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].op, "pav");
+        assert!((regs[0].ratio - 1.2).abs() < 1e-9);
+        // Identical trajectories never regress.
+        assert!(compare_bench_records(&base, &base, 0.10).is_empty());
+        // Different p never matches.
+        let other = vec![rec("pav", 512, 9.0)];
+        assert!(compare_bench_records(&base, &other, 0.10).is_empty());
+    }
+
+    #[test]
+    fn comparator_roundtrips_through_json() {
+        let records = vec![rec("greedy/cut", 4096, 1.2e-4), rec("minnorm-iter", 4096, 2.5e-4)];
+        let text = bench_records_to_json("micro", &records).to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let back = parse_bench_records(&parsed).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].op, "greedy/cut");
+        assert_eq!(back[0].p, 4096);
+        assert!((back[0].median_s - 1.2e-4).abs() < 1e-18);
+        assert!(compare_bench_records(&records, &back, 0.0).is_empty());
     }
 
     #[test]

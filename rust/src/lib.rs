@@ -54,7 +54,10 @@ pub mod workloads;
 
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
-    pub use crate::lovasz::{greedy_base_vertex, lovasz_value, GreedyWorkspace};
+    pub use crate::lovasz::{
+        greedy_base_vertex, lovasz_value, vertex_from_order, ContractionMap,
+        GreedyWorkspace,
+    };
     pub use crate::screening::iaes::{
         solve_sfm_with_screening, IaesEngine, IaesOptions, IaesReport,
     };

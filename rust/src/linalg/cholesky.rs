@@ -101,6 +101,12 @@ pub struct IncrementalCholesky {
     data: Vec<f64>,
     /// Current dimension.
     n: usize,
+    /// Scratch for [`retain`](Self::retain): the staged row-deleted
+    /// trapezoid (reused across calls — batched downdates stay
+    /// allocation-free at the high-water mark).
+    work: Vec<f64>,
+    /// Scratch: staged-row offsets, parallel to `work`.
+    work_offs: Vec<usize>,
 }
 
 /// Offset of packed row `i`.
@@ -117,7 +123,10 @@ impl IncrementalCholesky {
 
     /// Empty factor with room for dimension `dim` without reallocating.
     pub fn with_capacity(dim: usize) -> Self {
-        IncrementalCholesky { data: Vec::with_capacity(off(dim + 1)), n: 0 }
+        IncrementalCholesky {
+            data: Vec::with_capacity(off(dim + 1)),
+            ..Default::default()
+        }
     }
 
     /// Current dimension.
@@ -223,6 +232,81 @@ impl IncrementalCholesky {
             write += j + 1;
         }
         self.data.truncate(write);
+        self.n = m;
+    }
+
+    /// Batched downdate: keep only the rows/columns at the (ascending,
+    /// unique) indices in `keep` — equivalent to calling
+    /// [`remove`](Self::remove) for every dropped index, but in **one**
+    /// compaction sweep instead of one O(n²) restructuring per eviction.
+    ///
+    /// Deleting rows of `L` leaves an m×n lower-trapezoidal `L'` with
+    /// `L' L'ᵀ` still equal to the kept principal submatrix; a single
+    /// right-multiplied Givens sweep re-triangularizes it (`L'' = L' Q`),
+    /// touching each surviving row once per excess column. The min-norm
+    /// minor cycles use this for batch corral evictions, and the
+    /// projected-corral IAES restart uses it to drop whole groups of
+    /// atoms at once. Allocation-free once the internal scratch reaches
+    /// its high-water size.
+    pub fn retain(&mut self, keep: &[usize]) {
+        let n = self.n;
+        let m = keep.len();
+        if m == 0 {
+            self.data.clear();
+            self.n = 0;
+            return;
+        }
+        debug_assert!(keep.windows(2).all(|w| w[0] < w[1]), "keep not ascending");
+        assert!(*keep.last().unwrap() < n, "keep index out of range");
+        if m == n {
+            return; // nothing removed
+        }
+        // Stage the kept rows with their full original column spans:
+        // work row j = L[keep[j]][0..=keep[j]].
+        self.work.clear();
+        self.work_offs.clear();
+        for &r in keep {
+            self.work_offs.push(self.work.len());
+            self.work.extend_from_slice(&self.data[off(r)..off(r) + r + 1]);
+        }
+        // Re-triangularize: for each row j, rotate column pairs (j, c) to
+        // fold the excess entries c = j+1..=keep[j] into column j. Rows
+        // above j are already reduced (support ≤ their own index < j), so
+        // rotations only touch rows j..m.
+        for j in 0..m {
+            let end = keep[j];
+            for c in (j + 1)..=end {
+                let oj = self.work_offs[j];
+                let a = self.work[oj + j];
+                let b = self.work[oj + c];
+                if b == 0.0 {
+                    continue;
+                }
+                let r = (a * a + b * b).sqrt();
+                let (cos, sin) = if r == 0.0 { (1.0, 0.0) } else { (a / r, b / r) };
+                for i in j..m {
+                    let o = self.work_offs[i];
+                    let a = self.work[o + j];
+                    let b = self.work[o + c];
+                    self.work[o + j] = cos * a + sin * b;
+                    self.work[o + c] = -sin * a + cos * b;
+                }
+                self.work[oj + c] = 0.0; // exact zero by construction
+            }
+            // Keep the diagonal positive (Givens may flip sign).
+            if self.work[self.work_offs[j] + j] < 0.0 {
+                for i in j..m {
+                    let o = self.work_offs[i];
+                    self.work[o + j] = -self.work[o + j];
+                }
+            }
+        }
+        // Write back packed: final row j keeps entries 0..=j.
+        self.data.clear();
+        for j in 0..m {
+            let o = self.work_offs[j];
+            self.data.extend_from_slice(&self.work[o..o + j + 1]);
+        }
         self.n = m;
     }
 
@@ -390,6 +474,120 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn factor_of(a: &Mat) -> IncrementalCholesky {
+        let mut inc = IncrementalCholesky::new();
+        for i in 0..a.rows {
+            let cross: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            inc.push(&cross, a[(i, i)], 0.0).unwrap();
+        }
+        inc
+    }
+
+    #[test]
+    fn retain_matches_kept_submatrix() {
+        let n = 10;
+        let a = random_spd(n, 21);
+        for keep in [
+            vec![0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9], // no-op
+            vec![0, 2, 4, 6, 8],
+            vec![1, 3, 9],
+            vec![5],
+            vec![0, 1, 2, 7, 8, 9],
+        ] {
+            let mut inc = factor_of(&a);
+            inc.retain(&keep);
+            assert_eq!(inc.dim(), keep.len());
+            let recon = inc.reconstruct();
+            for (ii, &i) in keep.iter().enumerate() {
+                for (jj, &j) in keep.iter().enumerate() {
+                    assert!(
+                        (recon[(ii, jj)] - a[(i, j)]).abs() < 1e-8,
+                        "keep {keep:?}: A'[{ii},{jj}] {} vs {}",
+                        recon[(ii, jj)],
+                        a[(i, j)]
+                    );
+                }
+            }
+            // Positive diagonal (sign fix applied).
+            for j in 0..inc.dim() {
+                assert!(inc.l(j, j) > 0.0, "non-positive diagonal");
+            }
+        }
+    }
+
+    #[test]
+    fn retain_empty_resets() {
+        let a = random_spd(5, 22);
+        let mut inc = factor_of(&a);
+        inc.retain(&[]);
+        assert_eq!(inc.dim(), 0);
+        // Still usable afterwards.
+        inc.push(&[], 4.0, 0.0).unwrap();
+        assert_eq!(inc.dim(), 1);
+        assert!((inc.l(0, 0) - 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn retain_agrees_with_sequential_removes() {
+        let n = 12;
+        let a = random_spd(n, 23);
+        let mut rng = Pcg64::seeded(404);
+        for _trial in 0..20 {
+            let keep: Vec<usize> = (0..n).filter(|_| rng.bernoulli(0.6)).collect();
+            if keep.is_empty() {
+                continue;
+            }
+            let mut batched = factor_of(&a);
+            batched.retain(&keep);
+            let mut seq = factor_of(&a);
+            // Remove dropped indices from the highest down so earlier
+            // indices stay valid.
+            for k in (0..n).rev() {
+                if !keep.contains(&k) {
+                    seq.remove(k);
+                }
+            }
+            assert_eq!(batched.dim(), seq.dim());
+            let rb = batched.reconstruct();
+            let rs = seq.reconstruct();
+            for i in 0..batched.dim() {
+                for j in 0..batched.dim() {
+                    assert!(
+                        (rb[(i, j)] - rs[(i, j)]).abs() < 1e-7,
+                        "batched vs sequential at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retain_then_solve_and_push_stay_consistent() {
+        let n = 9;
+        let a = random_spd(n, 24);
+        let keep = [0usize, 3, 4, 7];
+        let mut inc = factor_of(&a);
+        inc.retain(&keep);
+        // Solve against the kept submatrix.
+        let m = keep.len();
+        let mut sub = Mat::zeros(m, m);
+        for (ii, &i) in keep.iter().enumerate() {
+            for (jj, &j) in keep.iter().enumerate() {
+                sub[(ii, jj)] = a[(i, j)];
+            }
+        }
+        let x_true: Vec<f64> = (0..m).map(|i| (i as f64) - 1.0).collect();
+        let b = sub.matvec(&x_true);
+        let x = inc.solve(&b);
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-8);
+        }
+        // Push after retain keeps working.
+        let cross = vec![0.1; m];
+        inc.push(&cross, 10.0, 0.0).unwrap();
+        assert_eq!(inc.dim(), m + 1);
     }
 
     #[test]

@@ -143,6 +143,25 @@ impl CorralMat {
         &self.data[i * self.stride..(i + 1) * self.stride]
     }
 
+    /// Mutably borrow row `i` (the contraction-restart path regenerates
+    /// projected vertices in place).
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// Shrink the row length to `new_stride`, keeping the row *count*.
+    /// Row contents are left unspecified (the caller overwrites every row
+    /// right after — this is the projected-corral restart, which
+    /// regenerates each vertex at the contracted size); capacity is
+    /// retained, so no allocation ever happens here.
+    pub fn reshape_rows(&mut self, new_stride: usize) {
+        assert!(new_stride <= self.stride, "reshape_rows can only shrink");
+        self.stride = new_stride;
+        self.data.truncate(self.rows * new_stride);
+    }
+
     /// Append a row (copied into the flat storage; amortized
     /// allocation-free once the high-water capacity is reached).
     pub fn push(&mut self, v: &[f64]) {
@@ -187,6 +206,116 @@ impl CorralMat {
         // `max(1)`: chunks_exact panics on 0; a default-constructed
         // (stride 0) matrix has no data and yields nothing either way.
         self.data.chunks_exact(self.stride.max(1))
+    }
+}
+
+/// Flat row-major storage for a dynamically sized set of fixed-length
+/// *index* rows — the generating greedy permutation of each min-norm
+/// corral vertex (and, structurally, any per-atom id list).
+///
+/// Mirrors [`CorralMat`]'s push/remove/compact/reset contract so the two
+/// stay in lockstep as parallel arrays, and adds [`contract`]: rewriting
+/// every stored permutation through an IAES survivor map in one in-place
+/// sweep, which is what lets a contraction *project* the corral instead
+/// of discarding it.
+///
+/// [`contract`]: IndexMat::contract
+#[derive(Clone, Debug, Default)]
+pub struct IndexMat {
+    data: Vec<usize>,
+    stride: usize,
+    rows: usize,
+}
+
+impl IndexMat {
+    /// Empty matrix with rows of length `stride`.
+    pub fn new(stride: usize) -> Self {
+        IndexMat { data: Vec::new(), stride, rows: 0 }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// True when there are no rows.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Row length.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[usize] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// Append a row (amortized allocation-free at the high-water mark).
+    pub fn push(&mut self, ids: &[usize]) {
+        assert_eq!(ids.len(), self.stride, "row length mismatch");
+        self.data.extend_from_slice(ids);
+        self.rows += 1;
+    }
+
+    /// Keep only the rows at the (ascending, unique) indices in `keep`.
+    pub fn compact(&mut self, keep: &[usize]) {
+        let s = self.stride;
+        for (w, &r) in keep.iter().enumerate() {
+            debug_assert!(w <= r && r < self.rows);
+            if w != r {
+                self.data.copy_within(r * s..(r + 1) * s, w * s);
+            }
+        }
+        self.rows = keep.len();
+        self.data.truncate(self.rows * s);
+    }
+
+    /// Drop all rows and (if needed) change the row length; capacity is
+    /// retained for reuse across solver warm-restarts.
+    pub fn reset(&mut self, stride: usize) {
+        self.data.clear();
+        self.stride = stride;
+        self.rows = 0;
+    }
+
+    /// Rewrite every row through an IAES survivor map: entries with
+    /// `new_of_old[e] == usize::MAX` are dropped, the rest renumbered, in
+    /// one in-place front-to-back sweep (write never overtakes read since
+    /// `new_stride <= stride`). Every row must be a full permutation of
+    /// the old ground set, so each contracts to exactly `new_stride`
+    /// surviving entries — the induced greedy order on the contracted
+    /// problem.
+    pub fn contract(&mut self, new_of_old: &[usize], new_stride: usize) {
+        assert_eq!(self.stride, new_of_old.len(), "map/stride mismatch");
+        assert!(new_stride <= self.stride);
+        let old_stride = self.stride;
+        let mut write = 0usize;
+        for r in 0..self.rows {
+            let start = r * old_stride;
+            let row_write = write;
+            for k in 0..old_stride {
+                let mapped = new_of_old[self.data[start + k]];
+                if mapped != usize::MAX {
+                    self.data[write] = mapped;
+                    write += 1;
+                }
+            }
+            debug_assert_eq!(
+                write - row_write,
+                new_stride,
+                "stored order was not a permutation of the old ground set"
+            );
+        }
+        self.stride = new_stride;
+        self.data.truncate(self.rows * new_stride);
     }
 }
 
@@ -251,6 +380,46 @@ mod tests {
         assert_eq!(m.len(), 0);
         m.push(&[1.0, 2.0]);
         assert_eq!(m.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn corral_mat_row_mut_and_reshape() {
+        let mut m = CorralMat::new(4);
+        m.push(&[1.0, 2.0, 3.0, 4.0]);
+        m.push(&[5.0, 6.0, 7.0, 8.0]);
+        m.row_mut(1)[0] = -5.0;
+        assert_eq!(m.row(1), &[-5.0, 6.0, 7.0, 8.0]);
+        m.reshape_rows(2);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.stride(), 2);
+        m.row_mut(0).copy_from_slice(&[9.0, 10.0]);
+        m.row_mut(1).copy_from_slice(&[11.0, 12.0]);
+        assert_eq!(m.row(0), &[9.0, 10.0]);
+        assert_eq!(m.row(1), &[11.0, 12.0]);
+    }
+
+    #[test]
+    fn index_mat_push_compact_contract() {
+        let mut m = IndexMat::new(5);
+        assert!(m.is_empty());
+        m.push(&[4, 1, 0, 3, 2]);
+        m.push(&[0, 1, 2, 3, 4]);
+        m.push(&[2, 3, 4, 0, 1]);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.row(0), &[4, 1, 0, 3, 2]);
+        m.compact(&[0, 2]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.row(1), &[2, 3, 4, 0, 1]);
+        // Contract: drop old elements 1 and 3 (survivors 0→0, 2→1, 4→2).
+        let map = [0, usize::MAX, 1, usize::MAX, 2];
+        m.contract(&map, 3);
+        assert_eq!(m.stride(), 3);
+        assert_eq!(m.row(0), &[2, 0, 1]); // from [4,1,0,3,2]
+        assert_eq!(m.row(1), &[1, 2, 0]); // from [2,3,4,0,1]
+        m.reset(2);
+        assert!(m.is_empty());
+        m.push(&[1, 0]);
+        assert_eq!(m.row(0), &[1, 0]);
     }
 
     #[test]

@@ -139,6 +139,34 @@ pub fn argsort_desc_into(w: &[f64], idx: &mut Vec<usize>) {
     idx.sort_unstable_by_key(|&i| desc_rank(w, i));
 }
 
+/// Budget-bounded insertion repair of an almost-sorted permutation:
+/// O(n + inversions), bailing out once the shift work exceeds ~4 sweeps
+/// (a disordered input would otherwise degrade to O(n²)). Returns `true`
+/// when `idx` is the exact deterministic greedy order on exit, `false`
+/// when the budget tripped (`idx` is left a valid permutation either
+/// way, so the caller can fall back to the full sort).
+fn insertion_repair(w: &[f64], idx: &mut [usize]) -> bool {
+    let n = idx.len();
+    let budget = 4 * n + 16;
+    let mut work = 0usize;
+    for t in 1..n {
+        let cur = idx[t];
+        let rank_cur = desc_rank(w, cur);
+        let mut s = t;
+        while s > 0 && desc_rank(w, idx[s - 1]) > rank_cur {
+            idx[s] = idx[s - 1];
+            s -= 1;
+            work += 1;
+            if work > budget {
+                idx[s] = cur; // restore the permutation for the caller
+                return false;
+            }
+        }
+        idx[s] = cur;
+    }
+    true
+}
+
 /// Descending argsort that *reuses* the previous permutation in `idx`.
 ///
 /// Between consecutive solver major iterations the direction vector moves
@@ -151,35 +179,72 @@ pub fn argsort_desc_into(w: &[f64], idx: &mut Vec<usize>) {
 /// greedy order (descending by value, ties ascending by index): both
 /// paths sort by the same total order, so which path ran is unobservable.
 ///
+/// Returns `true` when the warm repair sufficed and `false` when a full
+/// sort ran (solver workspaces count the latter for diagnostics).
+///
 /// `idx` must be a permutation of `0..w.len()` whenever its length
 /// matches (it always is when the buffer is only written by this function
 /// or [`argsort_desc_into`]).
-pub fn argsort_desc_adaptive(w: &[f64], idx: &mut Vec<usize>) {
-    let n = w.len();
-    if idx.len() != n {
+pub fn argsort_desc_adaptive(w: &[f64], idx: &mut Vec<usize>) -> bool {
+    if idx.len() != w.len() {
         argsort_desc_into(w, idx);
-        return;
+        return false;
     }
-    // Insertion repair: cheap when nearly sorted; bail to the full sort
-    // once the shift work exceeds ~4 sweeps (a disordered input would
-    // otherwise degrade to O(n²)).
-    let budget = 4 * n + 16;
-    let mut work = 0usize;
-    for t in 1..n {
-        let cur = idx[t];
-        let rank_cur = desc_rank(w, cur);
-        let mut s = t;
-        while s > 0 && desc_rank(w, idx[s - 1]) > rank_cur {
-            idx[s] = idx[s - 1];
-            s -= 1;
-            work += 1;
-            if work > budget {
-                idx[s] = cur; // restore the permutation, then full sort
-                argsort_desc_into(w, idx);
-                return;
-            }
+    if insertion_repair(w, idx) {
+        true
+    } else {
+        argsort_desc_into(w, idx);
+        false
+    }
+}
+
+/// Rewrite a stale index buffer through a survivor map in place:
+/// entries whose `new_of_old` slot is `usize::MAX` (removed) are dropped,
+/// surviving entries are replaced by their new indices, and relative
+/// order is preserved. The filtering is O(len) and allocation-free.
+pub fn project_indices(idx: &mut Vec<usize>, new_of_old: &[usize]) {
+    let mut write = 0usize;
+    for read in 0..idx.len() {
+        let mapped = new_of_old[idx[read]];
+        if mapped != usize::MAX {
+            idx[write] = mapped;
+            write += 1;
         }
-        idx[s] = cur;
+    }
+    idx.truncate(write);
+}
+
+/// Descending argsort warm-started through a ground-set contraction.
+///
+/// `idx` holds the greedy permutation of the *pre-contraction* vector
+/// (length `new_of_old.len()`); `new_of_old[i]` gives element `i`'s index
+/// in the contracted problem, or `usize::MAX` if it was removed. Because
+/// the surviving elements keep their values and their relative ranks, the
+/// survivors of the old order — mapped to new indices — are already the
+/// sorted order of `w` up to tie-index drift, so an insertion repair
+/// finishes the job in O(p) instead of a full O(p log p) re-sort (the
+/// length-mismatch cold path this replaces).
+///
+/// Falls back to [`argsort_desc_into`] when the lengths don't line up or
+/// the repair budget trips; like [`argsort_desc_adaptive`], the result is
+/// always the unique deterministic greedy order, so which path ran is
+/// unobservable bit for bit. Returns `true` iff the remap fast path
+/// completed without a full sort.
+pub fn argsort_desc_remap(w: &[f64], idx: &mut Vec<usize>, new_of_old: &[usize]) -> bool {
+    if idx.len() != new_of_old.len() {
+        argsort_desc_into(w, idx);
+        return false;
+    }
+    project_indices(idx, new_of_old);
+    if idx.len() != w.len() {
+        argsort_desc_into(w, idx);
+        return false;
+    }
+    if insertion_repair(w, idx) {
+        true
+    } else {
+        argsort_desc_into(w, idx);
+        false
     }
 }
 
@@ -286,5 +351,92 @@ mod tests {
     #[test]
     fn max_abs_diff_works() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 1.0]), 1.0);
+    }
+
+    /// Drop every element of `w_old` whose index is in `drop`, returning
+    /// the contracted vector and the old→new survivor map.
+    fn contract_vec(w_old: &[f64], drop: &[usize]) -> (Vec<f64>, Vec<usize>) {
+        let mut w_new = Vec::new();
+        let mut map = vec![usize::MAX; w_old.len()];
+        for (i, &x) in w_old.iter().enumerate() {
+            if !drop.contains(&i) {
+                map[i] = w_new.len();
+                w_new.push(x);
+            }
+        }
+        (w_new, map)
+    }
+
+    #[test]
+    fn project_indices_filters_and_renumbers() {
+        let map = [0usize, usize::MAX, 1, usize::MAX, 2];
+        let mut idx = vec![4, 1, 0, 3, 2];
+        project_indices(&mut idx, &map);
+        assert_eq!(idx, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn remap_takes_fast_path_after_contraction() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(2718);
+        for case in 0..100 {
+            let n = 5 + rng.below(120);
+            let w_old = rng.normal_vec(n);
+            let mut idx = argsort_desc(&w_old);
+            // Drop a random ~25% of the elements.
+            let drop: Vec<usize> = (0..n).filter(|_| rng.bernoulli(0.25)).collect();
+            if drop.len() == n {
+                continue;
+            }
+            let (w_new, map) = contract_vec(&w_old, &drop);
+            let fast = argsort_desc_remap(&w_new, &mut idx, &map);
+            assert!(fast, "case {case}: remap fell back to a full sort");
+            assert_eq!(idx, argsort_desc(&w_new), "case {case}");
+        }
+    }
+
+    #[test]
+    fn remap_fast_path_survives_ties() {
+        // Survivors keep relative ascending-index order inside value ties,
+        // so the repair sees them already tie-broken correctly.
+        let w_old = [2.0, 1.0, 2.0, 1.0, 2.0, 0.5];
+        let mut idx = argsort_desc(&w_old); // [0,2,4,1,3,5]
+        let (w_new, map) = contract_vec(&w_old, &[2]);
+        assert!(argsort_desc_remap(&w_new, &mut idx, &map));
+        assert_eq!(idx, argsort_desc(&w_new));
+    }
+
+    #[test]
+    fn remap_falls_back_on_length_mismatch() {
+        // Stale buffer from an unrelated problem: must cold-sort, exactly.
+        let w_new = [3.0, 1.0, 2.0];
+        let map = [0usize, 1, 2, usize::MAX]; // wrong old length vs idx
+        let mut idx = vec![0, 1];
+        assert!(!argsort_desc_remap(&w_new, &mut idx, &map));
+        assert_eq!(idx, argsort_desc(&w_new));
+    }
+
+    #[test]
+    fn remap_falls_back_when_survivor_count_disagrees() {
+        // idx is not a full permutation of the old ground set (defensive):
+        // the mapped length misses w.len() and the full sort must run.
+        let w_new = [1.0, -1.0];
+        let map = [0usize, usize::MAX, 1];
+        let mut idx_bad = vec![1, 1, 1]; // every entry maps to "removed"
+        assert!(!argsort_desc_remap(&w_new, &mut idx_bad, &map));
+        assert_eq!(idx_bad, argsort_desc(&w_new));
+        // A well-formed permutation still takes the fast path.
+        let mut idx = vec![0, 2, 1];
+        assert!(argsort_desc_remap(&w_new, &mut idx, &map));
+        assert_eq!(idx, argsort_desc(&w_new));
+    }
+
+    #[test]
+    fn adaptive_reports_path_taken() {
+        let w = [1.0, 3.0, 2.0];
+        let mut idx = Vec::new();
+        assert!(!argsort_desc_adaptive(&w, &mut idx), "cold path must report");
+        assert!(argsort_desc_adaptive(&w, &mut idx), "warm repair must report");
+        assert_eq!(idx, argsort_desc(&w));
     }
 }

@@ -9,8 +9,95 @@
 //! gains) — which is exactly what Remark 1 of the paper exploits to obtain
 //! the set `C` used by the Ω estimate.
 
-use crate::linalg::vecops::{argsort_desc, argsort_desc_adaptive, dot};
+use crate::linalg::vecops::{argsort_desc, argsort_desc_adaptive, dot, project_indices};
 use crate::submodular::{OracleScratch, Submodular};
+
+/// The survivor map of one IAES ground-set contraction, in *reduced*
+/// indices: `new_of_old[i]` is element `i`'s index in the contracted
+/// problem, or `usize::MAX` when the element was certified and removed.
+///
+/// Built by [`ScaledFn::contract`](crate::submodular::scaled::ScaledFn)
+/// from the old/new kept-id lists and handed to
+/// [`ProxSolver::reset_mapped`](crate::solvers::ProxSolver::reset_mapped),
+/// which uses it to project the greedy order, the min-norm corral, and
+/// the Frank–Wolfe atoms onto the surviving coordinates instead of
+/// rebuilding them cold. The buffer is reused across contractions, so a
+/// long IAES run allocates map storage once.
+#[derive(Clone, Debug)]
+pub struct ContractionMap {
+    new_of_old: Vec<usize>,
+    new_len: usize,
+    /// When false, [`GreedyWorkspace::contract`] discards the stale order
+    /// instead of remapping it, forcing the next argsort onto the full
+    /// cold re-sort. Both paths produce the unique deterministic greedy
+    /// order, so flipping this flag is unobservable bit for bit — the
+    /// determinism tests exploit exactly that to certify the remap.
+    pub remap_argsort: bool,
+}
+
+impl Default for ContractionMap {
+    fn default() -> Self {
+        ContractionMap { new_of_old: Vec::new(), new_len: 0, remap_argsort: true }
+    }
+}
+
+impl ContractionMap {
+    /// Marker for a removed element.
+    pub const REMOVED: usize = usize::MAX;
+
+    /// Empty map (remap enabled).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild from the old and new kept-id lists (both sorted ascending,
+    /// `new_kept` a subsequence of `old_kept`). O(p̂) merge walk; the map
+    /// buffer is reused.
+    pub fn rebuild(&mut self, old_kept: &[usize], new_kept: &[usize]) {
+        self.new_of_old.clear();
+        self.new_of_old.resize(old_kept.len(), Self::REMOVED);
+        let mut j = 0usize;
+        for (i, &orig) in old_kept.iter().enumerate() {
+            if j < new_kept.len() && new_kept[j] == orig {
+                self.new_of_old[i] = j;
+                j += 1;
+            }
+        }
+        assert_eq!(
+            j,
+            new_kept.len(),
+            "new kept ids must be a subsequence of the old kept ids"
+        );
+        self.new_len = new_kept.len();
+    }
+
+    /// Pre-contraction reduced ground-set size.
+    #[inline]
+    pub fn old_len(&self) -> usize {
+        self.new_of_old.len()
+    }
+
+    /// Post-contraction reduced ground-set size.
+    #[inline]
+    pub fn new_len(&self) -> usize {
+        self.new_len
+    }
+
+    /// The raw old→new index map (`usize::MAX` = removed).
+    #[inline]
+    pub fn new_of_old(&self) -> &[usize] {
+        &self.new_of_old
+    }
+
+    /// New index of old reduced element `old`, if it survived.
+    #[inline]
+    pub fn new_index(&self, old: usize) -> Option<usize> {
+        match self.new_of_old[old] {
+            Self::REMOVED => None,
+            k => Some(k),
+        }
+    }
+}
 
 /// Reusable buffers for greedy passes — the solver hot loop calls greedy
 /// every iteration and must not allocate.
@@ -18,7 +105,10 @@ use crate::submodular::{OracleScratch, Submodular};
 /// The workspace also persists the *previous* greedy order in `order`,
 /// which [`greedy_base_vertex`] reuses as the warm start for the adaptive
 /// argsort (consecutive solver directions are nearly co-sorted), and owns
-/// the [`OracleScratch`] threaded into every oracle pass.
+/// the [`OracleScratch`] threaded into every oracle pass. Across an IAES
+/// contraction, [`contract`](Self::contract) maps the surviving order
+/// through the survivor map so the next pass repairs instead of
+/// re-sorting.
 #[derive(Clone, Debug, Default)]
 pub struct GreedyWorkspace {
     /// Descending argsort of the direction vector.
@@ -29,6 +119,10 @@ pub struct GreedyWorkspace {
     empty_base: Vec<bool>,
     /// Reusable oracle pass state.
     pub scratch: OracleScratch,
+    /// Cumulative count of full (non-incremental) argsorts: cold starts,
+    /// resizes, and repair-budget bailouts. The warm-restart tests pin
+    /// this down to certify that a contraction does *not* cost a re-sort.
+    pub full_sorts: u64,
 }
 
 impl GreedyWorkspace {
@@ -39,6 +133,26 @@ impl GreedyWorkspace {
             gains: vec![0.0; p],
             empty_base: vec![false; p],
             scratch: OracleScratch::new(),
+            full_sorts: 0,
+        }
+    }
+
+    /// Project the persisted greedy order through an IAES contraction:
+    /// survivors keep their relative ranks, so the mapped order is the
+    /// warm start the next [`greedy_base_vertex`] repairs in O(p) instead
+    /// of re-sorting. A stale order (wrong length) — or a map with
+    /// `remap_argsort` disabled — clears the buffer, which sends the next
+    /// pass down the full-sort cold path instead.
+    pub fn contract(&mut self, map: &ContractionMap) {
+        if map.remap_argsort && self.order.len() == map.old_len() {
+            project_indices(&mut self.order, map.new_of_old());
+            if self.order.len() != map.new_len() {
+                // Defensive: the buffer wasn't a permutation of the old
+                // ground set. Fall back to the cold path.
+                self.order.clear();
+            }
+        } else {
+            self.order.clear();
         }
     }
 }
@@ -78,9 +192,39 @@ pub fn greedy_base_vertex<F: Submodular + ?Sized>(
     ws.gains.resize(p, 0.0);
     ws.empty_base.clear();
     ws.empty_base.resize(p, false);
-    argsort_desc_adaptive(w, &mut ws.order);
+    if !argsort_desc_adaptive(w, &mut ws.order) {
+        ws.full_sorts += 1;
+    }
     f.prefix_gains_scratch(&ws.empty_base, &ws.order, &mut ws.gains, &mut ws.scratch);
     accumulate_pass(w, &ws.order, &ws.gains, s_out)
+}
+
+/// Regenerate the base-polytope vertex of a *given* permutation: one
+/// oracle pass along `order`, scattered into `s_out`. Any permutation of
+/// the ground set yields a valid vertex of `B(F)`, which is what makes
+/// the projected-corral IAES restart safe — each surviving atom's induced
+/// order is replayed on the contracted function, so the regenerated atom
+/// is exactly a base vertex of the *new* polytope (the coordinate-wise
+/// projection of the old atom generally is not; see ROADMAP.md).
+///
+/// Uses the workspace's gains/base/oracle buffers but leaves `ws.order`
+/// untouched. Allocation-free at steady state.
+pub fn vertex_from_order<F: Submodular + ?Sized>(
+    f: &F,
+    order: &[usize],
+    ws: &mut GreedyWorkspace,
+    s_out: &mut [f64],
+) {
+    let p = f.ground_size();
+    assert_eq!(order.len(), p);
+    assert_eq!(s_out.len(), p);
+    ws.gains.resize(p, 0.0);
+    ws.empty_base.clear();
+    ws.empty_base.resize(p, false);
+    f.prefix_gains_scratch(&ws.empty_base, order, &mut ws.gains, &mut ws.scratch);
+    for (&j, &g) in order.iter().zip(ws.gains.iter()) {
+        s_out[j] = g;
+    }
 }
 
 /// Allocating reference implementation of [`greedy_base_vertex`]: fresh
@@ -311,6 +455,102 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn contraction_map_rebuild_and_lookup() {
+        let mut map = ContractionMap::new();
+        map.rebuild(&[2, 5, 7, 9, 11], &[2, 7, 11]);
+        assert_eq!(map.old_len(), 5);
+        assert_eq!(map.new_len(), 3);
+        const GONE: usize = ContractionMap::REMOVED;
+        assert_eq!(map.new_of_old(), &[0, GONE, 1, GONE, 2]);
+        assert_eq!(map.new_index(0), Some(0));
+        assert_eq!(map.new_index(1), None);
+        assert_eq!(map.new_index(4), Some(2));
+        // Reuse: rebuild with a different shape.
+        map.rebuild(&[0, 1, 2], &[1]);
+        assert_eq!(map.old_len(), 3);
+        assert_eq!(map.new_len(), 1);
+        assert_eq!(map.new_index(1), Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "subsequence")]
+    fn contraction_map_rejects_non_subsequence() {
+        let mut map = ContractionMap::new();
+        map.rebuild(&[2, 5, 7], &[3]);
+    }
+
+    #[test]
+    fn workspace_contract_feeds_repair_not_resort() {
+        // Greedy pass on the full problem, contract, greedy pass on the
+        // reduced problem: the full-sort counter must not move, and the
+        // order must equal the reference sort.
+        let f = IwataFn::new(12);
+        let mut ws = GreedyWorkspace::new(12);
+        let mut rng = Pcg64::seeded(515);
+        let w = rng.normal_vec(12);
+        let mut s = vec![0.0; 12];
+        greedy_base_vertex(&f, &w, &mut ws, &mut s);
+        assert_eq!(ws.full_sorts, 1, "first pass is the cold sort");
+        // Contract: keep reduced elements {0,2,3,5,6,8,9,11}.
+        let old_kept: Vec<usize> = (0..12).collect();
+        let new_kept = vec![0, 2, 3, 5, 6, 8, 9, 11];
+        let mut map = ContractionMap::new();
+        map.rebuild(&old_kept, &new_kept);
+        ws.contract(&map);
+        let g = IwataFn::new(8);
+        let w_red: Vec<f64> = new_kept.iter().map(|&i| w[i]).collect();
+        let mut s_red = vec![0.0; 8];
+        greedy_base_vertex(&g, &w_red, &mut ws, &mut s_red);
+        assert_eq!(ws.full_sorts, 1, "contraction must not cost a re-sort");
+        assert_eq!(ws.order, crate::linalg::vecops::argsort_desc(&w_red));
+        // With the remap disabled the same contraction cold-sorts — and
+        // still lands on the identical order.
+        let mut ws2 = GreedyWorkspace::new(12);
+        greedy_base_vertex(&f, &w, &mut ws2, &mut s);
+        map.remap_argsort = false;
+        ws2.contract(&map);
+        greedy_base_vertex(&g, &w_red, &mut ws2, &mut s_red);
+        assert_eq!(ws2.full_sorts, 2, "disabled remap must cold-sort");
+        assert_eq!(ws2.order, ws.order);
+    }
+
+    #[test]
+    fn vertex_from_order_matches_greedy_on_its_own_order() {
+        let f = IwataFn::new(10);
+        let mut rng = Pcg64::seeded(616);
+        let w = rng.normal_vec(10);
+        let mut ws = GreedyWorkspace::new(10);
+        let mut s = vec![0.0; 10];
+        greedy_base_vertex(&f, &w, &mut ws, &mut s);
+        let order = ws.order.clone();
+        let mut s2 = vec![f64::NAN; 10];
+        vertex_from_order(&f, &order, &mut ws, &mut s2);
+        for (a, b) in s.iter().zip(&s2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ws.order, order, "vertex_from_order must not touch the order");
+    }
+
+    #[test]
+    fn vertex_from_order_any_permutation_is_in_base_polytope() {
+        forall_rng(15, |rng| {
+            let p = 3 + rng.below(6);
+            let m = rng.uniform_vec(p, -1.0, 1.0);
+            let f = ConcaveCardFn::sqrt(p, rng.uniform(0.5, 2.0), m);
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let mut ws = GreedyWorkspace::new(p);
+            let mut s = vec![0.0; p];
+            vertex_from_order(&f, &order, &mut ws, &mut s);
+            if in_base_polytope(&f, &s, 1e-9) {
+                Ok(())
+            } else {
+                Err("regenerated vertex outside B(F)".into())
+            }
+        });
     }
 
     #[test]

@@ -166,6 +166,7 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         screener: cfg.screener(),
         record_history: false,
         min_reduction_frac: cfg.min_reduction_frac,
+        ..Default::default()
     };
     opts.record_history = false;
     let job = JobSpec { name: wl.label(), workload: wl, opts };
@@ -194,5 +195,14 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         res.report.screen_time.as_secs_f64()
     );
     println!("emptied      : {}", res.report.emptied);
+    println!("converged    : {}", res.report.converged);
+    if !res.report.converged {
+        eprintln!(
+            "WARNING: hit max_iters={} before reaching eps={:.1e}; the leftover \
+             elements were sign-decided from an unconverged iterate and the \
+             reported minimizer may be inaccurate",
+            res.report.iters, cfg.eps
+        );
+    }
     Ok(())
 }

@@ -72,6 +72,18 @@ pub struct IaesOptions {
     /// that is actually worth it. `0.0` restarts on every certificate
     /// (the literal Algorithm 2).
     pub min_reduction_frac: f64,
+    /// Contraction-aware warm restarts: project the solver's greedy
+    /// order, corral, and atoms through each ground-set contraction
+    /// ([`crate::solvers::ProxSolver::reset_mapped`]) instead of
+    /// rebuilding them cold. `false` restores the discard-everything
+    /// restart (cold-rebuild baseline for the `restart/*` bench rows).
+    pub warm_restart: bool,
+    /// Within a warm restart, re-derive the greedy argsort by remapping
+    /// the surviving permutation (the fast path) rather than re-sorting
+    /// from scratch. Both paths produce the identical deterministic
+    /// order, so flipping this flag never changes a bit of the
+    /// trajectory — the determinism suite certifies exactly that.
+    pub argsort_remap: bool,
 }
 
 impl Default for IaesOptions {
@@ -85,6 +97,8 @@ impl Default for IaesOptions {
             screener: None,
             record_history: true,
             min_reduction_frac: 0.2,
+            warm_restart: true,
+            argsort_remap: true,
         }
     }
 }
@@ -98,6 +112,9 @@ impl std::fmt::Debug for IaesOptions {
             .field("solver", &self.solver)
             .field("max_iters", &self.max_iters)
             .field("record_history", &self.record_history)
+            .field("min_reduction_frac", &self.min_reduction_frac)
+            .field("warm_restart", &self.warm_restart)
+            .field("argsort_remap", &self.argsort_remap)
             .finish()
     }
 }
@@ -164,6 +181,12 @@ pub struct IaesReport {
     pub screen_time: Duration,
     /// True when screening emptied the ground set before the gap hit ε.
     pub emptied: bool,
+    /// True when the run actually reached its stopping criterion (gap
+    /// below ε, or the ground set emptied). False when the `max_iters`
+    /// cap tripped first: the leftover elements were then sign-decided
+    /// from an *unconverged* primal and the minimizer may be wrong —
+    /// callers must surface this instead of reporting silently.
+    pub converged: bool,
 }
 
 impl IaesReport {
@@ -219,6 +242,7 @@ impl<'a> IaesEngine<'a> {
         let mut total_iters = 0usize;
         let mut final_gap = f64::INFINITY;
         let mut emptied = false;
+        let mut converged = true;
 
         // Residual primal (kept alive across restarts for warm starts).
         let mut w_restricted: Vec<f64> = vec![0.0; self.kept.len()];
@@ -236,11 +260,23 @@ impl<'a> IaesEngine<'a> {
         // instead of being rebuilt from scratch.
         let mut scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
         let mut solver = self.opts.solver.build(&scaled);
+        // Survivor map of the most recent contraction (buffer reused for
+        // the whole run); `warm_pending` says the map and the
+        // already-contracted `scaled` describe the next restart.
+        let mut map = crate::lovasz::ContractionMap::new();
+        let mut warm_pending = false;
         'outer: while !self.kept.is_empty() {
             if total_iters > 0 {
-                // Warm restart from the restricted primal (step 14).
-                scaled.set_reduction(&self.active, &self.kept);
-                solver.reset(&scaled, &w_restricted);
+                // Restart from the restricted primal (step 14): warm —
+                // solver state projected through the contraction — or the
+                // cold rebuild when warm restarts are disabled.
+                if warm_pending {
+                    solver.reset_mapped(&scaled, &w_restricted, &map);
+                } else {
+                    scaled.set_reduction(&self.active, &self.kept);
+                    solver.reset(&scaled, &w_restricted);
+                }
+                warm_pending = false;
             }
             let f_v = scaled.eval_full();
             let mut q_gate = solver.gap(); // gap at last trigger (q in Alg. 2)
@@ -267,7 +303,9 @@ impl<'a> IaesEngine<'a> {
                 if ev.gap < self.opts.eps || total_iters >= self.opts.max_iters {
                     // Capture the final restricted primal: the leftover
                     // elements are decided by its sign (Alg. 2, line 19),
-                    // except the ones already certified.
+                    // except the ones already certified. A max-iters trip
+                    // decides them from an unconverged primal — flag it.
+                    converged = ev.gap < self.opts.eps;
                     w_restricted = solver.w().to_vec();
                     break 'outer;
                 }
@@ -335,6 +373,7 @@ impl<'a> IaesEngine<'a> {
                 }
 
                 // Contract the ground set: move pending certificates out.
+                let n_active_before = self.active.len();
                 let w_now = solver.w();
                 let mut survivors = Vec::with_capacity(self.kept.len());
                 let mut w_surv = Vec::with_capacity(self.kept.len());
@@ -348,6 +387,18 @@ impl<'a> IaesEngine<'a> {
                         w_surv.push(w_now[j]);
                     }
                 }
+                if self.opts.warm_restart {
+                    // Thread the survivor map through the reduction: the
+                    // scaled oracle re-targets incrementally and the next
+                    // solver restart projects its state through `map`.
+                    map.remap_argsort = self.opts.argsort_remap;
+                    scaled.contract(
+                        &self.active[n_active_before..],
+                        &survivors,
+                        &mut map,
+                    );
+                    warm_pending = true;
+                }
                 self.kept = survivors;
                 w_restricted = w_surv;
                 pending_a = vec![false; self.kept.len()];
@@ -360,7 +411,7 @@ impl<'a> IaesEngine<'a> {
                     emptied = true;
                     final_gap = 0.0;
                 }
-                // Rebuild the scaled problem + solver (outer loop).
+                // Re-target the scaled problem + solver (outer loop).
                 continue 'outer;
             }
         }
@@ -399,6 +450,7 @@ impl<'a> IaesEngine<'a> {
             solver_time,
             screen_time,
             emptied,
+            converged,
         })
     }
 }
@@ -576,5 +628,63 @@ mod tests {
         let f = IwataFn::new(5);
         let opts = IaesOptions { rho: 1.5, ..Default::default() };
         assert!(solve_sfm_with_screening(&f, &opts).is_err());
+    }
+
+    #[test]
+    fn converged_flag_reflects_termination() {
+        let f = IwataFn::new(16);
+        let report = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        assert!(report.converged, "normal run must report convergence");
+        // A starved iteration budget must be reported, not hidden.
+        let opts = IaesOptions { max_iters: 2, eps: 1e-14, ..Default::default() };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        assert!(!report.converged, "max-iters exit must clear `converged`");
+        assert_eq!(report.iters, 2);
+    }
+
+    #[test]
+    fn emptied_run_counts_as_converged() {
+        let mut m = vec![3.0; 15];
+        for (i, v) in m.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = -3.0;
+            }
+        }
+        let f = ConcaveCardFn::sqrt(15, 1.0, m);
+        let opts = IaesOptions { eps: 1e-12, ..Default::default() };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        if report.emptied {
+            assert!(report.converged);
+        }
+    }
+
+    #[test]
+    fn warm_and_cold_restarts_agree_on_the_minimizer() {
+        // The projected-corral warm restart changes the trajectory but
+        // never the answer: both engines must land on the same minimum on
+        // instances that force several contractions.
+        forall_rng(6, |rng| {
+            let p = 8 + rng.below(5);
+            let f = random_kernel_cut(p, rng);
+            let base = IaesOptions {
+                eps: 1e-9,
+                min_reduction_frac: 0.0, // restart on every certificate
+                ..Default::default()
+            };
+            let brute = brute_force_sfm(&f, 1e-7);
+            let warm = solve_sfm_with_screening(&f, &base).map_err(|e| e.to_string())?;
+            let cold_opts = IaesOptions { warm_restart: false, ..base.clone() };
+            let cold =
+                solve_sfm_with_screening(&f, &cold_opts).map_err(|e| e.to_string())?;
+            // Both must be true minimizers (the minimizer *sets* may
+            // legitimately differ when the optimum is not unique).
+            if (warm.minimum - brute.minimum).abs() > 1e-6 {
+                return Err(format!("warm {} vs brute {}", warm.minimum, brute.minimum));
+            }
+            if (cold.minimum - brute.minimum).abs() > 1e-6 {
+                return Err(format!("cold {} vs brute {}", cold.minimum, brute.minimum));
+            }
+            Ok(())
+        });
     }
 }

@@ -39,6 +39,75 @@ impl Default for RustScreener {
     }
 }
 
+/// Per-call constants shared by every Lemma-3 ℓ1-maximum evaluation:
+/// hoisting the square roots out of the per-element loop is what keeps
+/// the hot screening pass lean, and routing the reference helpers through
+/// the *same* core keeps the two paths from silently diverging (they once
+/// disagreed on the `(p̂ − 1) ≥ 0` guard — see the p̂ = 1 regression test).
+#[derive(Clone, Copy, Debug)]
+pub struct L1Consts {
+    /// `2 · gap` (the squared ball radius).
+    two_g: f64,
+    /// `√(2 p̂ · gap)`.
+    sq_2pg: f64,
+    /// `√(max(p̂ − 1, 0))` — clamped so p̂ = 1 cannot produce NaN.
+    sq_pm1: f64,
+    /// `√(2 · gap / p̂)`.
+    sq_2g_over_p: f64,
+}
+
+impl L1Consts {
+    /// Hoist the constants for ground-set size `p` and duality gap `gap`.
+    pub fn new(p: usize, gap: f64) -> Self {
+        let pf = p as f64;
+        let two_g = 2.0 * gap;
+        L1Consts {
+            two_g,
+            sq_2pg: (pf * two_g).sqrt(),
+            sq_pm1: (pf - 1.0).max(0.0).sqrt(),
+            sq_2g_over_p: (two_g / pf).sqrt(),
+        }
+    }
+}
+
+/// Lemma-3 core: `max ‖w‖₁` over the half-ball `{w ∈ B : [w]_j ≤ 0}` for
+/// a coordinate with `ŵ_j = wj > 0`. The `≥ 0` case is the mirror image
+/// (`wj → −wj`), so both reference helpers and the fused hot loop call
+/// this one function — the single source of truth for the closed form.
+#[inline]
+fn l1_halfball_max(wj: f64, l1_w: f64, c: &L1Consts) -> f64 {
+    if wj - c.sq_2g_over_p < 0.0 {
+        l1_w - 2.0 * wj + c.sq_2pg
+    } else {
+        l1_w - wj + c.sq_pm1 * (c.two_g - wj * wj).max(0.0).sqrt()
+    }
+}
+
+/// Lemma-2 core: closed-form `[w]_j^min / [w]_j^max` over `B ∩ P` given
+/// the hoisted `p̂` constants. Shared verbatim by the reference helper and
+/// the fused `screen_rust` loop (same operations in the same order, so
+/// the two stay bit-identical).
+#[inline]
+fn ball_plane_extrema_core(
+    wj: f64,
+    sum_w: f64,
+    gap: f64,
+    f_v: f64,
+    pf: f64,
+) -> (f64, f64) {
+    let sum_except = sum_w - wj;
+    let b = 2.0 * (sum_except + f_v - (pf - 1.0) * wj);
+    let c = {
+        let t = sum_except + f_v;
+        t * t - (pf - 1.0) * (2.0 * gap - wj * wj)
+    };
+    // b² − 4 p̂ c ≥ 0 in exact arithmetic (the feasible w* satisfies the
+    // quadratic); clamp against round-off.
+    let disc = (b * b - 4.0 * pf * c).max(0.0);
+    let sq = disc.sqrt();
+    ((-b - sq) / (2.0 * pf), (-b + sq) / (2.0 * pf))
+}
+
 /// Closed-form `[w]_j^min / [w]_j^max` over `B ∩ P` (Lemma 2).
 ///
 /// Returns `(wmin, wmax)`. Handles the degenerate `p̂ = 1` case where the
@@ -50,48 +119,25 @@ pub fn ball_plane_extrema(
     gap: f64,
     f_v: f64,
 ) -> (f64, f64) {
-    let p = w.len() as f64;
     if w.len() == 1 {
         return (-f_v, -f_v);
     }
-    let wj = w[j];
-    let sum_except = sum_w - wj;
-    let b = 2.0 * (sum_except + f_v - (p - 1.0) * wj);
-    let c = {
-        let t = sum_except + f_v;
-        t * t - (p - 1.0) * (2.0 * gap - wj * wj)
-    };
-    // b² − 4 p̂ c ≥ 0 in exact arithmetic (the feasible w* satisfies the
-    // quadratic); clamp against round-off.
-    let disc = (b * b - 4.0 * p * c).max(0.0);
-    let sq = disc.sqrt();
-    ((-b - sq) / (2.0 * p), (-b + sq) / (2.0 * p))
+    ball_plane_extrema_core(w[j], sum_w, gap, f_v, w.len() as f64)
 }
 
 /// `max_{w ∈ B, [w]_j ≤ 0} ‖w‖₁` for `0 < ŵ_j ≤ r` (Lemma 3(ii)).
 pub fn l1_max_nonpos(w: &[f64], j: usize, l1_w: f64, gap: f64) -> f64 {
-    let p = w.len() as f64;
     let wj = w[j];
     debug_assert!(wj > 0.0);
-    let two_g = 2.0 * gap;
-    if wj - (two_g / p).sqrt() < 0.0 {
-        l1_w - 2.0 * wj + (p * two_g).sqrt()
-    } else {
-        l1_w - wj + (p - 1.0).sqrt() * (two_g - wj * wj).max(0.0).sqrt()
-    }
+    l1_halfball_max(wj, l1_w, &L1Consts::new(w.len(), gap))
 }
 
 /// `max_{w ∈ B, [w]_j ≥ 0} ‖w‖₁` for `−r ≤ ŵ_j < 0` (Lemma 3(iii)).
+/// Mirror image of [`l1_max_nonpos`] under `w → −w`.
 pub fn l1_max_nonneg(w: &[f64], j: usize, l1_w: f64, gap: f64) -> f64 {
-    let p = w.len() as f64;
     let wj = w[j];
     debug_assert!(wj < 0.0);
-    let two_g = 2.0 * gap;
-    if wj + (two_g / p).sqrt() > 0.0 {
-        l1_w + 2.0 * wj + (p * two_g).sqrt()
-    } else {
-        l1_w + wj + (p - 1.0).sqrt() * (two_g - wj * wj).max(0.0).sqrt()
-    }
+    l1_halfball_max(-wj, l1_w, &L1Consts::new(w.len(), gap))
 }
 
 /// Evaluate the enabled rules over the whole reduced ground set.
@@ -116,28 +162,22 @@ pub fn screen_rust(inputs: &ScreenInputs<'_>, rules: RuleSet, margin: f64) -> Sc
     };
 
     // Hoisted per-call constants (the per-element loop below runs at every
-    // trigger on the full residual vector — keep it lean).
+    // trigger on the full residual vector — keep it lean). Both pairs of
+    // rules share their closed forms with the reference helpers via
+    // `ball_plane_extrema_core` / `l1_halfball_max`, so the hot loop and
+    // the reference API cannot drift apart again.
     let pf = p as f64;
-    let two_g = 2.0 * gap;
-    let sq_2pg = (pf * two_g).sqrt();
-    let sq_pm1 = (pf - 1.0).max(0.0).sqrt();
-    let sq_2g_over_p = (two_g / pf).sqrt();
+    let consts = L1Consts::new(p, gap);
     let f_v = inputs.f_v;
     let p1 = p == 1;
 
     for j in 0..p {
         let wj = w[j];
-        // Lemma 2 closed forms, inlined with hoisted constants.
+        // Lemma 2 closed forms (shared core, hoisted constants).
         let (wmin, wmax) = if p1 {
             (-f_v, -f_v)
         } else {
-            let sum_except = sum_w - wj;
-            let b = 2.0 * (sum_except + f_v - (pf - 1.0) * wj);
-            let t = sum_except + f_v;
-            let c = t * t - (pf - 1.0) * (two_g - wj * wj);
-            let disc = (b * b - 4.0 * pf * c).max(0.0);
-            let sq = disc.sqrt();
-            ((-b - sq) / (2.0 * pf), (-b + sq) / (2.0 * pf))
+            ball_plane_extrema_core(wj, sum_w, gap, f_v, pf)
         };
         out.wmin[j] = wmin;
         out.wmax[j] = wmax;
@@ -153,26 +193,20 @@ pub fn screen_rust(inputs: &ScreenInputs<'_>, rules: RuleSet, margin: f64) -> Sc
         }
 
         // Pair 2: ball ∩ annulus — only for the undecided band |ŵ_j| ≤ r.
-        if rules.aes2 && wj > 0.0 && wj <= r {
-            let l1max = if wj - sq_2g_over_p < 0.0 {
-                l1_w - 2.0 * wj + sq_2pg
-            } else {
-                l1_w - wj + sq_pm1 * (two_g - wj * wj).max(0.0).sqrt()
-            };
-            if l1max < omega_lo - margin {
-                out.active[j] = true;
-                continue;
-            }
+        if rules.aes2
+            && wj > 0.0
+            && wj <= r
+            && l1_halfball_max(wj, l1_w, &consts) < omega_lo - margin
+        {
+            out.active[j] = true;
+            continue;
         }
-        if rules.ies2 && wj < 0.0 && -wj <= r {
-            let l1max = if wj + sq_2g_over_p > 0.0 {
-                l1_w + 2.0 * wj + sq_2pg
-            } else {
-                l1_w + wj + sq_pm1 * (two_g - wj * wj).max(0.0).sqrt()
-            };
-            if l1max < omega_lo - margin {
-                out.inactive[j] = true;
-            }
+        if rules.ies2
+            && wj < 0.0
+            && -wj <= r
+            && l1_halfball_max(-wj, l1_w, &consts) < omega_lo - margin
+        {
+            out.inactive[j] = true;
         }
     }
     out
@@ -369,6 +403,72 @@ mod tests {
         let (lo, hi) = ball_plane_extrema(&w, 0, 0.7, 0.5, -1.25);
         assert_eq!(lo, 1.25);
         assert_eq!(hi, 1.25);
+    }
+
+    #[test]
+    fn lemma3_helpers_finite_at_tiny_ground_sets() {
+        // Regression: the reference helpers and the fused hot loop must
+        // agree on the (p̂ − 1) ≥ 0 guard — a p̂ = 1 residual problem has
+        // to produce finite bounds, not NaN, on both paths.
+        for gap in [1e-12, 0.01, 0.5] {
+            let r = (2.0f64 * gap).sqrt();
+            // p = 1, positive coordinate inside the undecided band.
+            let w = [0.9 * r];
+            let bound = l1_max_nonpos(&w, 0, norm1(&w), gap);
+            assert!(bound.is_finite(), "p=1 nonpos bound NaN at gap {gap}");
+            let wn = [-0.9 * r];
+            let bound = l1_max_nonneg(&wn, 0, norm1(&wn), gap);
+            assert!(bound.is_finite(), "p=1 nonneg bound NaN at gap {gap}");
+            // p = 2: both branch arms of the closed form stay finite.
+            for wj in [0.1 * r, 0.9 * r] {
+                let w2 = [wj, -1.3];
+                let bound = l1_max_nonpos(&w2, 0, norm1(&w2), gap);
+                assert!(bound.is_finite(), "p=2 bound NaN at gap {gap}");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_helpers_bitwise_match_hot_loop() {
+        // The inlined screen_rust pass and the public helpers share one
+        // core; pin the bit-level agreement on both pair-2 branches.
+        forall_rng(25, |rng| {
+            let p = 1 + rng.below(12);
+            let w = rng.normal_vec(p);
+            let gap = rng.uniform(1e-6, 1.0);
+            let consts = super::L1Consts::new(p, gap);
+            for j in 0..p {
+                let wj = w[j];
+                if wj > 0.0 {
+                    let a = l1_max_nonpos(&w, j, norm1(&w), gap);
+                    let b = super::l1_halfball_max(wj, norm1(&w), &consts);
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("nonpos helper drifted at j={j}"));
+                    }
+                } else if wj < 0.0 {
+                    let a = l1_max_nonneg(&w, j, norm1(&w), gap);
+                    let b = super::l1_halfball_max(-wj, norm1(&w), &consts);
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("nonneg helper drifted at j={j}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn screen_rust_single_element_problems_are_decided_sanely() {
+        // p̂ = 1 end-to-end: the last surviving element must be certified
+        // by its pinned value −F̂(V̂), never NaN-skipped.
+        for (f_v, expect_active) in [(-2.0, true), (2.0, false)] {
+            let w = [if f_v < 0.0 { 1.0 } else { -1.0 }];
+            let inputs = ScreenInputs { w: &w, gap: 1e-10, f_v, f_c: 0.0 };
+            let out = screen_rust(&inputs, RuleSet::all(), 1e-10);
+            assert!(out.wmin[0].is_finite() && out.wmax[0].is_finite());
+            assert_eq!(out.active[0], expect_active, "f_v = {f_v}");
+            assert_eq!(out.inactive[0], !expect_active, "f_v = {f_v}");
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use super::{PrimalState, ProxSolver, SolverEvent};
 use crate::linalg::vecops::{axpy, dot, norm2_sq};
 use crate::linalg::CorralMat;
+use crate::lovasz::{vertex_from_order, ContractionMap};
 use crate::submodular::Submodular;
 use std::collections::HashMap;
 
@@ -73,6 +74,8 @@ pub struct FrankWolfe {
     key_buf: AtomKey,
     /// Scratch: surviving-atom indices during eviction compaction.
     keep_buf: Vec<usize>,
+    /// Scratch: a key widened to usize ids (atom regeneration passes).
+    order_buf: Vec<usize>,
     shared: PrimalState,
     q: Vec<f64>,
     dir: Vec<f64>,
@@ -91,6 +94,7 @@ impl FrankWolfe {
             atom_index: HashMap::new(),
             key_buf: Vec::new(),
             keep_buf: Vec::new(),
+            order_buf: Vec::new(),
             shared: PrimalState::new(p),
             q: vec![0.0; p],
             dir: vec![0.0; p],
@@ -321,6 +325,108 @@ impl ProxSolver for FrankWolfe {
         self.x.copy_from_slice(&self.q);
         self.fill_key_buf();
         self.add_current_atom(1.0);
+    }
+
+    fn reset_mapped(&mut self, f: &dyn Submodular, w_init: &[f64], map: &ContractionMap) {
+        let p = f.ground_size();
+        // Plain FW maintains no atom set (`step_plain` moves x directly),
+        // so its only "atom" is the stale run-start vertex — projecting
+        // that would be strictly worse than the cold restart's fresh
+        // greedy vertex. Warm restarts only pay off for the atom-carrying
+        // variants.
+        if self.opts.variant == FwVariant::Plain
+            || map.new_len() != p
+            || self.x.len() != map.old_len()
+            || self.weights.is_empty()
+            || self.keys.iter().any(|k| k.len() != map.old_len())
+        {
+            self.reset(f, w_init);
+            return;
+        }
+        // (1) Warm-start the greedy argsort through the contraction.
+        self.shared.greedy_ws.contract(map);
+        self.x.resize(p, 0.0);
+        self.q.resize(p, 0.0);
+        self.dir.resize(p, 0.0);
+        // (2) Project the atoms: filter each key (a full permutation of
+        // the old reduced ground set) through the survivor map — the
+        // induced order on the contracted problem — merging atoms whose
+        // induced orders collapse to the same permutation. Unlike the
+        // min-norm corral this re-keys the index map, which clones the
+        // surviving keys (atom-count-bounded, restart-only allocations).
+        self.atom_index.clear();
+        let new_of_old = map.new_of_old();
+        let mut keep = std::mem::take(&mut self.keep_buf);
+        keep.clear();
+        let mut write = 0usize;
+        for read in 0..self.keys.len() {
+            let key = &mut self.keys[read];
+            let mut w = 0usize;
+            for r in 0..key.len() {
+                let mapped = new_of_old[key[r] as usize];
+                if mapped != usize::MAX {
+                    key[w] = mapped as u32;
+                    w += 1;
+                }
+            }
+            key.truncate(w);
+            debug_assert_eq!(w, p, "atom key was not a permutation");
+            if let Some(&first) = self.atom_index.get(key.as_slice()) {
+                // Duplicate induced order ⇒ identical vertex: merge mass.
+                self.weights[first] += self.weights[read];
+            } else {
+                let owned = self.keys[read].clone();
+                self.atom_index.insert(owned, write);
+                if write != read {
+                    self.keys.swap(write, read);
+                    self.weights[write] = self.weights[read];
+                }
+                keep.push(read);
+                write += 1;
+            }
+        }
+        self.keys.truncate(write);
+        self.weights.truncate(write);
+        self.atoms.reshape_rows(p);
+        self.atoms.compact(&keep);
+        self.keep_buf = keep;
+        // Regenerate each surviving atom from its induced order: a valid
+        // vertex of the contracted base polytope by construction.
+        for i in 0..self.keys.len() {
+            self.order_buf.clear();
+            self.order_buf.extend(self.keys[i].iter().map(|&e| e as usize));
+            vertex_from_order(
+                f,
+                &self.order_buf,
+                &mut self.shared.greedy_ws,
+                self.atoms.row_mut(i),
+            );
+        }
+        // (3) Renormalize the convex weights (defensive — merging
+        // preserves the total) and rebuild x = Σ λ_i v_i.
+        let total: f64 = self.weights.iter().sum();
+        if total > 0.0 {
+            for wgt in self.weights.iter_mut() {
+                *wgt /= total;
+            }
+        }
+        self.x.iter_mut().for_each(|v| *v = 0.0);
+        for (wgt, v) in self.weights.iter().zip(self.atoms.iter()) {
+            axpy(*wgt, v, &mut self.x);
+        }
+        // (4) Step-14 bookkeeping: adopt the restricted primal and close
+        // the gap against the projected dual point (weak duality holds
+        // for any x in B(F̂), so the gap stays a valid screening radius).
+        let mut s0 = std::mem::take(&mut self.q);
+        let f_w = self.shared.reset_primal(f, w_init, &mut s0);
+        self.q = s0;
+        let primal = f_w + 0.5 * norm2_sq(w_init);
+        let dual = -0.5 * norm2_sq(&self.x);
+        self.shared.gap = primal - dual;
+    }
+
+    fn greedy_full_sorts(&self) -> u64 {
+        self.shared.greedy_ws.full_sorts
     }
 
     fn name(&self) -> &'static str {

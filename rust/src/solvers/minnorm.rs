@@ -22,7 +22,8 @@
 
 use super::{PrimalState, ProxSolver, SolverEvent};
 use crate::linalg::vecops::{dot, norm2_sq};
-use crate::linalg::{CorralMat, IncrementalCholesky};
+use crate::linalg::{CorralMat, IncrementalCholesky, IndexMat};
+use crate::lovasz::{vertex_from_order, ContractionMap};
 use crate::submodular::Submodular;
 
 /// Options for [`MinNormPoint`].
@@ -63,6 +64,11 @@ pub struct MinNormPoint {
     x: Vec<f64>,
     /// Corral vertices, flat row-major (stride = p).
     corral: CorralMat,
+    /// Generating greedy permutation of each corral vertex, parallel to
+    /// `corral` — the combinatorial state that survives an IAES
+    /// contraction: replaying an atom's induced order on the contracted
+    /// oracle regenerates a valid vertex of the new base polytope.
+    orders: IndexMat,
     /// Convex weights over the corral.
     lambda: Vec<f64>,
     /// Cholesky factor of `11ᵀ + SᵀS`.
@@ -70,12 +76,14 @@ pub struct MinNormPoint {
     shared: PrimalState,
     /// Scratch vertex buffer.
     q: Vec<f64>,
-    /// Scratch: cross-products row for Gram pushes (and reset's vertex).
+    /// Scratch: cross-products row for Gram pushes.
     cross: Vec<f64>,
     /// Scratch: all-ones RHS for the affine system.
     ones: Vec<f64>,
     /// Scratch: affine minimizer weights.
     alpha: Vec<f64>,
+    /// Scratch: surviving-atom indices for batch evictions/rebuilds.
+    keep_buf: Vec<usize>,
 }
 
 impl MinNormPoint {
@@ -87,6 +95,7 @@ impl MinNormPoint {
             opts,
             x: vec![0.0; p],
             corral: CorralMat::new(p),
+            orders: IndexMat::new(p),
             lambda: Vec::new(),
             chol: IncrementalCholesky::new(),
             shared: PrimalState::new(p),
@@ -94,6 +103,7 @@ impl MinNormPoint {
             cross: Vec::new(),
             ones: Vec::new(),
             alpha: Vec::new(),
+            keep_buf: Vec::new(),
         };
         let w0 = match w_init {
             Some(w) => w.to_vec(),
@@ -109,7 +119,9 @@ impl MinNormPoint {
     }
 
     /// Push `v` into the corral (copied into flat storage — the caller
-    /// keeps its buffer; nothing is cloned on the hot path).
+    /// keeps its buffer; nothing is cloned on the hot path). The vertex's
+    /// generating greedy order is recorded from the shared workspace,
+    /// which always holds it right after the pass that produced `v`.
     fn push_vertex(&mut self, v: &[f64]) -> bool {
         self.cross.clear();
         self.cross.extend(self.corral.iter().map(|u| 1.0 + dot(u, v)));
@@ -117,6 +129,7 @@ impl MinNormPoint {
         match self.chol.push(&self.cross, diag, self.opts.jitter) {
             Some(_) => {
                 self.corral.push(v);
+                self.orders.push(&self.shared.greedy_ws.order);
                 self.lambda.push(0.0);
                 true
             }
@@ -124,17 +137,29 @@ impl MinNormPoint {
         }
     }
 
-    fn remove_vertex(&mut self, i: usize) {
-        self.corral.remove(i);
-        self.lambda.remove(i);
-        self.chol.remove(i);
+    /// Drop every corral atom whose index is *not* in `keep` (ascending):
+    /// one compaction sweep over the parallel arrays and one batched
+    /// Cholesky downdate, instead of an O(m²) restructuring per eviction.
+    fn evict_except(&mut self, keep: &[usize]) {
+        debug_assert!(keep.len() < self.corral.len());
+        for (w, &r) in keep.iter().enumerate() {
+            self.lambda[w] = self.lambda[r];
+        }
+        self.lambda.truncate(keep.len());
+        self.corral.compact(keep);
+        self.orders.compact(keep);
+        self.chol.retain(keep);
     }
 
-    /// Rebuild the Cholesky factor from the current corral (recovery path —
-    /// rare, so the small `keep` allocation is acceptable here).
+    /// Rebuild the Cholesky factor from the current corral, dropping
+    /// atoms whose pivot vanishes (affine dependence). Used both by the
+    /// numerical recovery path and by the projected-corral restart;
+    /// allocation-free at the high-water mark (the survivor buffer is
+    /// reused).
     fn rebuild_chol(&mut self) {
         self.chol.reset();
-        let mut keep: Vec<usize> = Vec::with_capacity(self.corral.len());
+        let mut keep = std::mem::take(&mut self.keep_buf);
+        keep.clear();
         for i in 0..self.corral.len() {
             self.cross.clear();
             for &r in &keep {
@@ -151,6 +176,7 @@ impl MinNormPoint {
             }
             self.lambda.truncate(keep.len());
             self.corral.compact(&keep);
+            self.orders.compact(&keep);
             let total: f64 = self.lambda.iter().sum();
             if total > 0.0 {
                 for l in self.lambda.iter_mut() {
@@ -161,6 +187,7 @@ impl MinNormPoint {
                 self.lambda.iter_mut().for_each(|l| *l = u);
             }
         }
+        self.keep_buf = keep;
     }
 
     /// Affine minimizer weights over the current corral: solve
@@ -232,16 +259,24 @@ impl MinNormPoint {
             for (l, &a) in self.lambda.iter_mut().zip(&self.alpha) {
                 *l = (1.0 - theta) * *l + theta * a;
             }
-            // Evict zeros (largest index first keeps removal cheap-ish).
-            let mut evicted = false;
-            let mut i = self.lambda.len();
-            while i > 0 {
-                i -= 1;
-                if self.lambda[i] <= self.opts.lambda_tol {
-                    self.remove_vertex(i);
-                    evicted = true;
-                }
+            // Evict zeros — all of them in one batched compaction sweep
+            // (weights rescale together, so several can cross the
+            // tolerance in the same minor cycle).
+            let mut keep = std::mem::take(&mut self.keep_buf);
+            keep.clear();
+            let tol = self.opts.lambda_tol;
+            keep.extend(
+                self.lambda
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &l)| l > tol)
+                    .map(|(i, _)| i),
+            );
+            let evicted = keep.len() != self.lambda.len();
+            if evicted {
+                self.evict_except(&keep);
             }
+            self.keep_buf = keep;
             if !evicted {
                 // θ hit 1 without eviction (numerical): we're at the affine
                 // minimizer already.
@@ -302,23 +337,94 @@ impl ProxSolver for MinNormPoint {
     fn reset(&mut self, f: &dyn Submodular, w_init: &[f64]) {
         let p = f.ground_size();
         self.x.resize(p, 0.0);
-        self.q.resize(p, 0.0);
         self.corral.reset(p);
+        self.orders.reset(p);
         self.lambda.clear();
         self.chol.reset();
-        // Reuse `cross` as the initial-vertex buffer (it is scratch, and
-        // the corral is empty so `push_vertex` won't need it for cross
-        // products) — warm restarts allocate nothing once buffers exist.
-        let mut s0 = std::mem::take(&mut self.cross);
+        // Reuse `q` as the initial-vertex buffer (scratch that the next
+        // step overwrites anyway) — warm restarts allocate nothing once
+        // the buffers exist.
+        let mut s0 = std::mem::take(&mut self.q);
         s0.clear();
         s0.resize(p, 0.0);
         self.shared.reset_from(f, w_init, &mut s0);
         self.x.copy_from_slice(&s0);
         self.push_vertex(&s0);
-        self.cross = s0;
+        self.q = s0;
         if !self.lambda.is_empty() {
             self.lambda[0] = 1.0;
         }
+    }
+
+    fn reset_mapped(&mut self, f: &dyn Submodular, w_init: &[f64], map: &ContractionMap) {
+        let p = f.ground_size();
+        // The map must describe a contraction of this solver's current
+        // state; anything else (fresh solver, unrelated problem) gets the
+        // always-correct cold rebuild.
+        if map.new_len() != p
+            || self.orders.stride() != map.old_len()
+            || self.corral.len() != self.orders.len()
+            || self.corral.is_empty()
+        {
+            self.reset(f, w_init);
+            return;
+        }
+        // (1) Warm-start the greedy argsort: the surviving order, mapped
+        // to new indices, is already sorted up to tie drift.
+        self.shared.greedy_ws.contract(map);
+        // (2) Project the corral: replay each atom's induced greedy order
+        // on the contracted oracle. Any permutation yields a valid vertex
+        // of the new base polytope, so every regenerated atom is feasible
+        // by construction (the coordinate-wise projection of the old
+        // vertex generally is not).
+        self.x.resize(p, 0.0);
+        self.orders.contract(map.new_of_old(), p);
+        self.corral.reshape_rows(p);
+        for i in 0..self.corral.len() {
+            vertex_from_order(
+                f,
+                self.orders.row(i),
+                &mut self.shared.greedy_ws,
+                self.corral.row_mut(i),
+            );
+        }
+        // (3) Revalidate the Gram factor, dropping atoms that became
+        // affinely dependent (e.g. two orders that collapsed to the same
+        // induced permutation), and renormalize the carried weights.
+        self.rebuild_chol();
+        let total: f64 = self.lambda.iter().sum();
+        if total > 0.0 {
+            for l in self.lambda.iter_mut() {
+                *l /= total;
+            }
+        }
+        // (4) Step-14 bookkeeping: adopt the restricted primal, push the
+        // fresh greedy vertex ŝ, then land the dual iterate on the
+        // min-norm point of the projected corral — the restart inherits
+        // the dual progress instead of falling back to a single vertex.
+        let mut s0 = std::mem::take(&mut self.q);
+        s0.clear();
+        s0.resize(p, 0.0);
+        let f_w = self.shared.reset_primal(f, w_init, &mut s0);
+        self.push_vertex(&s0);
+        self.q = s0;
+        if self.corral.len() > 1 {
+            self.minor_cycles();
+        } else {
+            if !self.lambda.is_empty() {
+                self.lambda[0] = 1.0;
+            }
+            self.recompute_x();
+        }
+        // Weak duality holds for any x in B(F̂), so this gap is a valid
+        // (non-negative) screening radius.
+        let primal = f_w + 0.5 * norm2_sq(w_init);
+        let dual = -0.5 * norm2_sq(&self.x);
+        self.shared.gap = primal - dual;
+    }
+
+    fn greedy_full_sorts(&self) -> u64 {
+        self.shared.greedy_ws.full_sorts
     }
 
     fn name(&self) -> &'static str {
@@ -445,6 +551,86 @@ mod tests {
         let w0 = vec![0.0; 6];
         solver.reset(&g, &w0);
         assert_eq!(solver.s().len(), 6);
+        let ev = solver.step(&g);
+        assert!(ev.gap.is_finite());
+    }
+
+    #[test]
+    fn reset_mapped_projects_corral_and_stays_feasible() {
+        use crate::lovasz::{in_base_polytope, ContractionMap};
+        use crate::submodular::scaled::ScaledFn;
+        let mut rng = Pcg64::seeded(808);
+        let p = 12;
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let f = KernelCutFn::new(p, k, rng.uniform_vec(p, -2.0, 2.0));
+        let kept: Vec<usize> = (0..p).collect();
+        let mut scaled = ScaledFn::new(&f, &[], kept.clone());
+        let mut solver = MinNormPoint::new(&scaled, MinNormOptions::default(), None);
+        for _ in 0..12 {
+            solver.step(&scaled);
+        }
+        let corral_before = solver.corral_size();
+        // Contract: certify element 1 active, elements 4 and 9 inactive.
+        let new_kept: Vec<usize> =
+            kept.iter().copied().filter(|&i| ![1, 4, 9].contains(&i)).collect();
+        let w_surv: Vec<f64> = new_kept.iter().map(|&i| solver.w()[i]).collect();
+        let mut map = ContractionMap::new();
+        scaled.contract(&[1], &new_kept, &mut map);
+        let sorts_before = solver.greedy_full_sorts();
+        solver.reset_mapped(&scaled, &w_surv, &map);
+        assert_eq!(
+            solver.greedy_full_sorts(),
+            sorts_before,
+            "warm restart fell back to a full re-sort"
+        );
+        assert_eq!(solver.s().len(), new_kept.len());
+        assert!(solver.corral_size() > 1, "projected corral was discarded");
+        assert!(solver.corral_size() <= corral_before + 1);
+        // The restarted dual iterate must lie in the contracted base
+        // polytope (safety: the gap certificate depends on it) and the
+        // gap must respect weak duality.
+        assert!(in_base_polytope(&scaled, solver.s(), 1e-7));
+        assert!(solver.gap() >= -1e-9, "negative gap: {}", solver.gap());
+        // And the solver still converges to the true reduced minimum.
+        let mut gap = f64::INFINITY;
+        for _ in 0..2000 {
+            gap = solver.step(&scaled).gap;
+            if gap < 1e-9 {
+                break;
+            }
+        }
+        assert!(gap < 1e-9, "warm-restarted solver stalled: gap {gap}");
+        let brute = brute_force_sfm(&scaled, 1e-9);
+        let a = sup_level_set(solver.w(), 0.0);
+        let mut set = vec![false; new_kept.len()];
+        for &i in &a {
+            set[i] = true;
+        }
+        assert!(
+            (scaled.eval(&set) - brute.minimum).abs() < 1e-6,
+            "warm-restarted minimizer is wrong"
+        );
+    }
+
+    #[test]
+    fn reset_mapped_with_stale_map_falls_back_to_cold() {
+        use crate::lovasz::ContractionMap;
+        let f = IwataFn::new(10);
+        let mut solver = solve(&f, 30, 1e-6);
+        // A map whose old length does not match the solver state.
+        let mut map = ContractionMap::new();
+        map.rebuild(&[0, 1, 2, 3], &[0, 2]);
+        let g = IwataFn::new(2);
+        solver.reset_mapped(&g, &[0.0, 0.0], &map);
+        assert_eq!(solver.s().len(), 2);
+        assert_eq!(solver.corral_size(), 1, "fallback must be the cold reset");
         let ev = solver.step(&g);
         assert!(ev.gap.is_finite());
     }

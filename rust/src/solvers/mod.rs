@@ -22,7 +22,7 @@ pub mod pav;
 pub mod queyranne;
 
 use crate::linalg::vecops::{dot, norm2_sq};
-use crate::lovasz::{greedy_base_vertex, GreedyInfo, GreedyWorkspace};
+use crate::lovasz::{greedy_base_vertex, ContractionMap, GreedyInfo, GreedyWorkspace};
 use crate::solvers::pav::PavWorkspace;
 use crate::submodular::Submodular;
 
@@ -66,8 +66,33 @@ pub trait ProxSolver {
 
     /// Re-initialize on a (typically reduced) problem: `ŝ ← argmax_{s ∈
     /// B(F̂)} ⟨w_init, s⟩` (one greedy pass), primal `ŵ ← w_init`
-    /// (Algorithm 2, step 14).
+    /// (Algorithm 2, step 14). This is the *cold* restart: all corral /
+    /// atom state is discarded.
     fn reset(&mut self, f: &dyn Submodular, w_init: &[f64]);
+
+    /// Contraction-aware warm restart: like [`reset`](Self::reset), but
+    /// `f` is the Lemma-1 contraction of the problem the solver was just
+    /// running, described by `map` (old reduced index → new reduced
+    /// index). Implementations project their combinatorial state — the
+    /// persisted greedy order, the corral / atom set — onto the surviving
+    /// coordinates and revalidate it instead of discarding it, so the
+    /// restart is an incremental solver event rather than a cold rebuild.
+    ///
+    /// The default implementation falls back to the cold [`reset`], which
+    /// is always correct; solvers that can do better override it. The
+    /// map's `remap_argsort` flag only switches *how* the greedy order is
+    /// re-derived (remap + repair vs full re-sort) and never changes a
+    /// bit of the result.
+    fn reset_mapped(&mut self, f: &dyn Submodular, w_init: &[f64], map: &ContractionMap) {
+        let _ = map;
+        self.reset(f, w_init);
+    }
+
+    /// Cumulative full (non-incremental) greedy argsorts performed by
+    /// this solver's workspace — cold starts, resizes, and repair-budget
+    /// bailouts. The warm-restart tests assert this does not move across
+    /// a contraction.
+    fn greedy_full_sorts(&self) -> u64;
 
     /// Human-readable solver name (reports/benches).
     fn name(&self) -> &'static str;
@@ -164,6 +189,27 @@ impl PrimalState {
         }
     }
 
+    /// Algorithm-2 step 14 bookkeeping shared by cold and warm restarts:
+    /// adopt `w_init` as the primal and run one greedy pass to obtain the
+    /// matching dual vertex `ŝ` (written into `s_out`). Returns
+    /// `f(w_init) = ⟨w_init, ŝ⟩` so the caller can close the gap against
+    /// whatever dual point it adopts (the vertex itself for a cold reset,
+    /// the projected corral's min-norm point for a warm one). Leaves
+    /// `self.gap` untouched.
+    pub fn reset_primal(
+        &mut self,
+        f: &dyn Submodular,
+        w_init: &[f64],
+        s_out: &mut [f64],
+    ) -> f64 {
+        let p = f.ground_size();
+        self.resize(p);
+        self.w.copy_from_slice(w_init);
+        let info = greedy_base_vertex(f, w_init, &mut self.greedy_ws, s_out);
+        self.fc = self.fc.min(info.best_level_value);
+        dot(w_init, s_out)
+    }
+
     /// Algorithm 2 step 14: adopt `w_init` as the primal and run one greedy
     /// pass to obtain the matching dual vertex (returned in `s_out`).
     pub fn reset_from(
@@ -172,13 +218,8 @@ impl PrimalState {
         w_init: &[f64],
         s_out: &mut [f64],
     ) {
-        let p = f.ground_size();
-        self.resize(p);
-        self.w.copy_from_slice(w_init);
-        let info = greedy_base_vertex(f, w_init, &mut self.greedy_ws, s_out);
-        self.fc = self.fc.min(info.best_level_value);
         // Gap for the fresh pair (w_init, s): f(w_init) = ⟨w_init, s⟩.
-        let f_w = dot(w_init, s_out);
+        let f_w = self.reset_primal(f, w_init, s_out);
         let primal = f_w + 0.5 * norm2_sq(w_init);
         let dual = -0.5 * norm2_sq(s_out);
         self.gap = primal - dual;

@@ -11,6 +11,7 @@
 //! translation layer no matter how many times the problem shrank.
 
 use super::{OracleScratch, Submodular};
+use crate::lovasz::ContractionMap;
 
 /// `F̂` over the reduced ground set `V̂`, referencing the original oracle.
 pub struct ScaledFn<'a> {
@@ -61,6 +62,39 @@ impl<'a> ScaledFn<'a> {
         }
         self.kept.clear();
         self.kept.extend_from_slice(kept);
+        self.f_base = self.inner.eval(&self.base);
+    }
+
+    /// Incremental re-targeting for an IAES contraction: every id in
+    /// `new_active` moves from the kept set into the base `Ê`, `new_kept`
+    /// (sorted, a subsequence of the current kept ids) becomes the new
+    /// reduced ground set, and everything else that disappeared from
+    /// `kept` is implicitly inactive. Unlike [`set_reduction`], the base
+    /// membership is updated by flipping only the newly certified bits —
+    /// O(p̂) instead of O(p) — and the old→new survivor map is written
+    /// into `map_out`, which is what lets the solver *project* its state
+    /// through the contraction ([`ProxSolver::reset_mapped`]) instead of
+    /// rebuilding cold.
+    ///
+    /// [`set_reduction`]: ScaledFn::set_reduction
+    /// [`ProxSolver::reset_mapped`]: crate::solvers::ProxSolver::reset_mapped
+    pub fn contract(
+        &mut self,
+        new_active: &[usize],
+        new_kept: &[usize],
+        map_out: &mut ContractionMap,
+    ) {
+        map_out.rebuild(&self.kept, new_kept);
+        for &a in new_active {
+            assert!(a < self.base.len() && !self.base[a], "bad new-active id {a}");
+            debug_assert!(
+                self.kept.binary_search(&a).is_ok(),
+                "new-active id {a} was not in the kept set"
+            );
+            self.base[a] = true;
+        }
+        self.kept.clear();
+        self.kept.extend_from_slice(new_kept);
         self.f_base = self.inner.eval(&self.base);
     }
 
@@ -188,6 +222,33 @@ mod tests {
         for ids in [vec![], vec![0], vec![1, 3], vec![0, 1, 2, 3]] {
             assert_eq!(scaled.eval_ids(&ids), fresh.eval_ids(&ids));
         }
+    }
+
+    #[test]
+    fn contract_matches_set_reduction_and_fills_map() {
+        let f = IwataFn::new(12);
+        let mut scaled = ScaledFn::new(&f, &[1], vec![0, 2, 3, 7, 9, 10]);
+        let mut map = ContractionMap::new();
+        // Certify reduced element 1 (orig 2) active, drop orig 7 and 10
+        // as inactive; survivors are orig {0, 3, 9}.
+        scaled.contract(&[2], &[0, 3, 9], &mut map);
+        let fresh = ScaledFn::new(&f, &[1, 2], vec![0, 3, 9]);
+        assert_eq!(scaled.ground_size(), fresh.ground_size());
+        assert_eq!(scaled.kept_ids(), fresh.kept_ids());
+        assert_eq!(scaled.base_value(), fresh.base_value());
+        for ids in [vec![], vec![0], vec![1, 2], vec![0, 1, 2]] {
+            assert_eq!(scaled.eval_ids(&ids), fresh.eval_ids(&ids));
+        }
+        // Map: old reduced {0:0, 2:3, 3:7, 9:…} — old kept was
+        // [0,2,3,7,9,10], survivors [0,3,9] → 0→0, 3→1, 9→2.
+        assert_eq!(map.old_len(), 6);
+        assert_eq!(map.new_len(), 3);
+        assert_eq!(map.new_index(0), Some(0)); // orig 0
+        assert_eq!(map.new_index(1), None); // orig 2: activated
+        assert_eq!(map.new_index(2), Some(1)); // orig 3
+        assert_eq!(map.new_index(3), None); // orig 7: inactive
+        assert_eq!(map.new_index(4), Some(2)); // orig 9
+        assert_eq!(map.new_index(5), None); // orig 10: inactive
     }
 
     #[test]

@@ -8,13 +8,16 @@
 //! and by checking the final minimizer against brute force.
 
 use sfm_screen::brute::brute_force_sfm;
-use sfm_screen::lovasz::sup_level_set;
+use sfm_screen::lovasz::{sup_level_set, ContractionMap};
 use sfm_screen::rng::Pcg64;
+use sfm_screen::screening::iaes::{solve_sfm_with_screening, IaesOptions, IaesReport};
 use sfm_screen::solvers::frankwolfe::{FrankWolfe, FwOptions};
 use sfm_screen::solvers::minnorm::{MinNormOptions, MinNormPoint};
 use sfm_screen::solvers::ProxSolver;
 use sfm_screen::submodular::cut::CutFn;
 use sfm_screen::submodular::iwata::IwataFn;
+use sfm_screen::submodular::kernel_cut::KernelCutFn;
+use sfm_screen::submodular::scaled::ScaledFn;
 use sfm_screen::submodular::Submodular;
 
 fn seeded_cut(p: usize, seed: u64) -> CutFn {
@@ -134,6 +137,115 @@ fn frankwolfe_trajectory_deterministic_after_reset() {
     }
     warm.reset(&f, &vec![0.0; p]);
     assert_lockstep(&mut fresh, &mut warm, &f, 2000, "pairwise-fw/cut");
+}
+
+/// Kernel cut with moderate coupling and strong unaries: separable
+/// enough that screening certifies elements (so IAES actually contracts),
+/// coupled enough that several triggers fire before convergence.
+fn seeded_kernel_cut(p: usize, seed: u64) -> KernelCutFn {
+    let mut rng = Pcg64::seeded(seed);
+    let mut k = vec![0.0; p * p];
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let w = rng.uniform(0.0, 0.3);
+            k[i * p + j] = w;
+            k[j * p + i] = w;
+        }
+    }
+    KernelCutFn::new(p, k, rng.uniform_vec(p, -3.0, 3.0))
+}
+
+fn iaes_with_remap(f: &dyn Submodular, argsort_remap: bool) -> IaesReport {
+    let opts = IaesOptions {
+        eps: 1e-10,
+        min_reduction_frac: 0.0, // contract on every certificate
+        argsort_remap,
+        ..Default::default()
+    };
+    solve_sfm_with_screening(f, &opts).unwrap()
+}
+
+/// The warm-restart remap is an *exact* acceleration: running the full
+/// IAES engine with the argsort-remap fast path force-enabled vs.
+/// force-disabled (full re-sort at every contraction) must produce
+/// bitwise-equal trajectories — every gap, every trigger, the minimizer.
+#[test]
+fn iaes_remap_fast_path_is_bitwise_equal_to_full_resort() {
+    for seed in [2024u64, 555] {
+        let f = seeded_kernel_cut(16, seed);
+        let a = iaes_with_remap(&f, true);
+        let b = iaes_with_remap(&f, false);
+        // The instances must actually exercise the warm-restart path.
+        assert!(
+            a.history.iter().any(|h| h.p_remaining < 16),
+            "seed {seed}: no contraction happened — test instance too easy"
+        );
+        assert_eq!(a.iters, b.iters, "seed {seed}: iteration counts differ");
+        assert_eq!(a.history.len(), b.history.len(), "seed {seed}");
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(
+                x.gap.to_bits(),
+                y.gap.to_bits(),
+                "seed {seed}: gap diverged at iter {}",
+                x.iter
+            );
+            assert_eq!(x.p_remaining, y.p_remaining, "seed {seed}");
+            assert_eq!(x.active, y.active, "seed {seed}");
+            assert_eq!(x.inactive, y.inactive, "seed {seed}");
+        }
+        assert_eq!(a.triggers.len(), b.triggers.len(), "seed {seed}");
+        for (x, y) in a.triggers.iter().zip(&b.triggers) {
+            assert_eq!(x.iter, y.iter, "seed {seed}");
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits(), "seed {seed}");
+            assert_eq!(x.new_active_ids, y.new_active_ids, "seed {seed}");
+            assert_eq!(x.new_inactive_ids, y.new_inactive_ids, "seed {seed}");
+        }
+        assert_eq!(a.minimizer, b.minimizer, "seed {seed}");
+        assert_eq!(a.minimum.to_bits(), b.minimum.to_bits(), "seed {seed}");
+        assert_eq!(a.final_gap.to_bits(), b.final_gap.to_bits(), "seed {seed}");
+    }
+}
+
+/// Solver-level lockstep across one contraction: two identically-warmed
+/// min-norm solvers, one restarted with the remap fast path and one with
+/// the forced full re-sort, must stay bit-identical forever after — and
+/// the fast-path solver must not have paid a full sort for the restart.
+#[test]
+fn reset_mapped_remap_toggle_is_bitwise_unobservable() {
+    let f = seeded_kernel_cut(18, 99);
+    let kept: Vec<usize> = (0..18).collect();
+    let mut scaled_a = ScaledFn::new(&f, &[], kept.clone());
+    let mut scaled_b = ScaledFn::new(&f, &[], kept.clone());
+    let mut a = MinNormPoint::new(&scaled_a, MinNormOptions::default(), None);
+    let mut b = MinNormPoint::new(&scaled_b, MinNormOptions::default(), None);
+    for _ in 0..15 {
+        a.step(&scaled_a);
+        b.step(&scaled_b);
+    }
+    // Contract both: remove four elements (2 certified active; 5, 11 and
+    // 14 inactive).
+    let new_kept: Vec<usize> =
+        kept.iter().copied().filter(|&i| ![2, 5, 11, 14].contains(&i)).collect();
+    let w_surv: Vec<f64> = new_kept.iter().map(|&i| a.w()[i]).collect();
+    let mut map_a = ContractionMap::new();
+    scaled_a.contract(&[2], &new_kept, &mut map_a);
+    let mut map_b = ContractionMap::new();
+    scaled_b.contract(&[2], &new_kept, &mut map_b);
+    map_b.remap_argsort = false;
+    let sorts_before = a.greedy_full_sorts();
+    a.reset_mapped(&scaled_a, &w_surv, &map_a);
+    b.reset_mapped(&scaled_b, &w_surv, &map_b);
+    assert_eq!(
+        a.greedy_full_sorts(),
+        sorts_before,
+        "remap-enabled restart must not full-sort"
+    );
+    assert!(
+        b.greedy_full_sorts() > sorts_before,
+        "remap-disabled restart must cold-sort"
+    );
+    assert_eq!(a.gap().to_bits(), b.gap().to_bits(), "restart gap diverged");
+    assert_lockstep(&mut a, &mut b, &scaled_a, 400, "min-norm/remap-toggle");
 }
 
 #[test]

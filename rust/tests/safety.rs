@@ -156,6 +156,52 @@ fn safety_with_loose_minnorm_tolerances() {
 }
 
 #[test]
+fn safety_through_multi_contraction_warm_restarts() {
+    // The projected-corral warm restart must preserve every safety
+    // property across instances that force *several* ground-set
+    // contractions (min_reduction_frac = 0 restarts on every
+    // certificate). Both solvers take their reset_mapped path here.
+    let mut rng = Pcg64::seeded(7007);
+    for trial in 0..4 {
+        let p = 9 + trial;
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 0.4);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -3.0, 3.0);
+        let f = KernelCutFn::new(p, k, unary);
+        let opts = IaesOptions {
+            eps: 1e-10,
+            min_reduction_frac: 0.0,
+            ..Default::default()
+        };
+        let report = IaesEngine::new(&f, opts.clone()).run().unwrap();
+        let contractions = report
+            .history
+            .windows(2)
+            .filter(|w| w[1].p_remaining < w[0].p_remaining)
+            .count();
+        assert!(
+            contractions >= 1,
+            "trial {trial}: instance produced no contraction"
+        );
+        assert_safe(&f, &opts, &format!("warm-multi-contraction t{trial}"));
+        let fw_opts = IaesOptions {
+            solver: SolverChoice::FrankWolfe(FwOptions::default()),
+            eps: 1e-8,
+            max_iters: 50_000,
+            min_reduction_frac: 0.0,
+            ..Default::default()
+        };
+        assert_safe(&f, &fw_opts, &format!("warm-multi-contraction-fw t{trial}"));
+    }
+}
+
+#[test]
 fn ground_set_reaches_zero_on_separable_instances() {
     // The "no theoretical limit" property: with strong unaries everything
     // is eventually certified and the residual problem empties.

@@ -178,6 +178,49 @@ fn assert_eventually_zero_alloc(mut step: impl FnMut(), label: &str) {
     panic!("{label}: still allocating ({last} allocs / 20 steps) after warm-up");
 }
 
+/// One full IAES-style restart cycle — cold rebuild at full size, a few
+/// steps, ground-set contraction, projected-corral warm restart, a few
+/// more steps — must settle to **zero** heap allocations once every
+/// buffer has reached its high-water size. This certifies the
+/// acceptance criterion that a solver restart across a contraction is
+/// allocation-free at steady state (the engine-side id bookkeeping is
+/// measured separately; this pins the solver + scaled-oracle path).
+#[test]
+fn warm_restart_across_contraction_is_zero_alloc() {
+    let p = 48;
+    let inner = seeded_kernel_cut(p, 4242);
+    let kept_full: Vec<usize> = (0..p).collect();
+    // Drop every fifth element; certify one of them active.
+    let kept_small: Vec<usize> = (0..p).filter(|&i| i % 5 != 0).collect();
+    let w_full = vec![0.0; p];
+    let mut scaled = ScaledFn::new(&inner, &[], kept_full.clone());
+    let mut solver = MinNormPoint::new(&scaled, MinNormOptions::default(), None);
+    let mut map = sfm_screen::lovasz::ContractionMap::new();
+    let mut w_surv: Vec<f64> = Vec::new();
+    let mut round = || {
+        scaled.set_reduction(&[], &kept_full);
+        solver.reset(&scaled, &w_full);
+        for _ in 0..6 {
+            solver.step(&scaled);
+        }
+        w_surv.clear();
+        w_surv.extend(kept_small.iter().map(|&i| solver.w()[i]));
+        scaled.contract(&[0], &kept_small, &mut map);
+        solver.reset_mapped(&scaled, &w_surv, &map);
+        for _ in 0..6 {
+            solver.step(&scaled);
+        }
+    };
+    for _ in 0..4 {
+        round();
+    }
+    let n = count_allocs(&mut round);
+    assert_eq!(
+        n, 0,
+        "contraction warm-restart cycle allocated {n} times after warm-up"
+    );
+}
+
 #[test]
 fn minnorm_steady_state_steps_are_zero_alloc() {
     let f = IwataFn::new(24);
