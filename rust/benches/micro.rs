@@ -21,6 +21,8 @@ use sfm_screen::coordinator::metrics::{
     bench, fmt_duration, write_bench_json, BenchRecord, Summary,
 };
 use sfm_screen::coordinator::report::Table;
+use sfm_screen::decompose::builders::{grid_cut_components, star_components_from_edges};
+use sfm_screen::decompose::{BlockProxSolver, DecomposeOptions};
 use sfm_screen::linalg::vecops::{argsort_desc, argsort_desc_into, argsort_desc_remap};
 use sfm_screen::linalg::{IncrementalCholesky, Mat};
 use sfm_screen::lovasz::{
@@ -78,7 +80,14 @@ fn main() -> anyhow::Result<()> {
         // each as the workspace-reusing fast path and the allocating
         // reference (fresh buffers + full sort every call).
         let dense = tm.kernel_cut();
-        let sparse = tm.knn_cut(10, 1.0);
+        // One kNN neighbor search (O(p²)) serves both the monolithic cut
+        // and its star decomposition below.
+        let knn_edges = tm.knn_edges(10, 1.0);
+        let sparse = sfm_screen::submodular::cut::CutFn::from_edges(
+            p,
+            &knn_edges,
+            tm.unary.clone(),
+        );
         let w = rng.normal_vec(p);
         let mut ws = GreedyWorkspace::new(p);
         let mut s_out = vec![0.0; p];
@@ -174,6 +183,21 @@ fn main() -> anyhow::Result<()> {
         });
         rows.push("restart/argsort-full", p, &sum);
 
+        // Decomposable block solver, §4.1 family (decompose/star-*):
+        // one best-response round (parallel per-point star prox solves +
+        // the global certificate pass) on the same kNN objective as the
+        // minnorm-iter row, at fixed thread counts so the trajectory
+        // stays comparable across machines.
+        let star_dec = star_components_from_edges(p, &knn_edges, tm.unary.clone());
+        for t in [1usize, 2] {
+            let mut bsolver = BlockProxSolver::new(
+                &star_dec,
+                DecomposeOptions { threads: t, ..Default::default() },
+            );
+            let (sum, _) = bench(1, 5, || bsolver.step(&star_dec).gap);
+            rows.push(&format!("decompose/star-round-t{t}"), p, &sum);
+        }
+
         // PAV refinement.
         let t = rng.normal_vec(p);
         let mut out = vec![0.0; p];
@@ -196,6 +220,50 @@ fn main() -> anyhow::Result<()> {
             let (sum, _) =
                 bench(3, 30, || xla.screen(&inputs, RuleSet::all()).identified());
             rows.push("screen/xla", p, &sum);
+        }
+    }
+
+    // Decomposable block solver, §4.2 family (decompose/grid-*): a g×g
+    // 8-neighbor grid cut decomposed into row/column/diagonal chains +
+    // unary, one best-response round per rep, vs one monolithic min-norm
+    // iteration on the identical objective. Fixed t1/t2 rows are the
+    // regression-tracked pair; SFM_BENCH_THREADS=N adds a custom-count
+    // row for thread-scaling sweeps (not baseline-compared — core counts
+    // differ across machines).
+    for &p in &sizes {
+        let g = (p as f64).sqrt().round().max(2.0) as usize;
+        let (h, w) = (g, g);
+        let mut grng = Pcg64::seeded(4321);
+        let edges: Vec<(usize, usize, f64)> =
+            sfm_screen::workloads::grid::eight_neighbor_edges(h, w)
+                .into_iter()
+                .map(|(a, b)| (a, b, grng.uniform(0.0, 1.0)))
+                .collect();
+        let unary = grng.uniform_vec(h * w, -1.0, 1.0);
+        let mono = sfm_screen::submodular::cut::CutFn::from_edges(
+            h * w,
+            &edges,
+            unary.clone(),
+        );
+        let dec = grid_cut_components(h, w, &edges, unary)?;
+        let mut msolver = MinNormPoint::new(&mono, MinNormOptions::default(), None);
+        let (sum, _) = bench(3, 10, || msolver.step(&mono).gap);
+        rows.push("decompose/grid-mono-iter", h * w, &sum);
+        let mut tcounts = vec![1usize, 2];
+        if let Ok(tv) = std::env::var("SFM_BENCH_THREADS") {
+            if let Ok(tv) = tv.trim().parse::<usize>() {
+                if tv > 0 && !tcounts.contains(&tv) {
+                    tcounts.push(tv);
+                }
+            }
+        }
+        for t in tcounts {
+            let mut bsolver = BlockProxSolver::new(
+                &dec,
+                DecomposeOptions { threads: t, ..Default::default() },
+            );
+            let (sum, _) = bench(1, 5, || bsolver.step(&dec).gap);
+            rows.push(&format!("decompose/grid-round-t{t}"), h * w, &sum);
         }
     }
 

@@ -20,7 +20,8 @@ pub struct Cli {
 }
 
 /// Boolean-valued flags that take no argument.
-const BARE_FLAGS: &[&str] = &["full", "mi", "quiet", "help", "version", "json"];
+const BARE_FLAGS: &[&str] =
+    &["full", "mi", "quiet", "help", "version", "json", "decompose"];
 
 /// Parse an argument vector (without argv[0]).
 pub fn parse_args(args: &[String]) -> Result<Cli> {
@@ -95,6 +96,7 @@ COMMANDS:
   fig2             Figure 2: rejection ratios on two-moons
   fig3             Figure 3: screening visualization (--p, default 400)
   fig4             Figure 4: rejection ratios on images
+  decompose-bench  monolithic vs block-parallel decomposed solves (--threads-list 1,2,4)
   ablation-rho     ρ trigger-frequency sweep (Remark 5)
   ablation-rules   rule-pair contributions
   ablation-solver  min-norm vs conditional gradient (Remark 2)
@@ -114,6 +116,9 @@ COMMON FLAGS:
   --out-dir DIR    CSV output directory (default bench_out)
   --full           paper-scale sizes
   --mi             exact GP mutual-information objective (slow)
+  --decompose      solve via the decomposable block solver (solve command)
+  --threads N      block-solver worker threads (0 = all cores)
+  --threads-list L thread counts for decompose-bench, e.g. 1,2,4
   --quiet          suppress progress logs
 ";
 

@@ -7,6 +7,7 @@
 
 use super::jobs::{solver_choice, BackendChoice, JobSpec, WorkloadSpec};
 use super::report::{fnum, write_csv_rows, Table};
+use crate::decompose::DecomposeOptions;
 use crate::screening::iaes::{IaesOptions, IaesReport};
 use crate::screening::RuleSet;
 use crate::submodular::Submodular;
@@ -170,6 +171,25 @@ pub fn run_variant(
         name: workload.label(),
         workload: workload.clone(),
         opts: cfg.options(rules)?,
+        decompose: None,
+    };
+    let res = job.run()?;
+    Ok(VariantRun { wall: res.wall, report: res.report })
+}
+
+/// Run one (workload, rules) variant through the decomposable block
+/// solver with `threads` workers.
+pub fn run_variant_decomposed(
+    workload: &WorkloadSpec,
+    rules: RuleSet,
+    cfg: &BenchConfig,
+    threads: usize,
+) -> Result<VariantRun> {
+    let job = JobSpec {
+        name: format!("{}+dec(t={threads})", workload.label()),
+        workload: workload.clone(),
+        opts: cfg.options(rules)?,
+        decompose: Some(DecomposeOptions { threads, ..Default::default() }),
     };
     let res = job.run()?;
     Ok(VariantRun { wall: res.wall, report: res.report })
@@ -441,6 +461,52 @@ pub fn fig4(cfg: &BenchConfig) -> Result<Table> {
     Ok(table)
 }
 
+/// **Decompose** — monolithic vs block-parallel prox solves on the two
+/// workload families, one row per two-moons size plus one per image,
+/// with a thread-scaling column per entry in `threads`. The minima are
+/// cross-checked (screening safety is solver-independent).
+pub fn decompose_bench(cfg: &BenchConfig, threads: &[usize]) -> Result<Table> {
+    let mut header: Vec<String> = vec!["workload".into(), "p".into(), "mono".into()];
+    for &t in threads {
+        header.push(format!("dec t={t}"));
+        header.push(format!("spdup t={t}"));
+    }
+    let cols: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&cols);
+    cfg.warmup(&cfg.sizes);
+    let mut workloads: Vec<(WorkloadSpec, usize)> = cfg
+        .sizes
+        .iter()
+        .map(|&p| (WorkloadSpec::TwoMoons { p, use_mi: false, seed: cfg.seed }, p))
+        .collect();
+    let suite = benchmark_suite(cfg.image_scale);
+    for (i, img) in suite.iter().enumerate() {
+        workloads.push((
+            WorkloadSpec::Image { index: i, scale: cfg.image_scale },
+            img.num_pixels(),
+        ));
+    }
+    for (wl, p) in &workloads {
+        cfg.log(&format!("decompose: {} monolithic", wl.label()));
+        let mono = run_variant(wl, RuleSet::all(), cfg)?;
+        let mut row = vec![wl.label(), p.to_string(), fnum(secs(mono.wall))];
+        for &t in threads {
+            cfg.log(&format!("decompose: {} block t={t}", wl.label()));
+            let dec = run_variant_decomposed(wl, RuleSet::all(), cfg, t)?;
+            check_consistent(
+                &format!("{} t={t}", wl.label()),
+                &mono.report,
+                &[("decomposed", &dec.report)],
+            );
+            row.push(fnum(secs(dec.wall)));
+            row.push(fnum(speedup(mono.wall, dec.wall)));
+        }
+        table.push_row(row);
+    }
+    table.write_csv(cfg.out_dir.join("decompose.csv"))?;
+    Ok(table)
+}
+
 /// **Ablation A1** — trigger frequency ρ (Remark 5).
 pub fn ablation_rho(cfg: &BenchConfig, p: usize, rhos: &[f64]) -> Result<Table> {
     let mut table = Table::new(&["rho", "wall(s)", "screen(s)", "triggers", "iters"]);
@@ -567,6 +633,17 @@ mod tests {
         assert_eq!(t.rows.len(), 2);
         let t = ablation_rules(&cfg, 30).unwrap();
         assert_eq!(t.rows.len(), 4);
+        std::fs::remove_dir_all(&cfg.out_dir).ok();
+    }
+
+    #[test]
+    fn decompose_bench_smoke() {
+        let mut cfg = tiny_cfg("sfm_dec");
+        cfg.sizes = vec![30];
+        cfg.image_scale = 0.12; // every scene clamps to 8x8 = 64 pixels
+        let t = decompose_bench(&cfg, &[1]).unwrap();
+        assert_eq!(t.rows.len(), 1 + 5, "one two-moons row + five images");
+        assert!(cfg.out_dir.join("decompose.csv").is_file());
         std::fs::remove_dir_all(&cfg.out_dir).ok();
     }
 

@@ -1,5 +1,6 @@
 //! Declarative experiment jobs: workload × solver × rules × backend.
 
+use crate::decompose::{solve_decomposed, DecomposableFn, DecomposeOptions};
 use crate::screening::iaes::{solve_sfm_with_screening, IaesOptions, IaesReport, SolverChoice};
 use crate::screening::{RuleSet, Screener};
 use crate::solvers::frankwolfe::FwOptions;
@@ -96,6 +97,31 @@ impl WorkloadSpec {
         }
     }
 
+    /// Build the *decomposed* form of the same objective, for workloads
+    /// that have one: two-moons kNN cut → per-point stars + label term,
+    /// images → grid chains + unary term. Errors for workloads without a
+    /// decomposition (Iwata, the GP mutual-information objective).
+    pub fn build_decomposed(&self) -> Result<DecomposableFn> {
+        match *self {
+            WorkloadSpec::TwoMoons { p, use_mi, seed } => {
+                anyhow::ensure!(
+                    !use_mi,
+                    "the GP mutual-information objective has no decomposition"
+                );
+                let tm = TwoMoons::generate(TwoMoonsParams { p, seed, ..Default::default() });
+                Ok(tm.knn_cut_decomposition(10, 1.0))
+            }
+            WorkloadSpec::Image { index, scale } => {
+                let mut suite = benchmark_suite(scale);
+                anyhow::ensure!(index < suite.len(), "image index out of range");
+                suite.swap_remove(index).cut_decomposition()
+            }
+            WorkloadSpec::Iwata { .. } => {
+                bail!("the Iwata workload has no decomposition")
+            }
+        }
+    }
+
     /// Short label for reports.
     pub fn label(&self) -> String {
         match *self {
@@ -147,6 +173,10 @@ pub struct JobSpec {
     pub workload: WorkloadSpec,
     /// IAES engine options.
     pub opts: IaesOptions,
+    /// Solve through the decomposable block solver (`Some`) instead of
+    /// the monolithic `opts.solver` (`None`). Requires a workload with a
+    /// decomposition ([`WorkloadSpec::build_decomposed`]).
+    pub decompose: Option<DecomposeOptions>,
 }
 
 /// A completed job.
@@ -161,12 +191,23 @@ pub struct JobResult {
 }
 
 impl JobSpec {
-    /// Execute the job (builds the oracle, runs Algorithm 2).
+    /// Execute the job (builds the oracle, runs Algorithm 2 — through
+    /// the block solver when `decompose` is set).
     pub fn run(&self) -> Result<JobResult> {
-        let f = self.workload.build()?;
-        let t0 = Instant::now();
-        let report = solve_sfm_with_screening(f.as_ref(), &self.opts)?;
-        Ok(JobResult { name: self.name.clone(), wall: t0.elapsed(), report })
+        let report;
+        let wall;
+        if let Some(dopts) = self.decompose {
+            let f = self.workload.build_decomposed()?;
+            let t0 = Instant::now();
+            report = solve_decomposed(&f, &self.opts, dopts)?;
+            wall = t0.elapsed();
+        } else {
+            let f = self.workload.build()?;
+            let t0 = Instant::now();
+            report = solve_sfm_with_screening(f.as_ref(), &self.opts)?;
+            wall = t0.elapsed();
+        }
+        Ok(JobResult { name: self.name.clone(), wall, report })
     }
 }
 
@@ -197,6 +238,7 @@ mod tests {
             name: "iwata-20".into(),
             workload: WorkloadSpec::Iwata { p: 20 },
             opts: IaesOptions::default(),
+            decompose: None,
         };
         let res = job.run().unwrap();
         assert!(res.report.minimum < 0.0);
@@ -209,6 +251,7 @@ mod tests {
             name: "tm-40".into(),
             workload: WorkloadSpec::TwoMoons { p: 40, use_mi: false, seed: 3 },
             opts: IaesOptions::default(),
+            decompose: None,
         };
         let res = job.run().unwrap();
         assert!(res.report.final_gap < 1e-6 || res.report.emptied);

@@ -115,6 +115,7 @@ mod tests {
                 name: format!("iwata-{i}"),
                 workload: WorkloadSpec::Iwata { p: 15 + i },
                 opts: IaesOptions::default(),
+                decompose: None,
             })
             .collect()
     }
@@ -164,6 +165,7 @@ mod tests {
             name: "exploder".into(),
             workload: WorkloadSpec::Iwata { p: 12 },
             opts: IaesOptions::default(),
+            decompose: None,
         };
         let err = run_caught_with(3, &job, || panic!("oracle blew up")).unwrap_err();
         let msg = err.to_string();

@@ -1,0 +1,272 @@
+//! Per-component block prox subproblems.
+//!
+//! One best-response step of the block solver fixes every other
+//! component and solves, for component `i` with offset `z = Σ_{j≠i} y_j`
+//! restricted to `S_i`,
+//!
+//! ```text
+//! y_i ← argmin_{y ∈ B(F̂_i)} ½‖y + z‖².
+//! ```
+//!
+//! Substituting `u = y + z` and using `B(F̂_i) + z = B(F̂_i + m_z)` (a
+//! modular shift translates the base polytope), this is the plain
+//! min-norm-point problem on the shifted polytope — [`OffsetFn`] is that
+//! shift as a zero-cost oracle wrapper, solved by the existing
+//! Fujishige–Wolfe solver. For concave-of-cardinality components the
+//! problem has a closed form via isotonic regression
+//! ([`card_prox_into`]), and for modular components `B` is a single
+//! point, so no solve happens at all.
+
+use crate::linalg::vecops::argsort_desc_into;
+use crate::solvers::pav::PavWorkspace;
+use crate::submodular::{OracleScratch, Submodular};
+
+/// `G = F + m` for a modular `m`: the oracle whose base polytope is
+/// `B(F) + m`. Zero-cost wrapper — gains are the inner gains plus the
+/// per-element offset, so the greedy pass stays allocation-free.
+pub struct OffsetFn<'a> {
+    inner: &'a dyn Submodular,
+    offset: &'a [f64],
+}
+
+impl<'a> OffsetFn<'a> {
+    /// Wrap `inner` with the modular shift `offset` (one weight per
+    /// element of `inner`'s ground set).
+    pub fn new(inner: &'a dyn Submodular, offset: &'a [f64]) -> Self {
+        assert_eq!(inner.ground_size(), offset.len());
+        OffsetFn { inner, offset }
+    }
+}
+
+impl Submodular for OffsetFn<'_> {
+    fn ground_size(&self) -> usize {
+        self.inner.ground_size()
+    }
+
+    fn eval(&self, set: &[bool]) -> f64 {
+        let shift: f64 = set
+            .iter()
+            .zip(self.offset)
+            .filter(|(&b, _)| b)
+            .map(|(_, &m)| m)
+            .sum();
+        self.inner.eval(set) + shift
+    }
+
+    fn prefix_gains_from(&self, base: &[bool], order: &[usize], out: &mut [f64]) {
+        let mut scratch = OracleScratch::new();
+        self.prefix_gains_scratch(base, order, out, &mut scratch);
+    }
+
+    fn prefix_gains_scratch(
+        &self,
+        base: &[bool],
+        order: &[usize],
+        out: &mut [f64],
+        scratch: &mut OracleScratch,
+    ) {
+        self.inner.prefix_gains_scratch(base, order, out, scratch);
+        for (o, &j) in out.iter_mut().zip(order) {
+            *o += self.offset[j];
+        }
+    }
+}
+
+/// Reusable buffers for [`card_prox_into`] (one per worker arena).
+#[derive(Clone, Debug, Default)]
+pub struct CardProxWorkspace {
+    /// Projection target `t = −(z + m̂)`.
+    t: Vec<f64>,
+    /// Ladder-shifted targets `t_σ − ĉ` (PAV input).
+    shifted: Vec<f64>,
+    /// PAV fit.
+    fit: Vec<f64>,
+    /// Descending argsort of `t`.
+    order: Vec<usize>,
+    /// PAV block stack.
+    pav: PavWorkspace,
+}
+
+/// Closed-form block prox of a cardinality component:
+///
+/// ```text
+/// y* = argmin ½‖y + z‖²  over  y ∈ B(ĝ∘card + m̂)
+/// ```
+///
+/// where `ĝ(k) = g(b + k) − g(b)` is the Lemma-1 contraction of the
+/// tabulated concave `g` by the component's `b = |Ê ∩ S_i|` certified
+/// elements — the ladder `ĉ_k = g[b+k] − g[b+k−1]` is just a window of
+/// the full ladder, so the closed form survives IAES contractions.
+///
+/// Derivation (Bach 2013, §9.1): `B(ĝ∘card)` is the permutohedron of the
+/// non-increasing ladder `ĉ`, and `B(ĝ∘card + m̂) = B(ĝ∘card) + m̂`.
+/// Substituting `y = y° + m̂`, `t = −(z + m̂)` leaves the Euclidean
+/// projection of `t` onto the permutohedron. The projection shares `t`'s
+/// descending order `σ` (rearrangement), and writing `x_k = w_{σ_k}` for
+/// the prox primal, the problem separates into
+/// `min Σ_k ½(x_k − (t_{σ_k} − ĉ_k))²` subject to `x` non-increasing —
+/// exactly the non-increasing isotonic regression solved by PAV. The
+/// dual point is then `y°_{σ_k} = t_{σ_k} − x_k` (block sums telescope to
+/// prefix sums of `ĉ`, so feasibility holds with equality on pooled
+/// blocks).
+///
+/// Writes `y*` into `y_out` (length `n = z.len()`), allocation-free once
+/// `ws` reached working size. Ties in `t` break by index (the shared
+/// deterministic argsort), so the result is identical for any caller
+/// schedule.
+pub fn card_prox_into(
+    g: &[f64],
+    base_count: usize,
+    mhat: &[f64],
+    z: &[f64],
+    ws: &mut CardProxWorkspace,
+    y_out: &mut [f64],
+) {
+    let n = z.len();
+    assert_eq!(mhat.len(), n);
+    assert_eq!(y_out.len(), n);
+    assert!(base_count + n < g.len(), "ladder window out of range");
+    ws.t.clear();
+    ws.t.extend(z.iter().zip(mhat).map(|(&zk, &mk)| -(zk + mk)));
+    argsort_desc_into(&ws.t, &mut ws.order);
+    ws.shifted.clear();
+    ws.shifted.extend(ws.order.iter().enumerate().map(|(k, &j)| {
+        let c_k = g[base_count + k + 1] - g[base_count + k];
+        ws.t[j] - c_k
+    }));
+    ws.fit.clear();
+    ws.fit.resize(n, 0.0);
+    ws.pav.run(&ws.shifted, &mut ws.fit);
+    for (k, &j) in ws.order.iter().enumerate() {
+        y_out[j] = ws.t[j] - ws.fit[k] + mhat[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lovasz::in_base_polytope;
+    use crate::rng::Pcg64;
+    use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+    use crate::solvers::ProxSolver;
+    use crate::submodular::concave_card::ConcaveCardFn;
+    use crate::submodular::iwata::IwataFn;
+    use crate::submodular::scaled::ScaledFn;
+    use crate::testutil::forall_rng;
+
+    /// Reference block prox via the min-norm solver on the shifted
+    /// polytope: `u* = argmin ½‖u‖² over B(F + m_z)`, `y* = u* − z`.
+    fn minnorm_block_prox(f: &dyn Submodular, z: &[f64]) -> Vec<f64> {
+        let shifted = OffsetFn::new(f, z);
+        let mut solver = MinNormPoint::new(&shifted, MinNormOptions::default(), None);
+        for _ in 0..5000 {
+            let ev = solver.step(&shifted);
+            if ev.wolfe_gap <= 1e-13 {
+                break;
+            }
+        }
+        solver.s().iter().zip(z).map(|(&u, &zk)| u - zk).collect()
+    }
+
+    #[test]
+    fn offset_fn_shifts_base_polytope() {
+        let f = IwataFn::new(7);
+        let mut rng = Pcg64::seeded(71);
+        let z = rng.uniform_vec(7, -1.0, 1.0);
+        let shifted = OffsetFn::new(&f, &z);
+        // B(F + m_z) = B(F) + z: greedy vertices shift coordinate-wise.
+        let w = rng.normal_vec(7);
+        let mut ws = crate::lovasz::GreedyWorkspace::new(7);
+        let mut s0 = vec![0.0; 7];
+        let mut s1 = vec![0.0; 7];
+        crate::lovasz::greedy_base_vertex(&f, &w, &mut ws, &mut s0);
+        crate::lovasz::greedy_base_vertex(&shifted, &w, &mut ws, &mut s1);
+        for j in 0..7 {
+            assert!((s1[j] - (s0[j] + z[j])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn card_prox_matches_minnorm() {
+        forall_rng(20, |rng| {
+            let n = 2 + rng.below(8);
+            let scale = rng.uniform(0.3, 2.0);
+            let g: Vec<f64> = (0..=n).map(|k| scale * (k as f64).sqrt()).collect();
+            let m = rng.uniform_vec(n, -1.0, 1.0);
+            let z = rng.uniform_vec(n, -1.5, 1.5);
+            let f = ConcaveCardFn::new(g.clone(), m.clone());
+            let mut ws = CardProxWorkspace::default();
+            let mut y = vec![0.0; n];
+            card_prox_into(&g, 0, &m, &z, &mut ws, &mut y);
+            // Feasible in B(F)…
+            if !in_base_polytope(&f, &y, 1e-8) {
+                return Err("card prox left the base polytope".into());
+            }
+            // …and equal to the min-norm reference on the shifted polytope.
+            let y_ref = minnorm_block_prox(&f, &z);
+            for k in 0..n {
+                if (y[k] - y_ref[k]).abs() > 1e-6 {
+                    return Err(format!(
+                        "coord {k}: pav {} vs minnorm {}",
+                        y[k], y_ref[k]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn card_prox_reduced_window_matches_scaled_minnorm() {
+        // The Lemma-1 contraction of g∘card + m is ĝ∘card + m̂ with the
+        // ladder window shifted by the base count: the closed form on the
+        // window must match the min-norm solve of the ScaledFn.
+        forall_rng(12, |rng| {
+            let s = 6 + rng.below(5);
+            let scale = rng.uniform(0.3, 1.5);
+            let g: Vec<f64> = (0..=s).map(|k| scale * (k as f64).sqrt()).collect();
+            let m = rng.uniform_vec(s, -1.0, 1.0);
+            let f = ConcaveCardFn::new(g.clone(), m.clone());
+            // Split: element 0 active, last element inactive, rest kept.
+            let active = vec![0usize];
+            let kept: Vec<usize> = (1..s - 1).collect();
+            let scaled = ScaledFn::new(&f, &active, kept.clone());
+            let n = kept.len();
+            let z = rng.uniform_vec(n, -1.0, 1.0);
+            let mhat: Vec<f64> = kept.iter().map(|&l| m[l]).collect();
+            let mut ws = CardProxWorkspace::default();
+            let mut y = vec![0.0; n];
+            card_prox_into(&g, active.len(), &mhat, &z, &mut ws, &mut y);
+            if !in_base_polytope(&scaled, &y, 1e-8) {
+                return Err("reduced card prox infeasible".into());
+            }
+            let y_ref = minnorm_block_prox(&scaled, &z);
+            for k in 0..n {
+                if (y[k] - y_ref[k]).abs() > 1e-6 {
+                    return Err(format!(
+                        "reduced coord {k}: pav {} vs minnorm {}",
+                        y[k], y_ref[k]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn modular_offset_prox_is_constant() {
+        // For a modular component the pav path degenerates to y = m̂
+        // (zero ladder): sanity-check the formula's modular limit.
+        let n = 6;
+        let g = vec![0.0; n + 1];
+        let mut rng = Pcg64::seeded(99);
+        let m = rng.uniform_vec(n, -1.0, 1.0);
+        let z = rng.uniform_vec(n, -2.0, 2.0);
+        let mut ws = CardProxWorkspace::default();
+        let mut y = vec![0.0; n];
+        card_prox_into(&g, 0, &m, &z, &mut ws, &mut y);
+        for k in 0..n {
+            assert!((y[k] - m[k]).abs() < 1e-12, "modular limit broken at {k}");
+        }
+    }
+}

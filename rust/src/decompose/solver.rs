@@ -1,0 +1,699 @@
+//! The block best-response solver for decomposable prox problems.
+//!
+//! Minimizes `½‖Σ_i y_i‖²` over the product `Π_i B(F̂_i)` — equivalent to
+//! the (Q-D) dual over `B(F̂) = Σ_i B(F̂_i)` — by damped Jacobi
+//! best-response rounds:
+//!
+//! 1. **Best responses** (parallel): with the aggregate `y = Σ_j y_j`
+//!    frozen, every component solves `ŷ_i = argmin_{v ∈ B(F̂_i)}
+//!    ½‖v + (y − y_i)‖²` — PAV closed form for cardinality/modular
+//!    components, the min-norm solver on the modular-shifted polytope for
+//!    generic ones ([`super::prox`]). All responses read the *same*
+//!    snapshot, so the round is deterministic for any thread count.
+//! 2. **Exact line search** on the aggregated direction
+//!    `d = Σ_i (ŷ_i − y_i)`: `θ* = clamp(−⟨y, d⟩/‖d‖², 0, 1)`, then
+//!    `y_i ← y_i + θ*(ŷ_i − y_i)` (a convex combination, so `y_i` never
+//!    leaves `B(F̂_i)`). Block optimality gives `⟨y, d⟩ ≤ Σ_i (best-
+//!    response improvement) ≤ 0`, so `d` is a strict descent direction
+//!    until every block is optimal — and for a smooth convex objective
+//!    over a Cartesian product, blockwise optimality *is* global
+//!    optimality, i.e. the fixed points are exactly the min-norm points
+//!    of `B(F̂)`.
+//! 3. **Global certificate pass** (the one sequential oracle pass): one
+//!    greedy pass on the reduced function in direction `−y` yields the
+//!    PAV-refined primal `ŵ`, the best level value `F̂(C)`, and the gap
+//!    `P(ŵ) − D(y)` — identical bookkeeping to the monolithic solvers,
+//!    so the IAES engine and the screening rules consume decomposed
+//!    solves through the unchanged [`ProxSolver`] interface. Safety
+//!    needs nothing more: `y ∈ B(F̂)` holds at every round by
+//!    construction, so the gap is always a valid screening radius.
+//!
+//! IAES ground-set contractions arrive through
+//! [`ProxSolver::reset_mapped`] and are threaded through every component:
+//! the [`ContractionMap`] (with its removed-to-active annotations)
+//! splits each component's surviving support into its own base/kept
+//! pair, the per-component [`ScaledFn`] re-targets in place, and the
+//! component duals are regenerated as greedy vertices of the contracted
+//! polytopes — valid members of the new `B(F̂_i)` by construction, which
+//! preserves the ROADMAP's warm-restart projection invariants (a
+//! coordinate-projected dual point would *not* be feasible in general).
+//!
+//! Work is distributed over scoped threads with an atomic work index
+//! (the [`coordinator::runner`](crate::coordinator::runner) pattern) and
+//! **persistent per-worker arenas** (a min-norm solver + PAV workspace
+//! each), so steady-state rounds at `threads = 1` are allocation-free;
+//! the parallel path additionally pays only the `O(threads)` scope-spawn
+//! cost per round.
+
+use super::prox::{card_prox_into, CardProxWorkspace, OffsetFn};
+use super::{ComponentKind, DecomposableFn};
+use crate::linalg::vecops::{dot, norm2_sq};
+use crate::lovasz::{greedy_base_vertex, ContractionMap, GreedyWorkspace};
+use crate::screening::iaes::{IaesEngine, IaesOptions, IaesReport};
+use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+use crate::solvers::{PrimalState, ProxSolver, SolverEvent};
+use crate::submodular::scaled::ScaledFn;
+use crate::submodular::Submodular;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Options for [`BlockProxSolver`].
+#[derive(Clone, Copy, Debug)]
+pub struct DecomposeOptions {
+    /// Worker threads for the best-response round (`0` = all available
+    /// cores). The trajectory is bit-identical for every value — the
+    /// round is a Jacobi sweep off one frozen snapshot and the
+    /// aggregation is sequential in component order.
+    pub threads: usize,
+    /// Wolfe-gap tolerance for generic (min-norm) block solves.
+    pub inner_tol: f64,
+    /// Iteration cap per generic block solve.
+    pub max_inner: usize,
+    /// Options of the per-worker min-norm solvers.
+    pub minnorm: MinNormOptions,
+}
+
+impl Default for DecomposeOptions {
+    fn default() -> Self {
+        DecomposeOptions {
+            threads: 0,
+            inner_tol: 1e-11,
+            max_inner: 256,
+            minnorm: MinNormOptions::default(),
+        }
+    }
+}
+
+/// Per-component mutable state (one [`Mutex`] slot per component; locks
+/// are uncontended — the atomic work index hands each slot to exactly
+/// one worker per round).
+struct CompState<'a> {
+    /// Lemma-1 view of the component at the current reduction.
+    scaled: ScaledFn<'a>,
+    /// Structural class (borrowed from the decomposition).
+    kind: &'a ComponentKind,
+    /// Local ids (component ground set) still in play, ascending.
+    local_kept: Vec<usize>,
+    /// Local ids certified active — the component's share of `Ê`.
+    local_base: Vec<usize>,
+    /// Reduced-problem index of each kept element (parallel to
+    /// `local_kept`).
+    reduced_pos: Vec<usize>,
+    /// Component dual `y_i` (local reduced coords).
+    y: Vec<f64>,
+    /// Best response `ŷ_i`.
+    y_hat: Vec<f64>,
+    /// Offset `z_i = y − y_i` restricted to the support.
+    z: Vec<f64>,
+    /// Scratch: restart direction / reduced modular gather.
+    w0: Vec<f64>,
+}
+
+/// Persistent per-worker solve state: buffers grow to the largest
+/// component each worker touches and are reused every round.
+#[derive(Default)]
+struct BlockArena {
+    /// Lazily created min-norm solver for generic block solves.
+    solver: Option<MinNormPoint>,
+    /// Cardinality closed-form buffers.
+    card: CardProxWorkspace,
+}
+
+/// One component best response off the frozen aggregate `y_global`.
+fn best_response(
+    st: &mut CompState<'_>,
+    arena: &mut BlockArena,
+    y_global: &[f64],
+    opts: &DecomposeOptions,
+) {
+    let n = st.local_kept.len();
+    if n == 0 {
+        return;
+    }
+    for k in 0..n {
+        st.z[k] = y_global[st.reduced_pos[k]] - st.y[k];
+    }
+    match st.kind {
+        ComponentKind::Modular { m } => {
+            // B(F̂_i) is the single point m̂ — the response is constant.
+            for (k, &l) in st.local_kept.iter().enumerate() {
+                st.y_hat[k] = m[l];
+            }
+        }
+        ComponentKind::Cardinality { g, m } => {
+            for (k, &l) in st.local_kept.iter().enumerate() {
+                st.w0[k] = m[l];
+            }
+            card_prox_into(
+                g,
+                st.local_base.len(),
+                &st.w0,
+                &st.z,
+                &mut arena.card,
+                &mut st.y_hat,
+            );
+        }
+        ComponentKind::Generic => {
+            // min ½‖v + z‖² over B(F̂_i)  ⇔  min ½‖u‖² over B(F̂_i + m_z),
+            // v = u − z. Warm direction: the current block iterate −(y+z).
+            for k in 0..n {
+                st.w0[k] = -(st.y[k] + st.z[k]);
+            }
+            let shifted = OffsetFn::new(&st.scaled, &st.z);
+            match arena.solver.as_mut() {
+                Some(solver) => solver.reset(&shifted, &st.w0),
+                None => {
+                    arena.solver =
+                        Some(MinNormPoint::new(&shifted, opts.minnorm, Some(&st.w0)));
+                }
+            }
+            let solver = arena.solver.as_mut().expect("solver just installed");
+            for _ in 0..opts.max_inner {
+                let ev = solver.step(&shifted);
+                if ev.wolfe_gap <= opts.inner_tol {
+                    break;
+                }
+            }
+            for (k, (&u, &zk)) in solver.s().iter().zip(&st.z).enumerate() {
+                st.y_hat[k] = u - zk;
+            }
+            // Accept the response only if it improves the block objective
+            // ½‖y + z‖²: an inner solve cut off by `max_inner` before
+            // overtaking the incumbent would otherwise break the
+            // line-search descent property (⟨y, d⟩ ≤ 0). The closed-form
+            // arms are exact and need no guard.
+            let mut cur = 0.0;
+            let mut new = 0.0;
+            for k in 0..n {
+                let zk = st.z[k];
+                cur += (st.y[k] + zk) * (st.y[k] + zk);
+                new += (st.y_hat[k] + zk) * (st.y_hat[k] + zk);
+            }
+            if new > cur {
+                let (y_hat, y) = (&mut st.y_hat, &st.y);
+                y_hat[..n].copy_from_slice(&y[..n]);
+            }
+        }
+    }
+}
+
+/// The decomposable-dual solver behind the [`ProxSolver`] interface.
+pub struct BlockProxSolver<'a> {
+    dec: &'a DecomposableFn,
+    opts: DecomposeOptions,
+    /// Resolved worker count.
+    threads: usize,
+    comps: Vec<Mutex<CompState<'a>>>,
+    arenas: Vec<BlockArena>,
+    /// Aggregated dual `y = Σ_i y_i` (reduced coords) — always in `B(F̂)`.
+    y: Vec<f64>,
+    /// Aggregated best-response direction.
+    d: Vec<f64>,
+    shared: PrimalState,
+    /// Scratch vertex buffer for the global certificate pass.
+    q: Vec<f64>,
+    /// Greedy workspace for per-component restart passes (kept separate
+    /// from the shared one so component passes never clobber the global
+    /// adaptive argsort warm start).
+    comp_ws: GreedyWorkspace,
+    /// Restart scratch: restricted direction / regenerated vertex.
+    dirbuf: Vec<f64>,
+    vbuf: Vec<f64>,
+}
+
+impl<'a> BlockProxSolver<'a> {
+    /// Build on the full problem and initialize like the monolithic
+    /// solvers: every `y_i` is the greedy vertex of `B(F_i)` along
+    /// `w_init` (zeros → index order).
+    pub fn new(dec: &'a DecomposableFn, opts: DecomposeOptions) -> Self {
+        let p = dec.ground_size();
+        let threads = if opts.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            opts.threads
+        };
+        let comps = dec
+            .components()
+            .iter()
+            .map(|c| {
+                let s = c.support().len();
+                Mutex::new(CompState {
+                    scaled: ScaledFn::new(c.inner(), &[], (0..s).collect()),
+                    kind: c.kind(),
+                    local_kept: (0..s).collect(),
+                    local_base: Vec::new(),
+                    reduced_pos: c.support().to_vec(),
+                    y: vec![0.0; s],
+                    y_hat: vec![0.0; s],
+                    z: vec![0.0; s],
+                    w0: vec![0.0; s],
+                })
+            })
+            .collect();
+        let mut solver = BlockProxSolver {
+            dec,
+            opts,
+            threads,
+            comps,
+            arenas: (0..threads.max(1)).map(|_| BlockArena::default()).collect(),
+            y: vec![0.0; p],
+            d: vec![0.0; p],
+            shared: PrimalState::new(p),
+            q: vec![0.0; p],
+            comp_ws: GreedyWorkspace::new(0),
+            dirbuf: Vec::new(),
+            vbuf: Vec::new(),
+        };
+        let w0 = vec![0.0; p];
+        solver.reset(dec, &w0);
+        solver
+    }
+
+    /// Resolved worker-thread count (diagnostics / benches).
+    pub fn num_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of components (diagnostics).
+    pub fn num_components(&self) -> usize {
+        self.comps.len()
+    }
+
+    /// Regenerate every component dual as the greedy vertex of its
+    /// (possibly contracted) polytope along the restricted `w_init`, then
+    /// rebuild the aggregate. Valid for `B(F̂_i)` by construction — this
+    /// is what keeps restarts feasible where a coordinate projection of
+    /// the old `y_i` would not be.
+    fn regenerate_duals(&mut self, w_init: &[f64]) {
+        for slot in self.comps.iter_mut() {
+            let st = slot.get_mut().expect("component poisoned");
+            let n = st.local_kept.len();
+            st.y.clear();
+            st.y.resize(n, 0.0);
+            if n == 0 {
+                continue;
+            }
+            self.dirbuf.clear();
+            self.dirbuf.extend(st.reduced_pos.iter().map(|&pos| w_init[pos]));
+            self.vbuf.clear();
+            self.vbuf.resize(n, 0.0);
+            greedy_base_vertex(&st.scaled, &self.dirbuf, &mut self.comp_ws, &mut self.vbuf);
+            st.y.copy_from_slice(&self.vbuf);
+        }
+        self.aggregate();
+    }
+
+    /// `y = Σ_i y_i`, scattered in fixed component order (deterministic).
+    fn aggregate(&mut self) {
+        self.y.iter_mut().for_each(|v| *v = 0.0);
+        for slot in self.comps.iter_mut() {
+            let st = slot.get_mut().expect("component poisoned");
+            for (k, &pos) in st.reduced_pos.iter().enumerate() {
+                self.y[pos] += st.y[k];
+            }
+        }
+    }
+
+    /// Algorithm-2 step-14 bookkeeping against the *aggregated* dual
+    /// point: adopt `w_init`, one global greedy pass, gap by weak duality
+    /// (valid for any `y ∈ B(F̂)`).
+    fn close_gap(&mut self, f: &dyn Submodular, w_init: &[f64]) {
+        let p = f.ground_size();
+        let mut q = std::mem::take(&mut self.q);
+        q.clear();
+        q.resize(p, 0.0);
+        let f_w = self.shared.reset_primal(f, w_init, &mut q);
+        self.q = q;
+        self.shared.gap =
+            f_w + 0.5 * norm2_sq(w_init) + 0.5 * norm2_sq(&self.y);
+    }
+}
+
+impl ProxSolver for BlockProxSolver<'_> {
+    fn step(&mut self, f: &dyn Submodular) -> SolverEvent {
+        let p = f.ground_size();
+        assert_eq!(p, self.y.len(), "solver/problem size mismatch");
+        // (1) Jacobi best responses off the frozen aggregate.
+        let workers = self.threads.min(self.comps.len()).max(1);
+        if workers <= 1 {
+            let arena = &mut self.arenas[0];
+            for slot in &self.comps {
+                let mut st = slot.lock().expect("component poisoned");
+                best_response(&mut st, arena, &self.y, &self.opts);
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            let next = &next;
+            let comps = &self.comps;
+            let y = &self.y[..];
+            let opts = &self.opts;
+            std::thread::scope(|scope| {
+                for arena in self.arenas.iter_mut().take(workers) {
+                    scope.spawn(move || loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= comps.len() {
+                            break;
+                        }
+                        let mut st = comps[i].lock().expect("component poisoned");
+                        best_response(&mut st, arena, y, opts);
+                    });
+                }
+            });
+        }
+        // (2) Exact line search on the aggregated direction.
+        self.d.iter_mut().for_each(|v| *v = 0.0);
+        for slot in self.comps.iter_mut() {
+            let st = slot.get_mut().expect("component poisoned");
+            for (k, &pos) in st.reduced_pos.iter().enumerate() {
+                self.d[pos] += st.y_hat[k] - st.y[k];
+            }
+        }
+        let denom = norm2_sq(&self.d);
+        if denom > 0.0 {
+            let theta = (-dot(&self.y, &self.d) / denom).clamp(0.0, 1.0);
+            if theta > 0.0 {
+                for slot in self.comps.iter_mut() {
+                    let st = slot.get_mut().expect("component poisoned");
+                    for k in 0..st.y.len() {
+                        st.y[k] += theta * (st.y_hat[k] - st.y[k]);
+                    }
+                }
+            }
+        }
+        self.aggregate();
+        // (3) Global certificate pass: primal refinement + gap.
+        let mut q = std::mem::take(&mut self.q);
+        let (_info, f_w) = self.shared.greedy_and_refine(f, &self.y, &mut q);
+        let wolfe_gap = norm2_sq(&self.y) - dot(&self.y, &q);
+        self.q = q;
+        self.shared.finish_step(f_w, &self.y, wolfe_gap)
+    }
+
+    fn s(&self) -> &[f64] {
+        &self.y
+    }
+
+    fn w(&self) -> &[f64] {
+        &self.shared.w
+    }
+
+    fn gap(&self) -> f64 {
+        self.shared.gap
+    }
+
+    fn best_level_value(&self) -> f64 {
+        self.shared.fc
+    }
+
+    fn iters(&self) -> usize {
+        self.shared.iters
+    }
+
+    fn reset(&mut self, f: &dyn Submodular, w_init: &[f64]) {
+        let p = f.ground_size();
+        assert_eq!(
+            p,
+            self.dec.ground_size(),
+            "BlockProxSolver::reset only supports the full problem; IAES \
+             reductions must arrive via reset_mapped (run the engine with \
+             warm_restart = true — solve_decomposed does)"
+        );
+        for (slot, comp) in self.comps.iter_mut().zip(self.dec.components()) {
+            let st = slot.get_mut().expect("component poisoned");
+            let s = comp.support().len();
+            st.local_base.clear();
+            st.local_kept.clear();
+            st.local_kept.extend(0..s);
+            st.reduced_pos.clear();
+            st.reduced_pos.extend_from_slice(comp.support());
+            st.y_hat.clear();
+            st.y_hat.resize(s, 0.0);
+            st.z.clear();
+            st.z.resize(s, 0.0);
+            st.w0.clear();
+            st.w0.resize(s, 0.0);
+            st.scaled.set_reduction(&[], &st.local_kept);
+        }
+        self.y.clear();
+        self.y.resize(p, 0.0);
+        self.d.clear();
+        self.d.resize(p, 0.0);
+        self.regenerate_duals(w_init);
+        self.close_gap(f, w_init);
+    }
+
+    fn reset_mapped(&mut self, f: &dyn Submodular, w_init: &[f64], map: &ContractionMap) {
+        let p = f.ground_size();
+        if map.new_len() != p || self.y.len() != map.old_len() {
+            // Stale map (fresh solver / unrelated problem): only the
+            // full-problem reset is valid.
+            self.reset(f, w_init);
+            return;
+        }
+        // Thread the contraction through every component: survivors keep
+        // their (renumbered) reduced position, removed-to-active elements
+        // join the component's base, removed-to-inactive elements leave.
+        for slot in self.comps.iter_mut() {
+            let st = slot.get_mut().expect("component poisoned");
+            let mut w = 0usize;
+            for k in 0..st.local_kept.len() {
+                let r = st.reduced_pos[k];
+                match map.new_index(r) {
+                    Some(nr) => {
+                        st.local_kept[w] = st.local_kept[k];
+                        st.reduced_pos[w] = nr;
+                        w += 1;
+                    }
+                    None => {
+                        if map.went_active(r) {
+                            st.local_base.push(st.local_kept[k]);
+                        }
+                    }
+                }
+            }
+            st.local_kept.truncate(w);
+            st.reduced_pos.truncate(w);
+            st.y_hat.truncate(w);
+            st.z.truncate(w);
+            st.w0.truncate(w);
+            st.scaled.set_reduction(&st.local_base, &st.local_kept);
+        }
+        // Warm-start the global argsort through the survivor map, then
+        // regenerate the component duals on the contracted polytopes and
+        // close the gap against the new aggregate.
+        self.shared.greedy_ws.contract(map);
+        self.y.truncate(p);
+        self.d.truncate(p);
+        self.regenerate_duals(w_init);
+        self.close_gap(f, w_init);
+    }
+
+    fn greedy_full_sorts(&self) -> u64 {
+        self.shared.greedy_ws.full_sorts
+    }
+
+    fn name(&self) -> &'static str {
+        "block-prox"
+    }
+}
+
+/// Run Algorithm 2 on a decomposable function with the block solver.
+/// Forces contraction-aware warm restarts (the block solver threads
+/// reductions through per-component [`ContractionMap`]s and has no cold
+/// reduced-rebuild path).
+pub fn solve_decomposed(
+    f: &DecomposableFn,
+    opts: &IaesOptions,
+    dopts: DecomposeOptions,
+) -> anyhow::Result<IaesReport> {
+    let mut opts = opts.clone();
+    opts.warm_restart = true;
+    let solver = BlockProxSolver::new(f, dopts);
+    IaesEngine::with_solver(f, opts, Box::new(solver)).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brute::brute_force_sfm;
+    use crate::decompose::builders::star_components;
+    use crate::decompose::Component;
+    use crate::lovasz::{in_base_polytope, sup_level_set};
+    use crate::rng::Pcg64;
+
+    fn random_star_decomposition(p: usize, rng: &mut Pcg64) -> DecomposableFn {
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let unary = rng.uniform_vec(p, -2.0, 2.0);
+        star_components(p, |i, j| k[i * p + j], unary)
+    }
+
+    fn run(solver: &mut BlockProxSolver<'_>, f: &dyn Submodular, iters: usize, eps: f64) {
+        for _ in 0..iters {
+            let ev = solver.step(f);
+            if ev.gap < eps {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn block_solver_converges_on_star_decomposition() {
+        let mut rng = Pcg64::seeded(41);
+        let p = 9;
+        let dec = random_star_decomposition(p, &mut rng);
+        let mut solver = BlockProxSolver::new(&dec, DecomposeOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        run(&mut solver, &dec, 500, 1e-10);
+        assert!(solver.gap() < 1e-10, "gap {}", solver.gap());
+        // The aggregate stays feasible and recovers the minimal minimizer.
+        assert!(in_base_polytope(&dec, solver.s(), 1e-7));
+        let brute = brute_force_sfm(&dec, 1e-9);
+        assert_eq!(sup_level_set(solver.w(), 0.0), brute.minimal);
+    }
+
+    #[test]
+    fn aggregate_dual_feasible_every_round() {
+        let mut rng = Pcg64::seeded(43);
+        let p = 8;
+        let dec = random_star_decomposition(p, &mut rng);
+        let mut solver = BlockProxSolver::new(&dec, DecomposeOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        for _ in 0..20 {
+            let ev = solver.step(&dec);
+            assert!(in_base_polytope(&dec, solver.s(), 1e-7), "y left B(F)");
+            assert!(ev.gap >= -1e-9, "negative gap {}", ev.gap);
+        }
+    }
+
+    #[test]
+    fn thread_counts_are_bitwise_identical() {
+        let mut rng = Pcg64::seeded(47);
+        let p = 10;
+        let dec = random_star_decomposition(p, &mut rng);
+        let mut one = BlockProxSolver::new(&dec, DecomposeOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        let mut four = BlockProxSolver::new(&dec, DecomposeOptions {
+            threads: 4,
+            ..Default::default()
+        });
+        for it in 0..40 {
+            let a = one.step(&dec);
+            let b = four.step(&dec);
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "gap differs at {it}");
+            for (x, y) in one.s().iter().zip(four.s()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "dual differs at {it}");
+            }
+            for (x, y) in one.w().iter().zip(four.w()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "primal differs at {it}");
+            }
+        }
+    }
+
+    #[test]
+    fn reset_mapped_threads_contraction_through_components() {
+        let mut rng = Pcg64::seeded(53);
+        let p = 10;
+        let dec = random_star_decomposition(p, &mut rng);
+        let kept: Vec<usize> = (0..p).collect();
+        let mut scaled = ScaledFn::new(&dec, &[], kept.clone());
+        let mut solver = BlockProxSolver::new(&dec, DecomposeOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        for _ in 0..8 {
+            solver.step(&scaled);
+        }
+        // Certify element 2 active, elements 5 and 8 inactive.
+        let new_kept: Vec<usize> =
+            kept.iter().copied().filter(|&i| ![2, 5, 8].contains(&i)).collect();
+        let w_surv: Vec<f64> = new_kept.iter().map(|&i| solver.w()[i]).collect();
+        let mut map = ContractionMap::new();
+        scaled.contract(&[2], &new_kept, &mut map);
+        solver.reset_mapped(&scaled, &w_surv, &map);
+        assert_eq!(solver.s().len(), new_kept.len());
+        // Feasible in the contracted polytope, valid gap, and the solver
+        // still converges to the reduced optimum.
+        assert!(in_base_polytope(&scaled, solver.s(), 1e-7));
+        assert!(solver.gap() >= -1e-9);
+        let mut gap = f64::INFINITY;
+        for _ in 0..500 {
+            gap = solver.step(&scaled).gap;
+            if gap < 1e-9 {
+                break;
+            }
+        }
+        assert!(gap < 1e-9, "stalled after contraction: gap {gap}");
+        let brute = brute_force_sfm(&scaled, 1e-9);
+        let a = sup_level_set(solver.w(), 0.0);
+        let mut set = vec![false; new_kept.len()];
+        for &i in &a {
+            set[i] = true;
+        }
+        assert!((scaled.eval(&set) - brute.minimum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solve_decomposed_matches_brute_force() {
+        let mut rng = Pcg64::seeded(59);
+        for p in [7usize, 9, 11] {
+            let dec = random_star_decomposition(p, &mut rng);
+            let brute = brute_force_sfm(&dec, 1e-9);
+            let report = solve_decomposed(
+                &dec,
+                &IaesOptions { eps: 1e-9, ..Default::default() },
+                DecomposeOptions { threads: 2, ..Default::default() },
+            )
+            .unwrap();
+            assert!(
+                (report.minimum - brute.minimum).abs() < 1e-6,
+                "p={p}: decomposed {} vs brute {}",
+                report.minimum,
+                brute.minimum
+            );
+        }
+    }
+
+    #[test]
+    fn cardinality_components_use_pav_path() {
+        // A sum of overlapping cardinality terms + modular tilt solved by
+        // the closed-form path only (no generic component at all).
+        let mut rng = Pcg64::seeded(61);
+        let p = 10;
+        let h = 7;
+        let g1: Vec<f64> = (0..=h).map(|k| 1.1 * (k as f64).sqrt()).collect();
+        let g2: Vec<f64> = (0..=h).map(|k| 0.6 * (k as f64).sqrt()).collect();
+        let dec = DecomposableFn::new(
+            p,
+            vec![
+                Component::cardinality(g1, rng.uniform_vec(h, -0.8, 0.8), (0..h).collect()),
+                Component::cardinality(
+                    g2,
+                    rng.uniform_vec(h, -0.8, 0.8),
+                    (p - h..p).collect(),
+                ),
+                Component::modular(rng.uniform_vec(p, -1.0, 1.0), (0..p).collect()),
+            ],
+        );
+        let brute = brute_force_sfm(&dec, 1e-9);
+        let report = solve_decomposed(
+            &dec,
+            &IaesOptions { eps: 1e-9, ..Default::default() },
+            DecomposeOptions { threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        assert!((report.minimum - brute.minimum).abs() < 1e-6);
+    }
+}

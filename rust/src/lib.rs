@@ -15,6 +15,9 @@
 //! * the paper's contribution — the **IAES** safe element screening
 //!   engine (rules AES-1/IES-1/AES-2/IES-2 and Algorithm 2) in
 //!   [`screening`],
+//! * a decomposable-function subsystem — `F = Σ_i F_i` with parallel
+//!   per-component block prox solves feeding the same screening rules
+//!   through the aggregated dual `y = Σ_i y_i ∈ B(F)` ([`decompose`]),
 //! * an XLA/PJRT runtime that executes the AOT-compiled JAX/Pallas
 //!   screening kernel from the rust hot path ([`runtime`]),
 //! * workload generators reproducing the paper's experiments
@@ -42,6 +45,7 @@ pub mod brute;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod decompose;
 pub mod linalg;
 pub mod lovasz;
 pub mod rng;
@@ -54,6 +58,9 @@ pub mod workloads;
 
 /// Convenient re-exports of the most commonly used types.
 pub mod prelude {
+    pub use crate::decompose::{
+        solve_decomposed, BlockProxSolver, Component, DecomposableFn, DecomposeOptions,
+    };
     pub use crate::lovasz::{
         greedy_base_vertex, lovasz_value, vertex_from_order, ContractionMap,
         GreedyWorkspace,

@@ -27,6 +27,13 @@ use crate::submodular::{OracleScratch, Submodular};
 pub struct ContractionMap {
     new_of_old: Vec<usize>,
     new_len: usize,
+    /// For each *removed* old index: `true` when the element was certified
+    /// active (it moved into the reduction base `Ê`), `false` when it was
+    /// certified inactive (it left the problem entirely). Meaningless for
+    /// survivors. The decomposable block solver needs this distinction to
+    /// thread one global contraction through every component's own
+    /// base/kept split; the monolithic solvers ignore it.
+    went_active: Vec<bool>,
     /// When false, [`GreedyWorkspace::contract`] discards the stale order
     /// instead of remapping it, forcing the next argsort onto the full
     /// cold re-sort. Both paths produce the unique deterministic greedy
@@ -37,7 +44,12 @@ pub struct ContractionMap {
 
 impl Default for ContractionMap {
     fn default() -> Self {
-        ContractionMap { new_of_old: Vec::new(), new_len: 0, remap_argsort: true }
+        ContractionMap {
+            new_of_old: Vec::new(),
+            new_len: 0,
+            went_active: Vec::new(),
+            remap_argsort: true,
+        }
     }
 }
 
@@ -56,6 +68,8 @@ impl ContractionMap {
     pub fn rebuild(&mut self, old_kept: &[usize], new_kept: &[usize]) {
         self.new_of_old.clear();
         self.new_of_old.resize(old_kept.len(), Self::REMOVED);
+        self.went_active.clear();
+        self.went_active.resize(old_kept.len(), false);
         let mut j = 0usize;
         for (i, &orig) in old_kept.iter().enumerate() {
             if j < new_kept.len() && new_kept[j] == orig {
@@ -69,6 +83,28 @@ impl ContractionMap {
             "new kept ids must be a subsequence of the old kept ids"
         );
         self.new_len = new_kept.len();
+    }
+
+    /// Record that the *removed* old reduced element `old` was certified
+    /// active (moved into the base `Ê`) rather than inactive. Filled by
+    /// [`ScaledFn::contract`](crate::submodular::scaled::ScaledFn) after
+    /// [`rebuild`](Self::rebuild).
+    #[inline]
+    pub fn mark_active(&mut self, old: usize) {
+        debug_assert_eq!(
+            self.new_of_old[old],
+            Self::REMOVED,
+            "only removed elements can go active"
+        );
+        self.went_active[old] = true;
+    }
+
+    /// True when removed old element `old` was certified active (entered
+    /// the base) rather than inactive (left the problem). Only meaningful
+    /// when [`new_index`](Self::new_index) returns `None`.
+    #[inline]
+    pub fn went_active(&self, old: usize) -> bool {
+        self.went_active[old]
     }
 
     /// Pre-contraction reduced ground-set size.
@@ -468,11 +504,18 @@ mod tests {
         assert_eq!(map.new_index(0), Some(0));
         assert_eq!(map.new_index(1), None);
         assert_eq!(map.new_index(4), Some(2));
+        // Removed-to-active annotations: off by default, sticky per
+        // rebuild, and reset by the next rebuild.
+        assert!(!map.went_active(1));
+        map.mark_active(1);
+        assert!(map.went_active(1));
+        assert!(!map.went_active(3));
         // Reuse: rebuild with a different shape.
         map.rebuild(&[0, 1, 2], &[1]);
         assert_eq!(map.old_len(), 3);
         assert_eq!(map.new_len(), 1);
         assert_eq!(map.new_index(1), Some(0));
+        assert!(!map.went_active(0), "rebuild must clear active marks");
     }
 
     #[test]

@@ -53,6 +53,11 @@ fn run(args: &[String]) -> Result<()> {
             let cfg = bench_config(&cli.flags)?;
             println!("{}", exp::fig4(&cfg)?.render());
         }
+        "decompose-bench" => {
+            let cfg = bench_config(&cli.flags)?;
+            let threads = cli.flags.get_usize_list("threads-list", &[1, 2, 4])?;
+            println!("{}", exp::decompose_bench(&cfg, &threads)?.render());
+        }
         "ablation-rho" => {
             let cfg = bench_config(&cli.flags)?;
             let p = cli.flags.get_usize("p", *cfg.sizes.last().unwrap_or(&400))?;
@@ -156,6 +161,14 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         other => bail!("unknown workload `{other}`"),
     };
     let rules: RuleSet = rule_set(&flags.get_str("rules", "all"))?;
+    let decompose = if flags.get_bool("decompose", false)? {
+        Some(sfm_screen::decompose::DecomposeOptions {
+            threads: flags.get_usize("threads", 0)?,
+            ..Default::default()
+        })
+    } else {
+        None
+    };
     cfg.warmup(&[p]); // pre-compile PJRT executables outside the timed solve
     let mut opts = sfm_screen::screening::iaes::IaesOptions {
         eps: cfg.eps,
@@ -169,7 +182,7 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         ..Default::default()
     };
     opts.record_history = false;
-    let job = JobSpec { name: wl.label(), workload: wl, opts };
+    let job = JobSpec { name: wl.label(), workload: wl, opts, decompose };
     let res = job.run()?;
     if flags.get_bool("json", false)? {
         println!(

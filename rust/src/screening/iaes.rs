@@ -206,6 +206,9 @@ pub struct IaesEngine<'a> {
     inactive: Vec<usize>,
     /// Residual original ids (V̂).
     kept: Vec<usize>,
+    /// Caller-provided solver (decomposed solves); `None` → built from
+    /// `opts.solver`.
+    solver_override: Option<Box<dyn ProxSolver + 'a>>,
 }
 
 impl<'a> IaesEngine<'a> {
@@ -218,7 +221,29 @@ impl<'a> IaesEngine<'a> {
             active: Vec::new(),
             inactive: Vec::new(),
             kept: (0..p).collect(),
+            solver_override: None,
         }
+    }
+
+    /// Create an engine that drives a caller-provided solver instead of
+    /// building one from `opts.solver` — the entry point for solvers that
+    /// need structure beyond the `&dyn Submodular` the engine passes
+    /// around (the decomposable block solver borrows the underlying
+    /// [`DecomposableFn`](crate::decompose::DecomposableFn) directly).
+    ///
+    /// The solver must already be initialized on the full problem `f`
+    /// (constructors of the [`ProxSolver`] implementations do this). If
+    /// the solver has no cold reduced-problem rebuild path (the block
+    /// solver does not), run with `warm_restart = true` so reductions
+    /// arrive through `reset_mapped`.
+    pub fn with_solver(
+        f: &'a dyn Submodular,
+        opts: IaesOptions,
+        solver: Box<dyn ProxSolver + 'a>,
+    ) -> Self {
+        let mut engine = Self::new(f, opts);
+        engine.solver_override = Some(solver);
+        engine
     }
 
     /// Run Algorithm 2 to completion.
@@ -259,7 +284,15 @@ impl<'a> IaesEngine<'a> {
         // greedy/PAV/oracle scratch all persist across contractions
         // instead of being rebuilt from scratch.
         let mut scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
-        let mut solver = self.opts.solver.build(&scaled);
+        let mut solver: Box<dyn ProxSolver + 'a> = match self.solver_override.take() {
+            Some(s) => s,
+            None => self.opts.solver.build(&scaled),
+        };
+        // Persistent contraction buffers: `survivors`/`w_surv` double-
+        // buffer against `kept`/`w_restricted` via swap, so a contraction
+        // allocates nothing once the run's high-water capacity is reached.
+        let mut survivors: Vec<usize> = Vec::with_capacity(self.kept.len());
+        let mut w_surv: Vec<f64> = Vec::with_capacity(self.kept.len());
         // Survivor map of the most recent contraction (buffer reused for
         // the whole run); `warm_pending` says the map and the
         // already-contracted `scaled` describe the next restart.
@@ -306,7 +339,8 @@ impl<'a> IaesEngine<'a> {
                     // except the ones already certified. A max-iters trip
                     // decides them from an unconverged primal — flag it.
                     converged = ev.gap < self.opts.eps;
-                    w_restricted = solver.w().to_vec();
+                    w_restricted.clear();
+                    w_restricted.extend_from_slice(solver.w());
                     break 'outer;
                 }
 
@@ -373,10 +407,13 @@ impl<'a> IaesEngine<'a> {
                 }
 
                 // Contract the ground set: move pending certificates out.
+                // All buffers are persistent: survivors/w_surv refill and
+                // then swap with kept/w_restricted, the pending flags
+                // shrink in place (resize-down never allocates).
                 let n_active_before = self.active.len();
                 let w_now = solver.w();
-                let mut survivors = Vec::with_capacity(self.kept.len());
-                let mut w_surv = Vec::with_capacity(self.kept.len());
+                survivors.clear();
+                w_surv.clear();
                 for (j, &orig) in self.kept.iter().enumerate() {
                     if pending_a[j] {
                         self.active.push(orig);
@@ -399,10 +436,12 @@ impl<'a> IaesEngine<'a> {
                     );
                     warm_pending = true;
                 }
-                self.kept = survivors;
-                w_restricted = w_surv;
-                pending_a = vec![false; self.kept.len()];
-                pending_i = vec![false; self.kept.len()];
+                std::mem::swap(&mut self.kept, &mut survivors);
+                std::mem::swap(&mut w_restricted, &mut w_surv);
+                pending_a.clear();
+                pending_a.resize(self.kept.len(), false);
+                pending_i.clear();
+                pending_i.resize(self.kept.len(), false);
                 pending_a_count = 0;
                 pending_i_count = 0;
                 pending_total = 0;

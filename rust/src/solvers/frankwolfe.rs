@@ -16,10 +16,9 @@
 
 use super::{PrimalState, ProxSolver, SolverEvent};
 use crate::linalg::vecops::{axpy, dot, norm2_sq};
-use crate::linalg::CorralMat;
+use crate::linalg::{CorralMat, IndexMat};
 use crate::lovasz::{vertex_from_order, ContractionMap};
 use crate::submodular::Submodular;
-use std::collections::HashMap;
 
 /// Frank–Wolfe variant selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,17 +46,32 @@ impl Default for FwOptions {
     }
 }
 
-/// Atom key: the greedy order that generated the vertex (vertices of B(F)
-/// correspond to permutations; equal orders ⇒ equal vertices).
-type AtomKey = Vec<u32>;
+/// FNV-1a over a key (an atom's generating greedy order). The lookup
+/// hashes full permutations, so a simple multiplicative hash is plenty —
+/// collisions fall back to a key compare within the equal-hash run.
+#[inline]
+fn hash_key(key: &[usize]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in key {
+        h ^= v as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// Conditional-gradient solver state.
 ///
-/// Atoms live in parallel flat arrays — vertices in a [`CorralMat`], keys
-/// and weights in plain `Vec`s — so steady-state steps (no atom birth, no
-/// eviction) allocate nothing: the key of the current greedy order is
-/// materialized into a reused buffer and looked up by slice, and a
-/// repeat-atom step only bumps a weight.
+/// Atoms live in parallel flat arrays — vertices in a [`CorralMat`],
+/// generating orders in an [`IndexMat`] (the interned-key arena), weights
+/// and key hashes in plain `Vec`s — so steady-state steps (no atom
+/// birth, no eviction) allocate nothing. Atom identity is the generating
+/// greedy order (vertices of `B(F)` correspond to permutations; equal
+/// orders ⇒ equal vertices), resolved through `lookup`: atom ids sorted
+/// by `(hash, id)`, searched by hash and confirmed by key compare. This
+/// replaces the old owned-key `HashMap`, whose restart re-keying cloned
+/// every surviving key per contraction (ROADMAP item) — the arena re-keys
+/// with one in-place [`IndexMat::contract`] sweep and a sort of the id
+/// vector, allocation-free at the high-water mark.
 pub struct FrankWolfe {
     opts: FwOptions,
     /// Current dual iterate.
@@ -66,16 +80,14 @@ pub struct FrankWolfe {
     atoms: CorralMat,
     /// Atom weights, parallel to `atoms`.
     weights: Vec<f64>,
-    /// Atom keys, parallel to `atoms`.
-    keys: Vec<AtomKey>,
-    /// Key → atom index (owned keys duplicate `keys` only at atom birth).
-    atom_index: HashMap<AtomKey, usize>,
-    /// Scratch: the current greedy order as a key, reused every step.
-    key_buf: AtomKey,
+    /// Generating greedy order of each atom, parallel to `atoms`.
+    keys: IndexMat,
+    /// FNV-1a hash of each key, parallel to `atoms`.
+    hashes: Vec<u64>,
+    /// Atom ids sorted by `(hash, id)` — the allocation-free key index.
+    lookup: Vec<u32>,
     /// Scratch: surviving-atom indices during eviction compaction.
     keep_buf: Vec<usize>,
-    /// Scratch: a key widened to usize ids (atom regeneration passes).
-    order_buf: Vec<usize>,
     shared: PrimalState,
     q: Vec<f64>,
     dir: Vec<f64>,
@@ -90,11 +102,10 @@ impl FrankWolfe {
             x: vec![0.0; p],
             atoms: CorralMat::new(p),
             weights: Vec::new(),
-            keys: Vec::new(),
-            atom_index: HashMap::new(),
-            key_buf: Vec::new(),
+            keys: IndexMat::new(p),
+            hashes: Vec::new(),
+            lookup: Vec::new(),
             keep_buf: Vec::new(),
-            order_buf: Vec::new(),
             shared: PrimalState::new(p),
             q: vec![0.0; p],
             dir: vec![0.0; p],
@@ -112,26 +123,81 @@ impl FrankWolfe {
         self.weights.len()
     }
 
-    /// Materialize the current greedy order into the reused key buffer.
-    fn fill_key_buf(&mut self) {
-        self.key_buf.clear();
-        self.key_buf
-            .extend(self.shared.greedy_ws.order.iter().map(|&i| i as u32));
+    /// Index of the atom whose generating order equals `key`: binary
+    /// search on the hash, key compare within the equal-hash run.
+    /// Allocation-free.
+    fn find_atom(&self, h: u64, key: &[usize]) -> Option<usize> {
+        let start = self.lookup.partition_point(|&i| self.hashes[i as usize] < h);
+        for &i in &self.lookup[start..] {
+            let i = i as usize;
+            if self.hashes[i] != h {
+                break;
+            }
+            if self.keys.row(i) == key {
+                return Some(i);
+            }
+        }
+        None
     }
 
-    /// Add `weight` to the atom whose key is in `key_buf` and whose vertex
-    /// is in `q`, creating the atom if it is new (the only place a key is
-    /// cloned — atom birth, not steady state).
+    /// Re-sort the atom-id index by `(hash, id)` — one in-place sort of a
+    /// `u32` vector, reused across calls (the restart-time replacement
+    /// for the old HashMap re-key).
+    fn rebuild_lookup(&mut self) {
+        self.lookup.clear();
+        self.lookup.extend(0..self.weights.len() as u32);
+        let hashes = &self.hashes;
+        self.lookup.sort_unstable_by_key(|&i| (hashes[i as usize], i));
+    }
+
+    /// Add `weight` to the atom whose key is the current greedy order
+    /// (which always generated the vertex sitting in `q`), creating the
+    /// atom if it is new. Steady state — including atom birth at the
+    /// high-water mark — allocates nothing: the key is interned into the
+    /// flat [`IndexMat`], not cloned into an owned buffer.
     fn add_current_atom(&mut self, weight: f64) {
-        if let Some(&i) = self.atom_index.get(self.key_buf.as_slice()) {
+        let h = hash_key(&self.shared.greedy_ws.order);
+        if let Some(i) = self.find_atom(h, &self.shared.greedy_ws.order) {
             self.weights[i] += weight;
-        } else {
-            let key = self.key_buf.clone();
-            self.atom_index.insert(key.clone(), self.weights.len());
-            self.keys.push(key);
-            self.atoms.push(&self.q);
-            self.weights.push(weight);
+            return;
         }
+        let idx = self.weights.len();
+        self.keys.push(&self.shared.greedy_ws.order);
+        self.hashes.push(h);
+        self.atoms.push(&self.q);
+        self.weights.push(weight);
+        let hashes = &self.hashes;
+        let at = self
+            .lookup
+            .partition_point(|&i| (hashes[i as usize], i as usize) < (h, idx));
+        self.lookup.insert(at, idx as u32);
+    }
+
+    /// Compact every parallel atom array (weights, hashes, vertices,
+    /// keys) down to the atoms whose weight satisfies `keep_if`, then
+    /// re-sort the id lookup. One sweep no matter how many atoms die at
+    /// once; the survivor index buffer is reused (allocation-free at the
+    /// high-water mark).
+    fn compact_atoms(&mut self, keep_if: impl Fn(f64) -> bool) {
+        let mut keep = std::mem::take(&mut self.keep_buf);
+        keep.clear();
+        keep.extend(
+            self.weights
+                .iter()
+                .enumerate()
+                .filter(|&(_, &w)| keep_if(w))
+                .map(|(i, _)| i),
+        );
+        for (w, &r) in keep.iter().enumerate() {
+            self.weights[w] = self.weights[r];
+            self.hashes[w] = self.hashes[r];
+        }
+        self.weights.truncate(keep.len());
+        self.hashes.truncate(keep.len());
+        self.atoms.compact(&keep);
+        self.keys.compact(&keep);
+        self.keep_buf = keep;
+        self.rebuild_lookup();
     }
 
     fn drop_tiny_atoms(&mut self) {
@@ -139,37 +205,9 @@ impl FrankWolfe {
         if self.weights.iter().all(|&w| w > tol) {
             return;
         }
-        // Single-pass compaction of the parallel arrays: one sweep no
-        // matter how many atoms die at once (weights rescale together, so
-        // they can cross the tolerance in batches). Dead positions are
-        // only ever read — swaps target the current (surviving) read
-        // position — so `keys[read]` is the original key when removed
-        // from the index. The survivor index buffer is reused.
-        let mut keep = std::mem::take(&mut self.keep_buf);
-        keep.clear();
-        let mut write = 0usize;
-        for read in 0..self.weights.len() {
-            if self.weights[read] > tol {
-                keep.push(read);
-                if write != read {
-                    self.weights[write] = self.weights[read];
-                    self.keys.swap(write, read);
-                }
-                write += 1;
-            } else {
-                self.atom_index.remove(self.keys[read].as_slice());
-            }
-        }
-        self.weights.truncate(write);
-        self.keys.truncate(write);
-        self.atoms.compact(&keep);
-        for (i, k) in self.keys.iter().enumerate() {
-            *self
-                .atom_index
-                .get_mut(k.as_slice())
-                .expect("surviving atom key must stay indexed") = i;
-        }
-        self.keep_buf = keep;
+        // Weights rescale together, so several can cross the tolerance in
+        // the same step — one batched compaction handles them all.
+        self.compact_atoms(|w| w > tol);
     }
 
     /// The away atom: argmax ⟨x, v⟩ among active atoms.
@@ -216,7 +254,6 @@ impl FrankWolfe {
             for wgt in self.weights.iter_mut() {
                 *wgt *= 1.0 - gamma;
             }
-            self.fill_key_buf();
             self.add_current_atom(gamma);
         } else {
             // Away step: move off v_away; max step keeps weights ≥ 0.
@@ -270,7 +307,6 @@ impl FrankWolfe {
         }
         axpy(gamma, &self.dir, &mut self.x);
         self.weights[ai] -= gamma;
-        self.fill_key_buf();
         self.add_current_atom(gamma);
         self.drop_tiny_atoms();
     }
@@ -316,14 +352,14 @@ impl ProxSolver for FrankWolfe {
         self.q.resize(p, 0.0);
         self.dir.resize(p, 0.0);
         self.atoms.reset(p);
+        self.keys.reset(p);
         self.weights.clear();
-        self.keys.clear();
-        self.atom_index.clear();
+        self.hashes.clear();
+        self.lookup.clear();
         // The initial greedy vertex lands in `q` (the next step overwrites
         // it anyway), so warm restarts reuse every buffer.
         self.shared.reset_from(f, w_init, &mut self.q);
         self.x.copy_from_slice(&self.q);
-        self.fill_key_buf();
         self.add_current_atom(1.0);
     }
 
@@ -338,7 +374,8 @@ impl ProxSolver for FrankWolfe {
             || map.new_len() != p
             || self.x.len() != map.old_len()
             || self.weights.is_empty()
-            || self.keys.iter().any(|k| k.len() != map.old_len())
+            || self.keys.stride() != map.old_len()
+            || self.keys.len() != self.weights.len()
         {
             self.reset(f, w_init);
             return;
@@ -348,56 +385,58 @@ impl ProxSolver for FrankWolfe {
         self.x.resize(p, 0.0);
         self.q.resize(p, 0.0);
         self.dir.resize(p, 0.0);
-        // (2) Project the atoms: filter each key (a full permutation of
-        // the old reduced ground set) through the survivor map — the
-        // induced order on the contracted problem — merging atoms whose
-        // induced orders collapse to the same permutation. Unlike the
-        // min-norm corral this re-keys the index map, which clones the
-        // surviving keys (atom-count-bounded, restart-only allocations).
-        self.atom_index.clear();
-        let new_of_old = map.new_of_old();
-        let mut keep = std::mem::take(&mut self.keep_buf);
-        keep.clear();
-        let mut write = 0usize;
-        for read in 0..self.keys.len() {
-            let key = &mut self.keys[read];
-            let mut w = 0usize;
-            for r in 0..key.len() {
-                let mapped = new_of_old[key[r] as usize];
-                if mapped != usize::MAX {
-                    key[w] = mapped as u32;
-                    w += 1;
-                }
-            }
-            key.truncate(w);
-            debug_assert_eq!(w, p, "atom key was not a permutation");
-            if let Some(&first) = self.atom_index.get(key.as_slice()) {
-                // Duplicate induced order ⇒ identical vertex: merge mass.
-                self.weights[first] += self.weights[read];
-            } else {
-                let owned = self.keys[read].clone();
-                self.atom_index.insert(owned, write);
-                if write != read {
-                    self.keys.swap(write, read);
-                    self.weights[write] = self.weights[read];
-                }
-                keep.push(read);
-                write += 1;
-            }
-        }
-        self.keys.truncate(write);
-        self.weights.truncate(write);
+        // (2) Project the atom keys through the survivor map: one
+        // in-place IndexMat sweep (each key — a full permutation of the
+        // old reduced ground set — contracts to its induced order on the
+        // new one), then rehash and re-sort the id index. No key is
+        // cloned: the interned arena *is* the index storage, which makes
+        // the whole restart allocation-free at the high-water mark.
+        self.keys.contract(map.new_of_old(), p);
         self.atoms.reshape_rows(p);
-        self.atoms.compact(&keep);
-        self.keep_buf = keep;
+        for i in 0..self.keys.len() {
+            self.hashes[i] = hash_key(self.keys.row(i));
+        }
+        self.rebuild_lookup();
+        // (3) Merge atoms whose induced orders collapsed to the same
+        // permutation (identical vertices): walk the (hash, id)-sorted
+        // lookup; the lowest-id atom of each duplicate group absorbs the
+        // weights of the rest. Dead atoms are marked with a negative
+        // weight sentinel (convex weights are nonnegative) and compacted
+        // in one sweep.
+        let mut any_dead = false;
+        let mut g0 = 0usize;
+        while g0 < self.lookup.len() {
+            let h = self.hashes[self.lookup[g0] as usize];
+            let mut g1 = g0 + 1;
+            while g1 < self.lookup.len() && self.hashes[self.lookup[g1] as usize] == h {
+                g1 += 1;
+            }
+            for a in g0..g1 {
+                let ia = self.lookup[a] as usize;
+                if self.weights[ia] < 0.0 {
+                    continue;
+                }
+                for b in (a + 1)..g1 {
+                    let ib = self.lookup[b] as usize;
+                    if self.weights[ib] >= 0.0 && self.keys.row(ia) == self.keys.row(ib)
+                    {
+                        self.weights[ia] += self.weights[ib];
+                        self.weights[ib] = -1.0;
+                        any_dead = true;
+                    }
+                }
+            }
+            g0 = g1;
+        }
+        if any_dead {
+            self.compact_atoms(|w| w >= 0.0);
+        }
         // Regenerate each surviving atom from its induced order: a valid
         // vertex of the contracted base polytope by construction.
         for i in 0..self.keys.len() {
-            self.order_buf.clear();
-            self.order_buf.extend(self.keys[i].iter().map(|&e| e as usize));
             vertex_from_order(
                 f,
-                &self.order_buf,
+                self.keys.row(i),
                 &mut self.shared.greedy_ws,
                 self.atoms.row_mut(i),
             );
@@ -541,12 +580,24 @@ mod tests {
             let total: f64 = fw.weights.iter().sum();
             assert!((total - 1.0).abs() < 1e-9, "weights sum {total}");
             assert!(fw.weights.iter().all(|&w| w >= 0.0));
-            // Parallel-array + index-map invariants.
+            // Parallel-array + sorted-lookup invariants.
             assert_eq!(fw.weights.len(), fw.num_atoms());
             assert_eq!(fw.keys.len(), fw.num_atoms());
-            assert_eq!(fw.atom_index.len(), fw.num_atoms());
-            for (i, k) in fw.keys.iter().enumerate() {
-                assert_eq!(fw.atom_index[k.as_slice()], i, "index map skewed");
+            assert_eq!(fw.hashes.len(), fw.num_atoms());
+            assert_eq!(fw.lookup.len(), fw.num_atoms());
+            for pos in 1..fw.lookup.len() {
+                let (a, b) = (fw.lookup[pos - 1], fw.lookup[pos]);
+                assert!(
+                    (fw.hashes[a as usize], a) < (fw.hashes[b as usize], b),
+                    "lookup unsorted"
+                );
+            }
+            for i in 0..fw.num_atoms() {
+                assert_eq!(
+                    fw.find_atom(fw.hashes[i], fw.keys.row(i)),
+                    Some(i),
+                    "index lookup skewed"
+                );
             }
         }
     }

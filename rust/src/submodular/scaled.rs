@@ -87,10 +87,11 @@ impl<'a> ScaledFn<'a> {
         map_out.rebuild(&self.kept, new_kept);
         for &a in new_active {
             assert!(a < self.base.len() && !self.base[a], "bad new-active id {a}");
-            debug_assert!(
-                self.kept.binary_search(&a).is_ok(),
-                "new-active id {a} was not in the kept set"
-            );
+            let old_idx = self
+                .kept
+                .binary_search(&a)
+                .expect("new-active id was not in the kept set");
+            map_out.mark_active(old_idx);
             self.base[a] = true;
         }
         self.kept.clear();

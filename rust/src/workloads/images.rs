@@ -142,6 +142,18 @@ impl ImageInstance {
         CutFn::from_edges(self.num_pixels(), &self.edges, self.unary.clone())
     }
 
+    /// The same objective as [`cut_fn`](Self::cut_fn), decomposed into
+    /// row/column/diagonal chain components plus the modular unary term
+    /// — the §4.2 workload for the block-parallel prox solver.
+    pub fn cut_decomposition(&self) -> anyhow::Result<crate::decompose::DecomposableFn> {
+        crate::decompose::builders::grid_cut_components(
+            self.params.h,
+            self.params.w,
+            &self.edges,
+            self.unary.clone(),
+        )
+    }
+
     /// Intersection-over-union of `a_star` with the generating mask.
     pub fn iou(&self, a_star: &[usize]) -> f64 {
         let mut in_a = vec![false; self.num_pixels()];

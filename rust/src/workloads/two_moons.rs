@@ -144,6 +144,14 @@ impl TwoMoons {
     /// DESIGN.md §Substitutions.
     pub fn knn_cut(&self, k: usize, scale: f64) -> CutFn {
         let p = self.points.len();
+        CutFn::from_edges(p, &self.knn_edges(k, scale), self.unary.clone())
+    }
+
+    /// The weighted edge list of [`knn_cut`](Self::knn_cut) (mutualized
+    /// kNN, Gaussian weights) — shared by the monolithic cut and its
+    /// star decomposition so both describe the *same* objective.
+    pub fn knn_edges(&self, k: usize, scale: f64) -> Vec<(usize, usize, f64)> {
+        let p = self.points.len();
         let mut edge_set = std::collections::HashSet::new();
         let mut dists: Vec<(f64, usize)> = Vec::with_capacity(p);
         for i in 0..p {
@@ -163,7 +171,13 @@ impl TwoMoons {
                 edge_set.insert((i.min(j), i.max(j)));
             }
         }
-        let edges: Vec<(usize, usize, f64)> = edge_set
+        // Sort: HashSet iteration order is per-instance random, and the
+        // edge order decides CSR adjacency (and so FP summation) order —
+        // sorting makes the cut bitwise reproducible across builds and
+        // keeps the star decomposition aligned with the monolithic cut.
+        let mut edges: Vec<(usize, usize)> = edge_set.into_iter().collect();
+        edges.sort_unstable();
+        edges
             .into_iter()
             .map(|(i, j)| {
                 let dx = self.points[i][0] - self.points[j][0];
@@ -171,8 +185,34 @@ impl TwoMoons {
                 let w = scale * (-self.params.alpha * (dx * dx + dy * dy)).exp();
                 (i, j, w)
             })
-            .collect();
-        CutFn::from_edges(p, &edges, self.unary.clone())
+            .collect()
+    }
+
+    /// Star decomposition of [`knn_cut`](Self::knn_cut): one per-point
+    /// star component per occupied row plus the modular label term —
+    /// identical objective, component-parallel prox solves.
+    pub fn knn_cut_decomposition(
+        &self,
+        k: usize,
+        scale: f64,
+    ) -> crate::decompose::DecomposableFn {
+        crate::decompose::builders::star_components_from_edges(
+            self.points.len(),
+            &self.knn_edges(k, scale),
+            self.unary.clone(),
+        )
+    }
+
+    /// Star decomposition of the dense [`kernel_cut`](Self::kernel_cut):
+    /// per-point stars over the Gaussian affinity plus the label term.
+    pub fn kernel_cut_decomposition(&self) -> crate::decompose::DecomposableFn {
+        let p = self.points.len();
+        let k = self.affinity();
+        crate::decompose::builders::star_components(
+            p,
+            |i, j| k[i * p + j],
+            self.unary.clone(),
+        )
     }
 
     /// Paper-exact objective: GP mutual information + label unaries.

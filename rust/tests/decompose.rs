@@ -1,0 +1,223 @@
+//! Decomposition equivalence, screening safety, and thread-count
+//! determinism for the decomposable-SFM subsystem.
+//!
+//! * the decomposed image-grid prox solve must return the **same minimal
+//!   minimizer** as the monolithic path (brute-force checked),
+//! * screening masks fired from the aggregated dual `y = Σ y_i` must be
+//!   safe across forced contractions (`min_reduction_frac = 0`),
+//! * the block solver must be bitwise deterministic for any thread count
+//!   (run this suite under `RUST_TEST_THREADS=1` *and* default
+//!   parallelism — CI does both).
+
+use sfm_screen::brute::brute_force_sfm;
+use sfm_screen::decompose::builders::{grid_cut_components, star_components_from_edges};
+use sfm_screen::decompose::{solve_decomposed, DecomposeOptions};
+use sfm_screen::rng::Pcg64;
+use sfm_screen::screening::iaes::{solve_sfm_with_screening, IaesOptions};
+use sfm_screen::submodular::cut::CutFn;
+use sfm_screen::workloads::grid::eight_neighbor_edges;
+use sfm_screen::workloads::two_moons::{TwoMoons, TwoMoonsParams};
+
+/// A small random 8-neighbor grid cut: `(h, w, edges, unary)`.
+fn random_grid(
+    h: usize,
+    w: usize,
+    seed: u64,
+) -> (Vec<(usize, usize, f64)>, Vec<f64>) {
+    let mut rng = Pcg64::seeded(seed);
+    let edges: Vec<(usize, usize, f64)> = eight_neighbor_edges(h, w)
+        .into_iter()
+        .map(|(a, b)| (a, b, rng.uniform(0.0, 1.2)))
+        .collect();
+    let unary = rng.uniform_vec(h * w, -1.5, 1.5);
+    (edges, unary)
+}
+
+#[test]
+fn grid_decomposed_matches_monolithic_minimal_minimizer() {
+    // Acceptance criterion: decomposed image-grid prox solve returns the
+    // same minimal minimizer as the monolithic path, brute-force checked.
+    let (h, w) = (3, 4);
+    for seed in [11u64, 22, 33] {
+        let (edges, unary) = random_grid(h, w, seed);
+        let mono = CutFn::from_edges(h * w, &edges, unary.clone());
+        let dec = grid_cut_components(h, w, &edges, unary).unwrap();
+        let brute = brute_force_sfm(&mono, 1e-9);
+        let opts = IaesOptions { eps: 1e-10, max_iters: 30_000, ..Default::default() };
+        let mono_rep = solve_sfm_with_screening(&mono, &opts).unwrap();
+        let dec_rep = solve_decomposed(
+            &dec,
+            &opts,
+            DecomposeOptions { threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            (mono_rep.minimum - brute.minimum).abs() < 1e-7,
+            "seed {seed}: monolithic minimum off"
+        );
+        assert!(
+            (dec_rep.minimum - brute.minimum).abs() < 1e-7,
+            "seed {seed}: decomposed minimum {} vs brute {}",
+            dec_rep.minimum,
+            brute.minimum
+        );
+        assert_eq!(
+            dec_rep.minimizer, brute.minimal,
+            "seed {seed}: decomposed minimizer is not the minimal minimizer"
+        );
+        assert_eq!(
+            mono_rep.minimizer, dec_rep.minimizer,
+            "seed {seed}: decomposed and monolithic minimizers differ"
+        );
+    }
+}
+
+#[test]
+fn star_decomposed_two_moons_matches_monolithic() {
+    let tm = TwoMoons::generate(TwoMoonsParams { p: 60, ..Default::default() });
+    let mono = tm.knn_cut(10, 1.0);
+    let dec = tm.knn_cut_decomposition(10, 1.0);
+    let opts = IaesOptions::default();
+    let mono_rep = solve_sfm_with_screening(&mono, &opts).unwrap();
+    let dec_rep = solve_decomposed(
+        &dec,
+        &opts,
+        DecomposeOptions { threads: 2, ..Default::default() },
+    )
+    .unwrap();
+    assert!(
+        (mono_rep.minimum - dec_rep.minimum).abs()
+            < 1e-5 * (1.0 + mono_rep.minimum.abs()),
+        "two-moons: decomposed {} vs monolithic {}",
+        dec_rep.minimum,
+        mono_rep.minimum
+    );
+    assert_eq!(mono_rep.minimizer, dec_rep.minimizer);
+}
+
+#[test]
+fn screening_from_aggregated_dual_is_safe_across_forced_contractions() {
+    // min_reduction_frac = 0 restarts the block solver on every
+    // certificate — the literal Algorithm 2 — so every trigger exercises
+    // per-component contraction threading. The certificates must stay
+    // lossless on random stars and grids.
+    let mut rng = Pcg64::seeded(404);
+    for trial in 0..6 {
+        let p = 8 + (trial % 3);
+        let mut edges = Vec::new();
+        for i in 0..p {
+            for j in (i + 1)..p {
+                if rng.bernoulli(0.5) {
+                    edges.push((i, j, rng.uniform(0.0, 1.0)));
+                }
+            }
+        }
+        let unary = rng.uniform_vec(p, -2.0, 2.0);
+        let mono = CutFn::from_edges(p, &edges, unary.clone());
+        let dec = star_components_from_edges(p, &edges, unary);
+        let brute = brute_force_sfm(&mono, 1e-9);
+        let opts = IaesOptions {
+            eps: 1e-9,
+            min_reduction_frac: 0.0,
+            max_iters: 30_000,
+            ..Default::default()
+        };
+        let rep = solve_decomposed(
+            &dec,
+            &opts,
+            DecomposeOptions { threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            (rep.minimum - brute.minimum).abs() < 1e-6,
+            "trial {trial}: {} vs {}",
+            rep.minimum,
+            brute.minimum
+        );
+    }
+    // Same drill on a grid decomposition.
+    let (h, w) = (3, 3);
+    let (edges, unary) = random_grid(h, w, 505);
+    let mono = CutFn::from_edges(h * w, &edges, unary.clone());
+    let dec = grid_cut_components(h, w, &edges, unary).unwrap();
+    let brute = brute_force_sfm(&mono, 1e-9);
+    let opts = IaesOptions {
+        eps: 1e-9,
+        min_reduction_frac: 0.0,
+        max_iters: 30_000,
+        ..Default::default()
+    };
+    let rep =
+        solve_decomposed(&dec, &opts, DecomposeOptions { threads: 2, ..Default::default() })
+            .unwrap();
+    assert!((rep.minimum - brute.minimum).abs() < 1e-6);
+}
+
+#[test]
+fn block_solver_is_deterministic_for_any_thread_count() {
+    let (h, w) = (4, 4);
+    let (edges, unary) = random_grid(h, w, 606);
+    let dec = grid_cut_components(h, w, &edges, unary).unwrap();
+    let opts = IaesOptions { eps: 1e-9, max_iters: 30_000, ..Default::default() };
+    let reports: Vec<_> = [1usize, 2, 4]
+        .iter()
+        .map(|&t| {
+            solve_decomposed(
+                &dec,
+                &opts,
+                DecomposeOptions { threads: t, ..Default::default() },
+            )
+            .unwrap()
+        })
+        .collect();
+    let base = &reports[0];
+    for (i, rep) in reports.iter().enumerate().skip(1) {
+        assert_eq!(rep.minimizer, base.minimizer, "minimizer differs (t index {i})");
+        assert_eq!(rep.iters, base.iters, "iteration count differs (t index {i})");
+        assert_eq!(
+            rep.final_gap.to_bits(),
+            base.final_gap.to_bits(),
+            "final gap differs bitwise (t index {i})"
+        );
+        assert_eq!(rep.history.len(), base.history.len());
+        for (a, b) in rep.history.iter().zip(&base.history) {
+            assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "trajectory diverged");
+            assert_eq!(a.p_remaining, b.p_remaining);
+        }
+        assert_eq!(rep.triggers.len(), base.triggers.len());
+    }
+}
+
+#[test]
+fn decomposed_jobspec_runs_and_matches_monolithic() {
+    use sfm_screen::coordinator::jobs::{JobSpec, WorkloadSpec};
+    let wl = WorkloadSpec::TwoMoons { p: 40, use_mi: false, seed: 3 };
+    let mono = JobSpec {
+        name: "tm-mono".into(),
+        workload: wl.clone(),
+        opts: IaesOptions::default(),
+        decompose: None,
+    }
+    .run()
+    .unwrap();
+    let dec = JobSpec {
+        name: "tm-dec".into(),
+        workload: wl,
+        opts: IaesOptions::default(),
+        decompose: Some(DecomposeOptions { threads: 2, ..Default::default() }),
+    }
+    .run()
+    .unwrap();
+    assert!(
+        (mono.report.minimum - dec.report.minimum).abs()
+            < 1e-5 * (1.0 + mono.report.minimum.abs())
+    );
+    // Workloads without a decomposition fail loudly, not silently.
+    let bad = JobSpec {
+        name: "iwata-dec".into(),
+        workload: WorkloadSpec::Iwata { p: 10 },
+        opts: IaesOptions::default(),
+        decompose: Some(DecomposeOptions::default()),
+    };
+    assert!(bad.run().is_err());
+}

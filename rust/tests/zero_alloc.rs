@@ -221,6 +221,85 @@ fn warm_restart_across_contraction_is_zero_alloc() {
     );
 }
 
+/// Same cycle for the Frank–Wolfe solver: with the atom keys interned in
+/// a flat `IndexMat` and the hash-sorted id lookup replacing the old
+/// owned-key HashMap, the FW contraction restart — including the
+/// in-place key remap, rehash, duplicate merge, and atom regeneration —
+/// must be allocation-free at the high-water mark (ROADMAP item).
+#[test]
+fn fw_warm_restart_across_contraction_is_zero_alloc() {
+    let p = 36;
+    let inner = seeded_kernel_cut(p, 777);
+    let kept_full: Vec<usize> = (0..p).collect();
+    let kept_small: Vec<usize> = (0..p).filter(|&i| i % 6 != 0).collect();
+    let w_full = vec![0.0; p];
+    let mut scaled = ScaledFn::new(&inner, &[], kept_full.clone());
+    let mut fw = FrankWolfe::new(&scaled, FwOptions::default(), None);
+    let mut map = sfm_screen::lovasz::ContractionMap::new();
+    let mut w_surv: Vec<f64> = Vec::new();
+    let mut round = || {
+        scaled.set_reduction(&[], &kept_full);
+        fw.reset(&scaled, &w_full);
+        for _ in 0..8 {
+            fw.step(&scaled);
+        }
+        w_surv.clear();
+        w_surv.extend(kept_small.iter().map(|&i| fw.w()[i]));
+        scaled.contract(&[0], &kept_small, &mut map);
+        fw.reset_mapped(&scaled, &w_surv, &map);
+        for _ in 0..8 {
+            fw.step(&scaled);
+        }
+    };
+    for _ in 0..4 {
+        round();
+    }
+    let n = count_allocs(&mut round);
+    assert_eq!(
+        n, 0,
+        "FW contraction warm-restart cycle allocated {n} times after warm-up"
+    );
+}
+
+/// Steady-state rounds of the decomposable block solver at `threads = 1`
+/// (one mutex-slotted component sweep + line search + global certificate
+/// pass) must allocate nothing once the per-worker arena and every
+/// component buffer reached working size. The parallel path additionally
+/// pays only the O(threads) scope-spawn cost per round — measured
+/// separately by the `decompose/*` bench rows, not certifiable here
+/// because worker-thread allocations land on other threads' counters.
+#[test]
+fn block_solver_rounds_are_zero_alloc_at_one_thread() {
+    use sfm_screen::decompose::{
+        BlockProxSolver, Component, DecomposableFn, DecomposeOptions,
+    };
+    let p = 24;
+    let mut rng = Pcg64::seeded(888);
+    let chain_edges: Vec<(usize, usize, f64)> =
+        (0..p - 1).map(|i| (i, i + 1, rng.uniform(0.1, 1.0))).collect();
+    let chain = CutFn::from_edges(p, &chain_edges, vec![0.0; p]);
+    let g: Vec<f64> = (0..=p).map(|k| 1.2 * (k as f64).sqrt()).collect();
+    let dec = DecomposableFn::new(
+        p,
+        vec![
+            Component::generic(Box::new(chain), (0..p).collect()),
+            Component::cardinality(g, rng.uniform_vec(p, -0.5, 0.5), (0..p).collect()),
+            Component::modular(rng.uniform_vec(p, -1.0, 1.0), (0..p).collect()),
+        ],
+    );
+    let mut solver =
+        BlockProxSolver::new(&dec, DecomposeOptions { threads: 1, ..Default::default() });
+    for _ in 0..30 {
+        solver.step(&dec);
+    }
+    assert_eventually_zero_alloc(
+        || {
+            solver.step(&dec);
+        },
+        "BlockProxSolver::step",
+    );
+}
+
 #[test]
 fn minnorm_steady_state_steps_are_zero_alloc() {
     let f = IwataFn::new(24);
