@@ -1,0 +1,21 @@
+# Developer conveniences. The offline build container has no rust
+# toolchain — these targets are for CI / driver machines.
+
+.PHONY: baseline bench test
+
+# Record BENCH_micro.baseline.json at CI's smoke sizes so the
+# compare_bench gate fails regressions instead of only self-diffing.
+# CI uploads every run's fresh smoke trajectory as the `bench-baseline`
+# artifact; this target produces the identical file locally. Commit the
+# result at the repo root (see BENCHMARKS.md).
+baseline:
+	cd rust && SFM_BENCH_SIZES=64,128 cargo bench --bench micro
+	cp BENCH_micro.json BENCH_micro.baseline.json
+	@echo "baseline recorded at SFM_BENCH_SIZES=64,128 — commit BENCH_micro.baseline.json"
+
+# Full-size micro trajectory (BENCH_micro.json at the repo root).
+bench:
+	cd rust && cargo bench --bench micro
+
+test:
+	cd rust && cargo build --release && cargo test -q

@@ -22,6 +22,7 @@ use sfm_screen::coordinator::metrics::{
 };
 use sfm_screen::coordinator::report::Table;
 use sfm_screen::decompose::builders::{grid_cut_components, star_components_from_edges};
+use sfm_screen::decompose::chain::{tv_prox_into, TautStringWorkspace};
 use sfm_screen::decompose::{BlockProxSolver, DecomposeOptions};
 use sfm_screen::linalg::vecops::{argsort_desc, argsort_desc_into, argsort_desc_remap};
 use sfm_screen::linalg::{IncrementalCholesky, Mat};
@@ -198,6 +199,43 @@ fn main() -> anyhow::Result<()> {
             rows.push(&format!("decompose/star-round-t{t}"), p, &sum);
         }
 
+        // Translated warm duals (decompose/warm-dual-cycle vs the cold
+        // in-run control): generic star components carry their min-norm
+        // corral across rounds by translating atoms with the modular-
+        // shift delta; the cold row regenerates every block solve from
+        // one vertex (the PR-3 behaviour). Same objective, same rounds —
+        // the row delta is the warm-start saving itself.
+        let mut warm_solver = BlockProxSolver::new(
+            &star_dec,
+            DecomposeOptions { threads: 1, ..Default::default() },
+        );
+        let (sum, _) = bench(1, 5, || warm_solver.step(&star_dec).gap);
+        rows.push("decompose/warm-dual-cycle", p, &sum);
+        let mut cold_solver = BlockProxSolver::new(
+            &star_dec,
+            DecomposeOptions { threads: 1, warm_duals: false, ..Default::default() },
+        );
+        let (sum, _) = bench(1, 5, || cold_solver.step(&star_dec).gap);
+        rows.push("decompose/cold-dual-cycle", p, &sum);
+
+        // Chain prox (decompose/chain-prox): one O(p) taut-string TV
+        // prox + dual recovery on a p-length chain — the closed form that
+        // replaced the per-chain min-norm solver for grid components.
+        let tvals = rng.normal_vec(p);
+        let lams: Vec<f64> = (0..p - 1).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let mut tv_ws = TautStringWorkspace::default();
+        let mut tv_x = vec![0.0; p];
+        let (sum, _) = bench(3, 50, || {
+            tv_prox_into(&tvals, &lams, &mut tv_ws, &mut tv_x);
+            // Dual recovery: y = t − x (read off the bends).
+            let mut y0 = 0.0;
+            for (xv, tv) in tv_x.iter().zip(&tvals) {
+                y0 += tv - xv;
+            }
+            y0
+        });
+        rows.push("decompose/chain-prox", p, &sum);
+
         // PAV refinement.
         let t = rng.normal_vec(p);
         let mut out = vec![0.0; p];
@@ -264,6 +302,17 @@ fn main() -> anyhow::Result<()> {
             );
             let (sum, _) = bench(1, 5, || bsolver.step(&dec).gap);
             rows.push(&format!("decompose/grid-round-t{t}"), h * w, &sum);
+        }
+        // Explicit Gauss–Seidel rows (decompose/gs-round-t{1,4}): the
+        // group-scheduled sweep pinned at 1 and 4 workers regardless of
+        // future default flips — t4 exercises the parked worker pool.
+        for t in [1usize, 4] {
+            let mut bsolver = BlockProxSolver::new(
+                &dec,
+                DecomposeOptions { threads: t, gauss_seidel: true, ..Default::default() },
+            );
+            let (sum, _) = bench(1, 5, || bsolver.step(&dec).gap);
+            rows.push(&format!("decompose/gs-round-t{t}"), h * w, &sum);
         }
     }
 

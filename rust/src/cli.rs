@@ -117,7 +117,9 @@ COMMON FLAGS:
   --full           paper-scale sizes
   --mi             exact GP mutual-information objective (slow)
   --decompose      solve via the decomposable block solver (solve command)
-  --threads N      block-solver worker threads (0 = all cores)
+  --threads N      block-solver worker threads; default 0 = all available
+                   cores, capped by the component count (the resolved
+                   count is reported as block_threads in --json output)
   --threads-list L thread counts for decompose-bench, e.g. 1,2,4
   --quiet          suppress progress logs
 ";

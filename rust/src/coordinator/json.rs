@@ -319,6 +319,13 @@ pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
         ("screened_inactive", Json::Num(report.screened_inactive as f64)),
         ("emptied", Json::Bool(report.emptied)),
         ("converged", Json::Bool(report.converged)),
+        (
+            "block_threads",
+            match report.block_threads {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Null,
+            },
+        ),
         ("solver_time_s", Json::Num(report.solver_time.as_secs_f64())),
         ("screen_time_s", Json::Num(report.screen_time.as_secs_f64())),
         (
@@ -406,6 +413,36 @@ mod tests {
         assert_eq!(parsed.get("converged").and_then(Json::as_bool), Some(true));
         assert!(parsed.get("minimum").and_then(Json::as_num).is_some());
         assert!(parsed.get("history").and_then(Json::as_array).is_some());
+        // Monolithic solves report a null worker count…
+        assert!(matches!(parsed.get("block_threads"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn decomposed_report_carries_block_threads() {
+        use crate::decompose::builders::star_components;
+        use crate::decompose::{solve_decomposed, DecomposeOptions};
+        use crate::rng::Pcg64;
+        let p = 8;
+        let mut rng = Pcg64::seeded(5);
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let dec = star_components(p, |i, j| k[i * p + j], rng.uniform_vec(p, -1.0, 1.0));
+        let report = solve_decomposed(
+            &dec,
+            &IaesOptions::default(),
+            DecomposeOptions { threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        let j = report_to_json(&report, false).to_string();
+        let parsed = Json::parse(&j).unwrap();
+        // …while --decompose runs record the resolved parallelism.
+        assert_eq!(parsed.get("block_threads").and_then(Json::as_num), Some(2.0));
     }
 
     #[test]

@@ -4,9 +4,13 @@
 //! * **Grid cuts** (§4.2 images): an `h × w` pixel grid's pairwise term
 //!   splits by edge direction into vertex-disjoint *chains* — one per
 //!   row, column, diagonal, and anti-diagonal — plus one modular unary
-//!   component ([`grid_cut_components`]). Chains within a family are
-//!   support-disjoint, so the block solver's best-response round touches
-//!   each pixel a constant number of times.
+//!   component ([`grid_cut_components`]). Every chain is emitted as a
+//!   [`ComponentKind::Chain`](super::ComponentKind::Chain) (taut-string
+//!   closed-form block prox, no min-norm solver), and the chains of one
+//!   direction are support-disjoint, so the builder annotates one
+//!   scheduling *group* per family (plus the unary term): the block
+//!   solver sweeps the groups with exact simultaneous Gauss–Seidel
+//!   instead of damping everything through one Jacobi line search.
 //! * **Kernel cuts** (§4.1 two-moons, dense or kNN-sparsified): the
 //!   pairwise sum groups into per-point *stars* — component `i` carries
 //!   every edge `{i, j}` with `j > i` ([`star_components`],
@@ -40,6 +44,34 @@ fn cut_component(edges: &[(usize, usize, f64)]) -> Component {
         .collect();
     let f = CutFn::from_edges(support.len(), &local, vec![0.0; support.len()]);
     Component::generic(Box::new(f), support)
+}
+
+/// Build one *chain* component from a bucket of path edges (all steps of
+/// one grid chain, `a < b` each). Sorting the endpoints puts them in path
+/// order — every grid family walks the chain in ascending vertex id, so
+/// each edge joins consecutive support entries; gaps (missing grid edges)
+/// become zero-weight chain edges, which decouple exactly. Duplicate
+/// edges accumulate, matching the parallel-edge semantics of [`CutFn`].
+fn chain_component(edges: &[(usize, usize, f64)]) -> Component {
+    let mut support: Vec<usize> = Vec::with_capacity(2 * edges.len());
+    for &(a, b, _) in edges {
+        debug_assert!(a < b);
+        support.push(a);
+        support.push(b);
+    }
+    support.sort_unstable();
+    support.dedup();
+    let mut w = vec![0.0; support.len() - 1];
+    for &(a, b, wt) in edges {
+        let k = support.binary_search(&a).expect("endpoint in support");
+        assert_eq!(
+            support[k + 1],
+            b,
+            "edge ({a},{b}) is not a step of this chain"
+        );
+        w[k] += wt;
+    }
+    Component::chain(w, support)
 }
 
 /// Decompose an `h × w` grid cut `u(A) + Σ d(i,j)` into direction-grouped
@@ -82,16 +114,27 @@ pub fn grid_cut_components(
             bail!("edge ({a},{b}) is not a grid-neighbor edge");
         }
     }
+    // One chain component per non-empty bucket; one scheduling group per
+    // non-empty family (chains of one direction are vertex-disjoint), and
+    // the unary term is its own group — together the groups cover every
+    // component, so grid rounds are pure Gauss–Seidel.
     let mut comps = Vec::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
     for family in [&rows, &cols, &diags, &antis] {
+        let mut members = Vec::new();
         for chain in family {
             if !chain.is_empty() {
-                comps.push(cut_component(chain));
+                members.push(comps.len());
+                comps.push(chain_component(chain));
             }
         }
+        if !members.is_empty() {
+            groups.push(members);
+        }
     }
+    groups.push(vec![comps.len()]);
     comps.push(Component::modular(unary, (0..p).collect()));
-    Ok(DecomposableFn::new(p, comps))
+    Ok(DecomposableFn::with_groups(p, comps, groups))
 }
 
 /// Decompose an arbitrary symmetric cut from an edge list into per-point
@@ -187,6 +230,51 @@ mod tests {
     fn grid_rejects_non_grid_edges() {
         let edges = vec![(0usize, 5usize, 1.0)]; // (0,0) → (1,2) on a 3x3
         assert!(grid_cut_components(3, 3, &edges, vec![0.0; 9]).is_err());
+    }
+
+    #[test]
+    fn grid_chains_are_closed_form_and_fully_grouped() {
+        // Acceptance criterion: no grid component goes down the generic
+        // (min-norm) block-prox path, and the builder's groups cover every
+        // component so grid rounds are pure Gauss–Seidel.
+        use crate::decompose::ComponentKind;
+        let (h, w) = (4, 5);
+        let mut rng = Pcg64::seeded(77);
+        let edges: Vec<(usize, usize, f64)> = eight_neighbor_edges(h, w)
+            .iter()
+            .map(|&(a, b)| (a, b, rng.uniform(0.0, 1.0)))
+            .collect();
+        let dec =
+            grid_cut_components(h, w, &edges, rng.uniform_vec(h * w, -1.0, 1.0)).unwrap();
+        for c in dec.components() {
+            assert!(
+                matches!(c.kind(), ComponentKind::Chain { .. } | ComponentKind::Modular { .. }),
+                "grid component is not closed-form"
+            );
+        }
+        // 4 families (rows, cols, diags, antis) + the unary group.
+        assert_eq!(dec.num_groups(), 5);
+        assert!(dec.ungrouped().is_empty(), "grid must be fully grouped");
+        let grouped: usize = (0..dec.num_groups()).map(|g| dec.group(g).len()).sum();
+        assert_eq!(grouped, dec.num_components());
+    }
+
+    #[test]
+    fn grid_chain_with_missing_edges_still_matches() {
+        // A sparse subset of the grid edges leaves gaps inside chains
+        // (zero-weight chain links): the decomposition must still match
+        // the monolithic cut exactly.
+        let (h, w) = (4, 4);
+        let mut rng = Pcg64::seeded(31);
+        let edges: Vec<(usize, usize, f64)> = eight_neighbor_edges(h, w)
+            .into_iter()
+            .filter(|_| rng.bernoulli(0.6))
+            .map(|(a, b)| (a, b, rng.uniform(0.0, 1.5)))
+            .collect();
+        let unary = rng.uniform_vec(h * w, -1.0, 1.0);
+        let mono = CutFn::from_edges(h * w, &edges, unary.clone());
+        let dec = grid_cut_components(h, w, &edges, unary).unwrap();
+        compare_on_random_sets(&dec, &mono, 32, 40);
     }
 
     #[test]

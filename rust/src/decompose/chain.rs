@@ -1,0 +1,378 @@
+//! Direct O(s) taut-string prox for chain (path-cut / total-variation)
+//! components, with exact base-polytope dual recovery.
+//!
+//! A chain component is a path cut `F(A) = Σ_k λ_k · 1[{k, k+1} cut]`
+//! whose Lovász extension is the weighted total variation
+//! `f(x) = Σ_k λ_k |x_{k+1} − x_k|`. The block best response of such a
+//! component,
+//!
+//! ```text
+//! y* = argmin_{y ∈ B(F)} ½‖y − t‖²  (the projection of t onto B(F)),
+//! ```
+//!
+//! has a closed form via the Moreau decomposition: `t = prox_f(t) + Π_B(t)`
+//! because `f` is the support function of `B(F)`, so
+//!
+//! ```text
+//! y* = t − x*,   x* = argmin_x ½‖x − t‖² + Σ_k λ_k |x_{k+1} − x_k|.
+//! ```
+//!
+//! `x*` is the weighted 1-D total-variation denoising (fused-lasso signal)
+//! problem, solved exactly in O(s) amortized by the taut-string dynamic
+//! program below ([`tv_prox_into`]): the derivative of the forward value
+//! function is a monotone piecewise-linear map clipped to `±λ_k` at every
+//! edge (Bach 2013 §8; Johnson 2013; Condat 2013). The dual `y* = t − x*`
+//! is read off the bending points for free — where the string is taut the
+//! flow sits at `±λ_k`, between bends it follows the clipped derivative.
+//! Feasibility (`y* ∈ B(F)`) is exact by the flow representation of the
+//! path-cut base polytope: `y*_k = u_{k−1} − u_k` with `|u_k| ≤ λ_k`.
+//!
+//! Because a modular shift only *translates* the base polytope
+//! (`B(F + m) = B(F) + m`) and the Lemma-1 contraction of a path cut is
+//! again a path cut on the surviving subsequence plus a boundary modular
+//! term (fixed-active neighbor ⇒ `−λ`, fixed-inactive neighbor ⇒ `+λ`,
+//! gap between surviving non-adjacent nodes ⇒ a zero-weight edge), the
+//! closed form survives `ScaledFn` reductions the same way
+//! [`card_prox_into`](super::prox::card_prox_into)'s ladder-window form
+//! does — the block solver rebuilds the reduced `(λ̂, m̂_b)` pair once per
+//! contraction and every subsequent best response is a single
+//! [`tv_prox_into`] call.
+
+/// Reusable buffers for [`tv_prox_into`] (one per worker arena).
+///
+/// The knot deque (`xs`/`ss`) is the piecewise-linear derivative of the
+/// forward value function; `tm`/`tp` are the per-edge clamp back-pointers.
+#[derive(Clone, Debug, Default)]
+pub struct TautStringWorkspace {
+    /// Knot positions (deque storage, capacity `2n + 2`).
+    xs: Vec<f64>,
+    /// Slope deltas at the knots, parallel to `xs`.
+    ss: Vec<f64>,
+    /// Lower clamp per edge (`d = −λ_k` crossing).
+    tm: Vec<f64>,
+    /// Upper clamp per edge (`d = +λ_k` crossing).
+    tp: Vec<f64>,
+}
+
+impl TautStringWorkspace {
+    /// Pre-size for chains up to length `n`. The block solver reserves
+    /// every worker arena for the *largest* component up front, so
+    /// work-stealing schedules can never trigger a first-touch resize on
+    /// a worker thread mid-run (the t = 4 zero-allocation certification
+    /// depends on this being deterministic, not schedule-dependent).
+    pub fn reserve(&mut self, n: usize) {
+        self.xs.reserve(2 * n + 2);
+        self.ss.reserve(2 * n + 2);
+        self.tm.reserve(n);
+        self.tp.reserve(n);
+    }
+}
+
+/// Weighted 1-D total-variation prox (taut string / clipped-derivative
+/// dynamic program):
+///
+/// ```text
+/// x_out = argmin_x  Σ_k ½(x_k − t_k)² + Σ_k lam_k |x_{k+1} − x_k|
+/// ```
+///
+/// `lam` has one nonnegative weight per consecutive pair (`lam.len() ==
+/// t.len() − 1`); a zero weight decouples the chain at that edge exactly.
+/// O(n) amortized — each forward step inserts two knots and every knot is
+/// removed at most once — and allocation-free once `ws` reached working
+/// size. Deterministic: no tolerances, ties resolved by the clamp order.
+///
+/// The block-prox dual is recovered as `y_k = t_k − x_out_k` (see the
+/// module docs); callers that need it apply the subtraction in place.
+pub fn tv_prox_into(t: &[f64], lam: &[f64], ws: &mut TautStringWorkspace, x_out: &mut [f64]) {
+    let n = t.len();
+    assert_eq!(x_out.len(), n);
+    if n == 0 {
+        return;
+    }
+    assert_eq!(lam.len(), n - 1, "one weight per consecutive pair");
+    if n == 1 {
+        x_out[0] = t[0];
+        return;
+    }
+    let cap = 2 * n + 2;
+    ws.xs.clear();
+    ws.xs.resize(cap, 0.0);
+    ws.ss.clear();
+    ws.ss.resize(cap, 0.0);
+    ws.tm.clear();
+    ws.tm.resize(n - 1, 0.0);
+    ws.tp.clear();
+    ws.tp.resize(n - 1, 0.0);
+    let (xs, ss) = (&mut ws.xs[..], &mut ws.ss[..]);
+    // Empty deque convention: head > tail. Knots inserted from the middle
+    // out — each forward step front-pushes one lower clamp knot and
+    // back-pushes one upper clamp knot, so `n` front slots suffice.
+    let mut head = n;
+    let mut tail = n - 1;
+    // Leftmost / rightmost affine pieces of the derivative d(x); every
+    // interior piece slope is ≥ 1 (each step adds a unit-slope quadratic
+    // term to a nondecreasing clipped function), so the clamp-root
+    // divisions below are always well-posed.
+    let (mut a0, mut b0) = (1.0, -t[0]);
+    let (mut an, mut bn) = (1.0, -t[0]);
+    for k in 0..n - 1 {
+        let lm = lam[k];
+        debug_assert!(lm >= 0.0, "negative TV weight");
+        // Lower clamp: first crossing of d(x) = −λ, scanning pieces from
+        // the left and absorbing knots the clip swallows.
+        let (mut a, mut b) = (a0, b0);
+        while head <= tail && a * xs[head] + b < -lm {
+            a += ss[head];
+            b -= ss[head] * xs[head];
+            head += 1;
+        }
+        let tm = (-lm - b) / a;
+        // Upper clamp: first crossing of d(x) = +λ from the right.
+        let (mut ar, mut br) = (an, bn);
+        while head <= tail && ar * xs[tail] + br > lm {
+            ar -= ss[tail];
+            br += ss[tail] * xs[tail];
+            tail -= 1;
+        }
+        let tp = (lm - br) / ar;
+        // The clipped derivative is −λ left of `tm`, d between, +λ right
+        // of `tp`: push the two bend knots, then add the next data term
+        // (slope-1 quadratic) to both boundary pieces.
+        head -= 1;
+        xs[head] = tm;
+        ss[head] = a;
+        tail += 1;
+        xs[tail] = tp;
+        ss[tail] = -ar;
+        a0 = 1.0;
+        b0 = -lm - t[k + 1];
+        an = 1.0;
+        bn = lm - t[k + 1];
+        ws.tm[k] = tm;
+        ws.tp[k] = tp;
+    }
+    // Root of the final derivative, then clamp back through the bends.
+    let (mut a, mut b) = (a0, b0);
+    while head <= tail && a * xs[head] + b < 0.0 {
+        a += ss[head];
+        b -= ss[head] * xs[head];
+        head += 1;
+    }
+    x_out[n - 1] = -b / a;
+    for k in (0..n - 1).rev() {
+        // min-then-max instead of `clamp`: a zero-weight edge can leave
+        // `tm` a hair above `tp` in floating point, which `f64::clamp`
+        // would panic on; this order resolves the tie deterministically.
+        x_out[k] = x_out[k + 1].min(ws.tp[k]).max(ws.tm[k]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::prox::OffsetFn;
+    use crate::lovasz::in_base_polytope;
+    use crate::rng::Pcg64;
+    use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
+    use crate::solvers::ProxSolver;
+    use crate::submodular::cut::CutFn;
+    use crate::submodular::Submodular;
+    use crate::testutil::forall_rng;
+
+    fn chain_cut(lam: &[f64]) -> CutFn {
+        let n = lam.len() + 1;
+        let edges: Vec<(usize, usize, f64)> =
+            lam.iter().enumerate().map(|(k, &w)| (k, k + 1, w)).collect();
+        CutFn::from_edges(n, &edges, vec![0.0; n])
+    }
+
+    fn tv_objective(x: &[f64], t: &[f64], lam: &[f64]) -> f64 {
+        let mut v = 0.0;
+        for (xi, ti) in x.iter().zip(t) {
+            v += 0.5 * (xi - ti) * (xi - ti);
+        }
+        for (k, &l) in lam.iter().enumerate() {
+            v += l * (x[k + 1] - x[k]).abs();
+        }
+        v
+    }
+
+    /// Exact optimality certificate: the edge flows
+    /// `u_k = u_{k−1} + (x_k − t_k)` must satisfy `|u_k| ≤ λ_k`, hit the
+    /// bound with the matching sign wherever `x` jumps, and telescope to
+    /// zero at the last element.
+    fn kkt_holds(x: &[f64], t: &[f64], lam: &[f64], tol: f64) -> Result<(), String> {
+        let n = t.len();
+        let mut u = 0.0;
+        for k in 0..n {
+            u += x[k] - t[k];
+            if k < n - 1 {
+                if u.abs() > lam[k] + tol {
+                    return Err(format!("edge {k}: |u| = {} > λ = {}", u.abs(), lam[k]));
+                }
+                let d = x[k + 1] - x[k];
+                if d > tol && u < lam[k] - tol {
+                    return Err(format!("edge {k}: up-jump but u = {u} ≠ λ"));
+                }
+                if d < -tol && u > -lam[k] + tol {
+                    return Err(format!("edge {k}: down-jump but u = {u} ≠ −λ"));
+                }
+            } else if u.abs() > tol {
+                return Err(format!("terminal flow {u} ≠ 0"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn taut_string_satisfies_kkt_on_random_chains() {
+        forall_rng(60, |rng| {
+            let n = 1 + rng.below(40);
+            let t = rng.uniform_vec(n, -3.0, 3.0);
+            let lam: Vec<f64> = (0..n.saturating_sub(1))
+                .map(|_| if rng.bernoulli(0.2) { 0.0 } else { rng.uniform(0.0, 2.0) })
+                .collect();
+            let mut ws = TautStringWorkspace::default();
+            let mut x = vec![0.0; n];
+            tv_prox_into(&t, &lam, &mut ws, &mut x);
+            kkt_holds(&x, &t, &lam, 1e-8)?;
+            // No nearby point beats it (convexity makes this a real check).
+            let base = tv_objective(&x, &t, &lam);
+            for _ in 0..10 {
+                let xp: Vec<f64> =
+                    x.iter().map(|&v| v + rng.uniform(-0.05, 0.05)).collect();
+                if tv_objective(&xp, &t, &lam) < base - 1e-9 {
+                    return Err("perturbation beat the taut string".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recovered_dual_is_projection_onto_chain_base_polytope() {
+        forall_rng(30, |rng| {
+            let n = 2 + rng.below(7);
+            let t = rng.uniform_vec(n, -2.5, 2.5);
+            let lam: Vec<f64> = (0..n - 1).map(|_| rng.uniform(0.0, 2.0)).collect();
+            let f = chain_cut(&lam);
+            let mut ws = TautStringWorkspace::default();
+            let mut x = vec![0.0; n];
+            tv_prox_into(&t, &lam, &mut ws, &mut x);
+            let y: Vec<f64> = t.iter().zip(&x).map(|(&ti, &xi)| ti - xi).collect();
+            if !in_base_polytope(&f, &y, 1e-8) {
+                return Err("recovered dual left B(F)".into());
+            }
+            // Projection optimality vs the min-norm reference on the
+            // shifted polytope: y = argmin ½‖y − t‖² over B(F) is the
+            // block prox with offset z = −t.
+            let z: Vec<f64> = t.iter().map(|&ti| -ti).collect();
+            let shifted = OffsetFn::new(&f, &z);
+            let mut solver = MinNormPoint::new(&shifted, MinNormOptions::default(), None);
+            for _ in 0..5000 {
+                if solver.step(&shifted).wolfe_gap <= 1e-13 {
+                    break;
+                }
+            }
+            for k in 0..n {
+                let y_ref = solver.s()[k] - z[k];
+                if (y[k] - y_ref).abs() > 1e-6 {
+                    return Err(format!(
+                        "coord {k}: taut-string {} vs min-norm {}",
+                        y[k], y_ref
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_weight_edges_decouple_exactly() {
+        let t = [3.0, -1.0, 2.0, 2.5];
+        let lam = [0.0, 1.0, 0.0];
+        let mut ws = TautStringWorkspace::default();
+        let mut x = vec![0.0; 4];
+        tv_prox_into(&t, &lam, &mut ws, &mut x);
+        // Edge 0 and 2 decouple: x0 = t0 and x3 = t3; the middle pair is
+        // the 2-point TV prox of (−1, 2) with λ = 1 → (0, 1).
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 0.0).abs() < 1e-12);
+        assert!((x[2] - 1.0).abs() < 1e-12);
+        assert!((x[3] - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn huge_weight_fuses_to_the_mean() {
+        let t = [4.0, -2.0, 1.0];
+        let lam = [1e6, 1e6];
+        let mut ws = TautStringWorkspace::default();
+        let mut x = vec![0.0; 3];
+        tv_prox_into(&t, &lam, &mut ws, &mut x);
+        let mean = 1.0;
+        for &v in &x {
+            assert!((v - mean).abs() < 1e-9, "fused fit should be the mean");
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        let mut ws = TautStringWorkspace::default();
+        let mut x0: Vec<f64> = vec![];
+        tv_prox_into(&[], &[], &mut ws, &mut x0);
+        let mut x1 = vec![0.0];
+        tv_prox_into(&[2.5], &[], &mut ws, &mut x1);
+        assert_eq!(x1, vec![2.5]);
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical() {
+        let mut rng = Pcg64::seeded(4242);
+        let mut shared = TautStringWorkspace::default();
+        for _ in 0..25 {
+            let n = 2 + rng.below(30);
+            let t = rng.uniform_vec(n, -2.0, 2.0);
+            let lam: Vec<f64> = (0..n - 1).map(|_| rng.uniform(0.0, 1.5)).collect();
+            let mut fresh = TautStringWorkspace::default();
+            let mut xa = vec![0.0; n];
+            let mut xb = vec![0.0; n];
+            tv_prox_into(&t, &lam, &mut shared, &mut xa);
+            tv_prox_into(&t, &lam, &mut fresh, &mut xb);
+            for (a, b) in xa.iter().zip(&xb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workspace reuse changed bits");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_minnorm_on_long_chain_values_and_dual() {
+        // One denser cross-check at a size where the taut string has to
+        // exercise both deque ends repeatedly.
+        let mut rng = Pcg64::seeded(99);
+        let n = 60;
+        let t = rng.uniform_vec(n, -2.0, 2.0);
+        let lam: Vec<f64> = (0..n - 1).map(|_| rng.uniform(0.0, 1.2)).collect();
+        let mut ws = TautStringWorkspace::default();
+        let mut x = vec![0.0; n];
+        tv_prox_into(&t, &lam, &mut ws, &mut x);
+        kkt_holds(&x, &t, &lam, 1e-7).expect("KKT certificate");
+        let f = chain_cut(&lam);
+        let z: Vec<f64> = t.iter().map(|&ti| -ti).collect();
+        let shifted = OffsetFn::new(&f, &z);
+        let mut solver = MinNormPoint::new(&shifted, MinNormOptions::default(), None);
+        for _ in 0..20000 {
+            if solver.step(&shifted).wolfe_gap <= 1e-13 {
+                break;
+            }
+        }
+        for k in 0..n {
+            let y_ref = solver.s()[k] - z[k];
+            let y = t[k] - x[k];
+            assert!(
+                (y - y_ref).abs() < 1e-6,
+                "coord {k}: taut-string {y} vs min-norm {y_ref}"
+            );
+        }
+        let _ = f.ground_size();
+    }
+}

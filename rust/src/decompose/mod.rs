@@ -37,12 +37,14 @@
 //! [`ScaledFn`]: crate::submodular::scaled::ScaledFn
 
 pub mod builders;
+pub mod chain;
 pub mod prox;
 pub mod solver;
 
 pub use solver::{solve_decomposed, BlockProxSolver, DecomposeOptions};
 
 use crate::submodular::concave_card::ConcaveCardFn;
+use crate::submodular::cut::CutFn;
 use crate::submodular::modular::ModularFn;
 use crate::submodular::{OracleScratch, Submodular};
 
@@ -68,6 +70,19 @@ pub enum ComponentKind {
     Modular {
         /// Weights, one per support element.
         m: Vec<f64>,
+    },
+    /// Path cut `F_i(A) = Σ_k w_k · 1[{k, k+1} cut]` over the support
+    /// (local elements are chain-consecutive): block prox in closed form
+    /// via the O(s) taut-string total-variation prox with exact dual
+    /// recovery — see [`chain::tv_prox_into`]. The Lemma-1 contraction of
+    /// a path cut is a path cut on the surviving subsequence plus a
+    /// boundary modular term, so the closed form survives IAES
+    /// contractions (the solver rebuilds the reduced `(λ̂, m̂_b)` pair per
+    /// contraction, never per round).
+    Chain {
+        /// Edge weights: `w[k]` joins local elements `k` and `k + 1`
+        /// (`w.len() = s_i − 1`, all nonnegative).
+        w: Vec<f64>,
     },
 }
 
@@ -101,6 +116,23 @@ impl Component {
         assert_eq!(m.len(), support.len());
         let f = Box::new(ModularFn::new(m.clone()));
         Component { f, support, kind: ComponentKind::Modular { m } }
+    }
+
+    /// A chain (path-cut) component: local element `k` joins `k + 1` with
+    /// weight `w[k]` (taut-string block prox). Zero weights are legal and
+    /// decouple the chain at that edge exactly.
+    pub fn chain(w: Vec<f64>, support: Vec<usize>) -> Self {
+        assert_eq!(w.len() + 1, support.len(), "chain needs s − 1 edge weights");
+        assert!(w.iter().all(|&x| x >= 0.0), "negative chain weight");
+        let s = support.len();
+        let edges: Vec<(usize, usize, f64)> = w
+            .iter()
+            .enumerate()
+            .filter(|&(_, &x)| x > 0.0)
+            .map(|(k, &x)| (k, k + 1, x))
+            .collect();
+        let f = Box::new(CutFn::from_edges(s, &edges, vec![0.0; s]));
+        Component { f, support, kind: ComponentKind::Chain { w } }
     }
 
     /// The component oracle (local ground set).
@@ -140,12 +172,33 @@ pub struct DecomposableFn {
     /// Cumulative support sizes, length `r + 1` (concatenated local
     /// buffers are laid out by these offsets).
     support_offsets: Vec<usize>,
+    /// Support-disjoint scheduling groups (CSR): components within one
+    /// group have pairwise-disjoint supports, so their best responses are
+    /// *jointly exact* — the block solver runs simultaneous Gauss–Seidel
+    /// over groups instead of damped Jacobi. Empty when the builder did
+    /// not annotate any groups.
+    group_offsets: Vec<usize>,
+    group_members: Vec<u32>,
+    /// Components in no group (solved by the damped-Jacobi fallback).
+    ungrouped: Vec<u32>,
 }
 
 impl DecomposableFn {
     /// Build `F = Σ_i F_i` over ground size `p`. Supports must be sorted,
     /// unique, in range, and match each component oracle's ground size.
+    /// No scheduling groups — the block solver uses the Jacobi round for
+    /// every component.
     pub fn new(p: usize, comps: Vec<Component>) -> Self {
+        Self::with_groups(p, comps, Vec::new())
+    }
+
+    /// Like [`new`](Self::new), but with support-disjoint scheduling
+    /// groups: `groups[g]` lists component indices whose supports are
+    /// pairwise disjoint (validated here), enabling exact simultaneous
+    /// Gauss–Seidel sweeps in the block solver. A component may appear in
+    /// at most one group; components in no group fall back to the damped
+    /// Jacobi round.
+    pub fn with_groups(p: usize, comps: Vec<Component>, groups: Vec<Vec<usize>>) -> Self {
         let r = comps.len();
         assert!(r > 0, "decomposition needs at least one component");
         assert!(r < u32::MAX as usize && p < u32::MAX as usize);
@@ -179,7 +232,45 @@ impl DecomposableFn {
                 cursor[g] += 1;
             }
         }
-        DecomposableFn { p, comps, mem_offsets, mem_entries, support_offsets }
+        // Validate + flatten the scheduling groups: each component in at
+        // most one group, supports pairwise disjoint within a group.
+        let mut in_group = vec![false; r];
+        let mut group_offsets = vec![0usize; groups.len() + 1];
+        let mut group_members: Vec<u32> = Vec::new();
+        let mut touched = vec![false; p];
+        for (g, members) in groups.iter().enumerate() {
+            for &ci in members {
+                assert!(ci < r, "group {g}: component index {ci} out of range");
+                assert!(!in_group[ci], "component {ci} appears in two groups");
+                in_group[ci] = true;
+                for &s in &comps[ci].support {
+                    assert!(
+                        !touched[s],
+                        "group {g}: supports overlap at element {s}"
+                    );
+                    touched[s] = true;
+                }
+                group_members.push(ci as u32);
+            }
+            group_offsets[g + 1] = group_members.len();
+            for &ci in members {
+                for &s in &comps[ci].support {
+                    touched[s] = false;
+                }
+            }
+        }
+        let ungrouped: Vec<u32> =
+            (0..r).filter(|&i| !in_group[i]).map(|i| i as u32).collect();
+        DecomposableFn {
+            p,
+            comps,
+            mem_offsets,
+            mem_entries,
+            support_offsets,
+            group_offsets,
+            group_members,
+            ungrouped,
+        }
     }
 
     /// The components.
@@ -195,6 +286,22 @@ impl DecomposableFn {
     /// Total support size `Σ_i |S_i|` (the per-pass oracle work).
     pub fn total_support(&self) -> usize {
         *self.support_offsets.last().unwrap()
+    }
+
+    /// Number of support-disjoint scheduling groups (0 = Jacobi only).
+    pub fn num_groups(&self) -> usize {
+        self.group_offsets.len() - 1
+    }
+
+    /// Component indices of scheduling group `g` (supports pairwise
+    /// disjoint — validated at construction).
+    pub fn group(&self, g: usize) -> &[u32] {
+        &self.group_members[self.group_offsets[g]..self.group_offsets[g + 1]]
+    }
+
+    /// Component indices belonging to no group (Jacobi fallback).
+    pub fn ungrouped(&self) -> &[u32] {
+        &self.ungrouped
     }
 
     /// `(component, local id)` memberships of global element `v`.
@@ -413,5 +520,66 @@ mod tests {
     fn rejects_unsorted_support() {
         let m = vec![0.0, 0.0];
         DecomposableFn::new(5, vec![Component::modular(m, vec![3, 1])]);
+    }
+
+    #[test]
+    fn chain_component_matches_path_cut() {
+        // Component::chain's oracle must equal the path cut it declares.
+        let w = vec![0.7, 0.0, 1.3];
+        let c = Component::chain(w.clone(), vec![1, 3, 4, 8]);
+        let mut rng = Pcg64::seeded(23);
+        for _ in 0..20 {
+            let set: Vec<bool> = (0..4).map(|_| rng.bernoulli(0.5)).collect();
+            let mut expect = 0.0;
+            for (k, &wk) in w.iter().enumerate() {
+                if set[k] != set[k + 1] {
+                    expect += wk;
+                }
+            }
+            assert!((c.inner().eval(&set) - expect).abs() < 1e-12);
+        }
+        assert!(matches!(c.kind(), ComponentKind::Chain { .. }));
+    }
+
+    #[test]
+    fn groups_flatten_and_partition() {
+        let m = |ids: Vec<usize>| {
+            Component::modular(vec![0.0; ids.len()], ids)
+        };
+        let dec = DecomposableFn::with_groups(
+            8,
+            vec![m(vec![0, 1]), m(vec![2, 3]), m(vec![0, 2]), m(vec![4])],
+            vec![vec![0, 1], vec![3]],
+        );
+        assert_eq!(dec.num_groups(), 2);
+        assert_eq!(dec.group(0), &[0, 1]);
+        assert_eq!(dec.group(1), &[3]);
+        assert_eq!(dec.ungrouped(), &[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overlap")]
+    fn groups_reject_overlapping_supports() {
+        let m = |ids: Vec<usize>| {
+            Component::modular(vec![0.0; ids.len()], ids)
+        };
+        DecomposableFn::with_groups(
+            6,
+            vec![m(vec![0, 1]), m(vec![1, 2])],
+            vec![vec![0, 1]],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "two groups")]
+    fn groups_reject_duplicate_membership() {
+        let m = |ids: Vec<usize>| {
+            Component::modular(vec![0.0; ids.len()], ids)
+        };
+        DecomposableFn::with_groups(
+            6,
+            vec![m(vec![0]), m(vec![1])],
+            vec![vec![0], vec![0]],
+        );
     }
 }

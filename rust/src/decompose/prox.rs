@@ -14,8 +14,10 @@
 //! shift as a zero-cost oracle wrapper, solved by the existing
 //! Fujishige–Wolfe solver. For concave-of-cardinality components the
 //! problem has a closed form via isotonic regression
-//! ([`card_prox_into`]), and for modular components `B` is a single
-//! point, so no solve happens at all.
+//! ([`card_prox_into`]), for chain (path-cut) components via the O(s)
+//! taut-string total-variation prox ([`super::chain::tv_prox_into`] —
+//! grid workloads never touch the min-norm solver), and for modular
+//! components `B` is a single point, so no solve happens at all.
 
 use crate::linalg::vecops::argsort_desc_into;
 use crate::solvers::pav::PavWorkspace;
@@ -85,6 +87,19 @@ pub struct CardProxWorkspace {
     order: Vec<usize>,
     /// PAV block stack.
     pav: PavWorkspace,
+}
+
+impl CardProxWorkspace {
+    /// Pre-size for components up to support size `n` (see
+    /// [`TautStringWorkspace::reserve`](super::chain::TautStringWorkspace::reserve)
+    /// for why the block solver sizes worker arenas up front).
+    pub fn reserve(&mut self, n: usize) {
+        self.t.reserve(n);
+        self.shifted.reserve(n);
+        self.fit.reserve(n);
+        self.order.reserve(n);
+        self.pav.reserve(n);
+    }
 }
 
 /// Closed-form block prox of a cardinality component:

@@ -201,6 +201,9 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         res.report.screened_active, res.report.screened_inactive
     );
     println!("triggers     : {}", res.report.triggers.len());
+    if let Some(t) = res.report.block_threads {
+        println!("block workers: {t} (decomposable block solver)");
+    }
     println!(
         "time         : {:.3}s total ({:.3}s solver, {:.3}s screening)",
         res.wall.as_secs_f64(),

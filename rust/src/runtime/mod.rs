@@ -16,6 +16,12 @@
 //! When artifacts are missing the callers fall back to the pure-rust
 //! implementations ([`crate::screening::rules`] and the direct affinity
 //! loop); the integration tests cross-check both paths in f64.
+//!
+//! The [`pool`] submodule is unrelated to XLA: it hosts the persistent
+//! condvar-parked [`WorkerPool`](pool::WorkerPool) that the decomposable
+//! block solver uses for its parallel best-response phases.
+
+pub mod pool;
 
 use crate::screening::{RuleSet, ScreenInputs, ScreenOutcome, Screener};
 use anyhow::{anyhow, bail, Context, Result};

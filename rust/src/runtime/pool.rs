@@ -1,0 +1,241 @@
+//! A persistent, condvar-parked worker pool for the solver hot loop.
+//!
+//! The decomposable block solver runs several parallel best-response
+//! phases *per round*; spawning scoped threads for each phase costs
+//! O(threads) heap allocations and two thread create/join syscalls per
+//! phase. [`WorkerPool`] replaces that with threads spawned **once** and
+//! parked on a condvar between jobs: dispatching a job is one mutex
+//! round-trip plus a `notify_all`, completely allocation-free, which is
+//! what lets the `threads > 1` steady state certify zero-allocation in
+//! `tests/zero_alloc.rs` exactly like `threads = 1` does.
+//!
+//! Job model: [`run`](WorkerPool::run) takes a borrowed `Fn(usize)`
+//! (the argument is the worker index — callers distribute work items via
+//! an atomic cursor and index per-worker arenas by it), wakes every
+//! worker, and **blocks until all of them finished the job**. That
+//! barrier is what makes the internal borrow-extension sound: the job
+//! pointer handed to the workers never outlives the `run` call. A panic
+//! inside a job is caught on the worker, the barrier still completes,
+//! and `run` re-raises it on the caller thread — a poisoned job can
+//! never deadlock the pool.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job pointer. The fat pointer is only dereferenced between
+/// the epoch hand-off and the barrier release inside one `run` call.
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared &-access from many threads is its
+// contract) and the pointer is only dereferenced while the issuing `run`
+// call is blocked on the completion barrier, so the borrow it came from
+// is alive for every dereference.
+unsafe impl Send for JobPtr {}
+
+struct Ctrl {
+    /// Bumped once per dispatched job; workers run a job exactly when
+    /// they observe an epoch they have not served yet.
+    epoch: u64,
+    /// The current job (valid while `remaining > 0`).
+    job: Option<JobPtr>,
+    /// Workers still running the current job.
+    remaining: usize,
+    /// A worker caught a panic in the current job.
+    panicked: bool,
+    /// Pool is shutting down (Drop).
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    /// Workers park here between jobs.
+    go: Condvar,
+    /// The dispatcher parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads (see the module docs).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers ≥ 1` parked threads.
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "a pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|w| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sfm-pool-{w}"))
+                    .spawn(move || worker_loop(&sh, w))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `job(worker_index)` once on **every** worker and block until
+    /// all of them return. Allocation-free. Panics (on this thread) if
+    /// any worker's job panicked.
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the lifetime is erased only for the duration of this
+        // call — the completion barrier below outlives every dereference.
+        let job = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                job,
+            )
+        };
+        let mut c = self.shared.ctrl.lock().expect("pool poisoned");
+        // Unconditional: a second dispatcher mid-job would overwrite the
+        // in-flight job pointer and corrupt the barrier count — in a
+        // release build that is a hang or a use-after-return, not a
+        // recoverable error, so the invariant must hold everywhere.
+        assert_eq!(c.remaining, 0, "WorkerPool::run re-entered mid-job");
+        c.job = Some(JobPtr(job as *const _));
+        c.epoch += 1;
+        c.remaining = self.handles.len();
+        drop(c);
+        self.shared.go.notify_all();
+        let mut c = self.shared.ctrl.lock().expect("pool poisoned");
+        while c.remaining > 0 {
+            c = self.shared.done.wait(c).expect("pool poisoned");
+        }
+        c.job = None;
+        let panicked = std::mem::take(&mut c.panicked);
+        drop(c);
+        if panicked {
+            panic!("worker pool job panicked");
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, w: usize) {
+    let mut served = 0u64;
+    loop {
+        let job = {
+            let mut c = sh.ctrl.lock().expect("pool poisoned");
+            loop {
+                if c.shutdown {
+                    return;
+                }
+                if c.epoch != served {
+                    served = c.epoch;
+                    break c.job.as_ref().map(|j| j.0);
+                }
+                c = sh.go.wait(c).expect("pool poisoned");
+            }
+        };
+        if let Some(ptr) = job {
+            // SAFETY: see `JobPtr` — the dispatcher is blocked on the
+            // barrier until we decrement `remaining` below.
+            let f = unsafe { &*ptr };
+            let ok = catch_unwind(AssertUnwindSafe(|| f(w))).is_ok();
+            let mut c = sh.ctrl.lock().expect("pool poisoned");
+            if !ok {
+                c.panicked = true;
+            }
+            c.remaining -= 1;
+            if c.remaining == 0 {
+                sh.done.notify_one();
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut c = self.shared.ctrl.lock().expect("pool poisoned");
+            c.shutdown = true;
+        }
+        self.shared.go.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_worker_runs_each_job() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(&|w| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 50);
+        }
+    }
+
+    #[test]
+    fn work_stealing_covers_all_items() {
+        let pool = WorkerPool::new(3);
+        let n = 1000;
+        let done: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..5 {
+            let next = AtomicUsize::new(0);
+            pool.run(&|_w| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                done[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for d in &done {
+            assert_eq!(d.load(Ordering::Relaxed), 5, "item missed or doubled");
+        }
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "worker panic must re-raise on the caller");
+        // The pool is still serviceable afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run(&|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(2);
+        pool.run(&|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -187,6 +187,11 @@ pub struct IaesReport {
     /// from an *unconverged* primal and the minimizer may be wrong —
     /// callers must surface this instead of reporting silently.
     pub converged: bool,
+    /// Resolved worker-thread count of the decomposable block solver
+    /// (`Some` for [`solve_decomposed`](crate::decompose::solve_decomposed)
+    /// runs, `None` for monolithic solves). Surfaced in the JSON report
+    /// so `--decompose` runs record the parallelism they actually used.
+    pub block_threads: Option<usize>,
 }
 
 impl IaesReport {
@@ -490,6 +495,7 @@ impl<'a> IaesEngine<'a> {
             screen_time,
             emptied,
             converged,
+            block_threads: None,
         })
     }
 }

@@ -222,6 +222,70 @@ impl MinNormPoint {
         }
     }
 
+    /// Translation-aware warm reset for block-prox reuse: the new
+    /// problem's base polytope is the previous one translated
+    /// coordinate-wise by `delta` (`B(F + m_{z'}) = B(F + m_z) +
+    /// (z' − z)` — a modular shift moves the polytope, it never reshapes
+    /// it). Every corral atom is a greedy vertex of the old polytope
+    /// generated by its stored order; translating it by `delta` yields
+    /// exactly the vertex the same order generates on the new polytope
+    /// (gains shift coordinate-wise, independent of the order), so the
+    /// corral — and the dual progress it encodes — survives the shift
+    /// without one oracle pass per atom. The Gram factor is revalidated
+    /// via [`rebuild_chol`](Self::rebuild_chol) (translations change
+    /// inner products and can create affine dependence), then the usual
+    /// step-14 bookkeeping runs: adopt `w_init`, push the fresh greedy
+    /// vertex, land the dual on the min-norm point of the carried corral.
+    ///
+    /// Falls back to the cold [`reset`](ProxSolver::reset) when the
+    /// solver holds no state at this problem size (fresh solver, post-
+    /// contraction size change). Allocation-free at the high-water mark —
+    /// the decomposable block solver calls this once per generic
+    /// component per best-response round.
+    pub fn reset_translated(&mut self, f: &dyn Submodular, delta: &[f64], w_init: &[f64]) {
+        let p = f.ground_size();
+        assert_eq!(delta.len(), p);
+        if self.x.len() != p
+            || self.corral.is_empty()
+            || self.corral.len() != self.orders.len()
+            || self.orders.stride() != p
+        {
+            self.reset(f, w_init);
+            return;
+        }
+        for i in 0..self.corral.len() {
+            for (v, &d) in self.corral.row_mut(i).iter_mut().zip(delta) {
+                *v += d;
+            }
+        }
+        self.rebuild_chol();
+        let total: f64 = self.lambda.iter().sum();
+        if total > 0.0 {
+            for l in self.lambda.iter_mut() {
+                *l /= total;
+            }
+        }
+        let mut s0 = std::mem::take(&mut self.q);
+        s0.clear();
+        s0.resize(p, 0.0);
+        let f_w = self.shared.reset_primal(f, w_init, &mut s0);
+        self.push_vertex(&s0);
+        self.q = s0;
+        if self.corral.len() > 1 {
+            self.minor_cycles();
+        } else {
+            if !self.lambda.is_empty() {
+                self.lambda[0] = 1.0;
+            }
+            self.recompute_x();
+        }
+        // Weak duality holds for any x in B(F̂ + m_z), so the gap stays a
+        // valid screening radius after the translation.
+        let primal = f_w + 0.5 * norm2_sq(w_init);
+        let dual = -0.5 * norm2_sq(&self.x);
+        self.shared.gap = primal - dual;
+    }
+
     /// Wolfe minor cycles: move `x` to the min-norm point of the corral's
     /// convex hull, evicting vertices whose weight hits zero.
     fn minor_cycles(&mut self) {
@@ -617,6 +681,80 @@ mod tests {
             (scaled.eval(&set) - brute.minimum).abs() < 1e-6,
             "warm-restarted minimizer is wrong"
         );
+    }
+
+    #[test]
+    fn reset_translated_carries_corral_and_stays_feasible() {
+        use crate::decompose::prox::OffsetFn;
+        use crate::lovasz::in_base_polytope;
+        let mut rng = Pcg64::seeded(909);
+        let p = 10;
+        let f = {
+            let mut k = vec![0.0; p * p];
+            for i in 0..p {
+                for j in (i + 1)..p {
+                    let w = rng.uniform(0.0, 1.0);
+                    k[i * p + j] = w;
+                    k[j * p + i] = w;
+                }
+            }
+            KernelCutFn::new(p, k, rng.uniform_vec(p, -1.5, 1.5))
+        };
+        let z1 = rng.uniform_vec(p, -1.0, 1.0);
+        let z2 = rng.uniform_vec(p, -1.0, 1.0);
+        let delta: Vec<f64> = z2.iter().zip(&z1).map(|(a, b)| a - b).collect();
+        let sh1 = OffsetFn::new(&f, &z1);
+        let mut solver = MinNormPoint::new(&sh1, MinNormOptions::default(), None);
+        for _ in 0..12 {
+            solver.step(&sh1);
+        }
+        let corral_before = solver.corral_size();
+        assert!(corral_before > 1, "need real corral state to carry");
+        // Shift the polytope: B(F + z2) = B(F + z1) + (z2 − z1).
+        let sh2 = OffsetFn::new(&f, &z2);
+        let w0 = vec![0.0; p];
+        solver.reset_translated(&sh2, &delta, &w0);
+        assert!(
+            solver.corral_size() > 1,
+            "translation must carry the corral, not discard it"
+        );
+        assert!(in_base_polytope(&sh2, solver.s(), 1e-7), "translated dual left B");
+        assert!(solver.gap() >= -1e-9, "negative gap {}", solver.gap());
+        // Still converges to the same optimum as a cold solver. (The
+        // min-norm point is unique; gap ≤ 1e−10 bounds ‖x − x*‖ by
+        // strong convexity to ≈ 1.4e−5, hence the 1e−4 agreement bar.)
+        let mut gap = f64::INFINITY;
+        for _ in 0..2000 {
+            gap = solver.step(&sh2).gap;
+            if gap < 1e-10 {
+                break;
+            }
+        }
+        assert!(gap < 1e-10, "translated warm start stalled: {gap}");
+        let mut cold = MinNormPoint::new(&sh2, MinNormOptions::default(), None);
+        for _ in 0..2000 {
+            if cold.step(&sh2).gap < 1e-10 {
+                break;
+            }
+        }
+        for (a, b) in solver.s().iter().zip(cold.s()) {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "warm and cold min-norm points disagree: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn reset_translated_without_state_falls_back_to_cold() {
+        let f = IwataFn::new(8);
+        let mut solver = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        // Fresh solver at a different size: must cold-reset, not panic.
+        let g = IwataFn::new(5);
+        let delta = vec![0.0; 5];
+        solver.reset_translated(&g, &delta, &[0.0; 5]);
+        assert_eq!(solver.s().len(), 5);
+        assert!(solver.step(&g).gap.is_finite());
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct PavWorkspace {
 }
 
 impl PavWorkspace {
+    /// Pre-size the block stack for inputs up to length `n`.
+    pub fn reserve(&mut self, n: usize) {
+        self.blocks.reserve(n);
+    }
+
     /// Run non-increasing PAV on `t`, writing the fit into `out`.
     pub fn run(&mut self, t: &[f64], out: &mut [f64]) {
         assert_eq!(t.len(), out.len());

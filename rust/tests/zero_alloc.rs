@@ -264,10 +264,11 @@ fn fw_warm_restart_across_contraction_is_zero_alloc() {
 /// Steady-state rounds of the decomposable block solver at `threads = 1`
 /// (one mutex-slotted component sweep + line search + global certificate
 /// pass) must allocate nothing once the per-worker arena and every
-/// component buffer reached working size. The parallel path additionally
-/// pays only the O(threads) scope-spawn cost per round — measured
-/// separately by the `decompose/*` bench rows, not certifiable here
-/// because worker-thread allocations land on other threads' counters.
+/// component buffer reached working size — including the generic
+/// component's translated-warm-dual path (`reset_translated` carries the
+/// corral in place every round). The pooled `threads = 4` path is
+/// certified separately below by sampling each worker's thread-local
+/// counter through the pool.
 #[test]
 fn block_solver_rounds_are_zero_alloc_at_one_thread() {
     use sfm_screen::decompose::{
@@ -298,6 +299,67 @@ fn block_solver_rounds_are_zero_alloc_at_one_thread() {
         },
         "BlockProxSolver::step",
     );
+}
+
+/// Pooled steady-state block rounds at `threads = 4` must be as
+/// allocation-free as `threads = 1`: dispatching a job to the parked
+/// worker pool is one mutex round-trip + condvar wake (no scoped-thread
+/// spawn), the per-worker arenas are pre-sized to the largest component
+/// (so work stealing cannot trigger a first-touch grow), and the
+/// Gauss–Seidel grid round runs entirely on closed forms. The counting
+/// allocator is per-thread, so the workers' own counters are sampled
+/// through the pool before and after the measured window — main thread
+/// AND every worker must report zero.
+#[test]
+fn block_solver_rounds_are_zero_alloc_at_four_threads() {
+    use sfm_screen::decompose::builders::grid_cut_components;
+    use sfm_screen::decompose::{BlockProxSolver, DecomposeOptions};
+    use sfm_screen::workloads::grid::eight_neighbor_edges;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let (h, w) = (12, 12);
+    let mut rng = Pcg64::seeded(999);
+    let edges: Vec<(usize, usize, f64)> = eight_neighbor_edges(h, w)
+        .into_iter()
+        .map(|(a, b)| (a, b, rng.uniform(0.1, 1.0)))
+        .collect();
+    let unary = rng.uniform_vec(h * w, -1.0, 1.0);
+    let dec = grid_cut_components(h, w, &edges, unary).unwrap();
+    let mut solver =
+        BlockProxSolver::new(&dec, DecomposeOptions { threads: 4, ..Default::default() });
+    assert_eq!(solver.num_threads(), 4);
+    assert!(solver.uses_gauss_seidel(), "grid decompositions are fully grouped");
+    for _ in 0..30 {
+        solver.step(&dec);
+    }
+    let before: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+    let after: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+    {
+        let pool = solver.pool().expect("threads = 4 must own a parked pool");
+        assert_eq!(pool.size(), 4);
+        pool.run(&|wk| {
+            before[wk].store(ALLOC_COUNT.with(|c| c.get()), Ordering::Relaxed);
+        });
+    }
+    let main_allocs = count_allocs(|| {
+        for _ in 0..20 {
+            solver.step(&dec);
+        }
+    });
+    {
+        let pool = solver.pool().expect("pool still present");
+        pool.run(&|wk| {
+            after[wk].store(ALLOC_COUNT.with(|c| c.get()), Ordering::Relaxed);
+        });
+    }
+    assert_eq!(
+        main_allocs, 0,
+        "t=4 block rounds allocated {main_allocs} times on the main thread"
+    );
+    for wk in 0..4 {
+        let delta =
+            after[wk].load(Ordering::Relaxed) - before[wk].load(Ordering::Relaxed);
+        assert_eq!(delta, 0, "worker {wk} allocated {delta} times in steady state");
+    }
 }
 
 #[test]
