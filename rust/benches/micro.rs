@@ -92,11 +92,17 @@ fn main() -> anyhow::Result<()> {
         let w = rng.normal_vec(p);
         let mut ws = GreedyWorkspace::new(p);
         let mut s_out = vec![0.0; p];
+        // The pool-less workspace rows ARE the t = 1 leg of the pooled
+        // monolithic oracle: each is recorded under both its historical
+        // id and the explicit `-t1` schema id from ONE measurement (no
+        // double benching, and compare_bench gates each quantity once
+        // per name — the duplicate-named rows track identical numbers).
         let (sum, _) = bench(3, 10, || {
             greedy_base_vertex(&dense, &w, &mut ws, &mut s_out);
             s_out[0]
         });
         rows.push("greedy/kernel-cut", p, &sum);
+        rows.push("greedy/kernel-cut-t1", p, &sum);
         let (sum, _) = bench(3, 10, || {
             greedy_base_vertex_ref(&dense, &w, &mut s_out);
             s_out[0]
@@ -107,11 +113,36 @@ fn main() -> anyhow::Result<()> {
             s_out[0]
         });
         rows.push("greedy/cut", p, &sum);
+        rows.push("greedy/cut-t1", p, &sum);
         let (sum, _) = bench(3, 20, || {
             greedy_base_vertex_ref(&sparse, &w, &mut s_out);
             s_out[0]
         });
         rows.push("greedy/cut-alloc", p, &sum);
+
+        // Pooled monolithic greedy rows (greedy/*-t4): the same passes
+        // at t = 4 — 3 parked workers + the bench thread, the monolithic
+        // `--threads 4` convention. The pooled pass is bit-identical to
+        // the t1 rows above; the t4/t1 delta is pure wall clock from the
+        // worker fan-out (`greedy/kernel-cut p=4096` scaling with cores
+        // is the ROADMAP target).
+        {
+            use sfm_screen::runtime::pool::WorkerPool;
+            use std::sync::Arc;
+            let pool = Arc::new(WorkerPool::new(3));
+            let mut ws_t4 = GreedyWorkspace::new(p);
+            ws_t4.set_pool(Some(Arc::clone(&pool)));
+            let (sum, _) = bench(3, 10, || {
+                greedy_base_vertex(&dense, &w, &mut ws_t4, &mut s_out);
+                s_out[0]
+            });
+            rows.push("greedy/kernel-cut-t4", p, &sum);
+            let (sum, _) = bench(3, 20, || {
+                greedy_base_vertex(&sparse, &w, &mut ws_t4, &mut s_out);
+                s_out[0]
+            });
+            rows.push("greedy/cut-t4", p, &sum);
+        }
 
         // One min-norm major iteration on the sparse objective.
         let mut solver = MinNormPoint::new(&sparse, MinNormOptions::default(), None);
@@ -313,6 +344,40 @@ fn main() -> anyhow::Result<()> {
             );
             let (sum, _) = bench(1, 5, || bsolver.step(&dec).gap);
             rows.push(&format!("decompose/gs-round-t{t}"), h * w, &sum);
+        }
+    }
+
+    // SIMD vector-kernel rows (vecops/*): the 4-lane unrolled primitives
+    // the oracle gains paths route through, at fixed sizes independent
+    // of SFM_BENCH_SIZES (the kernels are size-stable; p here is the
+    // vector length). `sweep4` is the bandwidth-bound kernel-cut inner
+    // loop, `dot-gather4` the sparse-cut adjacency walk.
+    {
+        use sfm_screen::linalg::vecops::{axpy4, dot4, dot_gather4, sweep4};
+        for &n in &[4096usize, 65536] {
+            let a = rng.normal_vec(n);
+            let b = rng.normal_vec(n);
+            let (sum, _) = bench(5, 60, || dot4(&a, &b));
+            rows.push("vecops/dot4", n, &sum);
+            let mut y = rng.normal_vec(n);
+            let (sum, _) = bench(5, 60, || {
+                axpy4(1e-9, &a, &mut y);
+                y[0]
+            });
+            rows.push("vecops/axpy4", n, &sum);
+            let r0 = rng.normal_vec(n);
+            let r1 = rng.normal_vec(n);
+            let r2 = rng.normal_vec(n);
+            let r3 = rng.normal_vec(n);
+            let mut acc = vec![0.0; n];
+            let (sum, _) = bench(5, 60, || {
+                sweep4(&mut acc, &r0, &r1, &r2, &r3);
+                acc[0]
+            });
+            rows.push("vecops/sweep4", n, &sum);
+            let idx: Vec<u32> = (0..n as u32).rev().collect();
+            let (sum, _) = bench(5, 60, || dot_gather4(&a, &idx, &b));
+            rows.push("vecops/dot-gather4", n, &sum);
         }
     }
 

@@ -117,9 +117,12 @@ COMMON FLAGS:
   --full           paper-scale sizes
   --mi             exact GP mutual-information objective (slow)
   --decompose      solve via the decomposable block solver (solve command)
-  --threads N      block-solver worker threads; default 0 = all available
-                   cores, capped by the component count (the resolved
-                   count is reported as block_threads in --json output)
+  --threads N      worker threads; default 0 = all available cores. With
+                   --decompose: block-solver workers, capped by the
+                   component count (reported as block_threads in --json).
+                   Without: the pooled monolithic greedy oracle — passes
+                   are bit-identical at every thread count (reported as
+                   greedy_threads in --json)
   --threads-list L thread counts for decompose-bench, e.g. 1,2,4
   --quiet          suppress progress logs
 ";

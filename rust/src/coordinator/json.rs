@@ -252,20 +252,54 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                     Some(b'b') => out.push('\u{0008}'),
                     Some(b'f') => out.push('\u{000C}'),
                     Some(b'u') => {
-                        let hex = b
-                            .get(*pos + 1..*pos + 5)
-                            .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
-                        let code = u32::from_str_radix(
-                            std::str::from_utf8(hex)
-                                .map_err(|_| anyhow::anyhow!("bad \\u escape"))?,
-                            16,
-                        )
-                        .map_err(|_| anyhow::anyhow!("bad \\u escape"))?;
-                        out.push(
-                            char::from_u32(code)
-                                .ok_or_else(|| anyhow::anyhow!("bad \\u code point"))?,
-                        );
-                        *pos += 4;
+                        // `*pos` is at the `u`; the escape's backslash is
+                        // one byte back (used in error messages).
+                        let esc_at = *pos - 1;
+                        let code = parse_hex4(b, *pos + 1)?;
+                        match code {
+                            0xD800..=0xDBFF => {
+                                // High surrogate: only valid as the first
+                                // half of a \uD8xx\uDCxx pair encoding one
+                                // supplementary-plane scalar (JSON strings
+                                // escape non-BMP characters this way).
+                                if b.get(*pos + 5) != Some(&b'\\')
+                                    || b.get(*pos + 6) != Some(&b'u')
+                                {
+                                    bail!(
+                                        "lone high surrogate \\u{code:04X} at byte \
+                                         {esc_at}: expected a low-surrogate \
+                                         \\uDC00–\\uDFFF escape to follow"
+                                    );
+                                }
+                                let lo = parse_hex4(b, *pos + 7)?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    bail!(
+                                        "lone high surrogate \\u{code:04X} at byte \
+                                         {esc_at}: \\u{lo:04X} is not a low \
+                                         surrogate (\\uDC00–\\uDFFF)"
+                                    );
+                                }
+                                let scalar =
+                                    0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
+                                out.push(
+                                    char::from_u32(scalar)
+                                        .expect("combined surrogates are a valid scalar"),
+                                );
+                                *pos += 10;
+                            }
+                            0xDC00..=0xDFFF => bail!(
+                                "lone low surrogate \\u{code:04X} at byte {esc_at}: a \
+                                 low surrogate is only valid directly after a high \
+                                 surrogate"
+                            ),
+                            c => {
+                                out.push(
+                                    char::from_u32(c)
+                                        .expect("non-surrogate BMP code is a scalar"),
+                                );
+                                *pos += 4;
+                            }
+                        }
                     }
                     _ => bail!("bad escape at byte {}", *pos),
                 }
@@ -288,20 +322,87 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
     }
 }
 
+/// Four hex digits of a `\uXXXX` escape starting at byte `at`.
+fn parse_hex4(b: &[u8], at: usize) -> Result<u32> {
+    let hex = b
+        .get(at..at + 4)
+        .ok_or_else(|| anyhow::anyhow!("truncated \\u escape at byte {at}"))?;
+    if !hex.iter().all(u8::is_ascii_hexdigit) {
+        bail!("bad \\u escape at byte {at} (four hex digits required)");
+    }
+    let s = std::str::from_utf8(hex).expect("hex digits are ascii");
+    Ok(u32::from_str_radix(s, 16).expect("validated hex digits"))
+}
+
+/// Parse a number following the exact JSON grammar
+/// (`-? (0 | [1-9][0-9]*) ('.' [0-9]+)? ([eE] [+-]? [0-9]+)?`) — no
+/// leading `+`, no leading zeros, no bare `.5`/`1.` forms. The error for
+/// a malformed token reports the whole number-ish byte run (`1.2.3`,
+/// `01`, `+1`, …) instead of a misleading `f64::parse` failure on a
+/// greedily gobbled span.
 fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
     let start = *pos;
-    while *pos < b.len()
-        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    // The maximal number-ish run, for error reporting only.
+    let mut scan = start;
+    while scan < b.len()
+        && matches!(b[scan], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
     {
-        *pos += 1;
+        scan += 1;
     }
-    if *pos == start {
+    if scan == start {
         bail!("expected a value at byte {start}");
     }
-    let text = std::str::from_utf8(&b[start..*pos]).expect("ascii number");
+    let token = std::str::from_utf8(&b[start..scan]).expect("ascii number run");
+    let mut i = start;
+    if b.get(i) == Some(&b'-') {
+        i += 1;
+    }
+    // Integer part: 0, or a nonzero digit followed by digits.
+    match b.get(i) {
+        Some(b'0') => i += 1,
+        Some(b'1'..=b'9') => {
+            i += 1;
+            while matches!(b.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => bail!("bad number `{token}` at byte {start} (not a JSON number)"),
+    }
+    // Fraction: '.' followed by at least one digit.
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            bail!("bad number `{token}` at byte {start} (digits required after `.`)");
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    // Exponent: e/E, optional sign, at least one digit.
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        if !matches!(b.get(i), Some(b'0'..=b'9')) {
+            bail!("bad number `{token}` at byte {start} (digits required in exponent)");
+        }
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+    }
+    // Anything number-ish left over means the token as a whole is not a
+    // JSON number (`1.2.3`, `1e2e3`, `01`, `1..2`, …) — reject it here
+    // with the full token instead of letting the top level report a
+    // baffling "trailing characters".
+    if i < scan {
+        bail!("bad number `{token}` at byte {start} (not a JSON number)");
+    }
+    let text = std::str::from_utf8(&b[start..i]).expect("ascii number");
     let x: f64 = text
         .parse()
         .map_err(|_| anyhow::anyhow!("bad number `{text}` at byte {start}"))?;
+    *pos = i;
     Ok(Json::Num(x))
 }
 
@@ -322,6 +423,13 @@ pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
         (
             "block_threads",
             match report.block_threads {
+                Some(t) => Json::Num(t as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "greedy_threads",
+            match report.greedy_threads {
                 Some(t) => Json::Num(t as f64),
                 None => Json::Null,
             },
@@ -413,7 +521,34 @@ mod tests {
         assert_eq!(parsed.get("converged").and_then(Json::as_bool), Some(true));
         assert!(parsed.get("minimum").and_then(Json::as_num).is_some());
         assert!(parsed.get("history").and_then(Json::as_array).is_some());
-        // Monolithic solves report a null worker count…
+        // Monolithic sequential solves report null worker counts…
+        assert!(matches!(parsed.get("block_threads"), Some(Json::Null)));
+        assert!(matches!(parsed.get("greedy_threads"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn pooled_monolithic_report_carries_greedy_threads() {
+        use crate::rng::Pcg64;
+        let p = 140; // above the pooled kernel-cut gate
+        let mut rng = Pcg64::seeded(6);
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 0.2);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let f = crate::submodular::kernel_cut::KernelCutFn::new(
+            p,
+            k,
+            rng.uniform_vec(p, -2.0, 2.0),
+        );
+        let opts = IaesOptions { threads: 2, ..Default::default() };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        let parsed = Json::parse(&report_to_json(&report, false).to_string()).unwrap();
+        // …while pooled monolithic runs record the resolved count.
+        assert_eq!(parsed.get("greedy_threads").and_then(Json::as_num), Some(2.0));
         assert!(matches!(parsed.get("block_threads"), Some(Json::Null)));
     }
 
@@ -477,6 +612,83 @@ mod tests {
     }
 
     #[test]
+    fn surrogate_pairs_combine_into_one_scalar() {
+        // U+1F600 (grinning face) escaped as its surrogate pair.
+        assert_eq!(
+            Json::parse(r#""\uD83D\uDE00""#).unwrap().as_str(),
+            Some("\u{1F600}")
+        );
+        // Mixed with BMP escapes and raw UTF-8 on both sides.
+        assert_eq!(
+            Json::parse(r#""a\u00e9\uD83D\uDE00\u00E9A""#).unwrap().as_str(),
+            Some("a\u{e9}\u{1F600}\u{e9}A")
+        );
+        // The extremes of the supplementary planes: U+10000 and U+10FFFF.
+        assert_eq!(
+            Json::parse(r#""\uD800\uDC00""#).unwrap().as_str(),
+            Some("\u{10000}")
+        );
+        assert_eq!(
+            Json::parse(r#""\uDBFF\uDFFF""#).unwrap().as_str(),
+            Some("\u{10FFFF}")
+        );
+        // Raw (unescaped) non-BMP passes through unchanged.
+        assert_eq!(Json::parse("\"\u{1F600}\"").unwrap().as_str(), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn lone_surrogates_are_rejected_with_a_clear_message() {
+        for (doc, needle) in [
+            (r#""\uD800""#, "lone high surrogate"),
+            (r#""\uD83Dx""#, "lone high surrogate"),
+            (r#""\uD83DA""#, "lone high surrogate"),
+            (r#""\uD83D\u0041""#, "not a low surrogate"),
+            (r#""\uD83D\uD83D""#, "not a low surrogate"),
+            (r#""\uDC00""#, "lone low surrogate"),
+            (r#""\uDE00abc""#, "lone low surrogate"),
+        ] {
+            let err = Json::parse(doc).unwrap_err().to_string();
+            assert!(err.contains(needle), "`{doc}`: got `{err}`, wanted `{needle}`");
+        }
+        // Truncated and non-hex escapes still fail cleanly.
+        assert!(Json::parse(r#""\uD83D\u12""#).is_err());
+        assert!(Json::parse(r#""\uZZZZ""#).is_err());
+    }
+
+    #[test]
+    fn number_grammar_accepts_exactly_json_numbers() {
+        for (doc, want) in [
+            ("0", 0.0),
+            ("-0", 0.0),
+            ("10", 10.0),
+            ("-3.25", -3.25),
+            ("0.5", 0.5),
+            ("1e6", 1e6),
+            ("2E-3", 2e-3),
+            ("-1.5e+2", -150.0),
+            ("9007199254740993", 9007199254740992.0), // f64 rounding, not an error
+        ] {
+            let got = Json::parse(doc).unwrap().as_num().unwrap();
+            assert_eq!(got, want, "doc `{doc}`");
+        }
+        for bad in [
+            "+1", "++1", "--1", "-", ".5", "1.", "1.e3", "01", "-01", "1e", "1e+",
+            "1.2.3", "1e2e3", "1..2", "1.-2", "+",
+        ] {
+            let err = Json::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("number") || err.contains("expected a value"),
+                "`{bad}`: unhelpful error `{err}`"
+            );
+        }
+        // The offending token is named in full (no greedy-gobble confusion).
+        let err = Json::parse("[1.2.3]").unwrap_err().to_string();
+        assert!(err.contains("1.2.3"), "error should name the token: {err}");
+        let err = Json::parse("[+1]").unwrap_err().to_string();
+        assert!(err.contains("+1"), "error should name the token: {err}");
+    }
+
+    #[test]
     fn emit_parse_roundtrip_is_stable() {
         let j = Json::obj(vec![
             ("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(0.25)])),
@@ -487,5 +699,52 @@ mod tests {
         let text = j.to_string();
         let back = Json::parse(&text).unwrap();
         assert_eq!(back.to_string(), text);
+    }
+
+    /// Random nested documents — including non-BMP strings and control
+    /// characters — must survive emit → parse → emit byte-identically.
+    #[test]
+    fn random_documents_roundtrip_byte_identically() {
+        use crate::rng::Pcg64;
+        fn random_string(rng: &mut Pcg64) -> String {
+            let alphabet: Vec<char> = vec![
+                'a', 'Z', '9', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{0001}',
+                '\u{001F}', 'é', '←', '日', '😀', '\u{10FFFF}', '\u{1F4A9}',
+            ];
+            let n = rng.below(12);
+            (0..n).map(|_| alphabet[rng.below(alphabet.len())]).collect()
+        }
+        fn random_json(rng: &mut Pcg64, depth: usize) -> Json {
+            match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bernoulli(0.5)),
+                2 => {
+                    // Mix of integers, dyadic fractions (exact in f64),
+                    // and free normals.
+                    match rng.below(3) {
+                        0 => Json::Num((rng.below(2001) as f64) - 1000.0),
+                        1 => Json::Num((rng.below(64) as f64) / 16.0),
+                        _ => Json::Num(rng.normal()),
+                    }
+                }
+                3 => Json::Str(random_string(rng)),
+                4 => Json::Arr(
+                    (0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect(),
+                ),
+                _ => Json::Obj(
+                    (0..rng.below(4))
+                        .map(|i| (format!("k{i}-{}", random_string(rng)), random_json(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let mut rng = Pcg64::seeded(20260731);
+        for case in 0..300 {
+            let doc = random_json(&mut rng, 3);
+            let text = doc.to_string();
+            let back = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("case {case}: `{text}` failed: {e}"));
+            assert_eq!(back.to_string(), text, "case {case} not byte-stable");
+        }
     }
 }

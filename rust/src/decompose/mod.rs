@@ -351,6 +351,12 @@ impl Submodular for DecomposableFn {
         // The final walk re-traverses `order` with reset cursors to
         // scatter-add local gains into global positions, component order
         // ascending per element — deterministic, no position array needed.
+        // The parallel-oracle pool handle is deliberately NOT propagated
+        // into the nested component scratch: block-solver component
+        // passes already run on pool worker threads, and a nested
+        // dispatch from a worker would re-enter the pool mid-job.
+        // Component supports are small; the sequential kernels are the
+        // right tool here.
         assert_eq!(base.len(), self.p);
         assert_eq!(order.len(), out.len());
         let r = self.comps.len();

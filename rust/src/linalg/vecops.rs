@@ -4,9 +4,19 @@
 //! are written so that LLVM auto-vectorizes them (no bounds checks inside,
 //! `chunks_exact` style accumulation where it matters).
 
-/// Dot product.
+/// Dot product — delegates to the explicit 4-lane kernel [`dot4`].
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot4(a, b)
+}
+
+/// Explicitly 4-lane-unrolled dot product: four independent accumulators
+/// over `chunks_exact(4)` (LLVM turns this into packed FMA/mul-add
+/// lanes), remainder in a scalar tail, lanes reduced as
+/// `a0 + a1 + a2 + a3 + tail`. The summation tree is fixed — the result
+/// is a pure function of the inputs, never of how the call is scheduled.
+#[inline]
+pub fn dot4(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc0 = 0.0;
     let mut acc1 = 0.0;
@@ -23,6 +33,33 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     let mut tail = 0.0;
     for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
         tail += x * y;
+    }
+    acc0 + acc1 + acc2 + acc3 + tail
+}
+
+/// Gathered multiply-accumulate `Σ_k w[k] · table[idx[k]]` — the sparse
+/// cut adjacency walk (`w` = edge weights, `idx` = neighbor ids, `table`
+/// = 0/1 membership). Same 4-lane structure and fixed reduction tree as
+/// [`dot4`], so chunked callers get bitwise thread-count-independent
+/// partials.
+#[inline]
+pub fn dot_gather4(w: &[f64], idx: &[u32], table: &[f64]) -> f64 {
+    debug_assert_eq!(w.len(), idx.len());
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let mut cw = w.chunks_exact(4);
+    let mut ci = idx.chunks_exact(4);
+    for (x, j) in (&mut cw).zip(&mut ci) {
+        acc0 += x[0] * table[j[0] as usize];
+        acc1 += x[1] * table[j[1] as usize];
+        acc2 += x[2] * table[j[2] as usize];
+        acc3 += x[3] * table[j[3] as usize];
+    }
+    let mut tail = 0.0;
+    for (x, j) in cw.remainder().iter().zip(ci.remainder()) {
+        tail += x * table[*j as usize];
     }
     acc0 + acc1 + acc2 + acc3 + tail
 }
@@ -51,12 +88,189 @@ pub fn sum(a: &[f64]) -> f64 {
     a.iter().sum()
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` — delegates to the explicit 4-lane kernel [`axpy4`].
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy4(alpha, x, y)
+}
+
+/// Explicitly 4-lane-unrolled `y += alpha * x`. Element-wise (no
+/// reduction), so the unroll is bit-identical to the scalar loop.
+#[inline]
+pub fn axpy4(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
+    let mut cy = y.chunks_exact_mut(4);
+    let mut cx = x.chunks_exact(4);
+    for (yv, xv) in (&mut cy).zip(&mut cx) {
+        yv[0] += alpha * xv[0];
+        yv[1] += alpha * xv[1];
+        yv[2] += alpha * xv[2];
+        yv[3] += alpha * xv[3];
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
         *yi += alpha * xi;
+    }
+}
+
+/// `y[i] += x[i]`, 4-lane unrolled. Element-wise, bit-identical to the
+/// scalar loop — the row-accumulation kernel of the dense cut oracles.
+#[inline]
+pub fn add_assign4(y: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let mut cy = y.chunks_exact_mut(4);
+    let mut cx = x.chunks_exact(4);
+    for (yv, xv) in (&mut cy).zip(&mut cx) {
+        yv[0] += xv[0];
+        yv[1] += xv[1];
+        yv[2] += xv[2];
+        yv[3] += xv[3];
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *yi += xi;
+    }
+}
+
+/// Fused 4-row accumulator block sweep:
+/// `acc[j] += (r0[j] + r1[j]) + (r2[j] + r3[j])` for every `j`.
+///
+/// This is the bandwidth-bound inner kernel of the dense kernel-cut
+/// greedy pass — one sweep reads `acc` once per four rows instead of
+/// once per row. The per-element expression (including the pairwise
+/// parenthesization) is part of the oracle's bit-exact contract: the
+/// pooled column-chunked sweep and the sequential sweep both evaluate
+/// exactly this expression per element, which is why they agree bit for
+/// bit at every thread count.
+#[inline]
+pub fn sweep4(acc: &mut [f64], r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64]) {
+    let n = acc.len();
+    debug_assert!(r0.len() == n && r1.len() == n && r2.len() == n && r3.len() == n);
+    let mut ca = acc.chunks_exact_mut(4);
+    let mut c0 = r0.chunks_exact(4);
+    let mut c1 = r1.chunks_exact(4);
+    let mut c2 = r2.chunks_exact(4);
+    let mut c3 = r3.chunks_exact(4);
+    for ((((a, x0), x1), x2), x3) in
+        (&mut ca).zip(&mut c0).zip(&mut c1).zip(&mut c2).zip(&mut c3)
+    {
+        a[0] += (x0[0] + x1[0]) + (x2[0] + x3[0]);
+        a[1] += (x0[1] + x1[1]) + (x2[1] + x3[1]);
+        a[2] += (x0[2] + x1[2]) + (x2[2] + x3[2]);
+        a[3] += (x0[3] + x1[3]) + (x2[3] + x3[3]);
+    }
+    for ((((a, x0), x1), x2), x3) in ca
+        .into_remainder()
+        .iter_mut()
+        .zip(c0.remainder())
+        .zip(c1.remainder())
+        .zip(c2.remainder())
+        .zip(c3.remainder())
+    {
+        *a += (x0 + x1) + (x2 + x3);
+    }
+}
+
+/// Coverage-gain kernel: for each item id `u` in `ids`, add `item_w[u]`
+/// to the gain iff `covered[u]` is still false, and mark it covered.
+/// Branchless (mask multiply) and 4-lane unrolled with the [`dot4`]
+/// reduction tree.
+///
+/// `ids` must not contain duplicates — the flags are read per lane
+/// before being written, so a repeated id inside one call would be
+/// counted twice (a set never contains an item twice; `CoverageFn`
+/// asserts this at construction).
+#[inline]
+pub fn cover_gain4(ids: &[u32], item_w: &[f64], covered: &mut [bool]) -> f64 {
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let mut ci = ids.chunks_exact(4);
+    for j in &mut ci {
+        let (u0, u1, u2, u3) =
+            (j[0] as usize, j[1] as usize, j[2] as usize, j[3] as usize);
+        acc0 += item_w[u0] * (!covered[u0] as u8 as f64);
+        acc1 += item_w[u1] * (!covered[u1] as u8 as f64);
+        acc2 += item_w[u2] * (!covered[u2] as u8 as f64);
+        acc3 += item_w[u3] * (!covered[u3] as u8 as f64);
+        covered[u0] = true;
+        covered[u1] = true;
+        covered[u2] = true;
+        covered[u3] = true;
+    }
+    let mut tail = 0.0;
+    for &u in ci.remainder() {
+        let u = u as usize;
+        tail += item_w[u] * (!covered[u] as u8 as f64);
+        covered[u] = true;
+    }
+    acc0 + acc1 + acc2 + acc3 + tail
+}
+
+/// Facility-location gain kernel over one facility column: for each
+/// client `u`, `gain += w[u] · max(s_u − cur[u], 0)` and
+/// `cur[u] ← max(cur[u], s_u)`, where `s_u = scores[u · stride + col]`.
+/// Branchless (relu + max) and 4-lane unrolled with the [`dot4`]
+/// reduction tree; the strided gather keeps the clients × facilities
+/// matrix layout unchanged.
+#[inline]
+pub fn relu_mac_col4(
+    cur: &mut [f64],
+    w: &[f64],
+    scores: &[f64],
+    col: usize,
+    stride: usize,
+) -> f64 {
+    let n = cur.len();
+    debug_assert_eq!(w.len(), n);
+    debug_assert!(n == 0 || (n - 1) * stride + col < scores.len());
+    let mut acc0 = 0.0;
+    let mut acc1 = 0.0;
+    let mut acc2 = 0.0;
+    let mut acc3 = 0.0;
+    let mut u = 0;
+    while u + 4 <= n {
+        let s0 = scores[u * stride + col];
+        let s1 = scores[(u + 1) * stride + col];
+        let s2 = scores[(u + 2) * stride + col];
+        let s3 = scores[(u + 3) * stride + col];
+        acc0 += w[u] * (s0 - cur[u]).max(0.0);
+        acc1 += w[u + 1] * (s1 - cur[u + 1]).max(0.0);
+        acc2 += w[u + 2] * (s2 - cur[u + 2]).max(0.0);
+        acc3 += w[u + 3] * (s3 - cur[u + 3]).max(0.0);
+        cur[u] = cur[u].max(s0);
+        cur[u + 1] = cur[u + 1].max(s1);
+        cur[u + 2] = cur[u + 2].max(s2);
+        cur[u + 3] = cur[u + 3].max(s3);
+        u += 4;
+    }
+    let mut tail = 0.0;
+    while u < n {
+        let s = scores[u * stride + col];
+        tail += w[u] * (s - cur[u]).max(0.0);
+        cur[u] = cur[u].max(s);
+        u += 1;
+    }
+    acc0 + acc1 + acc2 + acc3 + tail
+}
+
+/// `cur[u] ← max(cur[u], scores[u · stride + col])` — the base-set arm
+/// of the facility oracle (no gain accumulation). Element-wise, 4-lane
+/// unrolled.
+#[inline]
+pub fn max_update_col4(cur: &mut [f64], scores: &[f64], col: usize, stride: usize) {
+    let n = cur.len();
+    debug_assert!(n == 0 || (n - 1) * stride + col < scores.len());
+    let mut u = 0;
+    while u + 4 <= n {
+        cur[u] = cur[u].max(scores[u * stride + col]);
+        cur[u + 1] = cur[u + 1].max(scores[(u + 1) * stride + col]);
+        cur[u + 2] = cur[u + 2].max(scores[(u + 2) * stride + col]);
+        cur[u + 3] = cur[u + 3].max(scores[(u + 3) * stride + col]);
+        u += 4;
+    }
+    while u < n {
+        cur[u] = cur[u].max(scores[u * stride + col]);
+        u += 1;
     }
 }
 
@@ -274,6 +488,144 @@ mod tests {
         let mut y = [10.0, 20.0];
         axpy(0.5, &x, &mut y);
         assert_eq!(y, [10.5, 21.0]);
+    }
+
+    #[test]
+    fn axpy4_matches_scalar_bitwise() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(99);
+        for n in [0usize, 1, 3, 4, 7, 8, 13, 64] {
+            let x = rng.normal_vec(n);
+            let mut y = rng.normal_vec(n);
+            let mut y_ref = y.clone();
+            axpy4(0.37, &x, &mut y);
+            for (yi, xi) in y_ref.iter_mut().zip(&x) {
+                *yi += 0.37 * xi;
+            }
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_assign4_matches_scalar_bitwise() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(100);
+        for n in [0usize, 2, 4, 9, 33] {
+            let x = rng.normal_vec(n);
+            let mut y = rng.normal_vec(n);
+            let mut y_ref = y.clone();
+            add_assign4(&mut y, &x);
+            for (yi, xi) in y_ref.iter_mut().zip(&x) {
+                *yi += xi;
+            }
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sweep4_matches_per_element_expression_bitwise() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(101);
+        for n in [0usize, 1, 4, 6, 17, 40] {
+            let r0 = rng.normal_vec(n);
+            let r1 = rng.normal_vec(n);
+            let r2 = rng.normal_vec(n);
+            let r3 = rng.normal_vec(n);
+            let mut acc = rng.normal_vec(n);
+            let mut acc_ref = acc.clone();
+            sweep4(&mut acc, &r0, &r1, &r2, &r3);
+            for j in 0..n {
+                acc_ref[j] += (r0[j] + r1[j]) + (r2[j] + r3[j]);
+            }
+            for (a, b) in acc.iter().zip(&acc_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_gather4_matches_dot4_on_identity_gather() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(102);
+        for n in [0usize, 3, 4, 11, 32] {
+            let w = rng.normal_vec(n);
+            let table = rng.normal_vec(n);
+            let idx: Vec<u32> = (0..n as u32).collect();
+            let a = dot_gather4(&w, &idx, &table);
+            let b = dot4(&w, &table);
+            assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+        }
+        // And a genuine permuted gather against the naive reference
+        // (same 4-lane reduction tree, computed by hand).
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let table = [10.0, 20.0, 30.0];
+        let idx = [2u32, 0, 1, 2, 0];
+        let expect = (1.0 * 30.0) + (2.0 * 10.0) + (3.0 * 20.0) + (4.0 * 30.0)
+            + (5.0 * 10.0);
+        assert!((dot_gather4(&w, &idx, &table) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cover_gain4_counts_each_item_once_and_marks() {
+        let item_w = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0];
+        let mut covered = vec![false, true, false, false, true, false];
+        // 6 ids → one exact chunk of 4 plus a tail of 2.
+        let ids = [0u32, 1, 2, 3, 4, 5];
+        let gain = cover_gain4(&ids, &item_w, &mut covered);
+        assert_eq!(gain, 1.0 + 4.0 + 8.0 + 32.0);
+        assert!(covered.iter().all(|&c| c));
+        // Second call: everything covered, zero gain.
+        assert_eq!(cover_gain4(&ids, &item_w, &mut covered), 0.0);
+    }
+
+    #[test]
+    fn relu_mac_col4_matches_branchy_reference() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(103);
+        for clients in [0usize, 1, 4, 5, 9, 21] {
+            let stride = 7;
+            let col = 3;
+            let scores = rng.uniform_vec(clients * stride, 0.0, 1.0);
+            let w = rng.uniform_vec(clients, 0.0, 1.0);
+            let mut cur = rng.uniform_vec(clients, 0.0, 1.0);
+            let mut cur_ref = cur.clone();
+            let gain = relu_mac_col4(&mut cur, &w, &scores, col, stride);
+            let mut expect = 0.0;
+            for u in 0..clients {
+                let s = scores[u * stride + col];
+                if s > cur_ref[u] {
+                    expect += w[u] * (s - cur_ref[u]);
+                    cur_ref[u] = s;
+                }
+            }
+            assert!((gain - expect).abs() < 1e-12, "clients={clients}");
+            for (a, b) in cur.iter().zip(&cur_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "clients={clients}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_update_col4_matches_branchy_reference() {
+        use crate::rng::Pcg64;
+        let mut rng = Pcg64::seeded(104);
+        let clients = 13;
+        let stride = 5;
+        let scores = rng.uniform_vec(clients * stride, 0.0, 1.0);
+        let mut cur = rng.uniform_vec(clients, 0.0, 1.0);
+        let mut cur_ref = cur.clone();
+        max_update_col4(&mut cur, &scores, 2, stride);
+        for u in 0..clients {
+            let s = scores[u * stride + 2];
+            if s > cur_ref[u] {
+                cur_ref[u] = s;
+            }
+        }
+        assert_eq!(cur, cur_ref);
     }
 
     #[test]

@@ -173,6 +173,20 @@ impl GreedyWorkspace {
         }
     }
 
+    /// Install (or clear) a shared worker pool for pooled oracle passes:
+    /// greedy passes driven through this workspace fan the dense
+    /// kernel-cut accumulator sweep and high-degree sparse-cut adjacency
+    /// walks across the pool plus the calling thread. The pooled passes
+    /// are **bit-identical** to the sequential ones (fixed chunk grids,
+    /// fixed-order chunk reductions), so installing a pool is purely a
+    /// wall-clock decision — trajectories never change.
+    pub fn set_pool(
+        &mut self,
+        pool: Option<std::sync::Arc<crate::runtime::pool::WorkerPool>>,
+    ) {
+        self.scratch.set_pool(pool);
+    }
+
     /// Project the persisted greedy order through an IAES contraction:
     /// survivors keep their relative ranks, so the mapped order is the
     /// warm start the next [`greedy_base_vertex`] repairs in O(p) instead

@@ -161,11 +161,9 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         other => bail!("unknown workload `{other}`"),
     };
     let rules: RuleSet = rule_set(&flags.get_str("rules", "all"))?;
+    let threads = flags.get_usize("threads", 0)?;
     let decompose = if flags.get_bool("decompose", false)? {
-        Some(sfm_screen::decompose::DecomposeOptions {
-            threads: flags.get_usize("threads", 0)?,
-            ..Default::default()
-        })
+        Some(sfm_screen::decompose::DecomposeOptions { threads, ..Default::default() })
     } else {
         None
     };
@@ -179,6 +177,11 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         screener: cfg.screener(),
         record_history: false,
         min_reduction_frac: cfg.min_reduction_frac,
+        // Monolithic solves drive the pooled greedy oracle with the same
+        // --threads flag the block solver uses (0 = all cores; pooled
+        // passes are bit-identical to sequential, so this only changes
+        // wall clock).
+        threads,
         ..Default::default()
     };
     opts.record_history = false;
@@ -203,6 +206,9 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
     println!("triggers     : {}", res.report.triggers.len());
     if let Some(t) = res.report.block_threads {
         println!("block workers: {t} (decomposable block solver)");
+    }
+    if let Some(t) = res.report.greedy_threads {
+        println!("oracle threads: {t} (pooled monolithic greedy oracle)");
     }
     println!(
         "time         : {:.3}s total ({:.3}s solver, {:.3}s screening)",

@@ -1,13 +1,17 @@
-//! A persistent, condvar-parked worker pool for the solver hot loop.
+//! A persistent, condvar-parked worker pool — the crate's fork-join
+//! primitive for solver hot loops.
 //!
-//! The decomposable block solver runs several parallel best-response
-//! phases *per round*; spawning scoped threads for each phase costs
-//! O(threads) heap allocations and two thread create/join syscalls per
-//! phase. [`WorkerPool`] replaces that with threads spawned **once** and
-//! parked on a condvar between jobs: dispatching a job is one mutex
-//! round-trip plus a `notify_all`, completely allocation-free, which is
-//! what lets the `threads > 1` steady state certify zero-allocation in
-//! `tests/zero_alloc.rs` exactly like `threads = 1` does.
+//! Originally built for the decomposable block solver's parallel
+//! best-response phases, the pool is now shared by every hot path that
+//! fans work across cores — including the pooled monolithic greedy
+//! oracle passes (`submodular::kernel_cut` / `submodular::cut`).
+//! Spawning scoped threads per phase costs O(threads) heap allocations
+//! and two thread create/join syscalls; [`WorkerPool`] replaces that
+//! with threads spawned **once** and parked on a condvar between jobs:
+//! dispatching a job is one mutex round-trip plus a `notify_all`,
+//! completely allocation-free, which is what lets the `threads > 1`
+//! steady state certify zero-allocation in `tests/zero_alloc.rs`
+//! exactly like `threads = 1` does.
 //!
 //! Job model: [`run`](WorkerPool::run) takes a borrowed `Fn(usize)`
 //! (the argument is the worker index — callers distribute work items via
@@ -18,8 +22,26 @@
 //! inside a job is caught on the worker, the barrier still completes,
 //! and `run` re-raises it on the caller thread — a poisoned job can
 //! never deadlock the pool.
+//!
+//! Two fork-join conveniences sit on top:
+//!
+//! * [`run_with_caller`](WorkerPool::run_with_caller) — the caller
+//!   thread participates as one extra lane instead of idling on the
+//!   barrier, so a "t-way" parallel region needs only `t − 1` parked
+//!   workers (the convention of the pooled monolithic oracle).
+//! * [`run_chunks`](WorkerPool::run_chunks) — fixed-size chunk grid over
+//!   an index range, distributed by an atomic cursor. The chunk
+//!   *boundaries* depend only on the range and the chunk size — never on
+//!   the worker count — which is the determinism discipline that keeps
+//!   pooled numeric sweeps bitwise identical for every thread count.
+//!
+//! [`DisjointSlice`] is the companion for writing into one output slice
+//! from many workers when the written ranges are provably disjoint.
 
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -97,8 +119,67 @@ impl WorkerPool {
     /// all of them return. Allocation-free. Panics (on this thread) if
     /// any worker's job panicked.
     pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
-        // SAFETY: the lifetime is erased only for the duration of this
-        // call — the completion barrier below outlives every dereference.
+        self.dispatch(job);
+        if self.barrier() {
+            panic!("worker pool job panicked");
+        }
+    }
+
+    /// Like [`run`](Self::run), but the **caller participates**: after
+    /// waking the workers this thread runs `job(self.size())` itself
+    /// (lane index = worker count, so arenas sized `size() + 1` can be
+    /// indexed by lane), then blocks on the completion barrier. A
+    /// `t`-way parallel region therefore needs a pool of only `t − 1`
+    /// workers — the convention used by the pooled monolithic greedy
+    /// oracle, where the dispatching solver thread would otherwise idle.
+    ///
+    /// Panic safety: a panic in the caller's own lane is caught, the
+    /// barrier is still honored (the job pointer stays valid until every
+    /// worker is done), and the payload is re-raised afterwards.
+    pub fn run_with_caller(&self, job: &(dyn Fn(usize) + Sync)) {
+        self.dispatch(job);
+        let caller = catch_unwind(AssertUnwindSafe(|| job(self.handles.len())));
+        let worker_panicked = self.barrier();
+        match caller {
+            Err(payload) => resume_unwind(payload),
+            Ok(()) if worker_panicked => panic!("worker pool job panicked"),
+            Ok(()) => {}
+        }
+    }
+
+    /// Fork-join over the index range `0..n` in fixed `chunk`-sized
+    /// pieces: `body` is called with each sub-range exactly once, work
+    /// distributed over the workers **and the calling thread** by an
+    /// atomic cursor. The chunk boundaries are `[0, chunk, 2·chunk, …]`
+    /// regardless of the worker count, so any `body` whose writes are
+    /// per-chunk-disjoint (and whose per-chunk arithmetic is fixed)
+    /// produces bitwise thread-count-independent results — the
+    /// determinism discipline of the pooled oracle sweeps.
+    ///
+    /// Allocation-free.
+    pub fn run_chunks(&self, n: usize, chunk: usize, body: &(dyn Fn(Range<usize>) + Sync)) {
+        assert!(chunk > 0, "chunk size must be positive");
+        let nchunks = n.div_ceil(chunk);
+        let next = AtomicUsize::new(0);
+        let job = move |_lane: usize| loop {
+            let c = next.fetch_add(1, Ordering::Relaxed);
+            if c >= nchunks {
+                break;
+            }
+            let lo = c * chunk;
+            body(lo..n.min(lo + chunk));
+        };
+        self.run_with_caller(&job);
+    }
+
+    /// Publish `job` to the workers and wake them. Must be paired with
+    /// exactly one [`barrier`](Self::barrier) call before this method is
+    /// entered again — the barrier is what keeps the lifetime-erased job
+    /// pointer sound.
+    fn dispatch(&self, job: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the lifetime is erased only for the duration of one
+        // dispatch/barrier pair — the completion barrier outlives every
+        // dereference.
         let job = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
                 job,
@@ -115,16 +196,76 @@ impl WorkerPool {
         c.remaining = self.handles.len();
         drop(c);
         self.shared.go.notify_all();
+    }
+
+    /// Block until every worker finished the dispatched job; returns
+    /// whether any worker panicked (the job slot is cleared either way).
+    fn barrier(&self) -> bool {
         let mut c = self.shared.ctrl.lock().expect("pool poisoned");
         while c.remaining > 0 {
             c = self.shared.done.wait(c).expect("pool poisoned");
         }
         c.job = None;
-        let panicked = std::mem::take(&mut c.panicked);
-        drop(c);
-        if panicked {
-            panic!("worker pool job panicked");
-        }
+        std::mem::take(&mut c.panicked)
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.handles.len()).finish()
+    }
+}
+
+/// A shared view of a mutable slice for provably **disjoint** parallel
+/// writes — the output side of [`WorkerPool::run_chunks`] sweeps, where
+/// each chunk owns a distinct index range of one output buffer.
+///
+/// The borrow checker cannot see per-range disjointness through a
+/// `Fn(Range) + Sync` closure, so the split is expressed with one
+/// narrowly-scoped unsafe accessor instead of sprinkling raw pointers
+/// through the oracle kernels.
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the only way to touch the data is the `unsafe` range accessor,
+// whose contract (disjoint ranges across concurrent users) is exactly
+// what makes shared cross-thread use sound. `T: Send` because elements
+// are written from other threads; `Sync` on the wrapper because workers
+// access it by `&` reference.
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    /// Wrap a mutable slice for disjoint parallel writes.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        DisjointSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable access to `range`.
+    ///
+    /// # Safety
+    ///
+    /// No two concurrently live ranges obtained from the same
+    /// `DisjointSlice` may overlap, and `range` must lie within bounds.
+    /// (`run_chunks` hands out non-overlapping chunk ranges, so passing
+    /// the chunk range straight through satisfies this.)
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, range: Range<usize>) -> &mut [T] {
+        debug_assert!(range.start <= range.end && range.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
     }
 }
 
@@ -237,5 +378,77 @@ mod tests {
         let pool = WorkerPool::new(2);
         pool.run(&|_| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn run_with_caller_adds_the_caller_lane() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..25 {
+            pool.run_with_caller(&|lane| {
+                hits[lane].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (lane, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 25, "lane {lane} missed jobs");
+        }
+    }
+
+    #[test]
+    fn run_with_caller_propagates_caller_panic_after_barrier() {
+        let pool = WorkerPool::new(2);
+        let worker_done = AtomicUsize::new(0);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_with_caller(&|lane| {
+                if lane == pool.size() {
+                    panic!("caller lane boom");
+                }
+                worker_done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(caught.is_err(), "caller-lane panic must re-raise");
+        // The barrier completed before the unwind: both workers ran.
+        assert_eq!(worker_done.load(Ordering::Relaxed), 2);
+        // And the pool is still serviceable.
+        pool.run(&|_| {});
+    }
+
+    #[test]
+    fn run_chunks_covers_every_index_once() {
+        let pool = WorkerPool::new(3);
+        for (n, chunk) in [(1000usize, 64usize), (64, 64), (63, 64), (1, 7), (0, 8)] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_chunks(n, chunk, &|r| {
+                // Chunk boundaries are multiples of `chunk` (grid is
+                // thread-count-independent by construction).
+                assert_eq!(r.start % chunk, 0);
+                assert!(r.len() <= chunk);
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} (n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_slice_parallel_writes_land() {
+        let pool = WorkerPool::new(2);
+        let mut out = vec![0.0f64; 500];
+        let view = DisjointSlice::new(&mut out);
+        assert_eq!(view.len(), 500);
+        assert!(!view.is_empty());
+        pool.run_chunks(500, 32, &|r| {
+            // SAFETY: run_chunks ranges are disjoint.
+            let dst = unsafe { view.slice_mut(r.clone()) };
+            for (k, x) in r.zip(dst.iter_mut()) {
+                *x = k as f64;
+            }
+        });
+        for (k, x) in out.iter().enumerate() {
+            assert_eq!(*x, k as f64);
+        }
     }
 }

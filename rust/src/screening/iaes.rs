@@ -84,6 +84,21 @@ pub struct IaesOptions {
     /// order, so flipping this flag never changes a bit of the
     /// trajectory — the determinism suite certifies exactly that.
     pub argsort_remap: bool,
+    /// Worker threads for the **pooled monolithic greedy oracle**
+    /// (`0` = all available cores, `1` = sequential — the default). At
+    /// `t > 1` the engine parks one persistent
+    /// [`WorkerPool`](crate::runtime::pool::WorkerPool) of `t − 1`
+    /// workers and installs it into the solver's greedy workspace; every
+    /// oracle pass then fans its bandwidth-bound inner loops (dense
+    /// kernel-cut accumulator sweeps, high-degree cut adjacency walks)
+    /// across the pool plus the engine thread. Pooled passes are
+    /// **bit-identical** to sequential ones for every thread count
+    /// (fixed chunk grids + fixed-order chunk reductions — the same
+    /// discipline as the block solver's rounds), so this knob never
+    /// changes a trajectory. Ignored for caller-provided solvers
+    /// ([`IaesEngine::with_solver`]) — the block solver owns its own
+    /// pool and reports `block_threads` instead.
+    pub threads: usize,
 }
 
 impl Default for IaesOptions {
@@ -99,6 +114,7 @@ impl Default for IaesOptions {
             min_reduction_frac: 0.2,
             warm_restart: true,
             argsort_remap: true,
+            threads: 1,
         }
     }
 }
@@ -115,6 +131,7 @@ impl std::fmt::Debug for IaesOptions {
             .field("min_reduction_frac", &self.min_reduction_frac)
             .field("warm_restart", &self.warm_restart)
             .field("argsort_remap", &self.argsort_remap)
+            .field("threads", &self.threads)
             .finish()
     }
 }
@@ -192,6 +209,14 @@ pub struct IaesReport {
     /// runs, `None` for monolithic solves). Surfaced in the JSON report
     /// so `--decompose` runs record the parallelism they actually used.
     pub block_threads: Option<usize>,
+    /// Resolved thread count of the pooled monolithic greedy oracle:
+    /// `Some(t)` when [`IaesOptions::threads`] resolved to `t ≥ 2` and a
+    /// pool was parked for the run (oracles fan out over it once the
+    /// problem is large enough to pay for a dispatch), `None` for
+    /// sequential and decomposed solves. Surfaced in the JSON report
+    /// exactly like `block_threads`, so `solve --threads N` runs record
+    /// the parallelism they actually used.
+    pub greedy_threads: Option<usize>,
 }
 
 impl IaesReport {
@@ -288,10 +313,34 @@ impl<'a> IaesEngine<'a> {
         // translation buffers, corral/atom storage, Gram factor, and
         // greedy/PAV/oracle scratch all persist across contractions
         // instead of being rebuilt from scratch.
+        let monolithic = self.solver_override.is_none();
         let mut scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
         let mut solver: Box<dyn ProxSolver + 'a> = match self.solver_override.take() {
             Some(s) => s,
             None => self.opts.solver.build(&scaled),
+        };
+        // Pooled monolithic greedy oracle: one persistent parked pool of
+        // t − 1 workers for the whole run (the engine thread is the t-th
+        // lane). Installed once — the workspace and its pool handle
+        // survive every contraction restart. Caller-provided solvers
+        // (the decomposable block solver) own their parallelism and are
+        // left alone.
+        let greedy_threads = if monolithic {
+            let t = match self.opts.threads {
+                0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+                t => t,
+            };
+            t.max(1)
+        } else {
+            1
+        };
+        let _oracle_pool = if monolithic && greedy_threads > 1 {
+            let pool =
+                Arc::new(crate::runtime::pool::WorkerPool::new(greedy_threads - 1));
+            solver.set_pool(Some(Arc::clone(&pool)));
+            Some(pool)
+        } else {
+            None
         };
         // Persistent contraction buffers: `survivors`/`w_surv` double-
         // buffer against `kept`/`w_restricted` via swap, so a contraction
@@ -496,6 +545,7 @@ impl<'a> IaesEngine<'a> {
             emptied,
             converged,
             block_threads: None,
+            greedy_threads: (monolithic && greedy_threads > 1).then_some(greedy_threads),
         })
     }
 }
@@ -673,6 +723,36 @@ mod tests {
         let f = IwataFn::new(5);
         let opts = IaesOptions { rho: 1.5, ..Default::default() };
         assert!(solve_sfm_with_screening(&f, &opts).is_err());
+    }
+
+    #[test]
+    fn pooled_threads_are_reported_and_never_change_the_answer() {
+        // p = 140 is large enough for the pooled kernel-cut superblock
+        // path to actually engage; the full reports must agree with the
+        // sequential run bit for bit (pooled oracle passes are exact).
+        // Weak coupling + strong unaries keep the solve fast and the
+        // screening rules productive.
+        let p = 140;
+        let mut rng = Pcg64::seeded(4040);
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 0.15);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let f = KernelCutFn::new(p, k, rng.uniform_vec(p, -3.0, 3.0));
+        let base = IaesOptions { eps: 1e-8, ..Default::default() };
+        let seq = solve_sfm_with_screening(&f, &base).unwrap();
+        assert_eq!(seq.greedy_threads, None, "sequential runs report no pool");
+        let pooled =
+            solve_sfm_with_screening(&f, &IaesOptions { threads: 3, ..base }).unwrap();
+        assert_eq!(pooled.greedy_threads, Some(3), "resolved count must surface");
+        assert_eq!(pooled.minimum.to_bits(), seq.minimum.to_bits());
+        assert_eq!(pooled.minimizer, seq.minimizer);
+        assert_eq!(pooled.iters, seq.iters);
+        assert_eq!(pooled.final_gap.to_bits(), seq.final_gap.to_bits());
     }
 
     #[test]

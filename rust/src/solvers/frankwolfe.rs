@@ -468,6 +468,13 @@ impl ProxSolver for FrankWolfe {
         self.shared.greedy_ws.full_sorts
     }
 
+    fn set_pool(
+        &mut self,
+        pool: Option<std::sync::Arc<crate::runtime::pool::WorkerPool>>,
+    ) {
+        self.shared.greedy_ws.set_pool(pool);
+    }
+
     fn name(&self) -> &'static str {
         match self.opts.variant {
             FwVariant::Plain => "frank-wolfe",

@@ -491,6 +491,13 @@ impl ProxSolver for MinNormPoint {
         self.shared.greedy_ws.full_sorts
     }
 
+    fn set_pool(
+        &mut self,
+        pool: Option<std::sync::Arc<crate::runtime::pool::WorkerPool>>,
+    ) {
+        self.shared.greedy_ws.set_pool(pool);
+    }
+
     fn name(&self) -> &'static str {
         "min-norm"
     }

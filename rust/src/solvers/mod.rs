@@ -94,6 +94,18 @@ pub trait ProxSolver {
     /// a contraction.
     fn greedy_full_sorts(&self) -> u64;
 
+    /// Install (or clear) a shared worker pool for pooled greedy oracle
+    /// passes ([`GreedyWorkspace::set_pool`]): the IAES engine calls
+    /// this once per monolithic `--threads N` run so every greedy pass —
+    /// major iterations, restarts, atom regeneration — fans its oracle
+    /// inner loops across the pool. Pooled passes are bit-identical to
+    /// sequential ones, so this never changes a trajectory. The default
+    /// is a no-op for solvers that own their parallelism (the block
+    /// solver) or do no greedy passes.
+    fn set_pool(&mut self, pool: Option<std::sync::Arc<crate::runtime::pool::WorkerPool>>) {
+        let _ = pool;
+    }
+
     /// Human-readable solver name (reports/benches).
     fn name(&self) -> &'static str;
 }

@@ -9,6 +9,7 @@
 //! "obviously out", and genuinely coupled elements.
 
 use super::{OracleScratch, Submodular};
+use crate::linalg::vecops::cover_gain4;
 
 /// Weighted set coverage with modular costs.
 #[derive(Clone, Debug)]
@@ -23,11 +24,23 @@ pub struct CoverageFn {
 
 impl CoverageFn {
     /// Build from covering sets, nonnegative item weights, and costs.
-    pub fn new(sets: Vec<Vec<u32>>, item_w: Vec<f64>, cost: Vec<f64>) -> Self {
+    /// Repeated items within one set are collapsed to their first
+    /// occurrence (a set cannot contain an item twice — this matches
+    /// what the old branchy gains walk computed for such inputs), which
+    /// establishes the distinct-items precondition of the branchless
+    /// gains kernel.
+    pub fn new(mut sets: Vec<Vec<u32>>, item_w: Vec<f64>, cost: Vec<f64>) -> Self {
         assert_eq!(sets.len(), cost.len());
-        for s in &sets {
-            for &u in s {
+        let mut seen = vec![false; item_w.len()];
+        for s in sets.iter_mut() {
+            s.retain(|&u| {
                 assert!((u as usize) < item_w.len());
+                let fresh = !seen[u as usize];
+                seen[u as usize] = true;
+                fresh
+            });
+            for &u in s.iter() {
+                seen[u as usize] = false;
             }
         }
         assert!(item_w.iter().all(|&w| w >= 0.0));
@@ -91,7 +104,10 @@ impl Submodular for CoverageFn {
         scratch: &mut OracleScratch,
     ) {
         // `covered` is item-indexed (not ground-set-indexed) and rebuilt
-        // from `base` on entry.
+        // from `base` on entry. The per-element gain walk is the
+        // branchless 4-lane `vecops::cover_gain4` kernel (items within a
+        // set are distinct — asserted at construction — so reading the
+        // flag before writing it is exact).
         let covered = &mut scratch.mem_bool;
         covered.clear();
         covered.resize(self.item_w.len(), false);
@@ -103,14 +119,7 @@ impl Submodular for CoverageFn {
             }
         }
         for (o, &j) in out.iter_mut().zip(order) {
-            let mut gain = -self.cost[j];
-            for &u in &self.sets[j] {
-                if !covered[u as usize] {
-                    covered[u as usize] = true;
-                    gain += self.item_w[u as usize];
-                }
-            }
-            *o = gain;
+            *o = cover_gain4(&self.sets[j], &self.item_w, covered) - self.cost[j];
         }
     }
 }
@@ -128,6 +137,18 @@ mod tests {
         let f = CoverageFn::random(10, 25, 5, &mut rng);
         check_axioms(&f, 72, 1e-9);
         check_gains_match_eval(&f, 73, 1e-12);
+    }
+
+    #[test]
+    fn duplicate_items_within_a_set_collapse() {
+        // A repeated item contributes once — same value the branchy walk
+        // historically produced; the constructor dedup makes it hold for
+        // the branchless kernel too.
+        let f = CoverageFn::new(vec![vec![0, 1, 0]], vec![1.0, 2.0], vec![0.25]);
+        assert!((f.eval_ids(&[0]) - 2.75).abs() < 1e-12); // 1 + 2 − 0.25
+        let mut out = [0.0];
+        f.prefix_gains(&[0], &mut out);
+        assert!((out[0] - 2.75).abs() < 1e-12);
     }
 
     #[test]

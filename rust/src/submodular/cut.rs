@@ -9,6 +9,70 @@
 //! large images.
 
 use super::{OracleScratch, Submodular};
+use crate::linalg::vecops::dot_gather4;
+use crate::runtime::pool::{DisjointSlice, WorkerPool};
+
+/// Adjacency-walk chunk length. A vertex's membership-weighted neighbor
+/// sum is always reduced over `⌈deg / ADJ_CHUNK⌉` fixed chunks — one
+/// [`dot_gather4`] partial per chunk, partials folded in chunk order —
+/// so the reduction tree depends only on the degree, never on the
+/// thread count (a single-chunk walk IS the plain `dot_gather4`).
+const ADJ_CHUNK: usize = 1024;
+
+/// Pooled walks engage at this degree: below it a dispatch costs more
+/// than the row. The gate only moves the same fixed-chunk arithmetic
+/// between threads, so it is unobservable in the results.
+const ADJ_POOL_MIN: usize = 4096;
+
+/// The canonical chunked adjacency reduction — the **single source of
+/// truth** for the determinism contract: `dot_gather4` partials over the
+/// fixed `ADJ_CHUNK` grid, folded left-to-right from the first partial.
+/// With a pool (and a row long enough to pay for a dispatch) the
+/// partials are computed across the workers — each chunk slot owned by
+/// exactly one worker — otherwise sequentially; the grid and the fold
+/// are identical either way, so both arms are bit-equal by
+/// construction. `partials` is caller-owned scratch (resized here).
+fn chunked_adjacency_sum(
+    ws: &[f64],
+    nbrs: &[u32],
+    inside: &[f64],
+    partials: &mut Vec<f64>,
+    pool: Option<&WorkerPool>,
+) -> f64 {
+    debug_assert!(!ws.is_empty());
+    let nchunks = ws.len().div_ceil(ADJ_CHUNK);
+    partials.clear();
+    partials.resize(nchunks, 0.0);
+    match pool {
+        Some(pool) if ws.len() >= ADJ_POOL_MIN => {
+            let parts = DisjointSlice::new(partials);
+            pool.run_chunks(ws.len(), ADJ_CHUNK, &|r: std::ops::Range<usize>| {
+                let c = r.start / ADJ_CHUNK;
+                // SAFETY: each chunk index is visited exactly once.
+                let slot = unsafe { parts.slice_mut(c..c + 1) };
+                slot[0] = dot_gather4(&ws[r.clone()], &nbrs[r.clone()], inside);
+            });
+        }
+        _ => {
+            for (c, p_out) in partials.iter_mut().enumerate() {
+                let lo = c * ADJ_CHUNK;
+                let hi = ws.len().min(lo + ADJ_CHUNK);
+                *p_out = dot_gather4(&ws[lo..hi], &nbrs[lo..hi], inside);
+            }
+        }
+    }
+    fold_partials(partials)
+}
+
+/// Fold chunk partials in fixed chunk order, seeded from the first
+/// partial (so a one-chunk walk is bitwise the plain `dot_gather4`).
+fn fold_partials(partials: &[f64]) -> f64 {
+    let mut s = partials[0];
+    for &x in &partials[1..] {
+        s += x;
+    }
+    s
+}
 
 /// A weighted undirected graph cut plus unary terms.
 #[derive(Clone, Debug)]
@@ -115,20 +179,32 @@ impl Submodular for CutFn {
         // Membership evolves as we walk the order; marginal gain of v:
         //   u_v + Σ_{j∉A} w_vj − Σ_{j∈A} w_vj = u_v + deg_v − 2 Σ_{j∈A} w_vj.
         // Membership is stored as f64 0/1 so the adjacency walk is a
-        // branchless multiply-accumulate (membership is effectively random
-        // mid-solve, so an `if` mispredicts half the time). The membership
-        // buffer is rebuilt from `base` on entry, so the scratch carries no
-        // state between passes.
-        let inside = &mut scratch.mem_f64;
+        // branchless multiply-accumulate (`vecops::dot_gather4`;
+        // membership is effectively random mid-solve, so an `if`
+        // mispredicts half the time). The membership buffer is rebuilt
+        // from `base` on entry, so the scratch carries no state between
+        // passes.
+        //
+        // The walk is reduced over the fixed ADJ_CHUNK grid whenever the
+        // row spans more than one chunk; with a pool installed, rows of
+        // degree ≥ ADJ_POOL_MIN compute their chunk partials across the
+        // workers (each partial owned by exactly one chunk) and fold
+        // them in the identical chunk order — bitwise equal to the
+        // sequential walk at every thread count.
+        let OracleScratch { mem_f64: inside, aux2: partials, pool, .. } = scratch;
+        let pool = pool.clone();
         inside.clear();
         inside.extend(base.iter().map(|&b| if b { 1.0 } else { 0.0 }));
         for (o, &v) in out.iter_mut().zip(order) {
             debug_assert_eq!(inside[v], 0.0);
             let (nbrs, ws) = self.adj(v);
-            let mut in_sum = 0.0;
-            for (&j, &w) in nbrs.iter().zip(ws) {
-                in_sum += w * inside[j as usize];
-            }
+            let in_sum = if ws.is_empty() {
+                0.0
+            } else if ws.len() <= ADJ_CHUNK {
+                dot_gather4(ws, nbrs, inside)
+            } else {
+                chunked_adjacency_sum(ws, nbrs, inside, partials, pool.as_deref())
+            };
             *o = self.unary[v] + self.degree[v] - 2.0 * in_sum;
             inside[v] = 1.0;
         }
@@ -188,6 +264,59 @@ mod tests {
         assert_eq!(f.eval_ids(&[0]), -2.0); // -5 + 3
         assert_eq!(f.eval_ids(&[1]), 4.0); // 1 + 3
         assert_eq!(f.eval_full(), -4.0); // -5 + 1
+    }
+
+    #[test]
+    fn chunked_and_pooled_hub_walks_are_bit_identical() {
+        // A hub vertex of degree ≥ ADJ_POOL_MIN forces both the fixed-
+        // chunk reduction (always, degree > ADJ_CHUNK) and the pooled
+        // partial computation (pool installed). All three paths — plain
+        // sequential scratch, pooled at 2 lanes, pooled at 4 lanes —
+        // must agree bit for bit, and the hub gain must match the
+        // eval-based definition.
+        use crate::runtime::pool::WorkerPool;
+        use crate::submodular::OracleScratch;
+        use std::sync::Arc;
+        let p = ADJ_POOL_MIN + 350; // hub degree spans 4 full chunks + tail
+        let mut rng = Pcg64::seeded(4646);
+        let mut edges = Vec::with_capacity(p - 1);
+        for j in 1..p {
+            edges.push((0usize, j, rng.uniform(0.0, 1.0)));
+        }
+        let unary = rng.uniform_vec(p, -1.0, 1.0);
+        let f = CutFn::from_edges(p, &edges, unary);
+        // Order: a random slice of leaves first (so membership is mixed),
+        // then the hub, then more leaves.
+        let mut order: Vec<usize> = (1..p).collect();
+        rng.shuffle(&mut order);
+        order.insert(p / 2, 0);
+        let base = vec![false; p];
+        let mut seq = OracleScratch::new();
+        let mut expect = vec![0.0; p];
+        f.prefix_gains_scratch(&base, &order, &mut expect, &mut seq);
+        for t in [2usize, 4] {
+            let mut pooled = OracleScratch::new();
+            pooled.set_pool(Some(Arc::new(WorkerPool::new(t - 1))));
+            let mut got = vec![f64::NAN; p];
+            f.prefix_gains_scratch(&base, &order, &mut got, &mut pooled);
+            for k in 0..p {
+                assert_eq!(got[k].to_bits(), expect[k].to_bits(), "t={t}, gain {k}");
+            }
+        }
+        // The hub's gain (at position p/2) against the defining marginal.
+        let mut set = vec![false; p];
+        for &v in &order[..p / 2] {
+            set[v] = true;
+        }
+        let before = f.eval(&set);
+        set[0] = true;
+        let after = f.eval(&set);
+        assert!(
+            (expect[p / 2] - (after - before)).abs() < 1e-9 * (1.0 + (after - before).abs()),
+            "hub gain {} vs eval marginal {}",
+            expect[p / 2],
+            after - before
+        );
     }
 
     #[test]

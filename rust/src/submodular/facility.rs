@@ -10,6 +10,7 @@
 //! exactly why the screening test battery includes it.
 
 use super::{OracleScratch, Submodular};
+use crate::linalg::vecops::{max_update_col4, relu_mac_col4};
 
 /// Weighted facility-location value minus modular facility costs.
 #[derive(Clone, Debug)]
@@ -103,31 +104,23 @@ impl Submodular for FacilityLocationFn {
     ) {
         // cur[u] = current best score for client u; adding facility j
         // contributes Σ_u w_u · max(0, s_uj − cur[u]) − c_j. `cur` is
-        // client-indexed and rebuilt from `base` on entry.
+        // client-indexed and rebuilt from `base` on entry. Both walks
+        // over the facility column are branchless 4-lane kernels
+        // (`vecops::{max_update_col4, relu_mac_col4}`) — scores and
+        // weights are nonnegative, so `max` reproduces the branchy
+        // update exactly.
         let clients = self.num_clients();
         let cur = &mut scratch.aux;
         cur.clear();
         cur.resize(clients, 0.0);
         for (j, &inb) in base.iter().enumerate() {
             if inb {
-                for u in 0..clients {
-                    let s = self.scores[u * self.p + j];
-                    if s > cur[u] {
-                        cur[u] = s;
-                    }
-                }
+                max_update_col4(cur, &self.scores, j, self.p);
             }
         }
         for (o, &j) in out.iter_mut().zip(order) {
-            let mut gain = -self.cost[j];
-            for u in 0..clients {
-                let s = self.scores[u * self.p + j];
-                if s > cur[u] {
-                    gain += self.client_w[u] * (s - cur[u]);
-                    cur[u] = s;
-                }
-            }
-            *o = gain;
+            *o = relu_mac_col4(cur, &self.client_w, &self.scores, j, self.p)
+                - self.cost[j];
         }
     }
 }

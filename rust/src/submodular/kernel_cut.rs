@@ -11,6 +11,25 @@
 //! the two-moons experiment probes. See DESIGN.md §Substitutions.
 
 use super::{OracleScratch, Submodular};
+use crate::linalg::vecops::{add_assign4, sweep4};
+use crate::runtime::pool::DisjointSlice;
+
+/// Elements per pooled gains superblock: 8 fused 4-row sweeps. The
+/// per-column accumulator op order inside a superblock is exactly the
+/// sequential 4-block path's, so the pooled and sequential passes are
+/// bit-identical (see `prefix_gains_scratch`).
+const SUPERBLOCK: usize = 32;
+
+/// Columns per pooled sweep chunk. The chunk grid is a function of `p`
+/// only — never of the worker count — and every `acc[j]` is owned by
+/// exactly one chunk, which is what makes the pooled sweep bitwise
+/// thread-count-deterministic.
+const COL_CHUNK: usize = 512;
+
+/// Below this many columns a pooled dispatch costs more than the sweep;
+/// the sequential path runs instead (bit-identical, so the gate is
+/// unobservable in the results).
+const MIN_POOL_COLS: usize = 128;
 
 /// Dense symmetric cut + unary potentials.
 #[derive(Clone, Debug)]
@@ -99,25 +118,107 @@ impl Submodular for KernelCutFn {
         // gain(v) = u_v + rowsum_v − 2 · acc[v].
         //
         // The accumulator update is blocked 4 rows at a time: one fused
-        // sweep `acc[j] += r0[j] + r1[j] + r2[j] + r3[j]` reads `acc` once
-        // per 4 rows instead of once per row, cutting HBM/DRAM traffic
-        // from 3 to ~1.5 streams per row (the pass is bandwidth-bound —
-        // see EXPERIMENTS.md §Perf). The in-block gain corrections are
-        // the scalar K[v_e][v_i] terms for e < i within the block.
+        // sweep `acc[j] += (r0[j] + r1[j]) + (r2[j] + r3[j])`
+        // (`vecops::sweep4`) reads `acc` once per 4 rows instead of once
+        // per row, cutting HBM/DRAM traffic from 3 to ~1.5 streams per
+        // row (the pass is bandwidth-bound — see EXPERIMENTS.md §Perf).
+        // The in-block gain corrections are the scalar K[v_e][v_i] terms
+        // for e < i within the block.
+        //
+        // With a pool installed the pass runs in SUPERBLOCK-element
+        // groups: the gains of a whole superblock are computed up front
+        // on this thread by replaying the exact 4-block accumulator
+        // algebra at the 32 needed columns (fused pairs for completed
+        // in-superblock 4-blocks, left-associated singles inside the
+        // element's own 4-block — the identical FP expression the
+        // sequential path evaluates), then ONE pooled column-chunked
+        // sweep folds all 8 row quartets into `acc`. Every `acc[j]` is
+        // owned by exactly one chunk and sees the identical per-column
+        // op sequence, so the pooled pass is bit-identical to the
+        // sequential pass at every thread count.
         let p = self.p;
-        let acc = &mut scratch.acc;
+        let OracleScratch { acc, ids, pool, .. } = scratch;
+        let pool = pool.clone();
         acc.clear();
         acc.resize(p, 0.0);
-        for (j, &inb) in base.iter().enumerate() {
-            if inb {
-                let row = self.row(j);
-                for (a, &kij) in acc.iter_mut().zip(row) {
-                    *a += kij;
+        // Base accumulation: row-by-row adds. Per-column the op order is
+        // the base row order — identical sequentially and column-chunked.
+        // The base-row id list is only materialized for the pooled arm,
+        // keeping the t = 1 path allocation-identical to the unpooled
+        // engine.
+        let pooled_base = match &pool {
+            Some(pool) if p >= MIN_POOL_COLS => {
+                ids.clear();
+                ids.extend(base.iter().enumerate().filter_map(|(j, &b)| b.then_some(j)));
+                if ids.len() >= 8 {
+                    let accs = DisjointSlice::new(acc);
+                    let rows: &[usize] = ids;
+                    pool.run_chunks(p, COL_CHUNK, &|r: std::ops::Range<usize>| {
+                        // SAFETY: run_chunks ranges are disjoint.
+                        let a = unsafe { accs.slice_mut(r.clone()) };
+                        for &i in rows {
+                            add_assign4(a, &self.k[i * p..][r.clone()]);
+                        }
+                    });
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        };
+        if !pooled_base {
+            for (j, &inb) in base.iter().enumerate() {
+                if inb {
+                    add_assign4(acc, self.row(j));
                 }
             }
         }
         let n = order.len();
         let mut k = 0;
+        if let Some(pool) = &pool {
+            if p >= MIN_POOL_COLS {
+                while k + SUPERBLOCK <= n {
+                    let blk = &order[k..k + SUPERBLOCK];
+                    for (l, &vl) in blk.iter().enumerate() {
+                        // Replay of the sequential accumulator at column
+                        // vl: completed 4-blocks enter as fused pairs
+                        // (exactly sweep4's per-element expression),
+                        // the element's own block as ordered singles.
+                        let mut a = acc[vl];
+                        let full = l / 4;
+                        for b in 0..full {
+                            let r0 = self.k[blk[4 * b] * p + vl];
+                            let r1 = self.k[blk[4 * b + 1] * p + vl];
+                            let r2 = self.k[blk[4 * b + 2] * p + vl];
+                            let r3 = self.k[blk[4 * b + 3] * p + vl];
+                            a += (r0 + r1) + (r2 + r3);
+                        }
+                        for &ve in &blk[4 * full..l] {
+                            a += self.k[ve * p + vl];
+                        }
+                        out[k + l] = self.unary[vl] + self.rowsum[vl] - 2.0 * a;
+                    }
+                    let accs = DisjointSlice::new(acc);
+                    pool.run_chunks(p, COL_CHUNK, &|r: std::ops::Range<usize>| {
+                        // SAFETY: run_chunks ranges are disjoint.
+                        let a = unsafe { accs.slice_mut(r.clone()) };
+                        for b in 0..SUPERBLOCK / 4 {
+                            sweep4(
+                                a,
+                                &self.k[blk[4 * b] * p..][r.clone()],
+                                &self.k[blk[4 * b + 1] * p..][r.clone()],
+                                &self.k[blk[4 * b + 2] * p..][r.clone()],
+                                &self.k[blk[4 * b + 3] * p..][r.clone()],
+                            );
+                        }
+                    });
+                    k += SUPERBLOCK;
+                }
+            }
+        }
+        // Sequential 4-blocks: the whole pass when unpooled, the <32
+        // element tail after the pooled superblocks otherwise.
         while k + 4 <= n {
             let v = [order[k], order[k + 1], order[k + 2], order[k + 3]];
             // Gains with in-block corrections (acc is pre-block).
@@ -133,24 +234,19 @@ impl Submodular for KernelCutFn {
                         + self.k[v[1] * p + v[3]]
                         + self.k[v[2] * p + v[3]]);
             // Fused 4-row accumulator sweep.
-            let (r0, r1, r2, r3) = (
+            sweep4(
+                acc,
                 &self.k[v[0] * p..v[0] * p + p],
                 &self.k[v[1] * p..v[1] * p + p],
                 &self.k[v[2] * p..v[2] * p + p],
                 &self.k[v[3] * p..v[3] * p + p],
             );
-            for j in 0..p {
-                acc[j] += (r0[j] + r1[j]) + (r2[j] + r3[j]);
-            }
             k += 4;
         }
         while k < n {
             let v = order[k];
             out[k] = self.unary[v] + self.rowsum[v] - 2.0 * acc[v];
-            let row = self.row(v);
-            for (a, &kvj) in acc.iter_mut().zip(row) {
-                *a += kvj;
-            }
+            add_assign4(acc, self.row(v));
             k += 1;
         }
     }
@@ -215,5 +311,55 @@ mod tests {
         let full = f.eval_full();
         let unary_sum: f64 = f.unary().iter().sum();
         assert!((full - unary_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pooled_superblock_pass_is_bit_identical_at_scale() {
+        // The unit-test sizes above sit below MIN_POOL_COLS, so this is
+        // the test where the pooled superblock path actually runs: a
+        // p ≥ 128 instance, random base/order splits (including a ragged
+        // non-multiple-of-SUPERBLOCK tail), pooled scratches at 2 and 4
+        // lanes vs the sequential scratch — bitwise.
+        use crate::rng::Pcg64;
+        use crate::runtime::pool::WorkerPool;
+        use crate::submodular::OracleScratch;
+        use std::sync::Arc;
+        let p = 192;
+        let f = random_kernel_cut(p, 56);
+        let mut rng = Pcg64::seeded(57);
+        let mut seq = OracleScratch::new();
+        let mut pooled: Vec<OracleScratch> = [2usize, 4]
+            .iter()
+            .map(|&t| {
+                let mut s = OracleScratch::new();
+                s.set_pool(Some(Arc::new(WorkerPool::new(t - 1))));
+                s
+            })
+            .collect();
+        for case in 0..6 {
+            let mut base = vec![false; p];
+            for x in base.iter_mut() {
+                *x = rng.bernoulli(0.2);
+            }
+            let mut order: Vec<usize> = (0..p).filter(|&i| !base[i]).collect();
+            rng.shuffle(&mut order);
+            if case % 2 == 0 {
+                order.truncate(order.len() - order.len() % 7); // ragged tail
+            }
+            let mut expect = vec![0.0; order.len()];
+            f.prefix_gains_scratch(&base, &order, &mut expect, &mut seq);
+            let mut got = vec![f64::NAN; order.len()];
+            for (ti, s) in pooled.iter_mut().enumerate() {
+                got.iter_mut().for_each(|x| *x = f64::NAN);
+                f.prefix_gains_scratch(&base, &order, &mut got, s);
+                for k in 0..order.len() {
+                    assert_eq!(
+                        got[k].to_bits(),
+                        expect[k].to_bits(),
+                        "case {case}, lane set {ti}, gain {k}"
+                    );
+                }
+            }
+        }
     }
 }

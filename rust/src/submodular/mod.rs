@@ -38,6 +38,15 @@ pub mod scaled;
 /// The buffers are written before they are read on each call, so a scratch
 /// can be shared freely across oracles and problem sizes; oracles resize
 /// on entry and never rely on previous contents.
+///
+/// The scratch also carries the **parallel-oracle handle**: an optional
+/// shared [`WorkerPool`](crate::runtime::pool::WorkerPool) installed by
+/// [`set_pool`](Self::set_pool). Oracles with a pooled pass (the dense
+/// kernel-cut accumulator sweep, the high-degree sparse-cut adjacency
+/// walk) fan their bandwidth-bound inner loops over the pool when one is
+/// present; the handle changes **when** the arithmetic runs, never the
+/// arithmetic itself, so pooled and unpooled passes are bit-identical
+/// (certified by `check_gains_match_eval` at t ∈ {1, 4}).
 #[derive(Clone, Debug, Default)]
 pub struct OracleScratch {
     /// 0/1 membership weights (sparse/dense cut adjacency walks).
@@ -52,7 +61,8 @@ pub struct OracleScratch {
     pub acc: Vec<f64>,
     /// Secondary f64 accumulator (client maxima, backward entropy ladder).
     pub aux: Vec<f64>,
-    /// Tertiary f64 buffer (cross rows for incremental factors).
+    /// Tertiary f64 buffer (cross rows for incremental factors; chunk
+    /// partials of the pooled adjacency reduction).
     pub aux2: Vec<f64>,
     /// Incremental Cholesky workspace (log-det oracles; the forward and
     /// backward entropy ladders run sequentially, so one factor —
@@ -60,6 +70,11 @@ pub struct OracleScratch {
     pub chol: crate::linalg::IncrementalCholesky,
     /// Nested scratch for wrapper oracles (`ScaledFn` → inner oracle).
     pub inner: Option<Box<OracleScratch>>,
+    /// Shared fork-join pool for pooled oracle passes (`None` = the
+    /// sequential path). Wrapper oracles re-propagate the handle into
+    /// their nested scratch on every pass (see [`nested`](Self::nested)
+    /// and `ScaledFn`), so installing it at the workspace root is enough.
+    pub(crate) pool: Option<std::sync::Arc<crate::runtime::pool::WorkerPool>>,
 }
 
 impl OracleScratch {
@@ -68,9 +83,32 @@ impl OracleScratch {
         Self::default()
     }
 
-    /// The nested scratch, created on first use (wrapper oracles).
+    /// The nested scratch, created on first use (wrapper oracles). The
+    /// pool handle is re-propagated on every call so a pool installed
+    /// (or removed) after the nested scratch was created still reaches
+    /// the inner oracle; the `Arc` clone is allocation-free.
     pub fn nested(&mut self) -> &mut OracleScratch {
-        self.inner.get_or_insert_with(Default::default)
+        let pool = self.pool.clone();
+        let inner = self.inner.get_or_insert_with(Default::default);
+        inner.pool = pool;
+        inner
+    }
+
+    /// Install (or clear) the shared worker pool used by pooled oracle
+    /// passes. A `None` handle restores the sequential path; either way
+    /// the produced gains are bit-identical — the pool only moves the
+    /// same fixed-chunk arithmetic onto more threads.
+    pub fn set_pool(
+        &mut self,
+        pool: Option<std::sync::Arc<crate::runtime::pool::WorkerPool>>,
+    ) {
+        self.pool = pool;
+    }
+
+    /// The installed pool handle, if any (pooled oracle kernels).
+    #[inline]
+    pub fn pool(&self) -> Option<&std::sync::Arc<crate::runtime::pool::WorkerPool>> {
+        self.pool.as_ref()
     }
 }
 
@@ -231,10 +269,22 @@ pub(crate) mod test_support {
     /// scratch call to catch state leaking between passes. One shared
     /// dirty scratch is reused across all cases, exactly like the solver
     /// hot loop does.
+    ///
+    /// Every pass is additionally replayed through a **pooled** scratch
+    /// (a shared 3-worker [`WorkerPool`] + the calling thread — the
+    /// monolithic `t = 4` convention) and certified bit-identical to the
+    /// sequential path: the plain scratch is the `t = 1` leg of the
+    /// t ∈ {1, 4} matrix, the pooled scratch the `t = 4` leg. Oracles
+    /// without a pooled kernel take the identical sequential path, so
+    /// the check is trivially true for them and load-bearing for the
+    /// SIMD/parallel families (kernel cut, sparse cut).
     pub fn check_gains_match_eval<F: Submodular>(f: &F, seed: u64, tol: f64) {
         let p = f.ground_size();
         let mut rng = Pcg64::seeded(seed);
         let mut scratch = OracleScratch::new();
+        let mut pooled_scratch = OracleScratch::new();
+        pooled_scratch
+            .set_pool(Some(std::sync::Arc::new(crate::runtime::pool::WorkerPool::new(3))));
         for _ in 0..8 {
             let mut base = vec![false; p];
             for x in base.iter_mut() {
@@ -273,6 +323,20 @@ pub(crate) mod test_support {
                     assert!(
                         with_scratch[k].to_bits() == fast[k].to_bits(),
                         "scratch gain {k} (round {round}): {} vs {}",
+                        with_scratch[k],
+                        fast[k]
+                    );
+                }
+            }
+            // Pooled scratch path (t = 4): the parallel kernels must be
+            // bit-identical to the sequential t = 1 pass above.
+            for round in 0..2 {
+                with_scratch.iter_mut().for_each(|x| *x = f64::NAN);
+                f.prefix_gains_scratch(&base, &rest, &mut with_scratch, &mut pooled_scratch);
+                for k in 0..rest.len() {
+                    assert!(
+                        with_scratch[k].to_bits() == fast[k].to_bits(),
+                        "pooled gain {k} (t=4 round {round}): {} vs {}",
                         with_scratch[k],
                         fast[k]
                     );

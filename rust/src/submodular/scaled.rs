@@ -150,11 +150,13 @@ impl Submodular for ScaledFn<'_> {
         // Translate: reduced base ∪ Ê is the original base; reduced order
         // maps through `kept`. The −F(Ê) constant cancels in differences.
         // The translation buffers and the inner oracle's pass state all
-        // live in `scratch` (the inner oracle gets the nested scratch), so
-        // the one translation layer stays allocation-free no matter how
-        // many times the problem shrank.
+        // live in `scratch` (the inner oracle gets the nested scratch —
+        // with the parallel-oracle pool handle re-propagated, so pooled
+        // kernels keep working under any number of reductions), so the
+        // one translation layer stays allocation-free no matter how many
+        // times the problem shrank.
         assert_eq!(base.len(), self.kept.len());
-        let OracleScratch { mem_bool: full_base, ids: mapped, inner, .. } = scratch;
+        let OracleScratch { mem_bool: full_base, ids: mapped, inner, pool, .. } = scratch;
         full_base.clear();
         full_base.extend_from_slice(&self.base);
         for (k, &b) in base.iter().enumerate() {
@@ -165,6 +167,7 @@ impl Submodular for ScaledFn<'_> {
         mapped.clear();
         mapped.extend(order.iter().map(|&k| self.kept[k]));
         let nested = inner.get_or_insert_with(Default::default);
+        nested.pool = pool.clone();
         self.inner.prefix_gains_scratch(full_base, mapped, out, nested);
     }
 }

@@ -1,0 +1,18 @@
+//! Shared helpers for the integration-test binaries.
+//!
+//! (`tests/decompose.rs` keeps its own `thread_matrix()` — its knob
+//! semantics genuinely differ: the block solver accepts `t = 1` as a
+//! matrix entry, while a pooled-oracle count below 2 means "no pool".)
+
+/// The `SFM_BENCH_THREADS` pooled-oracle thread count, when it names a
+/// count a pool can serve (≥ 2; the monolithic convention is `t − 1`
+/// parked workers plus the calling thread). This is CI's single knob:
+/// the pooled monolithic leg sets it to an *unpinned* count (3) so the
+/// default t ∈ {2, 4} matrices stay meaningful and the leg is never a
+/// no-op.
+pub fn env_pool_threads() -> Option<usize> {
+    std::env::var("SFM_BENCH_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t > 1)
+}

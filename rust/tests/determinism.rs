@@ -257,3 +257,146 @@ fn repeated_runs_are_bitwise_identical() {
     let mut b = MinNormPoint::new(&f, MinNormOptions::default(), None);
     assert_lockstep(&mut a, &mut b, &f, 400, "min-norm/repeat");
 }
+
+// ---- Pooled monolithic greedy oracle (SIMD + worker-pool passes) ----
+
+mod common;
+
+use sfm_screen::lovasz::{greedy_base_vertex, GreedyWorkspace};
+use sfm_screen::runtime::pool::WorkerPool;
+use std::sync::Arc;
+
+/// Thread counts for the pooled-oracle determinism matrix: the pinned
+/// t ∈ {2, 4} legs plus `SFM_BENCH_THREADS` (CI's pooled monolithic leg
+/// sets an unpinned count — 3 — so the env leg always adds coverage).
+fn pool_thread_matrix() -> Vec<usize> {
+    let mut counts = vec![2usize, 4];
+    if let Some(t) = common::env_pool_threads() {
+        if !counts.contains(&t) {
+            counts.push(t);
+        }
+    }
+    counts
+}
+
+/// A `t`-thread pooled workspace under the monolithic convention:
+/// `t − 1` parked workers plus the calling thread.
+fn pooled_workspace(p: usize, t: usize) -> GreedyWorkspace {
+    let mut ws = GreedyWorkspace::new(p);
+    ws.set_pool(Some(Arc::new(WorkerPool::new(t - 1))));
+    ws
+}
+
+/// Run a drifting-direction greedy sequence on `f` with a sequential
+/// workspace and one pooled workspace per thread count; every pass must
+/// agree bit for bit — order, gains, vertex, and summary.
+fn assert_greedy_thread_matrix(f: &dyn Submodular, label: &str) {
+    let p = f.ground_size();
+    let counts = pool_thread_matrix();
+    let mut seq_ws = GreedyWorkspace::new(p);
+    let mut pooled: Vec<GreedyWorkspace> =
+        counts.iter().map(|&t| pooled_workspace(p, t)).collect();
+    let mut rng = Pcg64::seeded(0xBEEF);
+    let mut w = rng.normal_vec(p);
+    let mut s_seq = vec![0.0; p];
+    let mut s_pool = vec![0.0; p];
+    for step in 0..6 {
+        let info_seq = greedy_base_vertex(f, &w, &mut seq_ws, &mut s_seq);
+        for (ws, &t) in pooled.iter_mut().zip(&counts) {
+            s_pool.iter_mut().for_each(|x| *x = f64::NAN);
+            let info = greedy_base_vertex(f, &w, ws, &mut s_pool);
+            assert_eq!(ws.order, seq_ws.order, "{label}: order differs (t={t}, step {step})");
+            for j in 0..p {
+                assert_eq!(
+                    s_pool[j].to_bits(),
+                    s_seq[j].to_bits(),
+                    "{label}: vertex differs at {j} (t={t}, step {step})"
+                );
+            }
+            for (a, b) in ws.gains.iter().zip(&seq_ws.gains) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: gains differ (t={t})");
+            }
+            assert_eq!(info.lovasz.to_bits(), info_seq.lovasz.to_bits(), "{label} (t={t})");
+            assert_eq!(info.best_level_value.to_bits(), info_seq.best_level_value.to_bits());
+            assert_eq!(info.best_level_k, info_seq.best_level_k);
+        }
+        // Drift, with a jump on the last step (cold re-sort path).
+        if step == 4 {
+            w = rng.normal_vec(p);
+        } else {
+            for x in w.iter_mut() {
+                *x += 0.02 * rng.normal();
+            }
+        }
+    }
+}
+
+/// The pooled kernel-cut superblock path (p above the pool gate) is
+/// bitwise identical for every thread count.
+#[test]
+fn pooled_kernel_cut_pass_is_bitwise_thread_count_identical() {
+    let f = seeded_kernel_cut(192, 31_337);
+    assert_greedy_thread_matrix(&f, "pooled-greedy/kernel-cut");
+}
+
+/// The pooled sparse-cut adjacency walk: a hub of degree ≥ 4096 forces
+/// the fixed-order chunk reduction onto the pool — same bits always.
+#[test]
+fn pooled_hub_cut_pass_is_bitwise_thread_count_identical() {
+    let p = 4450;
+    let mut rng = Pcg64::seeded(606);
+    let mut edges: Vec<(usize, usize, f64)> = Vec::with_capacity(2 * p);
+    for j in 1..p {
+        edges.push((0, j, rng.uniform(0.0, 1.0)));
+        // A sparse second layer so leaves have degree > 1 too.
+        if j + 7 < p {
+            edges.push((j, j + 7, rng.uniform(0.0, 0.5)));
+        }
+    }
+    let f = CutFn::from_edges(p, &edges, rng.uniform_vec(p, -1.0, 1.0));
+    assert_greedy_thread_matrix(&f, "pooled-greedy/hub-cut");
+}
+
+/// End-to-end acceptance: full IAES monolithic solves at t ∈ {1, 2, 4}
+/// (plus the CI matrix extension) produce bitwise-equal reports —
+/// every gap, every trigger, the minimizer. The pooled oracle is an
+/// exact acceleration, so `--threads` can never change an answer.
+#[test]
+fn iaes_monolithic_solve_is_bitwise_identical_across_thread_counts() {
+    let f = seeded_kernel_cut(150, 2025);
+    let run = |threads: usize| {
+        let opts = IaesOptions {
+            eps: 1e-9,
+            min_reduction_frac: 0.0, // contract on every certificate
+            threads,
+            ..Default::default()
+        };
+        solve_sfm_with_screening(&f, &opts).unwrap()
+    };
+    let base = run(1);
+    assert_eq!(base.greedy_threads, None);
+    assert!(
+        base.emptied || base.history.iter().any(|h| h.p_remaining < 150),
+        "no contraction happened — instance too easy to exercise restarts"
+    );
+    for t in pool_thread_matrix() {
+        let r = run(t);
+        assert_eq!(r.greedy_threads, Some(t), "t={t}: resolved count missing");
+        assert_eq!(r.iters, base.iters, "t={t}");
+        assert_eq!(r.history.len(), base.history.len(), "t={t}");
+        for (x, y) in r.history.iter().zip(&base.history) {
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits(), "t={t}, iter {}", x.iter);
+            assert_eq!(x.p_remaining, y.p_remaining, "t={t}");
+        }
+        assert_eq!(r.triggers.len(), base.triggers.len(), "t={t}");
+        for (x, y) in r.triggers.iter().zip(&base.triggers) {
+            assert_eq!(x.iter, y.iter, "t={t}");
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits(), "t={t}");
+            assert_eq!(x.new_active_ids, y.new_active_ids, "t={t}");
+            assert_eq!(x.new_inactive_ids, y.new_inactive_ids, "t={t}");
+        }
+        assert_eq!(r.minimizer, base.minimizer, "t={t}");
+        assert_eq!(r.minimum.to_bits(), base.minimum.to_bits(), "t={t}");
+        assert_eq!(r.final_gap.to_bits(), base.final_gap.to_bits(), "t={t}");
+    }
+}

@@ -24,6 +24,8 @@ use sfm_screen::submodular::Submodular;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
+mod common;
+
 struct CountingAlloc;
 
 thread_local! {
@@ -132,6 +134,75 @@ fn greedy_pass_is_zero_alloc_for_every_oracle_family() {
     let m = rng.uniform_vec(p, -1.0, 1.0);
     assert_greedy_zero_alloc(&ConcaveCardFn::sqrt(p, 1.5, m), "concave_card");
     assert_greedy_zero_alloc(&IwataFn::new(p), "iwata");
+}
+
+/// The pooled monolithic greedy steady state is allocation-free on the
+/// **main thread and on every parked worker**: dispatching a pass over
+/// the pool is one mutex round-trip + condvar wake per superblock, the
+/// column-chunk grid writes disjoint slices of pre-sized buffers, and
+/// the high-degree adjacency partials live in a warmed scratch vector.
+/// Per-worker counters are sampled through the pool exactly like the
+/// block solver's t = 4 certification below. The worker count follows
+/// the monolithic `t` convention (`t − 1` workers + the calling
+/// thread); `SFM_BENCH_THREADS` (CI's pooled leg) overrides `t = 4`.
+#[test]
+fn pooled_greedy_pass_is_zero_alloc() {
+    use sfm_screen::runtime::pool::WorkerPool;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    let t = common::env_pool_threads().unwrap_or(4);
+    let workers = t - 1;
+    let pool = Arc::new(WorkerPool::new(workers));
+    // Two pooled oracle families: the dense kernel-cut superblock sweep
+    // (p above the pool gate) and the sparse-cut hub walk (degree above
+    // the pooled-partials gate).
+    let kernel = seeded_kernel_cut(160, 0xF00D);
+    let mut hub_rng = Pcg64::seeded(0xF00E);
+    let hub_edges: Vec<(usize, usize, f64)> =
+        (1..4400).map(|j| (0usize, j, hub_rng.uniform(0.0, 1.0))).collect();
+    let hub = CutFn::from_edges(4400, &hub_edges, hub_rng.uniform_vec(4400, -1.0, 1.0));
+    let oracles: [(&dyn Submodular, &str); 2] = [(&kernel, "kernel-cut"), (&hub, "hub-cut")];
+    for (f, label) in oracles {
+        let p = f.ground_size();
+        let mut rng = Pcg64::seeded(0xA110C + p as u64);
+        let mut w = rng.normal_vec(p);
+        let mut ws = GreedyWorkspace::new(p);
+        ws.set_pool(Some(Arc::clone(&pool)));
+        let mut s = vec![0.0; p];
+        for _ in 0..3 {
+            greedy_base_vertex(f, &w, &mut ws, &mut s);
+            for x in w.iter_mut() {
+                *x += 0.01;
+            }
+        }
+        let before: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
+        let after: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
+        pool.run(&|wk| {
+            before[wk].store(ALLOC_COUNT.with(|c| c.get()), Ordering::Relaxed);
+        });
+        let mut drift = 0.001;
+        let main_allocs = count_allocs(|| {
+            for _ in 0..5 {
+                greedy_base_vertex(f, &w, &mut ws, &mut s);
+                for x in w.iter_mut() {
+                    *x += drift;
+                    drift = -drift;
+                }
+            }
+        });
+        pool.run(&|wk| {
+            after[wk].store(ALLOC_COUNT.with(|c| c.get()), Ordering::Relaxed);
+        });
+        assert_eq!(
+            main_allocs, 0,
+            "{label}: pooled pass allocated {main_allocs} times on the main thread"
+        );
+        for wk in 0..workers {
+            let delta =
+                after[wk].load(Ordering::Relaxed) - before[wk].load(Ordering::Relaxed);
+            assert_eq!(delta, 0, "{label}: worker {wk} allocated {delta} times");
+        }
+    }
 }
 
 #[test]
