@@ -449,6 +449,80 @@ fn main() -> anyhow::Result<()> {
         let _ = mi.ground_size();
     }
 
+    // Resident-service rows (serve/*): end-to-end job turnaround through
+    // the serve core — parse, admission, solve, response serialization.
+    // `-cold` spins up a fresh service (and builds the oracle) per job;
+    // `-cached` reuses one resident service whose instance cache already
+    // holds the workload, so the cold/cached delta is the construction
+    // cost the cache removes; `cancel-latency` is the round trip for a
+    // job whose deadline has already expired at admission — the floor on
+    // how fast the service turns a cancellation into a partial report.
+    {
+        use sfm_screen::coordinator::serve::{ServeCore, ServeOptions};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        #[derive(Clone)]
+        struct CountingSink(Arc<AtomicUsize>);
+        impl std::io::Write for CountingSink {
+            fn write(&mut self, d: &[u8]) -> std::io::Result<usize> {
+                let n = d.iter().filter(|&&b| b == b'\n').count();
+                self.0.fetch_add(n, Ordering::Release);
+                Ok(d.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let p = 128usize;
+        let line =
+            format!(r#"{{"workload": {{"kind": "two-moons", "p": {p}, "seed": 5}}}}"#);
+        let (sum, _) = bench(1, 5, || {
+            let count = Arc::new(AtomicUsize::new(0));
+            let core = ServeCore::start(
+                &ServeOptions::default(),
+                Box::new(CountingSink(Arc::clone(&count))),
+            );
+            core.submit_line(&line);
+            core.finish();
+            count.load(Ordering::Acquire)
+        });
+        rows.push("serve/throughput-cold", p, &sum);
+
+        let count = Arc::new(AtomicUsize::new(0));
+        let core = ServeCore::start(
+            &ServeOptions::default(),
+            Box::new(CountingSink(Arc::clone(&count))),
+        );
+        let wait_past = |n: usize| {
+            while count.load(Ordering::Acquire) <= n {
+                std::thread::yield_now();
+            }
+        };
+        core.submit_line(&line); // prime the instance cache
+        wait_past(0);
+        let (sum, _) = bench(2, 10, || {
+            let before = count.load(Ordering::Acquire);
+            core.submit_line(&line);
+            wait_past(before);
+            before
+        });
+        rows.push("serve/throughput-cached", p, &sum);
+
+        let cancel_line = format!(
+            r#"{{"deadline_ms": 0, "workload": {{"kind": "two-moons", "p": {p}, "seed": 5}}}}"#
+        );
+        let (sum, _) = bench(2, 10, || {
+            let before = count.load(Ordering::Acquire);
+            core.submit_line(&cancel_line);
+            wait_past(before);
+            before
+        });
+        rows.push("serve/cancel-latency", p, &sum);
+        core.finish();
+    }
+
     println!("\nMicro-benchmarks (hot paths)");
     println!("{}", rows.table.render());
     rows.table.write_csv(cfg.out_dir.join("micro.csv"))?;

@@ -21,7 +21,7 @@ pub struct Cli {
 
 /// Boolean-valued flags that take no argument.
 const BARE_FLAGS: &[&str] =
-    &["full", "mi", "quiet", "help", "version", "json", "decompose"];
+    &["full", "mi", "quiet", "help", "version", "json", "decompose", "allow-partial"];
 
 /// Parse an argument vector (without argv[0]).
 pub fn parse_args(args: &[String]) -> Result<Cli> {
@@ -90,6 +90,8 @@ USAGE:
 
 COMMANDS:
   solve            solve one instance        (--workload two-moons|image1..5|iwata, --p, --rules, --json)
+  serve            resident solve service: JobSpec JSON lines on stdin (and
+                   --socket PATH), one response line per job on stdout
   path             SFM' regularization path from one solve (--p)
   table1           Table 1: two-moons running times & speedups
   table3           Tables 2+3: image segmentation statistics & times
@@ -125,6 +127,20 @@ COMMON FLAGS:
                    greedy_threads in --json)
   --threads-list L thread counts for decompose-bench, e.g. 1,2,4
   --quiet          suppress progress logs
+  --allow-partial  solve: exit 0 even when the run stops before eps
+                   (deadline/cancel/max_iters); default is a nonzero exit
+
+SERVE FLAGS:
+  --workers N      concurrent solve workers (default 0 = all cores)
+  --queue-cap N    admission-queue capacity (default 64); overflow is
+                   rejected with a structured queue_full response
+  --deadline-ms N  default per-job deadline, overridable per request
+                   via a `deadline_ms` field (cooperative: checked at
+                   major-iteration boundaries; partial results stay safe)
+  --oracle-threads N  greedy-oracle lanes per worker (default 1;
+                   bit-identical at every lane count)
+  --socket PATH    additional unix-socket ingress (responses per
+                   connection)
 ";
 
 #[cfg(test)]

@@ -1,9 +1,17 @@
 //! Declarative experiment jobs: workload × solver × rules × backend.
+//!
+//! Jobs are constructed programmatically by the experiment suites and
+//! parsed from JSON by the resident serve mode
+//! ([`JobSpec::parse`] ⇄ [`JobSpec::to_json`]); parse errors name the
+//! offending field by dotted path (`workload.p: expected a non-negative
+//! integer, got a string`) so a rejected line in a batch or serve stream
+//! is diagnosable without re-reading the whole spec.
 
+use crate::coordinator::json::Json;
 use crate::decompose::{solve_decomposed, DecomposableFn, DecomposeOptions};
 use crate::screening::iaes::{solve_sfm_with_screening, IaesOptions, IaesReport, SolverChoice};
 use crate::screening::{RuleSet, Screener};
-use crate::solvers::frankwolfe::FwOptions;
+use crate::solvers::frankwolfe::{FwOptions, FwVariant};
 use crate::solvers::minnorm::MinNormOptions;
 use crate::submodular::Submodular;
 use crate::workloads::images::{benchmark_suite, ImageInstance};
@@ -122,6 +130,41 @@ impl WorkloadSpec {
         }
     }
 
+    /// Build the objective behind a shareable, thread-safe handle — the
+    /// serve-mode instance cache stores these so repeated jobs on the
+    /// same workload skip the (often dominant) oracle construction and
+    /// share one immutable instance across worker threads. Oracles are
+    /// plain data (`Submodular: Sync`, no interior mutability), so
+    /// sharing never affects a trajectory.
+    pub fn build_shared(&self) -> Result<Arc<dyn Submodular + Send + Sync>> {
+        match *self {
+            WorkloadSpec::TwoMoons { p, use_mi, seed } => {
+                let tm = TwoMoons::generate(TwoMoonsParams { p, seed, ..Default::default() });
+                if use_mi {
+                    Ok(Arc::new(tm.gaussian_mi(0.1)))
+                } else {
+                    Ok(Arc::new(tm.knn_cut(10, 1.0)))
+                }
+            }
+            WorkloadSpec::Image { index, scale } => {
+                let mut suite = benchmark_suite(scale);
+                anyhow::ensure!(index < suite.len(), "image index out of range");
+                let img: ImageInstance = suite.swap_remove(index);
+                Ok(Arc::new(img.cut_fn()))
+            }
+            WorkloadSpec::Iwata { p } => {
+                Ok(Arc::new(crate::submodular::iwata::IwataFn::new(p)))
+            }
+        }
+    }
+
+    /// Cache key for the serve-mode instance cache: two specs build the
+    /// same immutable oracle iff their keys match (the spec is the full
+    /// construction recipe — workload kind plus every parameter).
+    pub fn cache_key(&self) -> String {
+        format!("{self:?}")
+    }
+
     /// Short label for reports.
     pub fn label(&self) -> String {
         match *self {
@@ -133,6 +176,147 @@ impl WorkloadSpec {
             }
             WorkloadSpec::Iwata { p } => format!("iwata(p={p})"),
         }
+    }
+
+    /// Parse from a JSON object: `{"kind": "iwata", "p": 20}`,
+    /// `{"kind": "two-moons", "p": 100, "use_mi": false, "seed": 7}`, or
+    /// `{"kind": "image", "index": 0, "scale": 1.0}`. Errors name the
+    /// offending field (`workload.p: …`).
+    pub fn parse(v: &Json) -> Result<Self> {
+        if !matches!(v, Json::Obj(_)) {
+            bail!("workload: expected an object, got {}", kind_name(v));
+        }
+        let kind = req_str(v, "workload.", "kind")?;
+        match kind.as_str() {
+            "two-moons" => {
+                reject_unknown(v, "workload.", &["kind", "p", "use_mi", "seed"])?;
+                Ok(WorkloadSpec::TwoMoons {
+                    p: req_usize(v, "workload.", "p")?,
+                    use_mi: opt_bool(v, "workload.", "use_mi", false)?,
+                    seed: opt_usize(v, "workload.", "seed", 0)? as u64,
+                })
+            }
+            "image" => {
+                reject_unknown(v, "workload.", &["kind", "index", "scale"])?;
+                Ok(WorkloadSpec::Image {
+                    index: req_usize(v, "workload.", "index")?,
+                    scale: opt_f64(v, "workload.", "scale", 1.0)?,
+                })
+            }
+            "iwata" => {
+                reject_unknown(v, "workload.", &["kind", "p"])?;
+                Ok(WorkloadSpec::Iwata { p: req_usize(v, "workload.", "p")? })
+            }
+            other => bail!(
+                "workload.kind: unknown workload `{other}` (two-moons|image|iwata)"
+            ),
+        }
+    }
+
+    /// Serialize to the JSON object [`parse`](Self::parse) accepts.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            WorkloadSpec::TwoMoons { p, use_mi, seed } => Json::obj(vec![
+                ("kind", Json::Str("two-moons".into())),
+                ("p", Json::Num(p as f64)),
+                ("use_mi", Json::Bool(use_mi)),
+                ("seed", Json::Num(seed as f64)),
+            ]),
+            WorkloadSpec::Image { index, scale } => Json::obj(vec![
+                ("kind", Json::Str("image".into())),
+                ("index", Json::Num(index as f64)),
+                ("scale", Json::Num(scale)),
+            ]),
+            WorkloadSpec::Iwata { p } => Json::obj(vec![
+                ("kind", Json::Str("iwata".into())),
+                ("p", Json::Num(p as f64)),
+            ]),
+        }
+    }
+}
+
+/// Human-readable JSON value kind, for field errors (shared with the
+/// serve-mode request envelope parser).
+pub(crate) fn kind_name(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "a boolean",
+        Json::Num(_) => "a number",
+        Json::Str(_) => "a string",
+        Json::Arr(_) => "an array",
+        Json::Obj(_) => "an object",
+    }
+}
+
+/// Reject fields outside `allowed`, naming the first offender — a typo'd
+/// option must fail the job, not silently fall back to a default.
+fn reject_unknown(v: &Json, ctx: &str, allowed: &[&str]) -> Result<()> {
+    if let Json::Obj(pairs) = v {
+        for (k, _) in pairs {
+            if !allowed.contains(&k.as_str()) {
+                bail!("{ctx}{k}: unknown field (allowed: {})", allowed.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn req_str(v: &Json, ctx: &str, field: &str) -> Result<String> {
+    match v.get(field) {
+        None => bail!("{ctx}{field}: required field is missing"),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(other) => bail!("{ctx}{field}: expected a string, got {}", kind_name(other)),
+    }
+}
+
+fn opt_str(v: &Json, ctx: &str, field: &str) -> Result<Option<String>> {
+    match v.get(field) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(other) => bail!("{ctx}{field}: expected a string, got {}", kind_name(other)),
+    }
+}
+
+fn opt_f64(v: &Json, ctx: &str, field: &str, default: f64) -> Result<f64> {
+    match v.get(field) {
+        None => Ok(default),
+        Some(Json::Num(x)) if x.is_finite() => Ok(*x),
+        Some(other) => bail!(
+            "{ctx}{field}: expected a finite number, got {}",
+            kind_name(other)
+        ),
+    }
+}
+
+fn parse_usize(v: &Json, ctx: &str, field: &str) -> Result<usize> {
+    match v {
+        Json::Num(x) if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 => Ok(*x as usize),
+        other => bail!(
+            "{ctx}{field}: expected a non-negative integer, got {}",
+            kind_name(other)
+        ),
+    }
+}
+
+fn req_usize(v: &Json, ctx: &str, field: &str) -> Result<usize> {
+    match v.get(field) {
+        None => bail!("{ctx}{field}: required field is missing"),
+        Some(x) => parse_usize(x, ctx, field),
+    }
+}
+
+fn opt_usize(v: &Json, ctx: &str, field: &str, default: usize) -> Result<usize> {
+    match v.get(field) {
+        None => Ok(default),
+        Some(x) => parse_usize(x, ctx, field),
+    }
+}
+
+fn opt_bool(v: &Json, ctx: &str, field: &str, default: bool) -> Result<bool> {
+    match v.get(field) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(other) => bail!("{ctx}{field}: expected a boolean, got {}", kind_name(other)),
     }
 }
 
@@ -148,6 +332,37 @@ pub fn solver_choice(name: &str) -> Result<SolverChoice> {
             ..Default::default()
         })),
         other => bail!("unknown solver `{other}` (minnorm|fw|plain-fw)"),
+    }
+}
+
+/// Canonical name of a solver choice (inverse of [`solver_choice`];
+/// tuned option fields are not round-tripped, only the family).
+pub fn solver_name(choice: &SolverChoice) -> &'static str {
+    match choice {
+        SolverChoice::MinNorm(_) => "minnorm",
+        SolverChoice::FrankWolfe(o) if matches!(o.variant, FwVariant::Plain) => "plain-fw",
+        SolverChoice::FrankWolfe(_) => "fw",
+    }
+}
+
+/// Canonical name of a rule set (inverse of [`rule_set`]). Only the
+/// named configurations have names; ad-hoc flag combinations (reachable
+/// programmatically, never from [`rule_set`]) report as `"custom"`.
+pub fn rule_set_name(rules: RuleSet) -> &'static str {
+    if rules == RuleSet::all() {
+        "all"
+    } else if rules == RuleSet::aes_only() {
+        "aes"
+    } else if rules == RuleSet::ies_only() {
+        "ies"
+    } else if rules == RuleSet::pair1_only() {
+        "pair1"
+    } else if rules == RuleSet::pair2_only() {
+        "pair2"
+    } else if rules == RuleSet::none() {
+        "none"
+    } else {
+        "custom"
     }
 }
 
@@ -209,6 +424,131 @@ impl JobSpec {
         }
         Ok(JobResult { name: self.name.clone(), wall, report })
     }
+
+    /// Parse a job from a JSON object, e.g.
+    /// `{"name": "tm", "workload": {"kind": "two-moons", "p": 100},
+    ///   "eps": 1e-6, "solver": "minnorm", "rules": "all"}`.
+    ///
+    /// Unknown fields are rejected by name; every error names the
+    /// offending field by dotted path. Callers parsing a batch add the
+    /// job index via `.with_context(|| format!("job {i}"))`.
+    pub fn parse(v: &Json) -> Result<JobSpec> {
+        if !matches!(v, Json::Obj(_)) {
+            bail!("job: expected an object, got {}", kind_name(v));
+        }
+        reject_unknown(
+            v,
+            "",
+            &[
+                "name",
+                "workload",
+                "eps",
+                "rho",
+                "max_iters",
+                "solver",
+                "rules",
+                "threads",
+                "min_reduction_frac",
+                "record_history",
+                "decompose",
+            ],
+        )?;
+        let workload = match v.get("workload") {
+            None => bail!("workload: required field is missing"),
+            Some(w) => WorkloadSpec::parse(w)?,
+        };
+        let eps = opt_f64(v, "", "eps", 1e-6)?;
+        if eps <= 0.0 {
+            bail!("eps: must be positive, got {eps}");
+        }
+        let rho = opt_f64(v, "", "rho", 0.5)?;
+        if !(rho > 0.0 && rho < 1.0) {
+            bail!("rho: must lie in (0,1), got {rho}");
+        }
+        let min_reduction_frac = opt_f64(v, "", "min_reduction_frac", 0.2)?;
+        if !(0.0..=1.0).contains(&min_reduction_frac) {
+            bail!("min_reduction_frac: must lie in [0,1], got {min_reduction_frac}");
+        }
+        let solver = match opt_str(v, "", "solver")? {
+            None => SolverChoice::default(),
+            Some(name) => solver_choice(&name).map_err(|e| anyhow::anyhow!("solver: {e}"))?,
+        };
+        let rules = match opt_str(v, "", "rules")? {
+            None => RuleSet::all(),
+            Some(name) => rule_set(&name).map_err(|e| anyhow::anyhow!("rules: {e}"))?,
+        };
+        let opts = IaesOptions {
+            eps,
+            rho,
+            rules,
+            solver,
+            max_iters: opt_usize(v, "", "max_iters", 100_000)?,
+            record_history: opt_bool(v, "", "record_history", false)?,
+            min_reduction_frac,
+            threads: opt_usize(v, "", "threads", 1)?,
+            ..Default::default()
+        };
+        let decompose = match v.get("decompose") {
+            None | Some(Json::Bool(false)) => None,
+            Some(Json::Bool(true)) => Some(DecomposeOptions::default()),
+            Some(d @ Json::Obj(_)) => {
+                reject_unknown(
+                    d,
+                    "decompose.",
+                    &["threads", "inner_tol", "max_inner", "gauss_seidel", "warm_duals"],
+                )?;
+                let base = DecomposeOptions::default();
+                Some(DecomposeOptions {
+                    threads: opt_usize(d, "decompose.", "threads", base.threads)?,
+                    inner_tol: opt_f64(d, "decompose.", "inner_tol", base.inner_tol)?,
+                    max_inner: opt_usize(d, "decompose.", "max_inner", base.max_inner)?,
+                    gauss_seidel: opt_bool(d, "decompose.", "gauss_seidel", base.gauss_seidel)?,
+                    warm_duals: opt_bool(d, "decompose.", "warm_duals", base.warm_duals)?,
+                    ..base
+                })
+            }
+            Some(other) => bail!(
+                "decompose: expected a boolean or an object, got {}",
+                kind_name(other)
+            ),
+        };
+        let name = match opt_str(v, "", "name")? {
+            Some(n) => n,
+            None => workload.label(),
+        };
+        Ok(JobSpec { name, workload, opts, decompose })
+    }
+
+    /// Serialize to the JSON object [`parse`](Self::parse) accepts
+    /// (engine options not expressible in the job grammar — screener
+    /// backend, cancel token, warm-restart toggles — are omitted).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("workload", self.workload.to_json()),
+            ("eps", Json::Num(self.opts.eps)),
+            ("rho", Json::Num(self.opts.rho)),
+            ("max_iters", Json::Num(self.opts.max_iters as f64)),
+            ("solver", Json::Str(solver_name(&self.opts.solver).into())),
+            ("rules", Json::Str(rule_set_name(self.opts.rules).into())),
+            ("threads", Json::Num(self.opts.threads as f64)),
+            ("min_reduction_frac", Json::Num(self.opts.min_reduction_frac)),
+            ("record_history", Json::Bool(self.opts.record_history)),
+        ];
+        if let Some(d) = self.decompose {
+            pairs.push((
+                "decompose",
+                Json::obj(vec![
+                    ("threads", Json::Num(d.threads as f64)),
+                    ("inner_tol", Json::Num(d.inner_tol)),
+                    ("max_inner", Json::Num(d.max_inner as f64)),
+                    ("gauss_seidel", Json::Bool(d.gauss_seidel)),
+                    ("warm_duals", Json::Bool(d.warm_duals)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
 }
 
 #[cfg(test)]
@@ -255,6 +595,97 @@ mod tests {
         };
         let res = job.run().unwrap();
         assert!(res.report.final_gap < 1e-6 || res.report.emptied);
+    }
+
+    #[test]
+    fn job_parse_roundtrips_through_to_json() {
+        let line = r#"{"name":"tm","workload":{"kind":"two-moons","p":60,"seed":7},
+            "eps":1e-7,"rho":0.4,"solver":"fw","rules":"aes","threads":2,
+            "decompose":{"threads":3,"gauss_seidel":false}}"#;
+        let job = JobSpec::parse(&Json::parse(line).unwrap()).unwrap();
+        assert_eq!(job.name, "tm");
+        assert!(matches!(job.workload, WorkloadSpec::TwoMoons { p: 60, seed: 7, .. }));
+        assert_eq!(job.opts.eps, 1e-7);
+        assert_eq!(job.opts.rho, 0.4);
+        assert_eq!(job.opts.rules, RuleSet::aes_only());
+        assert_eq!(job.opts.threads, 2);
+        let d = job.decompose.unwrap();
+        assert_eq!(d.threads, 3);
+        assert!(!d.gauss_seidel);
+        // parse → to_json → parse is a fixed point.
+        let back = JobSpec::parse(&job.to_json()).unwrap();
+        assert_eq!(back.to_json().to_string(), job.to_json().to_string());
+    }
+
+    #[test]
+    fn job_parse_defaults_and_derived_name() {
+        let job = JobSpec::parse(
+            &Json::parse(r#"{"workload":{"kind":"iwata","p":12}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(job.name, "iwata(p=12)");
+        assert_eq!(job.opts.eps, 1e-6);
+        assert!(!job.opts.record_history);
+        assert!(job.decompose.is_none());
+        // `decompose: true` selects the default block-solver options.
+        let job = JobSpec::parse(
+            &Json::parse(r#"{"workload":{"kind":"iwata","p":12},"decompose":true}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(job.decompose.is_some());
+    }
+
+    #[test]
+    fn job_parse_errors_name_the_field() {
+        let cases = [
+            (r#"{"workload":{"kind":"iwata"}}"#, "workload.p"),
+            (r#"{"workload":{"kind":"iwata","p":"big"}}"#, "workload.p"),
+            (r#"{"workload":{"kind":"iwata","p":-3}}"#, "workload.p"),
+            (r#"{"workload":{"kind":"iwata","p":2.5}}"#, "workload.p"),
+            (r#"{"workload":{"kind":"warp","p":4}}"#, "workload.kind"),
+            (r#"{"workload":{"kind":"iwata","p":4,"scale":2}}"#, "workload.scale"),
+            (r#"{"eps":1e-6}"#, "workload"),
+            (r#"{"workload":{"kind":"iwata","p":4},"eps":-1}"#, "eps"),
+            (r#"{"workload":{"kind":"iwata","p":4},"rho":1.5}"#, "rho"),
+            (r#"{"workload":{"kind":"iwata","p":4},"solver":"simplex"}"#, "solver"),
+            (r#"{"workload":{"kind":"iwata","p":4},"rules":7}"#, "rules"),
+            (r#"{"workload":{"kind":"iwata","p":4},"budget":9}"#, "budget"),
+            (r#"{"workload":{"kind":"iwata","p":4},"decompose":{"x":1}}"#, "decompose.x"),
+            (r#"{"workload":{"kind":"iwata","p":4},"decompose":3}"#, "decompose"),
+            (r#"[1]"#, "expected an object"),
+        ];
+        for (doc, needle) in cases {
+            let err = JobSpec::parse(&Json::parse(doc).unwrap())
+                .map(|_| ())
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "`{doc}`: got `{err}`, wanted `{needle}`");
+        }
+    }
+
+    #[test]
+    fn shared_build_matches_boxed_build() {
+        let wl = WorkloadSpec::Iwata { p: 16 };
+        let boxed = wl.build().unwrap();
+        let shared = wl.build_shared().unwrap();
+        let opts = IaesOptions::default();
+        let a = solve_sfm_with_screening(boxed.as_ref(), &opts).unwrap();
+        let b = solve_sfm_with_screening(shared.as_ref(), &opts).unwrap();
+        assert_eq!(a.minimum.to_bits(), b.minimum.to_bits());
+        assert_eq!(a.minimizer, b.minimizer);
+        assert_eq!(wl.cache_key(), WorkloadSpec::Iwata { p: 16 }.cache_key());
+        assert_ne!(wl.cache_key(), WorkloadSpec::Iwata { p: 17 }.cache_key());
+    }
+
+    #[test]
+    fn solver_and_rule_names_invert_the_parsers() {
+        for name in ["minnorm", "fw", "plain-fw"] {
+            assert_eq!(solver_name(&solver_choice(name).unwrap()), name);
+        }
+        for name in ["all", "aes", "ies", "pair1", "pair2", "none"] {
+            assert_eq!(rule_set_name(rule_set(name).unwrap()), name);
+        }
     }
 
     #[test]

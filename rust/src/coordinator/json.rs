@@ -421,6 +421,13 @@ pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
         ("emptied", Json::Bool(report.emptied)),
         ("converged", Json::Bool(report.converged)),
         (
+            "cancel_reason",
+            match report.cancel_reason {
+                Some(r) => Json::Str(r.as_str().to_string()),
+                None => Json::Null,
+            },
+        ),
+        (
             "block_threads",
             match report.block_threads {
                 Some(t) => Json::Num(t as f64),
@@ -524,6 +531,25 @@ mod tests {
         // Monolithic sequential solves report null worker counts…
         assert!(matches!(parsed.get("block_threads"), Some(Json::Null)));
         assert!(matches!(parsed.get("greedy_threads"), Some(Json::Null)));
+        // …and an uncancelled run reports a null cancel reason.
+        assert!(matches!(parsed.get("cancel_reason"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn cancelled_report_carries_the_reason() {
+        use crate::runtime::cancel::CancelToken;
+        let f = IwataFn::new(10);
+        let opts = IaesOptions {
+            cancel: Some(CancelToken::with_deadline(std::time::Duration::ZERO)),
+            ..Default::default()
+        };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        let parsed = Json::parse(&report_to_json(&report, false).to_string()).unwrap();
+        assert_eq!(
+            parsed.get("cancel_reason").and_then(Json::as_str),
+            Some("deadline")
+        );
+        assert_eq!(parsed.get("converged").and_then(Json::as_bool), Some(false));
     }
 
     #[test]

@@ -9,6 +9,9 @@
 //! * [`experiments`] — the paper's evaluation: Table 1, Table 3,
 //!   Figures 2–4, and the DESIGN.md ablations, each as a reusable function
 //!   called by both the CLI and `cargo bench`.
+//! * [`serve`] — the fault-isolated resident solve service
+//!   (`sfm-screen serve`): bounded admission, per-job deadlines and
+//!   cancellation, panic containment, and an instance cache.
 
 pub mod experiments;
 pub mod jobs;
@@ -17,6 +20,7 @@ pub mod metrics;
 pub mod render;
 pub mod report;
 pub mod runner;
+pub mod serve;
 
 pub use experiments::BenchConfig;
 pub use jobs::{BackendChoice, JobResult, JobSpec, WorkloadSpec};

@@ -12,8 +12,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Render a `catch_unwind` payload (panics carry `&str` or `String`
-/// messages in practice; anything else is opaque).
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+/// messages in practice; anything else is opaque). Shared with the
+/// serve-mode job containment boundary.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -67,7 +68,10 @@ pub fn run_parallel(jobs: &[JobSpec], threads: usize) -> Result<Vec<JobResult>> 
                     break;
                 }
                 let out = run_caught(i, &jobs[i]);
-                *results[i].lock().expect("runner poisoned") = Some(out);
+                // Poison recovery: the slot holds one scalar Option and
+                // writers never panic mid-store, so adopting a poisoned
+                // lock can only observe a fully written (or empty) slot.
+                *results[i].lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
             });
         }
     });
@@ -77,7 +81,7 @@ pub fn run_parallel(jobs: &[JobSpec], threads: usize) -> Result<Vec<JobResult>> 
         .enumerate()
         .map(|(i, slot)| {
             slot.into_inner()
-                .expect("runner poisoned")
+                .unwrap_or_else(|e| e.into_inner())
                 .unwrap_or_else(|| {
                     Err(anyhow!(
                         "job {i} (`{}`, {}) was never executed (worker lost)",

@@ -1,0 +1,703 @@
+//! Fault-isolated resident solve service (`sfm-screen serve`).
+//!
+//! A long-lived process that accepts newline-delimited [`JobSpec`] JSON
+//! on stdin (and, optionally, on a unix socket) and streams one JSON
+//! response line back per job. Design invariants:
+//!
+//! * **Admission control, not OOM.** Jobs enter a bounded queue; when it
+//!   is full the job is *rejected immediately* with a structured
+//!   `status: "rejected"` / `kind: "queue_full"` response instead of
+//!   buffering without bound.
+//! * **Fault isolation at the job boundary.** Each job runs under
+//!   `catch_unwind`; a panicking solve produces a `kind: "panic"`
+//!   response and the worker rebuilds its greedy-oracle pool before the
+//!   next job, so one poisoned job can never wedge the service.
+//! * **Deadlines are cooperative and safe.** A per-job deadline (from
+//!   `deadline_ms` on the request, or `--deadline-ms`) arms a
+//!   [`CancelToken`] checked by the IAES engine *only at major-iteration
+//!   boundaries* — an expired job returns a partial report whose
+//!   screened sets are still Lemma-2/3 safe, and an unfired token is
+//!   bitwise inert.
+//! * **Instance caching.** Monolithic jobs share one immutable oracle
+//!   per workload spec ([`super::jobs::WorkloadSpec::cache_key`]):
+//!   repeated solves on the same instance skip construction entirely.
+//!
+//! Responses carry the request's `id` verbatim plus a server-assigned
+//! `seq`, a `status` (`ok` | `partial` | `error` | `rejected`), the
+//! engine report (or `null`), and a structured `error` object whose
+//! `kind` is one of `invalid` | `queue_full` | `panic` | `numeric` |
+//! `error`. Response *order* across concurrent workers is not
+//! guaranteed — correlate by `id`/`seq`, never by line position.
+
+use super::jobs::{kind_name, JobSpec};
+use super::json::{report_to_json, Json};
+use super::runner::panic_message;
+use crate::runtime::cancel::CancelToken;
+use crate::runtime::failpoint;
+use crate::runtime::pool::WorkerPool;
+use crate::screening::iaes::{solve_sfm_with_screening, IaesReport, NumericFault};
+use crate::submodular::Submodular;
+use anyhow::{bail, Context, Result};
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Where a job's response line goes. Per-connection for socket clients,
+/// the shared primary sink (stdout) for stdin jobs.
+pub type Sink = Arc<Mutex<Box<dyn Write + Send>>>;
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Concurrent solve workers (0 = all available cores).
+    pub workers: usize,
+    /// Admission-queue capacity; submissions beyond it are rejected.
+    pub queue_cap: usize,
+    /// Default per-job deadline applied when a request carries no
+    /// `deadline_ms` field (`None` = no deadline).
+    pub default_deadline_ms: Option<u64>,
+    /// Greedy-oracle lanes per worker (1 = sequential oracle). Pooled
+    /// passes are bit-identical to sequential, so this only changes
+    /// wall clock.
+    pub oracle_threads: usize,
+    /// Optional unix-socket ingress path.
+    pub socket: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 1,
+            queue_cap: 64,
+            default_deadline_ms: None,
+            oracle_threads: 1,
+            socket: None,
+        }
+    }
+}
+
+/// An admitted job waiting for a worker.
+struct Pending {
+    seq: u64,
+    id: Json,
+    spec: JobSpec,
+    /// Absolute deadline, armed at *admission* so queue time counts.
+    deadline_at: Option<Instant>,
+    sink: Sink,
+}
+
+/// State shared between the submitters and the solve workers.
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    available: Condvar,
+    cap: usize,
+    shutdown: AtomicBool,
+    seq: AtomicU64,
+    default_sink: Sink,
+    default_deadline_ms: Option<u64>,
+    oracle_threads: usize,
+    /// Immutable-oracle cache for monolithic jobs, keyed by workload
+    /// spec. Oracles are plain data (`Submodular: Sync`), so sharing one
+    /// across workers never affects a trajectory.
+    cache: Mutex<HashMap<String, Arc<dyn Submodular + Send + Sync>>>,
+    cache_hits: AtomicU64,
+    pool_rebuilds: AtomicU64,
+}
+
+/// Poison-adopting lock: serve state under any mutex is either a plain
+/// collection mutated through `&mut` methods (queue, cache) or a sink —
+/// a panic elsewhere on the holding thread cannot leave them mid-update.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cheap cloneable submission handle (used by ingress threads).
+#[derive(Clone)]
+pub struct ServeHandle {
+    shared: Arc<Shared>,
+}
+
+/// The resident service: worker threads plus a [`ServeHandle`].
+pub struct ServeCore {
+    handle: ServeHandle,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServeCore {
+    /// Start the service with `opts.workers` solve workers (0 = all
+    /// cores) writing responses to `sink`.
+    pub fn start(opts: &ServeOptions, sink: Box<dyn Write + Send>) -> ServeCore {
+        let workers = match opts.workers {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            w => w,
+        };
+        ServeCore::start_inner(opts, sink, workers)
+    }
+
+    /// Admission-control test hook: the same state machine with *no*
+    /// worker threads, so the queue fills deterministically.
+    pub fn start_without_workers(opts: &ServeOptions, sink: Box<dyn Write + Send>) -> ServeCore {
+        ServeCore::start_inner(opts, sink, 0)
+    }
+
+    fn start_inner(opts: &ServeOptions, sink: Box<dyn Write + Send>, workers: usize) -> ServeCore {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            cap: opts.queue_cap.max(1),
+            shutdown: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            default_sink: Arc::new(Mutex::new(sink)),
+            default_deadline_ms: opts.default_deadline_ms,
+            oracle_threads: opts.oracle_threads.max(1),
+            cache: Mutex::new(HashMap::new()),
+            cache_hits: AtomicU64::new(0),
+            pool_rebuilds: AtomicU64::new(0),
+        });
+        let workers = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sfm-serve-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning serve worker")
+            })
+            .collect();
+        ServeCore { handle: ServeHandle { shared }, workers }
+    }
+
+    /// A cloneable submission handle for additional ingress threads.
+    pub fn handle(&self) -> ServeHandle {
+        self.handle.clone()
+    }
+
+    /// Submit one request line; the response goes to the primary sink.
+    pub fn submit_line(&self, line: &str) {
+        self.handle.submit_line(line);
+    }
+
+    /// Oracle-cache hits so far (telemetry / test hook).
+    pub fn cache_hits(&self) -> u64 {
+        self.handle.shared.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Worker oracle-pool rebuilds after contained panics (test hook).
+    pub fn pool_rebuilds(&self) -> u64 {
+        self.handle.shared.pool_rebuilds.load(Ordering::Relaxed)
+    }
+
+    /// Drain the queue, stop the workers, and join them. Every admitted
+    /// job still gets a response before this returns.
+    pub fn finish(self) {
+        self.handle.shared.shutdown.store(true, Ordering::Release);
+        self.handle.shared.available.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ServeHandle {
+    /// Submit one request line; the response goes to the primary sink.
+    pub fn submit_line(&self, line: &str) {
+        let sink = Arc::clone(&self.shared.default_sink);
+        self.submit_line_with(line, &sink);
+    }
+
+    /// Submit one request line, directing the response to `sink`.
+    /// Malformed lines and queue-full rejections are answered
+    /// synchronously; admitted jobs respond when a worker finishes.
+    /// Blank lines are ignored.
+    pub fn submit_line_with(&self, line: &str, sink: &Sink) {
+        let line = line.trim();
+        if line.is_empty() {
+            return;
+        }
+        let seq = self.shared.seq.fetch_add(1, Ordering::Relaxed);
+        let parsed = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                let msg = format!("job {seq}: line is not valid JSON: {e:#}");
+                reject(sink, &Json::Null, seq, "error", "invalid", msg);
+                return;
+            }
+        };
+        let id = parsed.get("id").cloned().unwrap_or(Json::Null);
+        let (deadline_ms, rest) = match split_envelope(parsed) {
+            Ok(x) => x,
+            Err(e) => {
+                reject(sink, &id, seq, "error", "invalid", format!("job {seq}: {e:#}"));
+                return;
+            }
+        };
+        let spec = match JobSpec::parse(&rest) {
+            Ok(s) => s,
+            Err(e) => {
+                reject(sink, &id, seq, "error", "invalid", format!("job {seq}: {e:#}"));
+                return;
+            }
+        };
+        let deadline_ms = deadline_ms.or(self.shared.default_deadline_ms);
+        let deadline_at = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        let job = Pending { seq, id: id.clone(), spec, deadline_at, sink: Arc::clone(sink) };
+        {
+            let mut q = lock(&self.shared.queue);
+            if q.len() >= self.shared.cap {
+                drop(q);
+                let msg = format!(
+                    "admission queue full ({} waiting jobs); retry after a response arrives",
+                    self.shared.cap
+                );
+                reject(sink, &id, seq, "rejected", "queue_full", msg);
+                return;
+            }
+            q.push_back(job);
+        }
+        self.shared.available.notify_one();
+    }
+
+    /// Accept request lines on a unix socket; each connection gets its
+    /// responses on that same connection. The accept thread is detached
+    /// (it lives until the process exits).
+    #[cfg(unix)]
+    pub fn listen_unix(&self, path: &std::path::Path) -> Result<()> {
+        use std::os::unix::net::UnixListener;
+        // A stale socket file from a previous run would make bind fail.
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("binding unix socket {}", path.display()))?;
+        let handle = self.clone();
+        std::thread::Builder::new()
+            .name("sfm-serve-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    let Ok(conn) = conn else { continue };
+                    let Ok(reader) = conn.try_clone() else { continue };
+                    let handle = handle.clone();
+                    let _ = std::thread::Builder::new().name("sfm-serve-conn".into()).spawn(
+                        move || {
+                            use std::io::BufRead;
+                            let boxed: Box<dyn Write + Send> = Box::new(conn);
+                            let sink: Sink = Arc::new(Mutex::new(boxed));
+                            for line in std::io::BufReader::new(reader).lines() {
+                                let Ok(line) = line else { break };
+                                handle.submit_line_with(&line, &sink);
+                            }
+                        },
+                    );
+                }
+            })
+            .context("spawning unix-socket accept thread")?;
+        Ok(())
+    }
+}
+
+/// Strip the transport-envelope fields (`id`, `deadline_ms`) from a
+/// request object so the remainder parses as a plain [`JobSpec`].
+fn split_envelope(v: Json) -> Result<(Option<u64>, Json)> {
+    match v {
+        Json::Obj(pairs) => {
+            let mut deadline = None;
+            let mut rest = Vec::with_capacity(pairs.len());
+            for (k, val) in pairs {
+                match k.as_str() {
+                    "id" => {}
+                    "deadline_ms" => {
+                        let ok = matches!(&val, Json::Num(x)
+                            if x.is_finite() && *x >= 0.0 && x.fract() == 0.0);
+                        if !ok {
+                            bail!(
+                                "deadline_ms: expected a non-negative integer, got {}",
+                                kind_name(&val)
+                            );
+                        }
+                        if let Json::Num(x) = val {
+                            deadline = Some(x as u64);
+                        }
+                    }
+                    _ => rest.push((k, val)),
+                }
+            }
+            Ok((deadline, Json::Obj(rest)))
+        }
+        other => Ok((None, other)),
+    }
+}
+
+/// Build one response line.
+fn envelope(
+    id: &Json,
+    seq: u64,
+    status: &str,
+    report: Json,
+    error: Option<(&str, String)>,
+    wall_s: f64,
+) -> Json {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("seq", Json::Num(seq as f64)),
+        ("status", Json::Str(status.to_string())),
+        ("report", report),
+        (
+            "error",
+            match error {
+                Some((kind, message)) => Json::obj(vec![
+                    ("kind", Json::Str(kind.to_string())),
+                    ("message", Json::Str(message)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+        ("wall_s", Json::Num(wall_s)),
+    ])
+}
+
+/// Answer a request that never reached a worker (parse failure or
+/// queue-full rejection): no report, zero wall time.
+fn reject(sink: &Sink, id: &Json, seq: u64, status: &str, kind: &str, msg: String) {
+    write_line(sink, &envelope(id, seq, status, Json::Null, Some((kind, msg)), 0.0));
+}
+
+/// Emit one response line (newline-delimited JSON) and flush, so a
+/// client blocked on the reply never waits on our buffering.
+fn write_line(sink: &Sink, env: &Json) {
+    let mut s = lock(sink);
+    if writeln!(s, "{}", env.to_string()).is_ok() {
+        let _ = s.flush();
+    }
+}
+
+/// Per-worker greedy-oracle pool (`None` when the oracle is sequential).
+fn make_pool(oracle_threads: usize) -> Option<Arc<WorkerPool>> {
+    (oracle_threads > 1).then(|| Arc::new(WorkerPool::new(oracle_threads - 1)))
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    let mut pool = make_pool(shared.oracle_threads);
+    loop {
+        let job = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(job) = job else { return };
+        serve_one(shared, &job, &mut pool);
+    }
+}
+
+/// Run one admitted job and write its response. This is the containment
+/// boundary: panics, numeric faults, and deadline expiries all end here
+/// as structured responses — never as a dead worker.
+fn serve_one(shared: &Shared, job: &Pending, pool: &mut Option<Arc<WorkerPool>>) {
+    let t0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        failpoint::hit("serve-job");
+        run_job(shared, job, pool.clone())
+    }));
+    let wall_s = t0.elapsed().as_secs_f64();
+    let env = match outcome {
+        Ok(Ok(report)) => {
+            let status = if report.cancel_reason.is_some() || !report.converged {
+                "partial"
+            } else {
+                "ok"
+            };
+            let rj = report_to_json(&report, job.spec.opts.record_history);
+            envelope(&job.id, job.seq, status, rj, None, wall_s)
+        }
+        Ok(Err(err)) => {
+            let kind =
+                if err.downcast_ref::<NumericFault>().is_some() { "numeric" } else { "error" };
+            let msg = format!("{err:#}");
+            envelope(&job.id, job.seq, "error", Json::Null, Some((kind, msg)), wall_s)
+        }
+        Err(payload) => {
+            // Contained job panic. The solve may have unwound through a
+            // pooled oracle pass, so rebuild this worker's pool rather
+            // than reason about what state the unwind left it in.
+            if pool.is_some() {
+                *pool = make_pool(shared.oracle_threads);
+                shared.pool_rebuilds.fetch_add(1, Ordering::Relaxed);
+            }
+            let msg = format!("job panicked: {}", panic_message(payload.as_ref()));
+            envelope(&job.id, job.seq, "error", Json::Null, Some(("panic", msg)), wall_s)
+        }
+    };
+    write_line(&job.sink, &env);
+}
+
+/// Execute the solve for one job, arming the cancel token and (for
+/// monolithic jobs) the shared-instance cache and the worker's oracle
+/// pool. Decomposed jobs fall back to [`JobSpec::run`] — the block
+/// solver owns its own parallelism and instances are not cached.
+fn run_job(shared: &Shared, job: &Pending, pool: Option<Arc<WorkerPool>>) -> Result<IaesReport> {
+    let mut spec = job.spec.clone();
+    spec.opts.cancel = job.deadline_at.map(CancelToken::with_deadline_at);
+    if spec.decompose.is_some() {
+        return Ok(spec.run()?.report);
+    }
+    spec.opts.oracle_pool = pool;
+    let key = spec.workload.cache_key();
+    let cached = lock(&shared.cache).get(&key).cloned();
+    let f = match cached {
+        Some(f) => {
+            shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+            f
+        }
+        None => {
+            let f = spec.workload.build_shared()?;
+            lock(&shared.cache).insert(key, Arc::clone(&f));
+            f
+        }
+    };
+    solve_sfm_with_screening(f.as_ref(), &spec.opts)
+}
+
+/// Run the resident service: responses to stdout, requests from stdin
+/// (newline-delimited) and, when `opts.socket` is set, from a unix
+/// socket. Returns after stdin reaches EOF and every admitted job has
+/// been answered.
+pub fn serve(opts: &ServeOptions) -> Result<()> {
+    let core = ServeCore::start(opts, Box::new(std::io::stdout()));
+    if let Some(path) = &opts.socket {
+        #[cfg(unix)]
+        core.handle().listen_unix(path)?;
+        #[cfg(not(unix))]
+        bail!("--socket {} requires a unix platform", path.display());
+    }
+    for line in std::io::stdin().lines() {
+        let line = line.context("reading stdin")?;
+        core.submit_line(&line);
+    }
+    core.finish();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared capture buffer usable as a service sink.
+    #[derive(Clone, Default)]
+    struct Buf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Buf {
+        fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+            lock(&self.0).extend_from_slice(data);
+            Ok(data.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl Buf {
+        fn lines(&self) -> Vec<Json> {
+            let raw = String::from_utf8(lock(&self.0).clone()).unwrap();
+            raw.lines().map(|l| Json::parse(l).expect("response line parses")).collect()
+        }
+
+        /// Complete response lines so far — safe to poll while workers
+        /// are still writing (a line is complete once its newline
+        /// lands; [`Self::lines`] may race a partially written line).
+        fn newlines(&self) -> usize {
+            lock(&self.0).iter().filter(|&&b| b == b'\n').count()
+        }
+    }
+
+    fn field<'a>(env: &'a Json, key: &str) -> &'a Json {
+        env.get(key).unwrap_or_else(|| panic!("response missing `{key}`"))
+    }
+
+    fn status(env: &Json) -> String {
+        field(env, "status").as_str().unwrap().to_string()
+    }
+
+    fn error_kind(env: &Json) -> String {
+        field(env, "error").get("kind").unwrap().as_str().unwrap().to_string()
+    }
+
+    const IWATA_JOB: &str = r#"{"id": "j1", "workload": {"kind": "iwata", "p": 24}}"#;
+
+    #[test]
+    fn ok_job_round_trips_with_id_and_report() {
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line(IWATA_JOB);
+        core.finish();
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 1);
+        let env = &lines[0];
+        assert_eq!(status(env), "ok");
+        assert_eq!(field(env, "id").as_str().unwrap(), "j1");
+        assert!(matches!(field(env, "error"), Json::Null));
+        let report = field(env, "report");
+        assert_eq!(report.get("converged").unwrap().as_bool(), Some(true));
+        assert!(matches!(report.get("cancel_reason").unwrap(), Json::Null));
+    }
+
+    #[test]
+    fn blank_lines_are_ignored_and_malformed_lines_answered() {
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line("");
+        core.submit_line("   ");
+        core.submit_line("{not json");
+        core.submit_line(r#"{"workload": {"kind": "iwata", "p": 24}, "epz": 1.0}"#);
+        core.finish();
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 2);
+        for env in &lines {
+            assert_eq!(status(env), "error");
+            assert_eq!(error_kind(env), "invalid");
+            assert!(matches!(field(env, "report"), Json::Null));
+        }
+        // The field error names the offender and the job sequence.
+        let msg =
+            field(&lines[1], "error").get("message").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("epz"), "{msg}");
+        assert!(msg.contains("job "), "{msg}");
+    }
+
+    #[test]
+    fn zero_deadline_yields_partial_status() {
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line(
+            r#"{"id": 7, "deadline_ms": 0, "workload": {"kind": "iwata", "p": 24}}"#,
+        );
+        core.finish();
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 1);
+        let env = &lines[0];
+        assert_eq!(status(env), "partial");
+        assert_eq!(field(env, "id").as_num().unwrap(), 7.0);
+        let report = field(env, "report");
+        assert_eq!(
+            report.get("cancel_reason").unwrap().as_str().unwrap(),
+            "deadline"
+        );
+        assert_eq!(report.get("converged").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn bad_deadline_is_an_invalid_request() {
+        let buf = Buf::default();
+        let core =
+            ServeCore::start_without_workers(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line(r#"{"deadline_ms": -5, "workload": {"kind": "iwata", "p": 24}}"#);
+        core.submit_line(r#"{"deadline_ms": "soon", "workload": {"kind": "iwata", "p": 24}}"#);
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 2);
+        for env in &lines {
+            assert_eq!(error_kind(env), "invalid");
+            let msg = field(env, "error").get("message").unwrap().as_str().unwrap().to_string();
+            assert!(msg.contains("deadline_ms"), "{msg}");
+        }
+        core.finish();
+    }
+
+    #[test]
+    fn overflowing_the_queue_rejects_with_queue_full() {
+        let buf = Buf::default();
+        let opts = ServeOptions { queue_cap: 2, ..Default::default() };
+        // No workers: admitted jobs stay queued, so the third submission
+        // must overflow deterministically.
+        let core = ServeCore::start_without_workers(&opts, Box::new(buf.clone()));
+        core.submit_line(IWATA_JOB);
+        core.submit_line(IWATA_JOB);
+        core.submit_line(r#"{"id": "reject-me", "workload": {"kind": "iwata", "p": 24}}"#);
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 1, "only the rejection responds synchronously");
+        let env = &lines[0];
+        assert_eq!(status(env), "rejected");
+        assert_eq!(error_kind(env), "queue_full");
+        assert_eq!(field(env, "id").as_str().unwrap(), "reject-me");
+        core.finish();
+    }
+
+    #[test]
+    fn cache_hit_counter_counts_rebuild_free_reuse() {
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line(IWATA_JOB);
+        core.submit_line(IWATA_JOB);
+        core.submit_line(r#"{"workload": {"kind": "iwata", "p": 30}}"#);
+        // Wait for all three responses before reading the counter.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while buf.newlines() < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(buf.lines().len(), 3);
+        // Two identical specs share one build; the p=30 spec is a miss.
+        assert_eq!(core.cache_hits(), 1);
+        assert_eq!(core.pool_rebuilds(), 0);
+        core.finish();
+    }
+
+    #[test]
+    fn served_solve_matches_direct_solve_bitwise() {
+        let direct = {
+            let f = crate::submodular::iwata::IwataFn::new(32);
+            solve_sfm_with_screening(&f, &crate::screening::iaes::IaesOptions::default()).unwrap()
+        };
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line(r#"{"workload": {"kind": "iwata", "p": 32}}"#);
+        core.finish();
+        let lines = buf.lines();
+        let report = field(&lines[0], "report");
+        assert_eq!(
+            report.get("minimum").unwrap().as_num().unwrap().to_bits(),
+            direct.minimum.to_bits()
+        );
+        let ids: Vec<f64> = report
+            .get("minimizer")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_num().unwrap())
+            .collect();
+        let expect: Vec<f64> = direct.minimizer.iter().map(|&i| i as f64).collect();
+        assert_eq!(ids, expect);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_round_trip() {
+        use std::io::{BufRead, BufReader};
+        use std::os::unix::net::UnixStream;
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        let dir = std::env::temp_dir().join(format!("sfm-serve-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.sock");
+        core.handle().listen_unix(&path).unwrap();
+        let mut conn = UnixStream::connect(&path).unwrap();
+        writeln!(conn, r#"{{"id": "sock", "workload": {{"kind": "iwata", "p": 24}}}}"#).unwrap();
+        let mut line = String::new();
+        BufReader::new(conn.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let env = Json::parse(&line).unwrap();
+        assert_eq!(status(&env), "ok");
+        assert_eq!(field(&env, "id").as_str().unwrap(), "sock");
+        // Socket responses never leak onto the primary sink.
+        assert!(buf.lines().is_empty());
+        drop(conn);
+        core.finish();
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

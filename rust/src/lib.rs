@@ -21,7 +21,9 @@
 //! * an XLA/PJRT runtime that executes the AOT-compiled JAX/Pallas
 //!   screening kernel from the rust hot path ([`runtime`]),
 //! * workload generators reproducing the paper's experiments
-//!   ([`workloads`]) and an experiment [`coordinator`].
+//!   ([`workloads`]) and an experiment [`coordinator`], including a
+//!   fault-isolated resident solve service with deadlines, cooperative
+//!   cancellation, and panic containment ([`coordinator::serve`]).
 //!
 //! ## Quickstart
 //!
@@ -65,8 +67,10 @@ pub mod prelude {
         greedy_base_vertex, lovasz_value, vertex_from_order, ContractionMap,
         GreedyWorkspace,
     };
+    pub use crate::coordinator::serve::{ServeCore, ServeHandle, ServeOptions};
+    pub use crate::runtime::cancel::{CancelReason, CancelToken};
     pub use crate::screening::iaes::{
-        solve_sfm_with_screening, IaesEngine, IaesOptions, IaesReport,
+        solve_sfm_with_screening, IaesEngine, IaesOptions, IaesReport, NumericFault,
     };
     pub use crate::screening::RuleSet;
     pub use crate::screening::parametric::RegularizationPath;

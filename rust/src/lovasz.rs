@@ -236,6 +236,7 @@ pub fn greedy_base_vertex<F: Submodular + ?Sized>(
     ws: &mut GreedyWorkspace,
     s_out: &mut [f64],
 ) -> GreedyInfo {
+    crate::runtime::failpoint::hit("oracle");
     let p = f.ground_size();
     assert_eq!(w.len(), p);
     assert_eq!(s_out.len(), p);

@@ -29,6 +29,7 @@ fn run(args: &[String]) -> Result<()> {
         "version" => println!("sfm-screen {}", sfm_screen::VERSION),
         "info" => info()?,
         "solve" => solve(&cli.flags)?,
+        "serve" => serve(&cli.flags)?,
         "path" => path(&cli.flags)?,
         "table1" => {
             let cfg = bench_config(&cli.flags)?;
@@ -92,6 +93,22 @@ fn run(args: &[String]) -> Result<()> {
         other => bail!("unknown command `{other}` — try `sfm-screen help`"),
     }
     Ok(())
+}
+
+/// Run the fault-isolated resident solve service: `JobSpec` JSON lines
+/// in (stdin, plus `--socket PATH`), one response line per job out.
+fn serve(flags: &sfm_screen::config::Config) -> Result<()> {
+    let opts = sfm_screen::coordinator::serve::ServeOptions {
+        workers: flags.get_usize("workers", 0)?,
+        queue_cap: flags.get_usize("queue-cap", 64)?,
+        default_deadline_ms: match flags.get("deadline-ms") {
+            Some(_) => Some(flags.get_u64("deadline-ms", 0)?),
+            None => None,
+        },
+        oracle_threads: flags.get_usize("oracle-threads", 1)?,
+        socket: flags.get("socket").map(std::path::PathBuf::from),
+    };
+    sfm_screen::coordinator::serve::serve(&opts)
 }
 
 /// Compute the SFM′ regularization path (Theorem 2): one proximal solve
@@ -187,12 +204,13 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
     opts.record_history = false;
     let job = JobSpec { name: wl.label(), workload: wl, opts, decompose };
     let res = job.run()?;
+    let allow_partial = flags.get_bool("allow-partial", false)?;
     if flags.get_bool("json", false)? {
         println!(
             "{}",
             sfm_screen::coordinator::json::report_to_json(&res.report, false).to_string()
         );
-        return Ok(());
+        return check_partial(&res.report, cfg.eps, allow_partial);
     }
     println!("workload     : {}", res.name);
     println!("minimum      : {:.6}", res.report.minimum);
@@ -218,13 +236,43 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
     );
     println!("emptied      : {}", res.report.emptied);
     println!("converged    : {}", res.report.converged);
+    if let Some(r) = res.report.cancel_reason {
+        println!("stopped early: {r}");
+    }
     if !res.report.converged {
+        let why = match res.report.cancel_reason {
+            Some(r) => format!("stopped early ({r})"),
+            None => format!("hit max_iters={}", res.report.iters),
+        };
         eprintln!(
-            "WARNING: hit max_iters={} before reaching eps={:.1e}; the leftover \
-             elements were sign-decided from an unconverged iterate and the \
-             reported minimizer may be inaccurate",
-            res.report.iters, cfg.eps
+            "WARNING: {why} before reaching eps={:.1e}; the leftover elements \
+             were sign-decided from an unconverged iterate and the reported \
+             minimizer may be inaccurate (elements screened before the stop \
+             remain safe)",
+            cfg.eps
         );
     }
-    Ok(())
+    check_partial(&res.report, cfg.eps, allow_partial)
+}
+
+/// A partial (unconverged or cancelled) solve exits nonzero unless the
+/// caller opted in with `--allow-partial` — a script must not mistake a
+/// deadline-truncated minimizer for a converged one.
+fn check_partial(
+    report: &sfm_screen::screening::iaes::IaesReport,
+    eps: f64,
+    allow_partial: bool,
+) -> Result<()> {
+    if report.converged || allow_partial {
+        return Ok(());
+    }
+    let why = match report.cancel_reason {
+        Some(r) => format!("stopped early ({r})"),
+        None => format!("hit max_iters={}", report.iters),
+    };
+    bail!(
+        "solve {why} before reaching eps={eps:.1e} (gap {:.3e}); \
+         pass --allow-partial to accept the partial result",
+        report.final_gap
+    )
 }

@@ -1,0 +1,173 @@
+//! Cooperative cancellation for long-running solves.
+//!
+//! A [`CancelToken`] combines a caller-settable cancel flag with an
+//! optional wall-clock deadline. The IAES engine polls the token **only
+//! at major-iteration boundaries** (one check per greedy oracle pass /
+//! block round), which is the coarsest granularity at which stopping is
+//! *safe*: at an iteration boundary the dual iterate is a valid point of
+//! `B(F̂)`, so every screening certificate fired so far remains a
+//! Lemma-2/3 safe certificate and the partial report a cancelled solve
+//! returns is still trustworthy — `converged: false`, the cancel reason,
+//! and the elements screened so far (see `IaesReport::cancel_reason`).
+//! Because the check sits *between* iterations and never alters any
+//! numeric path, a token that never fires is bitwise inert: the
+//! trajectory with `cancel: Some(token)` is identical to the trajectory
+//! without it, preserving all determinism invariants.
+//!
+//! Tokens are cheap to clone (one `Arc`); the serve layer mints one per
+//! job (`runtime::cancel` + deadline from the request) and keeps a clone
+//! so an admission-control or shutdown path can cancel in flight work.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Why a solve stopped early.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// [`CancelToken::cancel`] was called.
+    Cancelled,
+    /// The token's deadline passed.
+    DeadlineExpired,
+}
+
+impl CancelReason {
+    /// Stable machine-readable id (the JSON `cancel_reason` value).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CancelReason::Cancelled => "cancelled",
+            CancelReason::DeadlineExpired => "deadline",
+        }
+    }
+}
+
+impl std::fmt::Display for CancelReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    flag: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// A cloneable cancel flag plus optional deadline (see the module docs).
+#[derive(Clone, Debug)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl CancelToken {
+    /// A token with no deadline; fires only via [`cancel`](Self::cancel).
+    pub fn new() -> Self {
+        CancelToken {
+            inner: Arc::new(Inner { flag: AtomicBool::new(false), deadline: None }),
+        }
+    }
+
+    /// A token that expires `timeout` from now (and can also be cancelled
+    /// explicitly). A zero timeout is already expired — useful for
+    /// "validate + screen nothing" probe jobs and deadline tests.
+    pub fn with_deadline(timeout: Duration) -> Self {
+        Self::with_deadline_at(Instant::now() + timeout)
+    }
+
+    /// A token that expires at `at`.
+    pub fn with_deadline_at(at: Instant) -> Self {
+        CancelToken {
+            inner: Arc::new(Inner {
+                flag: AtomicBool::new(false),
+                deadline: Some(at),
+            }),
+        }
+    }
+
+    /// Request cooperative cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.inner.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether [`cancel`](Self::cancel) has been called (ignores the
+    /// deadline — use [`check`](Self::check) for the full verdict).
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.flag.load(Ordering::Acquire)
+    }
+
+    /// The configured deadline, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.deadline
+    }
+
+    /// Poll the token: `Some(reason)` once the flag is set or the
+    /// deadline has passed, `None` while the solve may continue. An
+    /// explicit cancel wins over a simultaneously-expired deadline.
+    pub fn check(&self) -> Option<CancelReason> {
+        if self.inner.flag.load(Ordering::Acquire) {
+            return Some(CancelReason::Cancelled);
+        }
+        match self.inner.deadline {
+            Some(at) if Instant::now() >= at => Some(CancelReason::DeadlineExpired),
+            _ => None,
+        }
+    }
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_live() {
+        let t = CancelToken::new();
+        assert_eq!(t.check(), None);
+        assert!(!t.is_cancelled());
+        assert!(t.deadline().is_none());
+    }
+
+    #[test]
+    fn explicit_cancel_fires_and_is_idempotent() {
+        let t = CancelToken::new();
+        t.cancel();
+        t.cancel();
+        assert_eq!(t.check(), Some(CancelReason::Cancelled));
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn clones_share_the_flag() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        c.cancel();
+        assert_eq!(t.check(), Some(CancelReason::Cancelled));
+    }
+
+    #[test]
+    fn zero_deadline_is_already_expired() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        assert_eq!(t.check(), Some(CancelReason::DeadlineExpired));
+    }
+
+    #[test]
+    fn future_deadline_is_live_until_it_passes() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert_eq!(t.check(), None);
+        // An explicit cancel overrides a pending deadline.
+        t.cancel();
+        assert_eq!(t.check(), Some(CancelReason::Cancelled));
+    }
+
+    #[test]
+    fn reason_ids_are_stable() {
+        assert_eq!(CancelReason::Cancelled.as_str(), "cancelled");
+        assert_eq!(CancelReason::DeadlineExpired.as_str(), "deadline");
+        assert_eq!(CancelReason::DeadlineExpired.to_string(), "deadline");
+    }
+}

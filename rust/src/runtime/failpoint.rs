@@ -1,0 +1,212 @@
+//! Compile-feature fail-point harness for deterministic fault injection.
+//!
+//! Built with `--features failpoint`, named sites throughout the solve
+//! path (`"oracle"` at the top of every greedy pass, `"iaes-iter"` at
+//! each IAES major-iteration boundary, `"iaes-gap"` on the freshly
+//! computed duality gap, `"serve-job"` around each serve-mode job) can
+//! be armed to panic, inject a NaN, or sleep — exactly once, at the
+//! N-th hit — so every containment boundary (catch_unwind, pool
+//! rebuild, non-finite guard, deadline expiry) has a deterministic
+//! test. Without the feature every hook compiles to an inlined no-op,
+//! so release builds pay nothing.
+//!
+//! Semantics of [`arm`]`(site, action, at)`:
+//!
+//! * the site's hit counter restarts from zero,
+//! * [`FpAction::Panic`] and [`FpAction::Nan`] fire exactly at hit
+//!   `at` (later hits pass through untouched, so subsequent jobs on
+//!   the same process proceed normally),
+//! * [`FpAction::Delay`] fires at every hit `>= at` until disarmed.
+//!
+//! Panics and sleeps happen *outside* the registry lock, so an
+//! injected panic can never poison the harness itself.
+
+/// What an armed fail-point does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpAction {
+    /// Panic with a message naming the site and hit count.
+    Panic,
+    /// Replace the guarded value with `f64::NAN` ([`eval_f64`] sites).
+    Nan,
+    /// Sleep for the given duration ([`hit`] sites).
+    Delay(std::time::Duration),
+}
+
+#[cfg(feature = "failpoint")]
+mod imp {
+    use super::FpAction;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+
+    struct Armed {
+        action: FpAction,
+        at: u64,
+        hits: u64,
+    }
+
+    fn registry() -> &'static Mutex<HashMap<String, Armed>> {
+        static REG: OnceLock<Mutex<HashMap<String, Armed>>> = OnceLock::new();
+        REG.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn with_reg<R>(f: impl FnOnce(&mut HashMap<String, Armed>) -> R) -> R {
+        let mut g = registry().lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut g)
+    }
+
+    /// Arm `site` to perform `action` at its `at`-th hit (1-based). The
+    /// site's hit counter restarts from zero.
+    pub fn arm(site: &str, action: FpAction, at: u64) {
+        with_reg(|reg| {
+            reg.insert(site.to_string(), Armed { action, at, hits: 0 });
+        });
+    }
+
+    /// Disarm a single site (no-op if it was never armed).
+    pub fn disarm(site: &str) {
+        with_reg(|reg| {
+            reg.remove(site);
+        });
+    }
+
+    /// Disarm everything (test teardown).
+    pub fn reset() {
+        with_reg(HashMap::clear);
+    }
+
+    /// What a hit at `site` should do right now, if anything. Counts the
+    /// hit; the caller performs the action outside the registry lock.
+    fn fire(site: &str) -> Option<(FpAction, u64)> {
+        with_reg(|reg| {
+            let armed = reg.get_mut(site)?;
+            armed.hits += 1;
+            let due = match armed.action {
+                FpAction::Delay(_) => armed.hits >= armed.at,
+                _ => armed.hits == armed.at,
+            };
+            due.then_some((armed.action, armed.hits))
+        })
+    }
+
+    /// Execution hook: panics or sleeps when `site` is armed and due.
+    pub fn hit(site: &str) {
+        match fire(site) {
+            Some((FpAction::Panic, n)) => {
+                panic!("failpoint `{site}` injected panic at hit {n}")
+            }
+            Some((FpAction::Delay(d), _)) => std::thread::sleep(d),
+            Some((FpAction::Nan, _)) | None => {}
+        }
+    }
+
+    /// Value hook: returns `value`, or `NaN` when `site` is armed with
+    /// [`FpAction::Nan`] and due. `Panic`/`Delay` also fire here so a
+    /// single site name can guard either kind of hook.
+    pub fn eval_f64(site: &str, value: f64) -> f64 {
+        match fire(site) {
+            Some((FpAction::Nan, _)) => f64::NAN,
+            Some((FpAction::Panic, n)) => {
+                panic!("failpoint `{site}` injected panic at hit {n}")
+            }
+            Some((FpAction::Delay(d), _)) => {
+                std::thread::sleep(d);
+                value
+            }
+            None => value,
+        }
+    }
+}
+
+#[cfg(not(feature = "failpoint"))]
+mod imp {
+    use super::FpAction;
+
+    /// No-op stub (feature `failpoint` disabled).
+    #[inline(always)]
+    pub fn arm(_site: &str, _action: FpAction, _at: u64) {}
+
+    /// No-op stub (feature `failpoint` disabled).
+    #[inline(always)]
+    pub fn disarm(_site: &str) {}
+
+    /// No-op stub (feature `failpoint` disabled).
+    #[inline(always)]
+    pub fn reset() {}
+
+    /// No-op stub (feature `failpoint` disabled).
+    #[inline(always)]
+    pub fn hit(_site: &str) {}
+
+    /// Identity stub (feature `failpoint` disabled).
+    #[inline(always)]
+    pub fn eval_f64(_site: &str, value: f64) -> f64 {
+        value
+    }
+}
+
+pub use imp::{arm, disarm, eval_f64, hit, reset};
+
+#[cfg(all(test, feature = "failpoint"))]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    // The registry is process-global; serialize these tests against each
+    // other (cargo runs #[test] fns on parallel threads by default).
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn unarmed_sites_are_inert() {
+        let _g = serial();
+        reset();
+        hit("nope");
+        assert_eq!(eval_f64("nope", 2.5), 2.5);
+    }
+
+    #[test]
+    fn panic_fires_exactly_at_nth_hit() {
+        let _g = serial();
+        reset();
+        arm("t-panic", FpAction::Panic, 2);
+        hit("t-panic"); // hit 1: pass
+        let err = std::panic::catch_unwind(|| hit("t-panic")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("t-panic"), "panic message: {msg}");
+        assert!(msg.contains("hit 2"), "panic message: {msg}");
+        hit("t-panic"); // hit 3: pass again (exactly-once)
+        reset();
+    }
+
+    #[test]
+    fn nan_injection_and_rearm_resets_counter() {
+        let _g = serial();
+        reset();
+        arm("t-nan", FpAction::Nan, 1);
+        assert!(eval_f64("t-nan", 1.0).is_nan());
+        assert_eq!(eval_f64("t-nan", 1.0), 1.0);
+        arm("t-nan", FpAction::Nan, 1); // re-arm restarts the count
+        assert!(eval_f64("t-nan", 7.0).is_nan());
+        reset();
+    }
+
+    #[test]
+    fn delay_fires_from_nth_hit_onward_until_disarmed() {
+        let _g = serial();
+        reset();
+        arm("t-delay", FpAction::Delay(Duration::from_millis(30)), 2);
+        let t0 = Instant::now();
+        hit("t-delay"); // hit 1: no sleep
+        assert!(t0.elapsed() < Duration::from_millis(25));
+        let t1 = Instant::now();
+        hit("t-delay"); // hit 2: sleeps
+        assert!(t1.elapsed() >= Duration::from_millis(30));
+        disarm("t-delay");
+        let t2 = Instant::now();
+        hit("t-delay");
+        assert!(t2.elapsed() < Duration::from_millis(25));
+        reset();
+    }
+}

@@ -17,10 +17,16 @@
 //! implementations ([`crate::screening::rules`] and the direct affinity
 //! loop); the integration tests cross-check both paths in f64.
 //!
-//! The [`pool`] submodule is unrelated to XLA: it hosts the persistent
-//! condvar-parked [`WorkerPool`](pool::WorkerPool) that the decomposable
-//! block solver uses for its parallel best-response phases.
+//! The [`pool`], [`cancel`], and [`failpoint`] submodules are unrelated
+//! to XLA: [`pool`] hosts the persistent condvar-parked
+//! [`WorkerPool`](pool::WorkerPool) used by the decomposable block solver
+//! and the pooled greedy oracle; [`cancel`] provides the cooperative
+//! [`CancelToken`](cancel::CancelToken) the IAES engine polls at
+//! major-iteration boundaries; [`failpoint`] is the compile-feature fault
+//! injection harness behind the `failpoint` cargo feature.
 
+pub mod cancel;
+pub mod failpoint;
 pub mod pool;
 
 use crate::screening::{RuleSet, ScreenInputs, ScreenOutcome, Screener};
@@ -105,7 +111,9 @@ impl Engine {
     /// Execute artifact `name` with the given input literals; returns the
     /// flattened output tuple. Compiles (and caches) on first use.
     pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let mut inner = self.inner.lock().expect("engine poisoned");
+        // Poison recovery: the cache map stays structurally valid even if a
+        // panic unwound mid-compile (worst case: one executable re-compiles).
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if !inner.cache.contains_key(name) {
             let path = self.dir.join(format!("{name}.hlo.txt"));
             let text_path = path

@@ -83,6 +83,21 @@ pub struct WorkerPool {
     handles: Vec<JoinHandle<()>>,
 }
 
+/// Lock the control block, adopting the state if the mutex is poisoned.
+///
+/// Poison recovery is sound here because `Ctrl` is a scalar epoch
+/// protocol: every transition (epoch bump, `remaining` decrement, flag
+/// stores) is a single field write performed *after* any code that can
+/// panic — job panics are caught on the worker before the decrement, so
+/// an unwinding thread can never leave `Ctrl` mid-transition. Adopting
+/// the state therefore never observes a torn protocol; refusing to (the
+/// old `expect("pool poisoned")`) turned one already-contained job panic
+/// into a process-wide wedge the moment any *other* thread holding the
+/// lock unwound.
+fn lock_ctrl(m: &Mutex<Ctrl>) -> std::sync::MutexGuard<'_, Ctrl> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl WorkerPool {
     /// Spawn `workers ≥ 1` parked threads.
     pub fn new(workers: usize) -> Self {
@@ -185,7 +200,7 @@ impl WorkerPool {
                 job,
             )
         };
-        let mut c = self.shared.ctrl.lock().expect("pool poisoned");
+        let mut c = lock_ctrl(&self.shared.ctrl);
         // Unconditional: a second dispatcher mid-job would overwrite the
         // in-flight job pointer and corrupt the barrier count — in a
         // release build that is a hang or a use-after-return, not a
@@ -201,9 +216,9 @@ impl WorkerPool {
     /// Block until every worker finished the dispatched job; returns
     /// whether any worker panicked (the job slot is cleared either way).
     fn barrier(&self) -> bool {
-        let mut c = self.shared.ctrl.lock().expect("pool poisoned");
+        let mut c = lock_ctrl(&self.shared.ctrl);
         while c.remaining > 0 {
-            c = self.shared.done.wait(c).expect("pool poisoned");
+            c = self.shared.done.wait(c).unwrap_or_else(|e| e.into_inner());
         }
         c.job = None;
         std::mem::take(&mut c.panicked)
@@ -273,7 +288,7 @@ fn worker_loop(sh: &Shared, w: usize) {
     let mut served = 0u64;
     loop {
         let job = {
-            let mut c = sh.ctrl.lock().expect("pool poisoned");
+            let mut c = lock_ctrl(&sh.ctrl);
             loop {
                 if c.shutdown {
                     return;
@@ -282,7 +297,7 @@ fn worker_loop(sh: &Shared, w: usize) {
                     served = c.epoch;
                     break c.job.as_ref().map(|j| j.0);
                 }
-                c = sh.go.wait(c).expect("pool poisoned");
+                c = sh.go.wait(c).unwrap_or_else(|e| e.into_inner());
             }
         };
         if let Some(ptr) = job {
@@ -290,7 +305,7 @@ fn worker_loop(sh: &Shared, w: usize) {
             // barrier until we decrement `remaining` below.
             let f = unsafe { &*ptr };
             let ok = catch_unwind(AssertUnwindSafe(|| f(w))).is_ok();
-            let mut c = sh.ctrl.lock().expect("pool poisoned");
+            let mut c = lock_ctrl(&sh.ctrl);
             if !ok {
                 c.panicked = true;
             }
@@ -305,7 +320,7 @@ fn worker_loop(sh: &Shared, w: usize) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut c = self.shared.ctrl.lock().expect("pool poisoned");
+            let mut c = lock_ctrl(&self.shared.ctrl);
             c.shutdown = true;
         }
         self.shared.go.notify_all();
@@ -371,6 +386,30 @@ mod tests {
             count.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn consecutive_panicking_jobs_do_not_wedge_the_pool() {
+        // Poison-recovery regression: repeated job panics (including
+        // panics on every worker at once) must leave the pool fully
+        // serviceable for the next `run` — no poisoned-mutex abort, no
+        // stuck barrier.
+        let pool = WorkerPool::new(3);
+        for round in 0..10 {
+            let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                pool.run(&|w| {
+                    if round % 2 == 0 || w == 1 {
+                        panic!("boom round {round} lane {w}");
+                    }
+                });
+            }));
+            assert!(caught.is_err(), "round {round} must re-raise");
+        }
+        let count = AtomicUsize::new(0);
+        pool.run_with_caller(&|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
     }
 
     #[test]

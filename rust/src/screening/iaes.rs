@@ -14,6 +14,9 @@
 
 use super::rules::RustScreener;
 use super::{RuleSet, ScreenInputs, Screener};
+use crate::runtime::cancel::{CancelReason, CancelToken};
+use crate::runtime::failpoint;
+use crate::runtime::pool::WorkerPool;
 use crate::solvers::frankwolfe::{FrankWolfe, FwOptions};
 use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
 use crate::solvers::ProxSolver;
@@ -21,6 +24,33 @@ use crate::submodular::scaled::ScaledFn;
 use crate::submodular::{Submodular, SubmodularExt};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// A non-finite duality gap or primal iterate observed mid-solve.
+///
+/// A NaN/∞ gap means the screening radius of Theorem 3 is meaningless, so
+/// continuing to screen would certify elements unsafely; the engine fails
+/// the solve with this typed error instead. The serve layer downcasts it
+/// (`anyhow::Error::downcast_ref`) to emit a structured `numeric` error
+/// envelope rather than a generic failure.
+#[derive(Clone, Debug)]
+pub struct NumericFault {
+    /// Which quantity went non-finite (`"duality gap"`, `"primal iterate"`).
+    pub what: String,
+    /// Global major-iteration index at which it was detected.
+    pub iter: usize,
+}
+
+impl std::fmt::Display for NumericFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite {} at iteration {}: screening radius undefined, refusing to screen",
+            self.what, self.iter
+        )
+    }
+}
+
+impl std::error::Error for NumericFault {}
 
 /// Solver selection for the engine.
 #[derive(Clone, Copy, Debug)]
@@ -99,6 +129,21 @@ pub struct IaesOptions {
     /// ([`IaesEngine::with_solver`]) — the block solver owns its own
     /// pool and reports `block_threads` instead.
     pub threads: usize,
+    /// Cooperative cancellation: when set, the engine polls the token
+    /// **once per major iteration, at the iteration boundary** (before
+    /// the greedy pass) and stops early with a *partial* report —
+    /// `converged: false`, [`IaesReport::cancel_reason`] set, and every
+    /// element screened so far still reported (certificates fired before
+    /// the stop remain Lemma-2/3 safe). A token that never fires is
+    /// bitwise inert: the trajectory is identical to `cancel: None`.
+    pub cancel: Option<CancelToken>,
+    /// Caller-owned worker pool for the pooled monolithic greedy oracle:
+    /// when set (and `threads` would permit pooling, i.e. the solve is
+    /// monolithic), the engine installs this pool instead of parking a
+    /// fresh one, and reports `greedy_threads = size() + 1`. This is the
+    /// serve-mode resident-pool path — one persistent pool per serve
+    /// worker, reused across jobs, rebuilt only after a contained panic.
+    pub oracle_pool: Option<Arc<WorkerPool>>,
 }
 
 impl Default for IaesOptions {
@@ -115,6 +160,8 @@ impl Default for IaesOptions {
             warm_restart: true,
             argsort_remap: true,
             threads: 1,
+            cancel: None,
+            oracle_pool: None,
         }
     }
 }
@@ -132,6 +179,8 @@ impl std::fmt::Debug for IaesOptions {
             .field("warm_restart", &self.warm_restart)
             .field("argsort_remap", &self.argsort_remap)
             .field("threads", &self.threads)
+            .field("cancel", &self.cancel.is_some())
+            .field("oracle_pool", &self.oracle_pool.is_some())
             .finish()
     }
 }
@@ -217,6 +266,14 @@ pub struct IaesReport {
     /// exactly like `block_threads`, so `solve --threads N` runs record
     /// the parallelism they actually used.
     pub greedy_threads: Option<usize>,
+    /// Why the solve stopped early, when it did: `Some` exactly when a
+    /// [`CancelToken`] fired (deadline or explicit cancel) at a
+    /// major-iteration boundary. Such a report is *partial* —
+    /// `converged` is false and the minimizer is sign-decided from an
+    /// unconverged primal — but `screened_active`/`screened_inactive`
+    /// and the trigger log remain safe: every certificate fired before
+    /// the stop is a valid Lemma-2/3 certificate.
+    pub cancel_reason: Option<CancelReason>,
 }
 
 impl IaesReport {
@@ -298,6 +355,8 @@ impl<'a> IaesEngine<'a> {
         let mut final_gap = f64::INFINITY;
         let mut emptied = false;
         let mut converged = true;
+        let mut cancel_reason = None;
+        let cancel = self.opts.cancel.clone();
 
         // Residual primal (kept alive across restarts for warm starts).
         let mut w_restricted: Vec<f64> = vec![0.0; self.kept.len()];
@@ -326,17 +385,28 @@ impl<'a> IaesEngine<'a> {
         // (the decomposable block solver) own their parallelism and are
         // left alone.
         let greedy_threads = if monolithic {
-            let t = match self.opts.threads {
-                0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-                t => t,
-            };
-            t.max(1)
+            match &self.opts.oracle_pool {
+                // A caller-owned resident pool (serve mode) fixes the
+                // lane count: pool workers plus the engine thread.
+                Some(pool) => pool.size() + 1,
+                None => {
+                    let t = match self.opts.threads {
+                        0 => std::thread::available_parallelism()
+                            .map(|n| n.get())
+                            .unwrap_or(1),
+                        t => t,
+                    };
+                    t.max(1)
+                }
+            }
         } else {
             1
         };
         let _oracle_pool = if monolithic && greedy_threads > 1 {
-            let pool =
-                Arc::new(crate::runtime::pool::WorkerPool::new(greedy_threads - 1));
+            let pool = match self.opts.oracle_pool.clone() {
+                Some(pool) => pool,
+                None => Arc::new(WorkerPool::new(greedy_threads - 1)),
+            };
             solver.set_pool(Some(Arc::clone(&pool)));
             Some(pool)
         } else {
@@ -372,43 +442,74 @@ impl<'a> IaesEngine<'a> {
             }
 
             loop {
+                // Cancellation boundary: between major iterations the dual
+                // is a valid point of B(F̂), so stopping here keeps every
+                // certificate fired so far Lemma-2/3 safe. The leftovers
+                // are sign-decided from the current (unconverged) primal
+                // and the report is flagged partial via `cancel_reason`.
+                if let Some(reason) = cancel.as_ref().and_then(|c| c.check()) {
+                    converged = false;
+                    cancel_reason = Some(reason);
+                    w_restricted.clear();
+                    w_restricted.extend_from_slice(solver.w());
+                    break 'outer;
+                }
+                failpoint::hit("iaes-iter");
                 let t0 = Instant::now();
                 let ev = solver.step(&scaled);
                 solver_time += t0.elapsed();
                 total_iters += 1;
-                final_gap = ev.gap;
+                // Non-finite guard: a NaN/∞ gap makes the Theorem-3
+                // screening radius meaningless, so screening from it would
+                // be unsafe — fail the job with a typed error instead.
+                let gap = failpoint::eval_f64("iaes-gap", ev.gap);
+                if !gap.is_finite() {
+                    return Err(NumericFault {
+                        what: "duality gap".into(),
+                        iter: total_iters,
+                    }
+                    .into());
+                }
+                final_gap = gap;
 
                 if self.opts.record_history {
                     history.push(IterRecord {
                         iter: total_iters,
-                        gap: ev.gap,
+                        gap,
                         active: self.active.len() + pending_a_count,
                         inactive: self.inactive.len() + pending_i_count,
                         p_remaining: self.kept.len(),
                     });
                 }
-                if ev.gap < self.opts.eps || total_iters >= self.opts.max_iters {
+                if gap < self.opts.eps || total_iters >= self.opts.max_iters {
                     // Capture the final restricted primal: the leftover
                     // elements are decided by its sign (Alg. 2, line 19),
                     // except the ones already certified. A max-iters trip
                     // decides them from an unconverged primal — flag it.
-                    converged = ev.gap < self.opts.eps;
+                    converged = gap < self.opts.eps;
                     w_restricted.clear();
                     w_restricted.extend_from_slice(solver.w());
                     break 'outer;
                 }
 
                 let should_screen = !self.opts.rules.is_empty()
-                    && ev.gap < self.opts.rho * q_gate;
+                    && gap < self.opts.rho * q_gate;
                 if !should_screen {
                     continue;
                 }
 
                 // ---- Screening trigger (steps 6–15) ----
+                if solver.w().iter().any(|v| !v.is_finite()) {
+                    return Err(NumericFault {
+                        what: "primal iterate".into(),
+                        iter: total_iters,
+                    }
+                    .into());
+                }
                 let t1 = Instant::now();
                 let inputs = ScreenInputs {
                     w: solver.w(),
-                    gap: ev.gap,
+                    gap,
                     f_v,
                     f_c: solver.best_level_value(),
                 };
@@ -437,7 +538,7 @@ impl<'a> IaesEngine<'a> {
                 }
                 triggers.push(TriggerRecord {
                     iter: total_iters,
-                    gap: ev.gap,
+                    gap,
                     p_before: self.kept.len(),
                     new_active: new_active_ids.len(),
                     new_inactive: new_inactive_ids.len(),
@@ -445,7 +546,7 @@ impl<'a> IaesEngine<'a> {
                     new_inactive_ids,
                     screen_time: dt,
                 });
-                q_gate = ev.gap;
+                q_gate = gap;
 
                 // Contract only when the batch is worth a solver restart
                 // (Remark 4 cost/benefit; min_reduction_frac = 0 restarts
@@ -546,6 +647,7 @@ impl<'a> IaesEngine<'a> {
             converged,
             block_threads: None,
             greedy_threads: (monolithic && greedy_threads > 1).then_some(greedy_threads),
+            cancel_reason,
         })
     }
 }
@@ -781,6 +883,81 @@ mod tests {
         if report.emptied {
             assert!(report.converged);
         }
+    }
+
+    #[test]
+    fn unfired_cancel_token_is_bitwise_inert() {
+        // A token that never fires must not change a bit of the
+        // trajectory: the boundary check reads the clock but never the
+        // numerics.
+        let f = IwataFn::new(18);
+        let plain = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        let opts = IaesOptions {
+            cancel: Some(CancelToken::with_deadline(Duration::from_secs(3600))),
+            ..Default::default()
+        };
+        let tokened = solve_sfm_with_screening(&f, &opts).unwrap();
+        assert_eq!(tokened.cancel_reason, None);
+        assert!(tokened.converged);
+        assert_eq!(tokened.minimum.to_bits(), plain.minimum.to_bits());
+        assert_eq!(tokened.minimizer, plain.minimizer);
+        assert_eq!(tokened.iters, plain.iters);
+        assert_eq!(tokened.final_gap.to_bits(), plain.final_gap.to_bits());
+    }
+
+    #[test]
+    fn expired_deadline_yields_partial_report() {
+        // Deadline already passed: the engine must stop at the very first
+        // boundary — zero iterations, empty minimizer machinery intact,
+        // partial flags set.
+        let f = IwataFn::new(16);
+        let opts = IaesOptions {
+            cancel: Some(CancelToken::with_deadline(Duration::ZERO)),
+            ..Default::default()
+        };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        assert_eq!(report.cancel_reason, Some(CancelReason::DeadlineExpired));
+        assert!(!report.converged);
+        assert_eq!(report.iters, 0);
+    }
+
+    #[test]
+    fn explicit_cancel_yields_partial_report() {
+        let f = IwataFn::new(16);
+        let token = CancelToken::new();
+        token.cancel();
+        let opts = IaesOptions { cancel: Some(token), ..Default::default() };
+        let report = solve_sfm_with_screening(&f, &opts).unwrap();
+        assert_eq!(report.cancel_reason, Some(CancelReason::Cancelled));
+        assert!(!report.converged);
+        assert_eq!(report.iters, 0);
+    }
+
+    #[test]
+    fn caller_owned_oracle_pool_is_used_and_reported() {
+        // Serve-mode resident pool: same answer as the self-parked pool,
+        // greedy_threads derived from the shared pool's size.
+        let p = 140;
+        let mut rng = Pcg64::seeded(4040);
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 0.15);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let f = KernelCutFn::new(p, k, rng.uniform_vec(p, -3.0, 3.0));
+        let base = IaesOptions { eps: 1e-8, ..Default::default() };
+        let seq = solve_sfm_with_screening(&f, &base).unwrap();
+        let pool = Arc::new(WorkerPool::new(2));
+        let shared = IaesOptions { oracle_pool: Some(Arc::clone(&pool)), ..base };
+        let pooled = solve_sfm_with_screening(&f, &shared).unwrap();
+        assert_eq!(pooled.greedy_threads, Some(3));
+        assert_eq!(pooled.minimum.to_bits(), seq.minimum.to_bits());
+        assert_eq!(pooled.minimizer, seq.minimizer);
+        // The pool is caller-owned: still alive and serviceable after.
+        pool.run(&|_| {});
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! Fault-injection matrix (`--features failpoint`): every containment
+//! boundary in the resident service and the IAES engine, driven by
+//! deterministically armed fail-points.
+//!
+//! The fail-point registry is process-global, so CI runs this binary
+//! with `--test-threads=1`; a serial guard keeps ad-hoc local runs
+//! correct too.
+#![cfg(feature = "failpoint")]
+
+use sfm_screen::brute::brute_force_sfm;
+use sfm_screen::coordinator::json::Json;
+use sfm_screen::coordinator::serve::{ServeCore, ServeOptions};
+use sfm_screen::rng::Pcg64;
+use sfm_screen::runtime::cancel::{CancelReason, CancelToken};
+use sfm_screen::runtime::failpoint::{self, FpAction};
+use sfm_screen::screening::iaes::{IaesEngine, IaesOptions, NumericFault};
+use sfm_screen::submodular::kernel_cut::KernelCutFn;
+use std::io::Write;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shared capture buffer usable as a service sink.
+#[derive(Clone, Default)]
+struct Buf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for Buf {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(data);
+        Ok(data.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Buf {
+    fn lines(&self) -> Vec<Json> {
+        let raw = String::from_utf8(self.0.lock().unwrap().clone()).unwrap();
+        raw.lines().map(|l| Json::parse(l).expect("response line parses")).collect()
+    }
+
+    /// Complete response lines so far (safe to poll while workers write).
+    fn newlines(&self) -> usize {
+        self.0.lock().unwrap().iter().filter(|&&b| b == b'\n').count()
+    }
+
+    fn wait_for(&self, n: usize) {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while self.newlines() < n && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(self.newlines() >= n, "timed out waiting for {n} responses");
+    }
+}
+
+fn by_id<'a>(lines: &'a [Json], id: &str) -> &'a Json {
+    lines
+        .iter()
+        .find(|e| e.get("id").and_then(Json::as_str) == Some(id))
+        .unwrap_or_else(|| panic!("no response with id `{id}`"))
+}
+
+fn status(env: &Json) -> &str {
+    env.get("status").unwrap().as_str().unwrap()
+}
+
+fn error_kind(env: &Json) -> &str {
+    env.get("error").unwrap().get("kind").unwrap().as_str().unwrap()
+}
+
+fn error_message(env: &Json) -> &str {
+    env.get("error").unwrap().get("message").unwrap().as_str().unwrap()
+}
+
+fn random_kernel_cut(p: usize, rng: &mut Pcg64) -> KernelCutFn {
+    let mut k = vec![0.0; p * p];
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let w = rng.uniform(0.0, 1.0);
+            k[i * p + j] = w;
+            k[j * p + i] = w;
+        }
+    }
+    let unary = rng.uniform_vec(p, -2.0, 2.0);
+    KernelCutFn::new(p, k, unary)
+}
+
+/// An injected panic in the greedy oracle is contained at the job
+/// boundary: the poisoned job answers `kind: "panic"`, the worker
+/// rebuilds its oracle pool, and later jobs on the same worker produce
+/// correct results.
+#[test]
+fn oracle_panic_is_contained_and_the_pool_rebuilt() {
+    let _g = serial();
+    failpoint::reset();
+    let direct = {
+        let f = sfm_screen::submodular::iwata::IwataFn::new(26);
+        sfm_screen::screening::iaes::solve_sfm_with_screening(&f, &IaesOptions::default())
+            .unwrap()
+    };
+    let buf = Buf::default();
+    let opts = ServeOptions { workers: 1, oracle_threads: 2, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("oracle", FpAction::Panic, 1);
+    core.submit_line(r#"{"id": "doomed", "workload": {"kind": "iwata", "p": 26}}"#);
+    core.submit_line(r#"{"id": "after-1", "workload": {"kind": "iwata", "p": 26}}"#);
+    core.submit_line(r#"{"id": "after-2", "workload": {"kind": "iwata", "p": 26}}"#);
+    buf.wait_for(3);
+    assert_eq!(core.pool_rebuilds(), 1, "one contained panic → one pool rebuild");
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 3);
+    let doomed = by_id(&lines, "doomed");
+    assert_eq!(status(doomed), "error");
+    assert_eq!(error_kind(doomed), "panic");
+    assert!(
+        error_message(doomed).contains("failpoint `oracle`"),
+        "panic message should surface: {}",
+        error_message(doomed)
+    );
+    for id in ["after-1", "after-2"] {
+        let env = by_id(&lines, id);
+        assert_eq!(status(env), "ok", "{id} must be unaffected by the panic");
+        let min = env.get("report").unwrap().get("minimum").unwrap().as_num().unwrap();
+        assert_eq!(min.to_bits(), direct.minimum.to_bits(), "{id} diverged");
+    }
+}
+
+/// A NaN injected into the duality gap is refused by the engine's
+/// non-finite guard as a typed [`NumericFault`] — screening never sees
+/// an undefined radius.
+#[test]
+fn nan_gap_is_a_typed_numeric_fault() {
+    let _g = serial();
+    failpoint::reset();
+    let f = sfm_screen::submodular::iwata::IwataFn::new(24);
+    failpoint::arm("iaes-gap", FpAction::Nan, 1);
+    let err = IaesEngine::new(&f, IaesOptions::default()).run().unwrap_err();
+    failpoint::reset();
+    let fault = err.downcast_ref::<NumericFault>().expect("typed NumericFault");
+    assert_eq!(fault.what, "duality gap");
+    let msg = err.to_string();
+    assert!(msg.contains("non-finite"), "{msg}");
+    assert!(msg.contains("refusing to screen"), "{msg}");
+}
+
+/// The serve boundary classifies a NaN-gap failure as `kind: "numeric"`
+/// and stays alive for the next job.
+#[test]
+fn nan_gap_yields_a_numeric_response_and_a_live_service() {
+    let _g = serial();
+    failpoint::reset();
+    let buf = Buf::default();
+    let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+    failpoint::arm("iaes-gap", FpAction::Nan, 1);
+    core.submit_line(r#"{"id": "poisoned", "workload": {"kind": "iwata", "p": 24}}"#);
+    core.submit_line(r#"{"id": "healthy", "workload": {"kind": "iwata", "p": 24}}"#);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 2);
+    let poisoned = by_id(&lines, "poisoned");
+    assert_eq!(status(poisoned), "error");
+    assert_eq!(error_kind(poisoned), "numeric");
+    assert!(error_message(poisoned).contains("duality gap"));
+    assert_eq!(status(by_id(&lines, "healthy")), "ok");
+}
+
+/// Deadline expiry mid-solve: slow every major iteration down, give the
+/// solve a deadline a few iterations long, and verify that (a) the run
+/// stops early with the deadline reason, (b) every certificate fired
+/// before the stop respects the brute-force minimizer lattice — partial
+/// safety is the whole point of boundary-only cancellation.
+#[test]
+fn deadline_expiry_mid_solve_keeps_screening_safe() {
+    let _g = serial();
+    let mut total_triggers = 0usize;
+    for seed in [9101u64, 9102, 9103] {
+        failpoint::reset();
+        let mut rng = Pcg64::seeded(seed);
+        let f = random_kernel_cut(16, &mut rng);
+        let brute = brute_force_sfm(&f, 1e-7);
+        failpoint::arm("iaes-iter", FpAction::Delay(Duration::from_millis(20)), 1);
+        let opts = IaesOptions {
+            eps: 1e-15,
+            rho: 0.9,
+            max_iters: 100_000,
+            cancel: Some(CancelToken::with_deadline(Duration::from_millis(90))),
+            ..Default::default()
+        };
+        let report = IaesEngine::new(&f, opts).run().unwrap();
+        failpoint::reset();
+
+        assert_eq!(
+            report.cancel_reason,
+            Some(CancelReason::DeadlineExpired),
+            "seed {seed}: 20ms/iter against a 90ms deadline must expire"
+        );
+        assert!(!report.converged, "seed {seed}");
+        assert!(
+            report.iters < 100,
+            "seed {seed}: deadline should stop the run within a handful of \
+             iterations, got {}",
+            report.iters
+        );
+        let minimal: std::collections::HashSet<usize> =
+            brute.minimal.iter().copied().collect();
+        let maximal: std::collections::HashSet<usize> =
+            brute.maximal.iter().copied().collect();
+        for trig in &report.triggers {
+            total_triggers += trig.new_active_ids.len() + trig.new_inactive_ids.len();
+            for &a in &trig.new_active_ids {
+                assert!(
+                    minimal.contains(&a),
+                    "seed {seed}: active certificate {a} outside the minimal \
+                     minimizer {:?} after an early stop",
+                    brute.minimal
+                );
+            }
+            for &n in &trig.new_inactive_ids {
+                assert!(
+                    !maximal.contains(&n),
+                    "seed {seed}: inactive certificate {n} inside the maximal \
+                     minimizer {:?} after an early stop",
+                    brute.maximal
+                );
+            }
+        }
+    }
+    // With ρ = 0.9 the gate fires within a few iterations; across three
+    // seeds at least one certificate must have been exercised, or this
+    // test silently stopped testing partial safety.
+    assert!(total_triggers > 0, "no certificates fired before any deadline");
+}
+
+/// Explicit cancellation from another thread interrupts a slowed solve
+/// promptly (at the next iteration boundary) with the `cancelled`
+/// reason.
+#[test]
+fn explicit_cancel_interrupts_a_slow_solve() {
+    let _g = serial();
+    failpoint::reset();
+    failpoint::arm("iaes-iter", FpAction::Delay(Duration::from_millis(25)), 1);
+    let token = CancelToken::new();
+    let handle = {
+        let token = token.clone();
+        let opts = IaesOptions {
+            eps: 1e-15,
+            max_iters: 100_000,
+            cancel: Some(token),
+            ..Default::default()
+        };
+        std::thread::spawn(move || {
+            let f = sfm_screen::submodular::iwata::IwataFn::new(40);
+            IaesEngine::new(&f, opts).run().unwrap()
+        })
+    };
+    std::thread::sleep(Duration::from_millis(60));
+    let t0 = Instant::now();
+    token.cancel();
+    let report = handle.join().unwrap();
+    let latency = t0.elapsed();
+    failpoint::reset();
+    assert_eq!(report.cancel_reason, Some(CancelReason::Cancelled));
+    assert!(!report.converged);
+    // One iteration boundary away: the 25ms injected delay plus slack.
+    assert!(
+        latency < Duration::from_secs(5),
+        "cancel took {latency:?} to be observed"
+    );
+}
+
+/// With one worker stuck in a slow job, the bounded queue rejects the
+/// overflowing submission with `queue_full` — and still answers every
+/// admitted job.
+#[test]
+fn slow_job_overflows_the_bounded_queue() {
+    let _g = serial();
+    failpoint::reset();
+    let buf = Buf::default();
+    let opts = ServeOptions { workers: 1, queue_cap: 1, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("serve-job", FpAction::Delay(Duration::from_millis(150)), 1);
+    core.submit_line(r#"{"id": "slow", "workload": {"kind": "iwata", "p": 24}}"#);
+    // Let the worker pop the job and enter the injected delay, so the
+    // queue is empty for exactly one more admission.
+    std::thread::sleep(Duration::from_millis(50));
+    core.submit_line(r#"{"id": "queued", "workload": {"kind": "iwata", "p": 24}}"#);
+    core.submit_line(r#"{"id": "over", "workload": {"kind": "iwata", "p": 24}}"#);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 3);
+    let over = by_id(&lines, "over");
+    assert_eq!(status(over), "rejected");
+    assert_eq!(error_kind(over), "queue_full");
+    assert_eq!(status(by_id(&lines, "slow")), "ok");
+    assert_eq!(status(by_id(&lines, "queued")), "ok");
+}
+
+/// Deadlines are armed at admission, so time spent queued behind a slow
+/// job counts: a short-deadline job stuck in the queue comes back as an
+/// immediate partial report with zero iterations.
+#[test]
+fn deadline_covers_time_spent_in_the_queue() {
+    let _g = serial();
+    failpoint::reset();
+    let buf = Buf::default();
+    let opts = ServeOptions { workers: 1, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("serve-job", FpAction::Delay(Duration::from_millis(150)), 1);
+    core.submit_line(r#"{"id": "slow", "workload": {"kind": "iwata", "p": 24}}"#);
+    let line =
+        r#"{"id": "starved", "deadline_ms": 40, "workload": {"kind": "iwata", "p": 24}}"#;
+    core.submit_line(line);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 2);
+    assert_eq!(status(by_id(&lines, "slow")), "ok");
+    let starved = by_id(&lines, "starved");
+    assert_eq!(status(starved), "partial");
+    let report = starved.get("report").unwrap();
+    assert_eq!(report.get("cancel_reason").unwrap().as_str(), Some("deadline"));
+    assert_eq!(report.get("iters").unwrap().as_num(), Some(0.0));
+}

@@ -1,0 +1,181 @@
+//! Integration tests for the resident solve service: the three-job
+//! script CI pipes through `sfm-screen serve`, response correlation
+//! across concurrent workers, default deadlines, and decomposed jobs.
+//!
+//! The failure matrix that needs injected faults (panic containment,
+//! NaN gaps, slow-job queue overflow) lives in `tests/failpoints.rs`
+//! behind `--features failpoint`.
+
+use sfm_screen::coordinator::json::Json;
+use sfm_screen::coordinator::serve::{ServeCore, ServeOptions};
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared capture buffer usable as a service sink.
+#[derive(Clone, Default)]
+struct Buf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for Buf {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(data);
+        Ok(data.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Buf {
+    fn lines(&self) -> Vec<Json> {
+        let raw = String::from_utf8(self.0.lock().unwrap().clone()).unwrap();
+        raw.lines().map(|l| Json::parse(l).expect("response line parses")).collect()
+    }
+}
+
+fn field<'a>(env: &'a Json, key: &str) -> &'a Json {
+    env.get(key).unwrap_or_else(|| panic!("response missing `{key}`"))
+}
+
+fn status(env: &Json) -> &str {
+    field(env, "status").as_str().unwrap()
+}
+
+fn by_id<'a>(lines: &'a [Json], id: &str) -> &'a Json {
+    lines
+        .iter()
+        .find(|e| e.get("id").and_then(Json::as_str) == Some(id))
+        .unwrap_or_else(|| panic!("no response with id `{id}`"))
+}
+
+/// The CI smoke script: a well-formed job, a malformed job, and a
+/// deadline-zero job → exactly three structured responses with the
+/// right statuses, and the service survives all of them.
+#[test]
+fn three_job_script_yields_three_structured_responses() {
+    let buf = Buf::default();
+    let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+    core.submit_line(r#"{"id": "good", "workload": {"kind": "iwata", "p": 24}}"#);
+    core.submit_line(r#"{"id": "bad", "workload": {"kind": "iwata", "p": 24}, "epz": 0.1}"#);
+    core.submit_line(
+        r#"{"id": "late", "deadline_ms": 0, "workload": {"kind": "iwata", "p": 24}}"#,
+    );
+    core.finish();
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 3);
+
+    let good = by_id(&lines, "good");
+    assert_eq!(status(good), "ok");
+    assert!(matches!(field(good, "error"), Json::Null));
+    assert_eq!(
+        field(good, "report").get("converged").unwrap().as_bool(),
+        Some(true)
+    );
+
+    let bad = by_id(&lines, "bad");
+    assert_eq!(status(bad), "error");
+    let err = field(bad, "error");
+    assert_eq!(err.get("kind").unwrap().as_str(), Some("invalid"));
+    let msg = err.get("message").unwrap().as_str().unwrap();
+    assert!(msg.contains("epz"), "error must name the bad field: {msg}");
+
+    let late = by_id(&lines, "late");
+    assert_eq!(status(late), "partial");
+    let report = field(late, "report");
+    assert_eq!(report.get("cancel_reason").unwrap().as_str(), Some("deadline"));
+    assert_eq!(report.get("converged").unwrap().as_bool(), Some(false));
+}
+
+/// Several concurrent workers, many jobs: every job gets exactly one
+/// response, correlated by `id`, and identical specs produce identical
+/// minima regardless of which worker ran them.
+#[test]
+fn concurrent_workers_answer_every_job_exactly_once() {
+    let buf = Buf::default();
+    let opts = ServeOptions { workers: 3, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    for i in 0..9 {
+        core.submit_line(&format!(
+            r#"{{"id": "job-{i}", "workload": {{"kind": "iwata", "p": 28}}}}"#
+        ));
+    }
+    core.finish();
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 9);
+    let first = field(by_id(&lines, "job-0"), "report")
+        .get("minimum")
+        .unwrap()
+        .as_num()
+        .unwrap();
+    for i in 0..9 {
+        let env = by_id(&lines, &format!("job-{i}"));
+        assert_eq!(status(env), "ok");
+        let min = field(env, "report").get("minimum").unwrap().as_num().unwrap();
+        assert_eq!(min.to_bits(), first.to_bits(), "job-{i} diverged");
+    }
+    // Identical workloads reuse the cached oracle. Workers that race
+    // the very first build may each miss once, so the floor is
+    // 9 jobs − 3 workers = 6 hits, not 8.
+    let hits = core.cache_hits();
+    assert!(hits >= 6, "expected ≥6 cache hits, got {hits}");
+}
+
+/// `--deadline-ms` applies to requests that carry no deadline of their
+/// own, and a per-request `deadline_ms` overrides it.
+#[test]
+fn default_deadline_applies_unless_request_overrides() {
+    let buf = Buf::default();
+    let opts = ServeOptions { default_deadline_ms: Some(0), ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    core.submit_line(r#"{"id": "inherits", "workload": {"kind": "iwata", "p": 24}}"#);
+    let line =
+        r#"{"id": "overrides", "deadline_ms": 60000, "workload": {"kind": "iwata", "p": 24}}"#;
+    core.submit_line(line);
+    core.finish();
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 2);
+    assert_eq!(status(by_id(&lines, "inherits")), "partial");
+    assert_eq!(status(by_id(&lines, "overrides")), "ok");
+}
+
+/// Decomposed jobs run through the block solver and report the same
+/// minimum as the monolithic solve of the same workload.
+#[test]
+fn decomposed_job_matches_monolithic_minimum() {
+    let buf = Buf::default();
+    let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+    let wl = r#""workload": {"kind": "two-moons", "p": 60, "seed": 11}"#;
+    core.submit_line(&format!(r#"{{"id": "mono", {wl}}}"#));
+    core.submit_line(&format!(r#"{{"id": "block", {wl}, "decompose": true}}"#));
+    core.finish();
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 2);
+    let mono = by_id(&lines, "mono");
+    let block = by_id(&lines, "block");
+    assert_eq!(status(mono), "ok");
+    assert_eq!(status(block), "ok");
+    let m1 = field(mono, "report").get("minimum").unwrap().as_num().unwrap();
+    let m2 = field(block, "report").get("minimum").unwrap().as_num().unwrap();
+    assert!((m1 - m2).abs() < 1e-6, "monolithic {m1} vs decomposed {m2}");
+}
+
+/// Responses keep flowing while earlier jobs are still running: submit
+/// a batch and verify every line is complete, parseable JSON (the sink
+/// is line-buffered under a lock, so concurrent workers never tear).
+#[test]
+fn response_lines_never_interleave() {
+    let buf = Buf::default();
+    let opts = ServeOptions { workers: 4, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    let t0 = Instant::now();
+    for i in 0..12 {
+        core.submit_line(&format!(
+            r#"{{"id": "n{i}", "workload": {{"kind": "iwata", "p": {}}}}}"#,
+            20 + (i % 4) * 4
+        ));
+    }
+    core.finish();
+    assert!(t0.elapsed() < Duration::from_secs(60), "service wedged");
+    // Buf::lines() already Json::parse-checks every line.
+    assert_eq!(buf.lines().len(), 12);
+}

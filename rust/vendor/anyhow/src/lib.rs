@@ -36,6 +36,14 @@ impl Error {
     fn wrap<C: fmt::Display>(self, context: C) -> Self {
         Error { msg: format!("{context}: {}", self.msg), source: self.source }
     }
+
+    /// Downcast to a concrete error type by reference, like the real
+    /// crate. Context wrapping preserves the source, so a typed error
+    /// stays downcastable through `.context(...)` chains — the serve
+    /// layer uses this to classify `NumericFault` job failures.
+    pub fn downcast_ref<E: StdError + Send + Sync + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<E>())
+    }
 }
 
 // NOTE: `Error` deliberately does NOT implement `std::error::Error` — that
@@ -155,6 +163,18 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::Other, "io boom");
         let dbg = format!("{:?}", Error::new(io));
         assert!(dbg.contains("io boom"));
+    }
+
+    #[test]
+    fn downcast_ref_survives_context() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "io boom");
+        let e: Result<()> = Err(Error::new(io));
+        let e = e.context("outer").unwrap_err();
+        let back = e.downcast_ref::<std::io::Error>().expect("downcast");
+        assert_eq!(back.to_string(), "io boom");
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // Message-only errors have no source to downcast.
+        assert!(anyhow!("plain").downcast_ref::<std::io::Error>().is_none());
     }
 
     #[test]
