@@ -1,7 +1,7 @@
 # Developer conveniences. The offline build container has no rust
 # toolchain — these targets are for CI / driver machines.
 
-.PHONY: baseline bench test
+.PHONY: baseline bench test lint miri tsan
 
 # Record BENCH_micro.baseline.json at CI's smoke sizes so the
 # compare_bench gate fails regressions instead of only self-diffing.
@@ -19,3 +19,29 @@ bench:
 
 test:
 	cd rust && cargo build --release && cargo test -q
+
+# Invariant lint pass over the crate's own sources (see LINTS.md):
+# SAFETY comments on unsafe sites, poison-adopting lock discipline,
+# hot-path allocation bans, and panic-free serve job paths. Exits
+# nonzero with file:line diagnostics on any violation.
+lint:
+	cd rust && cargo run --bin sfm_lint
+
+# Miri leg: interpret the unsafe fork-join and linalg cores under the
+# aliasing/UB checker. SFM_PROP_CASES caps the property suites so the
+# interpreter finishes in minutes; -Zmiri-disable-isolation permits the
+# env read. Needs: rustup +nightly component add miri.
+miri:
+	cd rust && MIRIFLAGS="-Zmiri-disable-isolation" SFM_PROP_CASES=2 \
+		cargo +nightly miri test --lib -- runtime::pool linalg::vecops linalg::cholesky
+
+# ThreadSanitizer leg: race-check the parked worker pool and the serve
+# loop. -Zbuild-std instruments std itself; RUST_TEST_THREADS=1 keeps
+# harness interleaving out of the reports. Needs: rustup +nightly
+# component add rust-src.
+tsan:
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" RUST_TEST_THREADS=1 \
+		cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu --lib -- runtime::pool
+	cd rust && RUSTFLAGS="-Zsanitizer=thread" RUST_TEST_THREADS=1 \
+		cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--test serve --test determinism

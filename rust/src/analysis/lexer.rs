@@ -1,0 +1,513 @@
+//! A minimal, dependency-free Rust lexer for the `sfm_lint` pass.
+//!
+//! This is not a full grammar — it is exactly the token-level slice the
+//! lint rules need: identifiers (including `r#raw` idents), lifetimes
+//! vs. char literals, string literals in all their spellings (`"…"`,
+//! `r"…"`, `r##"…"##`, `b"…"`, `br#"…"#`), numbers, line comments,
+//! nested block comments, and single-character punctuation. The same
+//! hand-rolled discipline as `coordinator::json`: no external crates,
+//! error-tolerant (an unterminated literal lexes to end of input rather
+//! than aborting), and every token carries 1-based start/end lines so
+//! rules can report `file:line`.
+
+/// Token classification. `Punct` carries the single character verbatim;
+/// multi-character operators arrive as consecutive `Punct` tokens, which
+/// is all the rule engine needs (`::` is `Punct(':') Punct(':')`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword; raw idents keep their `r#` prefix.
+    Ident,
+    /// `'a`, `'_`, `'static` — a tick followed by an identifier with no
+    /// closing tick.
+    Lifetime,
+    /// `'x'`, `'\n'`, `'\u{1F980}'`, `b'x'`.
+    CharLit,
+    /// Any string literal: plain, raw, byte, raw-byte.
+    StrLit,
+    /// Integer or float literal, including suffixes (`1_000u64`, `1e-3`).
+    NumLit,
+    /// `// …` to end of line (includes `///` and `//!`).
+    LineComment,
+    /// `/* … */`, nesting-aware; may span lines.
+    BlockComment,
+    /// Any other single character.
+    Punct(char),
+}
+
+/// One lexed token with its source text and 1-based line span.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+    /// 1-based line of the token's last character (differs from `line`
+    /// only for block comments and multi-line string literals).
+    pub end_line: u32,
+}
+
+impl Token {
+    /// Whether this token is a comment of either flavor.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokenKind::LineComment | TokenKind::BlockComment)
+    }
+
+    /// Whether this token is an identifier with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == s
+    }
+
+    /// Whether this token is this exact punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct(c)
+    }
+}
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.src.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek(0)?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+        }
+        Some(b)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Lex `src` into a token stream. Never fails: malformed input produces
+/// best-effort tokens (an unterminated string or block comment simply
+/// extends to end of input).
+pub fn lex(src: &str) -> Vec<Token> {
+    let mut cur = Cursor { src: src.as_bytes(), pos: 0, line: 1 };
+    let mut out = Vec::new();
+    while let Some(b) = cur.peek(0) {
+        let start = cur.pos;
+        let start_line = cur.line;
+        match b {
+            b' ' | b'\t' | b'\r' | b'\n' => {
+                cur.bump();
+            }
+            b'/' if cur.peek(1) == Some(b'/') => {
+                while let Some(c) = cur.peek(0) {
+                    if c == b'\n' {
+                        break;
+                    }
+                    cur.bump();
+                }
+                push(&mut out, TokenKind::LineComment, src, start, &cur, start_line);
+            }
+            b'/' if cur.peek(1) == Some(b'*') => {
+                cur.bump();
+                cur.bump();
+                let mut depth = 1usize;
+                while depth > 0 {
+                    match (cur.peek(0), cur.peek(1)) {
+                        (Some(b'/'), Some(b'*')) => {
+                            depth += 1;
+                            cur.bump();
+                            cur.bump();
+                        }
+                        (Some(b'*'), Some(b'/')) => {
+                            depth -= 1;
+                            cur.bump();
+                            cur.bump();
+                        }
+                        (Some(_), _) => {
+                            cur.bump();
+                        }
+                        (None, _) => break,
+                    }
+                }
+                push(&mut out, TokenKind::BlockComment, src, start, &cur, start_line);
+            }
+            b'"' => {
+                lex_plain_string(&mut cur);
+                push(&mut out, TokenKind::StrLit, src, start, &cur, start_line);
+            }
+            b'r' | b'b' if starts_string_prefix(&cur) => {
+                let kind = lex_prefixed_literal(&mut cur);
+                push(&mut out, kind, src, start, &cur, start_line);
+            }
+            b'\'' => {
+                let kind = lex_tick(&mut cur);
+                push(&mut out, kind, src, start, &cur, start_line);
+            }
+            _ if b.is_ascii_digit() => {
+                lex_number(&mut cur);
+                push(&mut out, TokenKind::NumLit, src, start, &cur, start_line);
+            }
+            _ if is_ident_start(b) => {
+                lex_ident(&mut cur);
+                push(&mut out, TokenKind::Ident, src, start, &cur, start_line);
+            }
+            _ => {
+                cur.bump();
+                push(&mut out, TokenKind::Punct(b as char), src, start, &cur, start_line);
+            }
+        }
+    }
+    out
+}
+
+fn push(
+    out: &mut Vec<Token>,
+    kind: TokenKind,
+    src: &str,
+    start: usize,
+    cur: &Cursor<'_>,
+    start_line: u32,
+) {
+    out.push(Token {
+        kind,
+        text: src[start..cur.pos].to_string(),
+        line: start_line,
+        end_line: cur.line,
+    });
+}
+
+/// After seeing `r` or `b` at the cursor: does a string/char literal
+/// prefix follow, as opposed to a plain identifier like `range` or a raw
+/// ident like `r#fn`? Accepted literal shapes: `r"`, `r#…#"`, `b"`,
+/// `b'`, `br"`, `br#…#"`.
+fn starts_string_prefix(cur: &Cursor<'_>) -> bool {
+    let mut i = 1;
+    if cur.peek(0) == Some(b'b') {
+        if cur.peek(1) == Some(b'\'') || cur.peek(1) == Some(b'"') {
+            return true;
+        }
+        if cur.peek(1) != Some(b'r') {
+            return false;
+        }
+        i = 2;
+    }
+    // `r` at offset i-1; count hashes.
+    let mut hashes = 0usize;
+    while cur.peek(i + hashes) == Some(b'#') {
+        hashes += 1;
+    }
+    match cur.peek(i + hashes) {
+        Some(b'"') => true,
+        // `r#ident` raw identifier (or bare `r` ident): not a literal.
+        _ => false,
+    }
+}
+
+/// Lex `r"…"`, `r#"…"#`, `b"…"`, `b'x'`, `br#"…"#` after
+/// `starts_string_prefix` returned true.
+fn lex_prefixed_literal(cur: &mut Cursor<'_>) -> TokenKind {
+    let mut raw = false;
+    if cur.peek(0) == Some(b'b') {
+        cur.bump();
+        if cur.peek(0) == Some(b'\'') {
+            cur.bump(); // opening tick
+            lex_char_body(cur);
+            return TokenKind::CharLit;
+        }
+    }
+    if cur.peek(0) == Some(b'r') {
+        raw = true;
+        cur.bump();
+    }
+    let mut hashes = 0usize;
+    while cur.peek(0) == Some(b'#') {
+        hashes += 1;
+        cur.bump();
+    }
+    debug_assert_eq!(cur.peek(0), Some(b'"'));
+    cur.bump(); // opening quote
+    if raw {
+        // Raw: no escapes; terminated by `"` + `hashes` hashes.
+        'outer: while let Some(c) = cur.bump() {
+            if c == b'"' {
+                for k in 0..hashes {
+                    if cur.peek(k) != Some(b'#') {
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    cur.bump();
+                }
+                break;
+            }
+        }
+    } else {
+        lex_plain_string_body(cur);
+    }
+    TokenKind::StrLit
+}
+
+fn lex_plain_string(cur: &mut Cursor<'_>) {
+    cur.bump(); // opening quote
+    lex_plain_string_body(cur);
+}
+
+fn lex_plain_string_body(cur: &mut Cursor<'_>) {
+    while let Some(c) = cur.bump() {
+        match c {
+            b'\\' => {
+                cur.bump();
+            }
+            b'"' => break,
+            _ => {}
+        }
+    }
+}
+
+/// Everything after a `'`: decide char literal vs lifetime.
+///
+/// - `'\…` is always a char literal (escape).
+/// - `'<ident-chars>'` is a char literal (`'a'`); `'<ident-chars>` with
+///   no closing tick is a lifetime (`'a`, `'static`, `'_`).
+/// - `'<other>` is a char literal (`'('`, `' '`).
+fn lex_tick(cur: &mut Cursor<'_>) -> TokenKind {
+    cur.bump(); // the tick
+    match cur.peek(0) {
+        Some(b'\\') => {
+            // Leave the backslash for `lex_char_body`, whose escape
+            // handling consumes the pair — bumping it here would make
+            // the escaped char in `'\''` look like the terminator.
+            lex_char_body(cur);
+            TokenKind::CharLit
+        }
+        Some(c) if is_ident_continue(c) => {
+            let mut n = 0usize;
+            while cur.peek(n).is_some_and(is_ident_continue) {
+                n += 1;
+            }
+            if cur.peek(n) == Some(b'\'') {
+                for _ in 0..=n {
+                    cur.bump();
+                }
+                TokenKind::CharLit
+            } else {
+                for _ in 0..n {
+                    cur.bump();
+                }
+                TokenKind::Lifetime
+            }
+        }
+        Some(_) => {
+            cur.bump();
+            lex_char_body(cur);
+            TokenKind::CharLit
+        }
+        None => TokenKind::Lifetime,
+    }
+}
+
+/// Consume the remainder of a char literal up to and including the
+/// closing tick (escapes like `'\u{1F980}'` already consumed their
+/// backslash; this just scans for the terminator).
+fn lex_char_body(cur: &mut Cursor<'_>) {
+    while let Some(c) = cur.bump() {
+        match c {
+            b'\\' => {
+                cur.bump();
+            }
+            b'\'' => break,
+            b'\n' => break, // malformed; don't swallow the file
+            _ => {}
+        }
+    }
+}
+
+/// Numbers: `10`, `0x3f`, `1_000u64`, `1.5e-3`. Consumes `.` only when a
+/// digit follows, so `0..p` and `1.max(2)` stop at the dot.
+fn lex_number(cur: &mut Cursor<'_>) {
+    let mut prev = 0u8;
+    while let Some(c) = cur.peek(0) {
+        if is_ident_continue(c) {
+            prev = c;
+            cur.bump();
+        } else if c == b'.' && cur.peek(1).is_some_and(|d| d.is_ascii_digit()) {
+            prev = c;
+            cur.bump();
+        } else if (c == b'+' || c == b'-') && (prev == b'e' || prev == b'E') {
+            prev = c;
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+}
+
+fn lex_ident(cur: &mut Cursor<'_>) {
+    // Raw-ident prefix: `r#fn`.
+    if cur.peek(0) == Some(b'r') && cur.peek(1) == Some(b'#') && cur.peek(2).is_some_and(is_ident_start) {
+        cur.bump();
+        cur.bump();
+    }
+    while cur.peek(0).is_some_and(is_ident_continue) {
+        cur.bump();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let toks = lex("fn main() {}");
+        assert!(toks[0].is_ident("fn"));
+        assert!(toks[1].is_ident("main"));
+        assert!(toks[2].is_punct('('));
+        assert!(toks[3].is_punct(')'));
+        assert!(toks[4].is_punct('{'));
+        assert!(toks[5].is_punct('}'));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let toks = lex(r####"let s = r##"quote " and "# inside"##;"####);
+        let lit = toks.iter().find(|t| t.kind == TokenKind::StrLit).unwrap();
+        assert_eq!(lit.text, r####"r##"quote " and "# inside"##"####);
+        // Nothing inside the raw string leaked out as separate tokens.
+        assert!(!toks.iter().any(|t| t.is_ident("quote")));
+        assert!(toks.last().unwrap().is_punct(';'));
+    }
+
+    #[test]
+    fn raw_string_is_not_raw_ident() {
+        let toks = lex("r#fn r\"x\" r#\"y\"# range");
+        assert_eq!(toks[0].kind, TokenKind::Ident);
+        assert_eq!(toks[0].text, "r#fn");
+        assert_eq!(toks[1].kind, TokenKind::StrLit);
+        assert_eq!(toks[2].kind, TokenKind::StrLit);
+        assert!(toks[3].is_ident("range"));
+    }
+
+    #[test]
+    fn byte_literals() {
+        let toks = lex("b\"bytes\" br#\"raw\"# b'\\n' b'x'");
+        assert_eq!(toks[0].kind, TokenKind::StrLit);
+        assert_eq!(toks[1].kind, TokenKind::StrLit);
+        assert_eq!(toks[2].kind, TokenKind::CharLit);
+        assert_eq!(toks[3].kind, TokenKind::CharLit);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = lex("a /* outer /* inner */ still outer */ b");
+        assert_eq!(toks.len(), 3);
+        assert!(toks[0].is_ident("a"));
+        assert_eq!(toks[1].kind, TokenKind::BlockComment);
+        assert!(toks[1].text.contains("inner"));
+        assert!(toks[2].is_ident("b"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = lex("'a' 'a 'static '_ '\\u{1F980}' ' ' &'x str");
+        assert_eq!(toks[0].kind, TokenKind::CharLit);
+        assert_eq!(toks[1].kind, TokenKind::Lifetime);
+        assert_eq!(toks[1].text, "'a");
+        assert_eq!(toks[2].kind, TokenKind::Lifetime);
+        assert_eq!(toks[2].text, "'static");
+        assert_eq!(toks[3].kind, TokenKind::Lifetime);
+        assert_eq!(toks[4].kind, TokenKind::CharLit);
+        assert_eq!(toks[5].kind, TokenKind::CharLit);
+        assert!(toks[6].is_punct('&'));
+        assert_eq!(toks[7].kind, TokenKind::Lifetime);
+        assert!(toks[8].is_ident("str"));
+    }
+
+    #[test]
+    fn escaped_tick_char_literal() {
+        let toks = lex(r"'\'' x '\\' y");
+        assert_eq!(toks[0].kind, TokenKind::CharLit);
+        assert_eq!(toks[0].text, r"'\''");
+        assert!(toks[1].is_ident("x"));
+        assert_eq!(toks[2].kind, TokenKind::CharLit);
+        assert!(toks[3].is_ident("y"));
+    }
+
+    #[test]
+    fn lifetime_in_generics() {
+        // `<'a>` must not eat the `>` as part of a char literal.
+        let toks = lex("impl<'a, T> Foo<'a> for Bar<T> {}");
+        let lifetimes: Vec<_> =
+            lex("impl<'a, T> Foo<'a> for Bar<T> {}")
+                .into_iter()
+                .filter(|t| t.kind == TokenKind::Lifetime)
+                .collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(toks.iter().any(|t| t.is_punct('>')));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges_or_methods() {
+        assert_eq!(
+            texts("0..p 1.5 1.max(2) 1_000u64 1e-3 0x3f"),
+            vec!["0", ".", ".", "p", "1.5", "1", ".", "max", "(", "2", ")", "1_000u64", "1e-3", "0x3f"]
+        );
+    }
+
+    #[test]
+    fn strings_hide_code() {
+        let toks = lex(r#"let s = "unsafe { lock() }"; x"#);
+        assert!(!toks.iter().any(|t| t.is_ident("unsafe")));
+        assert!(!toks.iter().any(|t| t.is_ident("lock")));
+        assert!(toks.iter().any(|t| t.is_ident("x")));
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let toks = lex(r#""a\"b" c"#);
+        assert_eq!(toks[0].kind, TokenKind::StrLit);
+        assert_eq!(toks[0].text, r#""a\"b""#);
+        assert!(toks[1].is_ident("c"));
+    }
+
+    #[test]
+    fn line_tracking_spans() {
+        let src = "a\n/* two\nlines */\nb \"multi\nline\"\nc";
+        let toks = lex(src);
+        assert_eq!((toks[0].line, toks[0].end_line), (1, 1)); // a
+        assert_eq!((toks[1].line, toks[1].end_line), (2, 3)); // block comment
+        assert_eq!(toks[2].line, 4); // b
+        assert_eq!((toks[3].line, toks[3].end_line), (4, 5)); // string
+        assert_eq!(toks[4].line, 6); // c
+    }
+
+    #[test]
+    fn line_comment_stops_at_newline() {
+        let toks = lex("x // SAFETY: fine\ny");
+        assert_eq!(toks[1].kind, TokenKind::LineComment);
+        assert_eq!(toks[1].text, "// SAFETY: fine");
+        assert_eq!(toks[2].line, 2);
+    }
+
+    #[test]
+    fn unterminated_literals_reach_eof() {
+        assert_eq!(kinds("\"never closed"), vec![TokenKind::StrLit]);
+        assert_eq!(kinds("/* never closed"), vec![TokenKind::BlockComment]);
+        assert_eq!(kinds("r#\"never closed"), vec![TokenKind::StrLit]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained static analysis for the crate's own sources.
+//!
+//! The `sfm_lint` binary (and the `tests/lint.rs` self-check) drive
+//! this module: [`lexer`] turns Rust source into a line-annotated token
+//! stream, [`rules`] runs the project-specific invariant checks over
+//! it. No external dependencies — the same hand-rolled discipline as
+//! `coordinator::json`.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, lint_tree, Config, Diagnostic, RULES};

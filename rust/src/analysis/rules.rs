@@ -1,0 +1,854 @@
+//! Rule engine for the `sfm_lint` static-analysis pass.
+//!
+//! Consumes the token stream from [`super::lexer`] and checks the
+//! project-specific invariants that the runtime test suite cannot see
+//! statically:
+//!
+//! * **safety-comment** — every `unsafe` keyword (block, fn, impl) is
+//!   immediately preceded by a `// SAFETY:` comment or a `# Safety` doc
+//!   section (attribute lines between comment and item are skipped).
+//! * **lock-poison** — every `.lock()` in `src/runtime/`,
+//!   `src/coordinator/`, `src/screening/`, and `src/decompose/` adopts
+//!   poison via `.unwrap_or_else(…into_inner…)`: a sibling worker panic
+//!   must surface as the original panic, never as a masking
+//!   `PoisonError` unwrap.
+//! * **hot-path-alloc** — no allocation-capable, wall-clock, or RNG
+//!   calls inside a configured allowlist of hot functions (the static
+//!   complement of the counting-allocator tests in
+//!   `tests/zero_alloc.rs`, which only see executed paths).
+//! * **no-panic-paths** — no bare `unwrap()` / `expect()`, panicking
+//!   macro, or panicking index expression inside the
+//!   `coordinator/serve.rs` job-handling functions: panic containment
+//!   there must stay typed (`Outcome`/`ServeError`), not implicit.
+//! * **waiver-syntax** — waiver comments are well-formed and name known
+//!   rules.
+//!
+//! A finding can be waived at its site with a comment of the form
+//! `lint: allow(<rule>[, <rule>]) — <reason>` (after `//`); the reason
+//! is mandatory. The waiver covers its own line and the first code line
+//! below its comment block.
+
+use super::lexer::{lex, Token, TokenKind};
+use std::fmt;
+use std::path::Path;
+
+/// `(name, summary)` for every rule the engine knows.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "safety-comment",
+        "every `unsafe` block/fn/impl is immediately preceded by a SAFETY comment",
+    ),
+    (
+        "lock-poison",
+        "`.lock()` in runtime/coordinator/screening/decompose adopts poison via unwrap_or_else(..into_inner..)",
+    ),
+    (
+        "hot-path-alloc",
+        "no allocation, wall-clock, or RNG calls inside the hot-path fn allowlist",
+    ),
+    (
+        "no-panic-paths",
+        "no bare unwrap/expect, panicking macro, or panicking index in serve job paths",
+    ),
+    (
+        "waiver-syntax",
+        "waiver comments are well-formed and name known rules",
+    ),
+];
+
+fn known_rule(name: &str) -> Option<&'static str> {
+    RULES.iter().map(|&(n, _)| n).find(|&n| n == name)
+}
+
+/// One lint finding, printed as `file:line: [rule] message`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Where each scoped rule applies. Paths are matched against the
+/// `/`-normalized file label: `lock_paths` by substring, the fn lists by
+/// path suffix.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    /// `(path suffix, fn name)` — bodies subject to **hot-path-alloc**.
+    pub hot_fns: Vec<(String, String)>,
+    /// Path substrings subject to **lock-poison**.
+    pub lock_paths: Vec<String>,
+    /// `(path suffix, fn name)` — bodies subject to **no-panic-paths**.
+    pub no_panic_fns: Vec<(String, String)>,
+}
+
+impl Config {
+    /// The allowlists for this repository: the verified-allocation-free
+    /// kernels (greedy pass, prox inner loops, pooled reducers) and the
+    /// serve job path. `argsort_desc` and `CholeskyFactor::solve` are
+    /// deliberately absent — they are the documented allocating
+    /// conveniences; the `_into` variants are the hot ones.
+    pub fn default_for_repo() -> Config {
+        let hot: &[(&str, &[&str])] = &[
+            (
+                "src/linalg/vecops.rs",
+                &[
+                    "dot",
+                    "dot4",
+                    "dot_gather4",
+                    "norm2_sq",
+                    "axpy",
+                    "axpy4",
+                    "add_assign4",
+                    "sweep4",
+                    "cover_gain4",
+                    "relu_mac_col4",
+                    "max_update_col4",
+                    "insertion_repair",
+                    "argsort_desc_into",
+                    "argsort_desc_adaptive",
+                    "argsort_desc_remap",
+                    "project_indices",
+                ],
+            ),
+            ("src/linalg/cholesky.rs", &["push", "remove", "retain", "solve_into"]),
+            ("src/decompose/chain.rs", &["tv_prox_into"]),
+            ("src/solvers/pav.rs", &["run"]),
+            ("src/lovasz.rs", &["accumulate_pass"]),
+            ("src/submodular/kernel_cut.rs", &["prefix_gains_scratch"]),
+            (
+                "src/submodular/cut.rs",
+                &["prefix_gains_scratch", "chunked_adjacency_sum", "fold_partials"],
+            ),
+        ];
+        let mut hot_fns = Vec::new();
+        for &(file, fns) in hot {
+            for &f in fns {
+                hot_fns.push((file.to_string(), f.to_string()));
+            }
+        }
+        let no_panic = [
+            "worker_loop",
+            "serve_one",
+            "run_job",
+            "submit_line_with",
+            "split_envelope",
+            "envelope",
+            "reject",
+            "write_line",
+            "make_pool",
+        ];
+        Config {
+            hot_fns,
+            lock_paths: ["src/runtime/", "src/coordinator/", "src/screening/", "src/decompose/"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            no_panic_fns: no_panic
+                .iter()
+                .map(|f| ("src/coordinator/serve.rs".to_string(), f.to_string()))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-line source classification
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+struct LineInfo {
+    /// A non-comment token covers this line.
+    has_code: bool,
+    /// A comment token covers this line.
+    has_comment: bool,
+    /// The first non-comment token starting on this line is `#`
+    /// (attribute line).
+    starts_attr: bool,
+    /// Comment texts starting on this line.
+    comments: Vec<String>,
+}
+
+/// 1-indexed line table (`lines[0]` unused).
+fn classify_lines(tokens: &[Token]) -> Vec<LineInfo> {
+    let max = tokens.iter().map(|t| t.end_line).max().unwrap_or(0) as usize;
+    let mut lines: Vec<LineInfo> = vec![LineInfo::default(); max + 1];
+    for t in tokens {
+        let span = t.line as usize..=t.end_line as usize;
+        if t.is_comment() {
+            for l in span {
+                lines[l].has_comment = true;
+            }
+            lines[t.line as usize].comments.push(t.text.clone());
+        } else {
+            for l in span {
+                lines[l].has_code = true;
+            }
+        }
+    }
+    // Second pass: mark attribute lines (first code token on the line is
+    // `#`). Token order is source order, so the first non-comment token
+    // whose start line is `l` decides.
+    let mut seen = vec![false; max + 1];
+    for t in tokens {
+        if t.is_comment() {
+            continue;
+        }
+        let l = t.line as usize;
+        if !seen[l] {
+            seen[l] = true;
+            lines[l].starts_attr = t.is_punct('#');
+        }
+    }
+    lines
+}
+
+impl LineInfo {
+    fn comment_only(&self) -> bool {
+        self.has_comment && !self.has_code
+    }
+    fn attr_only(&self) -> bool {
+        self.has_code && self.starts_attr
+    }
+}
+
+/// Does the comment context of code line `line` satisfy `pred`? Checks
+/// trailing comments on the line itself, then walks upward through the
+/// contiguous block of comment-only lines, skipping attribute lines
+/// (`#[inline]` between a SAFETY comment and its fn is fine). Stops at
+/// the first blank or code line.
+fn context_has(lines: &[LineInfo], line: usize, pred: impl Fn(&str) -> bool) -> bool {
+    if lines.get(line).is_some_and(|l| l.comments.iter().any(|c| pred(c))) {
+        return true;
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        let info = &lines[l];
+        if info.attr_only() {
+            l -= 1;
+            continue;
+        }
+        if info.comment_only() {
+            if info.comments.iter().any(|c| pred(c)) {
+                return true;
+            }
+            l -= 1;
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// The code line a comment block at `line` annotates: the first
+/// non-blank, non-comment, non-attribute line at or below it.
+fn annotated_code_line(lines: &[LineInfo], line: usize) -> Option<usize> {
+    let mut l = line;
+    while l < lines.len() {
+        let info = &lines[l];
+        if info.has_code && !info.starts_attr {
+            return Some(l);
+        }
+        if !info.has_code && !info.has_comment && l != line {
+            return None; // blank line ends the block
+        }
+        l += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Waivers
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Waiver {
+    rules: Vec<&'static str>,
+    /// Lines this waiver covers (its own line + the annotated code line).
+    covers: Vec<usize>,
+}
+
+fn strip_comment_markers(text: &str) -> &str {
+    let t = text.trim_start();
+    let t = t
+        .strip_prefix("//!")
+        .or_else(|| t.strip_prefix("///"))
+        .or_else(|| t.strip_prefix("//"))
+        .unwrap_or(t);
+    let t = match t.trim_start().strip_prefix("/*") {
+        Some(inner) => inner.strip_suffix("*/").unwrap_or(inner),
+        None => t,
+    };
+    t.trim()
+}
+
+/// Parse `lint: allow(rule[, rule]) — reason` from a stripped comment
+/// body known to start with `lint:`. Returns the named rules or an
+/// error message for the waiver-syntax diagnostic.
+fn parse_waiver(body: &str) -> Result<Vec<&'static str>, String> {
+    let rest = body.strip_prefix("lint:").expect("caller checked").trim_start();
+    let rest = rest
+        .strip_prefix("allow")
+        .ok_or_else(|| "expected `allow(<rule>)` after `lint:`".to_string())?
+        .trim_start();
+    let rest = rest
+        .strip_prefix('(')
+        .ok_or_else(|| "expected `(` after `allow`".to_string())?;
+    let close = rest
+        .find(')')
+        .ok_or_else(|| "unclosed `(` in waiver".to_string())?;
+    let mut rules = Vec::new();
+    for name in rest[..close].split(',') {
+        let name = name.trim();
+        if name.is_empty() {
+            return Err("empty rule name in waiver".to_string());
+        }
+        match known_rule(name) {
+            Some(r) => rules.push(r),
+            None => return Err(format!("unknown rule `{name}` in waiver")),
+        }
+    }
+    let tail = rest[close + 1..].trim_start();
+    let reason = tail
+        .strip_prefix('\u{2014}') // em dash
+        .or_else(|| tail.strip_prefix('-'))
+        .or_else(|| tail.strip_prefix(':'))
+        .ok_or_else(|| "expected `— <reason>` after the rule list".to_string())?;
+    if reason.trim().is_empty() {
+        return Err("waiver reason must not be empty".to_string());
+    }
+    Ok(rules)
+}
+
+fn collect_waivers(
+    file: &str,
+    lines: &[LineInfo],
+    diags: &mut Vec<Diagnostic>,
+) -> Vec<Waiver> {
+    let mut waivers = Vec::new();
+    for (lno, info) in lines.iter().enumerate().skip(1) {
+        for c in &info.comments {
+            let body = strip_comment_markers(c);
+            if !body.starts_with("lint:") {
+                continue;
+            }
+            match parse_waiver(body) {
+                Ok(rules) => {
+                    let mut covers = vec![lno];
+                    if let Some(code) = annotated_code_line(lines, lno) {
+                        covers.push(code);
+                    }
+                    waivers.push(Waiver { rules, covers });
+                }
+                Err(msg) => diags.push(Diagnostic {
+                    file: file.to_string(),
+                    line: lno as u32,
+                    rule: "waiver-syntax",
+                    msg,
+                }),
+            }
+        }
+    }
+    waivers
+}
+
+// ---------------------------------------------------------------------
+// Rule passes (over the comment-free code view)
+// ---------------------------------------------------------------------
+
+/// Rust keywords that can legally precede `[` without forming an index
+/// expression (`for x in [..]`, `return [..]`, …).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "dyn", "else", "enum",
+    "fn", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "static", "struct", "trait", "type", "unsafe", "use", "where", "while",
+    "yield",
+];
+
+fn rule_safety_comment(
+    file: &str,
+    code: &[&Token],
+    lines: &[LineInfo],
+    diags: &mut Vec<Diagnostic>,
+) {
+    for t in code {
+        if t.is_ident("unsafe") {
+            let has = context_has(lines, t.line as usize, |c| {
+                c.contains("SAFETY") || c.contains("# Safety")
+            });
+            if !has {
+                diags.push(Diagnostic {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "safety-comment",
+                    msg: "`unsafe` without an immediately preceding `// SAFETY:` comment"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn rule_lock_poison(file: &str, code: &[&Token], diags: &mut Vec<Diagnostic>) {
+    for i in 0..code.len() {
+        // `.lock()` …
+        if !(code[i].is_punct('.')
+            && code.get(i + 1).is_some_and(|t| t.is_ident("lock"))
+            && code.get(i + 2).is_some_and(|t| t.is_punct('('))
+            && code.get(i + 3).is_some_and(|t| t.is_punct(')')))
+        {
+            continue;
+        }
+        // … must continue `.unwrap_or_else(` with `into_inner` nearby.
+        let ok = code.get(i + 4).is_some_and(|t| t.is_punct('.'))
+            && code.get(i + 5).is_some_and(|t| t.is_ident("unwrap_or_else"))
+            && code.get(i + 6).is_some_and(|t| t.is_punct('('))
+            && code[i + 7..code.len().min(i + 24)]
+                .iter()
+                .any(|t| t.is_ident("into_inner"));
+        if !ok {
+            diags.push(Diagnostic {
+                file: file.to_string(),
+                line: code[i + 1].line,
+                rule: "lock-poison",
+                msg: "`.lock()` must adopt poison via `.unwrap_or_else(..into_inner..)` \
+                      so sibling-panic shutdown re-raises the original panic"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Find the token range `(start, end)` of the body of `fn name`, i.e.
+/// the indices of its opening and closing braces in `code`. Returns all
+/// bodies when the file defines the name more than once.
+fn fn_bodies(code: &[&Token], name: &str) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < code.len() {
+        if code[i].is_ident("fn") && code[i + 1].is_ident(name) {
+            let mut depth = 0i32; // parens + brackets (generics carry no braces here)
+            let mut j = i + 2;
+            let mut open = None;
+            while j < code.len() {
+                match code[j].kind {
+                    TokenKind::Punct('(') | TokenKind::Punct('[') => depth += 1,
+                    TokenKind::Punct(')') | TokenKind::Punct(']') => depth -= 1,
+                    TokenKind::Punct(';') if depth == 0 => break, // bodyless decl
+                    TokenKind::Punct('{') if depth == 0 => {
+                        open = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(open) = open {
+                let mut braces = 1i32;
+                let mut k = open + 1;
+                while k < code.len() && braces > 0 {
+                    match code[k].kind {
+                        TokenKind::Punct('{') => braces += 1,
+                        TokenKind::Punct('}') => braces -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                out.push((open, k.saturating_sub(1)));
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Forbidden calls for **hot-path-alloc**. `.clone()` and
+/// `push`/`extend`/`resize` are deliberately not listed: amortized
+/// reuse of pre-sized buffers is the crate's sanctioned zero-alloc
+/// pattern, stack clones (`Range`, `Arc` refcounts) are free, and a
+/// token-level pass cannot see types — the counting allocator covers
+/// the dynamic side.
+const HOT_MACROS: &[&str] = &["vec", "format", "println", "eprintln", "print", "eprint"];
+const HOT_METHODS: &[&str] = &["to_vec", "to_string", "to_owned", "collect"];
+const HOT_TYPES: &[&str] = &[
+    "Vec", "String", "Box", "Rc", "Arc", "VecDeque", "HashMap", "HashSet", "BTreeMap",
+    "Instant", "SystemTime", "Pcg64",
+];
+
+fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
+    let t = code[k];
+    if t.kind != TokenKind::Ident {
+        return None;
+    }
+    let name = t.text.as_str();
+    if HOT_MACROS.contains(&name) && code.get(k + 1).is_some_and(|n| n.is_punct('!')) {
+        return Some(format!("`{name}!` allocates"));
+    }
+    if HOT_METHODS.contains(&name)
+        && k > 0
+        && code[k - 1].is_punct('.')
+        && code.get(k + 1).is_some_and(|n| n.is_punct('('))
+    {
+        return Some(format!("`.{name}()` allocates"));
+    }
+    if HOT_TYPES.contains(&name)
+        && code.get(k + 1).is_some_and(|n| n.is_punct(':'))
+        && code.get(k + 2).is_some_and(|n| n.is_punct(':'))
+    {
+        if let Some(m) = code.get(k + 3).filter(|m| m.kind == TokenKind::Ident) {
+            let assoc = m.text.as_str();
+            let bad = match name {
+                "Instant" | "SystemTime" => assoc == "now",
+                "Pcg64" => true, // any RNG construction/use is nondeterministic state
+                _ => matches!(assoc, "new" | "with_capacity" | "from"),
+            };
+            if bad {
+                return Some(format!("`{name}::{assoc}` is not allowed on the hot path"));
+            }
+        }
+    }
+    None
+}
+
+fn rule_hot_path(
+    file: &str,
+    code: &[&Token],
+    cfg: &Config,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for (suffix, fname) in &cfg.hot_fns {
+        if !file.ends_with(suffix.as_str()) {
+            continue;
+        }
+        for (open, close) in fn_bodies(code, fname) {
+            for k in open + 1..close {
+                if let Some(what) = hot_path_violation(code, k) {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: code[k].line,
+                        rule: "hot-path-alloc",
+                        msg: format!("{what} (hot fn `{fname}`)"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+const PANIC_MACROS: &[&str] = &[
+    "panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne",
+];
+
+fn no_panic_violation(code: &[&Token], k: usize) -> Option<String> {
+    let t = code[k];
+    match &t.kind {
+        TokenKind::Ident => {
+            let name = t.text.as_str();
+            if (name == "unwrap" || name == "expect")
+                && k > 0
+                && code[k - 1].is_punct('.')
+                && code.get(k + 1).is_some_and(|n| n.is_punct('('))
+            {
+                return Some(format!("bare `.{name}()` can panic"));
+            }
+            if PANIC_MACROS.contains(&name) && code.get(k + 1).is_some_and(|n| n.is_punct('!'))
+            {
+                return Some(format!("`{name}!` panics"));
+            }
+            None
+        }
+        TokenKind::Punct('[') if k > 0 => {
+            let prev = code[k - 1];
+            let indexes = match &prev.kind {
+                TokenKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()),
+                TokenKind::Punct(')') | TokenKind::Punct(']') => true,
+                _ => false,
+            };
+            if indexes {
+                return Some("panicking index expression (use `get`/typed errors)".to_string());
+            }
+            None
+        }
+        _ => None,
+    }
+}
+
+fn rule_no_panic(
+    file: &str,
+    code: &[&Token],
+    cfg: &Config,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for (suffix, fname) in &cfg.no_panic_fns {
+        if !file.ends_with(suffix.as_str()) {
+            continue;
+        }
+        for (open, close) in fn_bodies(code, fname) {
+            for k in open + 1..close {
+                if let Some(what) = no_panic_violation(code, k) {
+                    diags.push(Diagnostic {
+                        file: file.to_string(),
+                        line: code[k].line,
+                        rule: "no-panic-paths",
+                        msg: format!("{what} (job path `{fname}`)"),
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------
+
+/// Lint one source file. `file_label` is used for both path-scoped rule
+/// matching (normalized to `/` separators) and diagnostics.
+pub fn lint_source(file_label: &str, src: &str, cfg: &Config) -> Vec<Diagnostic> {
+    let file = file_label.replace('\\', "/");
+    let tokens = lex(src);
+    let lines = classify_lines(&tokens);
+    let code: Vec<&Token> = tokens.iter().filter(|t| !t.is_comment()).collect();
+
+    let mut diags = Vec::new();
+    let waivers = collect_waivers(&file, &lines, &mut diags);
+    rule_safety_comment(&file, &code, &lines, &mut diags);
+    rule_lock_poison_scoped(&file, &code, cfg, &mut diags);
+    rule_hot_path(&file, &code, cfg, &mut diags);
+    rule_no_panic(&file, &code, cfg, &mut diags);
+
+    diags.retain(|d| {
+        d.rule == "waiver-syntax"
+            || !waivers
+                .iter()
+                .any(|w| w.rules.contains(&d.rule) && w.covers.contains(&(d.line as usize)))
+    });
+    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    diags
+}
+
+fn rule_lock_poison_scoped(
+    file: &str,
+    code: &[&Token],
+    cfg: &Config,
+    diags: &mut Vec<Diagnostic>,
+) {
+    if cfg.lock_paths.iter().any(|p| file.contains(p.as_str())) {
+        rule_lock_poison(file, code, diags);
+    }
+}
+
+/// Recursively lint every `*.rs` file under `root`, skipping `target`,
+/// `vendor`, and VCS directories. Diagnostics come back sorted by
+/// `(file, line, rule)`.
+pub fn lint_tree(root: &Path, cfg: &Config) -> std::io::Result<(usize, Vec<Diagnostic>)> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut diags = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        let label = f.to_string_lossy().replace('\\', "/");
+        diags.extend(lint_source(&label, &src, cfg));
+    }
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok((files.len(), diags))
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "target" || name == "vendor" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_hot(file: &str, f: &str) -> Config {
+        Config { hot_fns: vec![(file.to_string(), f.to_string())], ..Config::default() }
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_flagged_with_line() {
+        let src = "fn f() {\n    let x = unsafe { g() };\n}\n";
+        let d = lint_source("src/a.rs", src, &Config::default());
+        assert_eq!(rules_of(&d), vec!["safety-comment"]);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_above_or_trailing_accepted() {
+        let above = "fn f() {\n    // SAFETY: g is fine here.\n    let x = unsafe { g() };\n}\n";
+        assert!(lint_source("src/a.rs", above, &Config::default()).is_empty());
+        let trailing = "fn f() {\n    let x = unsafe { g() }; // SAFETY: fine\n}\n";
+        assert!(lint_source("src/a.rs", trailing, &Config::default()).is_empty());
+    }
+
+    #[test]
+    fn safety_walk_skips_attributes_and_doc_sections_count() {
+        let src = "/// Does things.\n///\n/// # Safety\n///\n/// Caller checks bounds.\n#[inline]\npub unsafe fn f() {}\n";
+        assert!(lint_source("src/a.rs", src, &Config::default()).is_empty());
+    }
+
+    #[test]
+    fn safety_blocked_by_blank_line() {
+        let src = "// SAFETY: stale comment.\n\nunsafe fn f() {}\n";
+        let d = lint_source("src/a.rs", src, &Config::default());
+        assert_eq!(rules_of(&d), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_ignored() {
+        let src = "fn f() {\n    let s = \"unsafe { }\";\n    // unsafe in prose is fine\n}\n";
+        assert!(lint_source("src/a.rs", src, &Config::default()).is_empty());
+    }
+
+    #[test]
+    fn lock_without_poison_adoption_flagged_in_scope_only() {
+        let src = "fn f() {\n    let g = m.lock().unwrap();\n}\n";
+        let d = lint_source("src/runtime/x.rs", src, &Config::default_for_repo());
+        assert_eq!(rules_of(&d), vec!["lock-poison"]);
+        assert_eq!(d[0].line, 2);
+        // Same source outside the scoped dirs: clean.
+        assert!(lint_source("tests/x.rs", src, &Config::default_for_repo()).is_empty());
+    }
+
+    #[test]
+    fn lock_adopting_poison_passes() {
+        let closure = "fn f() {\n    let g = m.lock().unwrap_or_else(|e| e.into_inner());\n}\n";
+        assert!(lint_source("src/runtime/x.rs", closure, &Config::default_for_repo()).is_empty());
+        let path_form = "fn f() {\n    let g = m.lock().unwrap_or_else(PoisonError::into_inner);\n}\n";
+        assert!(lint_source("src/screening/x.rs", path_form, &Config::default_for_repo())
+            .is_empty());
+    }
+
+    #[test]
+    fn hot_path_flags_alloc_clock_and_rng() {
+        let src = "fn hot(xs: &[f64]) -> f64 {\n    let v = Vec::new();\n    let t = Instant::now();\n    let s: Vec<f64> = xs.iter().collect();\n    let r = Pcg64::seeded(1);\n    0.0\n}\n";
+        let d = lint_source("src/linalg/vecops.rs", src, &cfg_hot("src/linalg/vecops.rs", "hot"));
+        assert_eq!(
+            rules_of(&d),
+            vec!["hot-path-alloc", "hot-path-alloc", "hot-path-alloc", "hot-path-alloc"]
+        );
+        assert_eq!(d[0].line, 2);
+        assert_eq!(d[1].line, 3);
+    }
+
+    #[test]
+    fn hot_path_ignores_other_fns_and_reuse_pattern() {
+        let src = "fn cold() { let v = Vec::new(); }\nfn hot(out: &mut Vec<f64>) {\n    out.clear();\n    out.resize(4, 0.0);\n    out.push(1.0);\n}\n";
+        assert!(lint_source("src/x.rs", src, &cfg_hot("src/x.rs", "hot")).is_empty());
+    }
+
+    #[test]
+    fn hot_path_vec_in_signature_is_fine() {
+        let src = "fn hot(x: &mut Vec<f64>) -> Option<Vec<f64>> {\n    x.truncate(0);\n    None\n}\n";
+        assert!(lint_source("src/x.rs", src, &cfg_hot("src/x.rs", "hot")).is_empty());
+    }
+
+    #[test]
+    fn no_panic_flags_unwrap_expect_macros_and_indexing() {
+        let cfg = Config {
+            no_panic_fns: vec![("src/coordinator/serve.rs".into(), "run_job".into())],
+            ..Config::default()
+        };
+        let src = "fn run_job(xs: &[u8]) {\n    let a = xs.first().unwrap();\n    let b = xs.iter().next().expect(\"x\");\n    let c = xs[0];\n    panic!(\"no\");\n}\n";
+        let d = lint_source("src/coordinator/serve.rs", src, &cfg);
+        assert_eq!(rules_of(&d).len(), 4);
+        assert_eq!(d[0].line, 2);
+        assert_eq!(d[2].line, 4);
+    }
+
+    #[test]
+    fn no_panic_allows_typed_fallbacks() {
+        let cfg = Config {
+            no_panic_fns: vec![("serve.rs".into(), "run_job".into())],
+            ..Config::default()
+        };
+        let src = "fn run_job(xs: &[u8]) {\n    let a = xs.first().unwrap_or(&0);\n    let b = xs.get(0).unwrap_or_else(|| &0);\n    for x in [1, 2] { let _ = x; }\n    let v = vec![0u8; 3];\n    let _ = (a, b, v);\n}\n";
+        assert!(lint_source("src/coordinator/serve.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn waiver_suppresses_named_rule_on_next_code_line() {
+        let src = "fn f() {\n    // lint: allow(safety-comment) — audited in PR 7.\n    let x = unsafe { g() };\n}\n";
+        assert!(lint_source("src/a.rs", src, &Config::default()).is_empty());
+    }
+
+    #[test]
+    fn waiver_only_covers_named_rules() {
+        let src = "fn f() {\n    // lint: allow(lock-poison) - wrong rule.\n    let x = unsafe { g() };\n}\n";
+        let d = lint_source("src/a.rs", src, &Config::default());
+        assert_eq!(rules_of(&d), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn malformed_waivers_reported() {
+        for bad in [
+            "// lint: allow(safety-comment)",         // missing reason
+            "// lint: allow safety-comment — x",      // missing parens
+            "// lint: allow(not-a-rule) — x",         // unknown rule
+            "// lint: allow() — x",                   // empty list
+        ] {
+            let src = format!("fn f() {{\n    {bad}\n    let y = 1;\n}}\n");
+            let d = lint_source("src/a.rs", &src, &Config::default());
+            assert_eq!(rules_of(&d), vec!["waiver-syntax"], "case: {bad}");
+            assert_eq!(d[0].line, 2);
+        }
+    }
+
+    #[test]
+    fn waiver_separators_and_multi_rule() {
+        for sep in ["—", "-", ":"] {
+            let src = format!(
+                "fn f() {{\n    // lint: allow(safety-comment, lock-poison) {sep} reason here\n    let x = unsafe {{ m.lock().unwrap() }};\n}}\n"
+            );
+            let d = lint_source("src/runtime/x.rs", &src, &Config::default_for_repo());
+            assert!(d.is_empty(), "sep {sep}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn fn_bodies_skip_trait_declarations() {
+        let src = "trait T {\n    fn hot(&self);\n}\nimpl T for S {\n    fn hot(&self) { let v = Vec::new(); let _ = v; }\n}\n";
+        let d = lint_source("src/x.rs", src, &cfg_hot("src/x.rs", "hot"));
+        assert_eq!(rules_of(&d), vec!["hot-path-alloc"]);
+        assert_eq!(d[0].line, 5);
+    }
+
+    #[test]
+    fn default_repo_config_names_known_rules_only() {
+        let cfg = Config::default_for_repo();
+        assert!(!cfg.hot_fns.is_empty());
+        assert!(!cfg.lock_paths.is_empty());
+        assert!(!cfg.no_panic_fns.is_empty());
+        for (name, _) in RULES {
+            assert!(known_rule(name).is_some());
+        }
+    }
+}

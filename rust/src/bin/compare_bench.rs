@@ -25,14 +25,25 @@ fn load(path: &str) -> Result<Vec<BenchRecord>> {
 fn run(baseline: &str, new: &str, tol: f64) -> Result<bool> {
     let base = load(baseline)?;
     let fresh = load(new)?;
-    let matched = fresh
+    let matched: Vec<(&str, usize)> = fresh
         .iter()
         .filter(|n| base.iter().any(|b| b.op == n.op && b.p == n.p))
-        .count();
+        .map(|n| (n.op.as_str(), n.p))
+        .collect();
+    let base_only: Vec<(&str, usize)> = base
+        .iter()
+        .filter(|b| !fresh.iter().any(|n| n.op == b.op && n.p == b.p))
+        .map(|b| (b.op.as_str(), b.p))
+        .collect();
+    let fresh_only: Vec<(&str, usize)> = fresh
+        .iter()
+        .filter(|n| !base.iter().any(|b| b.op == n.op && b.p == n.p))
+        .map(|n| (n.op.as_str(), n.p))
+        .collect();
     // Disjoint (op, p) sets mean the gate is comparing nothing — e.g. a
     // baseline recorded at the pinned trajectory sizes vs a smoke run at
     // SFM_BENCH_SIZES=64,128. That's a misconfiguration, not a pass.
-    if matched == 0 && !base.is_empty() && !fresh.is_empty() {
+    if matched.is_empty() && !base.is_empty() && !fresh.is_empty() {
         anyhow::bail!(
             "no overlapping (op, p) rows between {baseline} and {new} — were the \
              two trajectories recorded at different SFM_BENCH_SIZES?"
@@ -43,9 +54,26 @@ fn run(baseline: &str, new: &str, tol: f64) -> Result<bool> {
         "compare_bench: {} baseline rows, {} new rows, {} matched, tol {:.0}%",
         base.len(),
         fresh.len(),
-        matched,
+        matched.len(),
         tol * 100.0
     );
+    // Spell out what the gate actually covered: a thin overlap (most rows
+    // skipped on one side) should be visible in the CI log, not inferred.
+    for (op, p) in &matched {
+        println!("  compared {op}@p={p}");
+    }
+    if !base_only.is_empty() {
+        println!("  skipped {} baseline-only row(s):", base_only.len());
+        for (op, p) in &base_only {
+            println!("    baseline-only {op}@p={p}");
+        }
+    }
+    if !fresh_only.is_empty() {
+        println!("  skipped {} new-only row(s):", fresh_only.len());
+        for (op, p) in &fresh_only {
+            println!("    new-only {op}@p={p}");
+        }
+    }
     for r in &regressions {
         println!(
             "REGRESSION {}@p={}: median {:.3e}s -> {:.3e}s ({:+.1}%)",

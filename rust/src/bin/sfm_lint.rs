@@ -1,0 +1,91 @@
+//! `sfm_lint` — the project's invariant lint pass (see LINTS.md).
+//!
+//! Usage:
+//!
+//! ```text
+//! sfm_lint [--root <dir>]... [--hot <file-suffix>::<fn>]... [--list-rules]
+//! ```
+//!
+//! With no `--root`, lints the crate's own `src/`, `tests/`, and
+//! `benches/` directories (located via `CARGO_MANIFEST_DIR` when run
+//! through `cargo run --bin sfm_lint`, else the current directory).
+//!
+//! Exit codes: `0` clean, `1` violations found, `2` usage or I/O error.
+
+use sfm_screen::analysis::{lint_tree, Config, RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut cfg = Config::default_for_repo();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--list-rules" => {
+                for (name, summary) in RULES {
+                    println!("{name:16} {summary}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--root" => match args.next() {
+                Some(dir) => roots.push(PathBuf::from(dir)),
+                None => return usage("--root needs a directory"),
+            },
+            "--hot" => {
+                let spec = args.next();
+                match spec.as_deref().and_then(|s| s.split_once("::")) {
+                    Some((f, n)) => cfg.hot_fns.push((f.to_string(), n.to_string())),
+                    None => return usage("--hot needs <file-suffix>::<fn>"),
+                }
+            }
+            "--help" | "-h" => {
+                println!("sfm_lint [--root <dir>]... [--hot <file-suffix>::<fn>]... [--list-rules]");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage(&format!("unknown argument `{other}`")),
+        }
+    }
+    if roots.is_empty() {
+        let base = std::env::var("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."));
+        for sub in ["src", "tests", "benches"] {
+            let dir = base.join(sub);
+            if dir.is_dir() {
+                roots.push(dir);
+            }
+        }
+    }
+
+    let mut total_files = 0usize;
+    let mut diags = Vec::new();
+    for root in &roots {
+        match lint_tree(root, &cfg) {
+            Ok((n, d)) => {
+                total_files += n;
+                diags.extend(d);
+            }
+            Err(e) => {
+                eprintln!("sfm_lint: error reading {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("sfm_lint: {total_files} files clean ({} rules)", RULES.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("sfm_lint: {} violation(s) in {total_files} files", diags.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn usage(msg: &str) -> ExitCode {
+    eprintln!("sfm_lint: {msg}");
+    eprintln!("usage: sfm_lint [--root <dir>]... [--hot <file-suffix>::<fn>]... [--list-rules]");
+    ExitCode::from(2)
+}

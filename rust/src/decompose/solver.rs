@@ -469,23 +469,31 @@ impl<'a> BlockProxSolver<'a> {
                 let arenas = &self.arenas;
                 let y = &self.y[..];
                 let opts = &self.opts;
+                // Poison adoption is sound here: a `best_response` panic
+                // always re-raises through `WorkerPool::run` before any
+                // later phase re-locks these mutexes, so adopting never
+                // launders torn state — it only keeps the sibling lanes'
+                // unwinds from masking the original panic with a
+                // secondary `PoisonError` one (PR-6 lock discipline).
                 pool.run(&|w: usize| {
-                    let mut arena = arenas[w].lock().expect("arena poisoned");
+                    let mut arena = arenas[w].lock().unwrap_or_else(|e| e.into_inner());
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= members.len() {
                             break;
                         }
-                        let mut st =
-                            comps[members[i] as usize].lock().expect("component poisoned");
+                        let mut st = comps[members[i] as usize]
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner());
                         best_response(&mut st, &mut arena, y, opts);
                     }
                 });
             }
             _ => {
-                let mut arena = self.arenas[0].lock().expect("arena poisoned");
+                let mut arena = self.arenas[0].lock().unwrap_or_else(|e| e.into_inner());
                 for &ci in members {
-                    let mut st = self.comps[ci as usize].lock().expect("component poisoned");
+                    let mut st =
+                        self.comps[ci as usize].lock().unwrap_or_else(|e| e.into_inner());
                     best_response(&mut st, &mut arena, &self.y, &self.opts);
                 }
             }
@@ -577,6 +585,7 @@ impl ProxSolver for BlockProxSolver<'_> {
         let (_info, f_w) = self.shared.greedy_and_refine(f, &self.y, &mut q);
         let wolfe_gap = norm2_sq(&self.y) - dot(&self.y, &q);
         self.q = q;
+        crate::lovasz::debug_assert_dual_feasible(f, &self.y, "BlockProxSolver::step");
         self.shared.finish_step(f_w, &self.y, wolfe_gap)
     }
 
@@ -637,6 +646,7 @@ impl ProxSolver for BlockProxSolver<'_> {
         self.d.resize(p, 0.0);
         self.aggregate();
         self.close_gap(f, w_init);
+        crate::lovasz::debug_assert_dual_feasible(f, &self.y, "BlockProxSolver::reset");
     }
 
     fn reset_mapped(&mut self, f: &dyn Submodular, w_init: &[f64], map: &ContractionMap) {
@@ -716,6 +726,7 @@ impl ProxSolver for BlockProxSolver<'_> {
         self.d.truncate(p);
         self.aggregate();
         self.close_gap(f, w_init);
+        crate::lovasz::debug_assert_dual_feasible(f, &self.y, "BlockProxSolver::reset");
     }
 
     fn greedy_full_sorts(&self) -> u64 {

@@ -43,6 +43,12 @@
 //! self-contained afterwards and falls back to a pure-rust screening
 //! backend when artifacts are absent.
 
+// Every unsafe operation must sit in an explicit `unsafe` block with its
+// own `// SAFETY:` comment, even inside `unsafe fn` — enforced here and
+// by the `safety-comment` rule of `sfm_lint` (see LINTS.md).
+#![warn(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod brute;
 pub mod cli;
 pub mod config;

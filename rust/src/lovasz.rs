@@ -365,6 +365,71 @@ pub fn inner(w: &[f64], s: &[f64]) -> f64 {
     dot(w, s)
 }
 
+/// Polynomial dual-feasibility check: the largest violation of a
+/// *necessary* family of `s ∈ B(F)` constraints, checkable at solver
+/// scale (unlike [`in_base_polytope`], which is `O(2^p)`):
+///
+/// * `|s(V) − F(V)|` — the base-polytope hyperplane, and
+/// * `s(A_k) − F(A_k)` for the chain of prefixes `A_k` of the ground
+///   set ordered by `s` **descending** — among all cardinality-`k`
+///   sets, `A_k` maximizes `s(A)`, so this is the most violated
+///   cardinality-`k` constraint in that chain.
+///
+/// For `p ≤ 12` the exhaustive subset family is checked too, making the
+/// result exact on the sizes unit tests use. Nonpositive (up to
+/// roundoff) means no violation found. Allocates — diagnostic/assertion
+/// use, not hot-path.
+pub fn dual_feasibility_violation<F: Submodular + ?Sized>(f: &F, s: &[f64]) -> f64 {
+    let p = f.ground_size();
+    assert_eq!(s.len(), p);
+    if p == 0 {
+        return 0.0;
+    }
+    let order = argsort_desc(s);
+    let mut gains = vec![0.0; p];
+    f.prefix_gains(&order, &mut gains);
+    let mut viol: f64 = 0.0;
+    let mut s_pref = 0.0;
+    let mut f_pref = 0.0;
+    for (&j, &g) in order.iter().zip(gains.iter()) {
+        s_pref += s[j];
+        f_pref += g;
+        viol = viol.max(s_pref - f_pref);
+    }
+    // After the full chain, `s_pref = s(V)` and `f_pref = F(V)`: the
+    // hyperplane constraint is an equality.
+    viol = viol.max((s_pref - f_pref).abs());
+    if p <= 12 {
+        for mask in 1u64..(1 << p) {
+            let set: Vec<bool> = (0..p).map(|i| mask >> i & 1 == 1).collect();
+            let s_a: f64 = (0..p).filter(|&i| set[i]).map(|i| s[i]).sum();
+            viol = viol.max(s_a - f.eval(&set));
+        }
+    }
+    viol
+}
+
+/// `debug-invariants` teeth for the ROADMAP invariant "the dual iterate
+/// stays in `B(F̂)` across major-iteration boundaries": panics when
+/// [`dual_feasibility_violation`] exceeds a roundoff-scaled tolerance.
+/// Uses only fresh buffers and the allocating oracle path, so it never
+/// perturbs a solver's persisted workspace (argsort order, scratch).
+#[cfg(feature = "debug-invariants")]
+pub fn debug_assert_dual_feasible<F: Submodular + ?Sized>(f: &F, s: &[f64], site: &str) {
+    let viol = dual_feasibility_violation(f, s);
+    let scale = 1.0 + s.iter().map(|x| x.abs()).sum::<f64>();
+    assert!(
+        viol <= 1e-7 * scale,
+        "dual iterate left B(F) at {site}: violation {viol:.3e} (scale {scale:.3e})",
+    );
+}
+
+/// No-op without `debug-invariants` (checks allocate and cost an oracle
+/// pass; release hot loops must not pay for them).
+#[cfg(not(feature = "debug-invariants"))]
+#[inline(always)]
+pub fn debug_assert_dual_feasible<F: Submodular + ?Sized>(_f: &F, _s: &[f64], _site: &str) {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -389,6 +454,35 @@ mod tests {
             } else {
                 Err("greedy vertex outside B(F)".into())
             }
+        });
+    }
+
+    #[test]
+    fn feasibility_violation_zero_on_vertices_positive_off() {
+        forall_rng(20, |rng| {
+            let p = 2 + rng.below(9);
+            let m = rng.uniform_vec(p, -1.0, 1.0);
+            let f = ConcaveCardFn::sqrt(p, rng.uniform(0.5, 2.0), m);
+            let w = rng.normal_vec(p);
+            let mut ws = GreedyWorkspace::new(p);
+            let mut s = vec![0.0; p];
+            greedy_base_vertex(&f, &w, &mut ws, &mut s);
+            let v = dual_feasibility_violation(&f, &s);
+            if v > 1e-9 {
+                return Err(format!("vertex flagged infeasible: {v:.3e}"));
+            }
+            // Move mass onto the greedy-first element while keeping s(V)
+            // fixed: its singleton constraint is tight at a vertex
+            // (`s[hi] = F({hi})`), so the move violates it by exactly 1.
+            let hi = ws.order[0];
+            let lo = ws.order[p - 1];
+            s[hi] += 1.0;
+            s[lo] -= 1.0;
+            let perturbed = dual_feasibility_violation(&f, &s);
+            if perturbed <= 1e-9 {
+                return Err(format!("perturbed iterate not flagged: {perturbed:.3e}"));
+            }
+            Ok(())
         });
     }
 

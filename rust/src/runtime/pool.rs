@@ -176,15 +176,29 @@ impl WorkerPool {
         assert!(chunk > 0, "chunk size must be positive");
         let nchunks = n.div_ceil(chunk);
         let next = AtomicUsize::new(0);
+        #[cfg(feature = "debug-invariants")]
+        let executed = AtomicUsize::new(0);
+        #[cfg(feature = "debug-invariants")]
+        let executed_ref = &executed;
         let job = move |_lane: usize| loop {
             let c = next.fetch_add(1, Ordering::Relaxed);
             if c >= nchunks {
                 break;
             }
+            #[cfg(feature = "debug-invariants")]
+            executed_ref.fetch_add(1, Ordering::Relaxed);
             let lo = c * chunk;
             body(lo..n.min(lo + chunk));
         };
         self.run_with_caller(&job);
+        // Chunk-grid coverage: every chunk was dispatched to exactly one
+        // lane (the cursor can neither skip nor repeat a chunk index).
+        #[cfg(feature = "debug-invariants")]
+        assert_eq!(
+            executed.load(Ordering::Relaxed),
+            nchunks,
+            "run_chunks chunk-grid coverage",
+        );
     }
 
     /// Publish `job` to the workers and wake them. Must be paired with
@@ -242,6 +256,12 @@ impl std::fmt::Debug for WorkerPool {
 pub struct DisjointSlice<'a, T> {
     ptr: *mut T,
     len: usize,
+    /// Ranges handed out so far, for the `debug-invariants` overlap
+    /// check. Claims are never released: the crate creates one wrapper
+    /// per fork-join sweep, so claiming an index twice is a bug even
+    /// after the first borrow ended.
+    #[cfg(feature = "debug-invariants")]
+    claims: Mutex<Vec<(usize, usize)>>,
     _marker: PhantomData<&'a mut [T]>,
 }
 
@@ -251,12 +271,21 @@ pub struct DisjointSlice<'a, T> {
 // are written from other threads; `Sync` on the wrapper because workers
 // access it by `&` reference.
 unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+// SAFETY: moving the wrapper to another thread moves only the raw
+// pointer and length; the elements it can reach are `T: Send`, and every
+// access still goes through the `slice_mut` disjointness contract.
 unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
 
 impl<'a, T> DisjointSlice<'a, T> {
     /// Wrap a mutable slice for disjoint parallel writes.
     pub fn new(slice: &'a mut [T]) -> Self {
-        DisjointSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+        DisjointSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            #[cfg(feature = "debug-invariants")]
+            claims: Mutex::new(Vec::new()),
+            _marker: PhantomData,
+        }
     }
 
     /// Length of the underlying slice.
@@ -280,7 +309,32 @@ impl<'a, T> DisjointSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, range: Range<usize>) -> &mut [T] {
         debug_assert!(range.start <= range.end && range.end <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+        #[cfg(feature = "debug-invariants")]
+        self.check_disjoint(&range);
+        // SAFETY: per the `# Safety` contract above, `range` is in
+        // bounds and disjoint from every other live range, so the
+        // pointer arithmetic stays inside the wrapped slice and the
+        // produced `&mut` aliases nothing.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.ptr.add(range.start), range.end - range.start)
+        }
+    }
+
+    /// Record `range` and panic if it overlaps any range previously
+    /// claimed from this wrapper — the `debug-invariants` teeth behind
+    /// the `slice_mut` contract.
+    #[cfg(feature = "debug-invariants")]
+    fn check_disjoint(&self, range: &Range<usize>) {
+        let mut claims = self.claims.lock().unwrap_or_else(|e| e.into_inner());
+        for &(s, e) in claims.iter() {
+            assert!(
+                range.end <= s || e <= range.start,
+                "DisjointSlice overlap: {}..{} intersects claimed {s}..{e}",
+                range.start,
+                range.end,
+            );
+        }
+        claims.push((range.start, range.end));
     }
 }
 

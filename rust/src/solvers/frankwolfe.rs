@@ -323,6 +323,7 @@ impl ProxSolver for FrankWolfe {
                 FwVariant::Away => self.step_away(),
             }
         }
+        crate::lovasz::debug_assert_dual_feasible(f, &self.x, "FrankWolfe::step");
         self.shared.finish_step(f_w, &self.x, wolfe_gap)
     }
 
@@ -462,6 +463,7 @@ impl ProxSolver for FrankWolfe {
         let primal = f_w + 0.5 * norm2_sq(w_init);
         let dual = -0.5 * norm2_sq(&self.x);
         self.shared.gap = primal - dual;
+        crate::lovasz::debug_assert_dual_feasible(f, &self.x, "FrankWolfe::reset_mapped");
     }
 
     fn greedy_full_sorts(&self) -> u64 {

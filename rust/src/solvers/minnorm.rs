@@ -284,6 +284,11 @@ impl MinNormPoint {
         let primal = f_w + 0.5 * norm2_sq(w_init);
         let dual = -0.5 * norm2_sq(&self.x);
         self.shared.gap = primal - dual;
+        crate::lovasz::debug_assert_dual_feasible(
+            f,
+            &self.x,
+            "MinNormPoint::reset_translated",
+        );
     }
 
     /// Wolfe minor cycles: move `x` to the min-norm point of the corral's
@@ -375,6 +380,7 @@ impl ProxSolver for MinNormPoint {
             self.minor_cycles();
         }
         self.q = q;
+        crate::lovasz::debug_assert_dual_feasible(f, &self.x, "MinNormPoint::step");
         self.shared.finish_step(f_w, &self.x, wolfe_gap)
     }
 
@@ -485,6 +491,7 @@ impl ProxSolver for MinNormPoint {
         let primal = f_w + 0.5 * norm2_sq(w_init);
         let dual = -0.5 * norm2_sq(&self.x);
         self.shared.gap = primal - dual;
+        crate::lovasz::debug_assert_dual_feasible(f, &self.x, "MinNormPoint::reset_mapped");
     }
 
     fn greedy_full_sorts(&self) -> u64 {

@@ -8,6 +8,21 @@
 
 use crate::rng::Pcg64;
 
+/// Effective case count: `SFM_PROP_CASES` caps every `forall` loop so
+/// slow interpreters can run the property suites end to end — the Miri
+/// CI leg exports `SFM_PROP_CASES=2` (with `-Zmiri-disable-isolation`
+/// so the env read is permitted). Seeds depend only on the case index,
+/// so a capped run executes a prefix of the full run's cases.
+fn effective_cases(cases: usize) -> usize {
+    match std::env::var("SFM_PROP_CASES") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(cap) if cap > 0 => cases.min(cap),
+            _ => cases,
+        },
+        Err(_) => cases,
+    }
+}
+
 /// Run `prop` over `cases` seeded random inputs produced by `gen`.
 ///
 /// Panics with the case index and seed on the first failure, so
@@ -17,7 +32,7 @@ pub fn forall<T: std::fmt::Debug>(
     mut gen: impl FnMut(&mut Pcg64) -> T,
     mut prop: impl FnMut(&T) -> Result<(), String>,
 ) {
-    for case in 0..cases {
+    for case in 0..effective_cases(cases) {
         let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut rng = Pcg64::seeded(seed);
         let input = gen(&mut rng);
@@ -32,7 +47,7 @@ pub fn forall<T: std::fmt::Debug>(
 /// Like [`forall`] but the property receives the RNG directly (for
 /// properties that both generate and check).
 pub fn forall_rng(cases: usize, mut prop: impl FnMut(&mut Pcg64) -> Result<(), String>) {
-    for case in 0..cases {
+    for case in 0..effective_cases(cases) {
         let seed = 0xBADD_CAFE ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut rng = Pcg64::seeded(seed);
         if let Err(msg) = prop(&mut rng) {

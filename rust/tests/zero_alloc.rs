@@ -6,6 +6,11 @@
 //! thread. Thread-local counting keeps the tests independent of cargo's
 //! parallel test execution.
 
+// The `debug-invariants` checks allocate by design (fresh workspaces,
+// claim logs), so the zero-allocation certification only holds for the
+// default feature set — the whole suite is compiled out otherwise.
+#![cfg(not(feature = "debug-invariants"))]
+
 use sfm_screen::brute::brute_force_sfm;
 use sfm_screen::lovasz::{greedy_base_vertex, GreedyWorkspace};
 use sfm_screen::rng::Pcg64;
@@ -35,21 +40,28 @@ thread_local! {
 // SAFETY: delegates every operation to the system allocator; the counter
 // update is a plain thread-local store (try_with ignores TLS teardown).
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards `layout` unchanged to `System.alloc`, whose
+    // contract is identical to ours.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
         System.alloc(layout)
     }
 
+    // SAFETY: forwards `layout` unchanged to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: `ptr`/`layout`/`new_size` come from our caller under the
+    // `GlobalAlloc` contract and pass through to `System.realloc` as-is.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: `ptr` was produced by the matching `System` allocation
+    // above (every alloc path delegates), so handing it back is sound.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
