@@ -520,7 +520,49 @@ fn main() -> anyhow::Result<()> {
             before
         });
         rows.push("serve/cancel-latency", p, &sum);
+
+        // Stats turnaround: `{"op": "stats"}` is answered synchronously
+        // on the submitting thread (never queued), so this row is the
+        // pure registry-snapshot + serialization cost — the floor on how
+        // cheaply a scraper can poll a loaded service.
+        let stats_line = r#"{"op": "stats"}"#;
+        let (sum, _) = bench(2, 50, || {
+            let before = count.load(Ordering::Acquire);
+            core.submit_line(stats_line);
+            wait_past(before);
+            before
+        });
+        rows.push("serve/stats-latency", p, &sum);
         core.finish();
+    }
+
+    // Observability rows (obs/*): the identical IAES solve with and
+    // without an attached trace sink. An attached sink adds one clock
+    // read per phase span and one mutex round-trip per major iteration;
+    // the traced/untraced median delta — the `obs/trace-overhead`
+    // budget — must stay ≤ 2% (OBSERVABILITY.md). Both rows run the
+    // same instance, so the pair is directly comparable within one run.
+    {
+        use sfm_screen::obs::TraceSink;
+        use sfm_screen::screening::iaes::{solve_sfm_with_screening, IaesOptions};
+        let p = 256usize;
+        let tm = TwoMoons::generate(TwoMoonsParams { p, ..Default::default() });
+        let dense = tm.kernel_cut();
+        let opts = |trace: Option<TraceSink>| IaesOptions {
+            record_history: false,
+            trace,
+            ..Default::default()
+        };
+        let untraced = opts(None);
+        let (sum, _) = bench(2, 10, || {
+            solve_sfm_with_screening(&dense, &untraced).unwrap().minimum
+        });
+        rows.push("obs/solve-untraced", p, &sum);
+        let traced = opts(Some(TraceSink::new()));
+        let (sum, _) = bench(2, 10, || {
+            solve_sfm_with_screening(&dense, &traced).unwrap().minimum
+        });
+        rows.push("obs/trace-overhead", p, &sum);
     }
 
     println!("\nMicro-benchmarks (hot paths)");

@@ -146,10 +146,16 @@ impl Config {
         ];
         Config {
             hot_fns,
-            lock_paths: ["src/runtime/", "src/coordinator/", "src/screening/", "src/decompose/"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect(),
+            lock_paths: [
+                "src/runtime/",
+                "src/coordinator/",
+                "src/screening/",
+                "src/decompose/",
+                "src/obs/",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
             no_panic_fns: no_panic
                 .iter()
                 .map(|f| ("src/coordinator/serve.rs".to_string(), f.to_string()))
@@ -478,9 +484,14 @@ fn fn_bodies(code: &[&Token], name: &str) -> Vec<(usize, usize)> {
 /// the dynamic side.
 const HOT_MACROS: &[&str] = &["vec", "format", "println", "eprintln", "print", "eprint"];
 const HOT_METHODS: &[&str] = &["to_vec", "to_string", "to_owned", "collect"];
+/// Observability entry points (`TraceSink::record`,
+/// `Histogram::observe`) — banned in hot bodies outright: tracing is
+/// boundary-sampled by design, so a hot kernel touching the sink means
+/// the sampling discipline leaked into an inner loop (OBSERVABILITY.md).
+const OBS_METHODS: &[&str] = &["record", "observe", "add_pool_dispatches"];
 const HOT_TYPES: &[&str] = &[
     "Vec", "String", "Box", "Rc", "Arc", "VecDeque", "HashMap", "HashSet", "BTreeMap",
-    "Instant", "SystemTime", "Pcg64",
+    "Instant", "SystemTime", "Pcg64", "TraceSink", "MetricsRegistry",
 ];
 
 fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
@@ -499,6 +510,16 @@ fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
     {
         return Some(format!("`.{name}()` allocates"));
     }
+    if OBS_METHODS.contains(&name)
+        && k > 0
+        && code[k - 1].is_punct('.')
+        && code.get(k + 1).is_some_and(|n| n.is_punct('('))
+    {
+        return Some(format!(
+            "`.{name}()` is an observability call — tracing is boundary-sampled, \
+             never from a hot kernel"
+        ));
+    }
     if HOT_TYPES.contains(&name)
         && code.get(k + 1).is_some_and(|n| n.is_punct(':'))
         && code.get(k + 2).is_some_and(|n| n.is_punct(':'))
@@ -508,6 +529,9 @@ fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
             let bad = match name {
                 "Instant" | "SystemTime" => assoc == "now",
                 "Pcg64" => true, // any RNG construction/use is nondeterministic state
+                // Observability handles must never be constructed or
+                // touched inside a hot kernel — any associated call.
+                "TraceSink" | "MetricsRegistry" => true,
                 _ => matches!(assoc, "new" | "with_capacity" | "from"),
             };
             if bad {
@@ -757,6 +781,19 @@ mod tests {
         );
         assert_eq!(d[0].line, 2);
         assert_eq!(d[1].line, 3);
+    }
+
+    #[test]
+    fn hot_path_flags_observability_calls() {
+        // Any obs token in a hot body trips the rule: sink construction,
+        // `.record()`, and `.observe()` — tracing is boundary-sampled.
+        let src = "fn hot(xs: &[f64], sink: &TraceSink, h: &Histogram) -> f64 {\n    let s = TraceSink::clone(sink);\n    sink.record(&ev);\n    h.observe(0.1);\n    0.0\n}\n";
+        let d = lint_source("src/x.rs", src, &cfg_hot("src/x.rs", "hot"));
+        assert_eq!(rules_of(&d), vec!["hot-path-alloc", "hot-path-alloc", "hot-path-alloc"]);
+        assert!(d[1].msg.contains("observability"), "{}", d[1].msg);
+        // The same calls outside a hot body stay clean.
+        let cold = "fn cold(sink: &TraceSink) { sink.record(&ev); }\n";
+        assert!(lint_source("src/x.rs", cold, &cfg_hot("src/x.rs", "hot")).is_empty());
     }
 
     #[test]

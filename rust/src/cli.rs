@@ -91,7 +91,9 @@ USAGE:
 COMMANDS:
   solve            solve one instance        (--workload two-moons|image1..5|iwata, --p, --rules, --json)
   serve            resident solve service: JobSpec JSON lines on stdin (and
-                   --socket PATH), one response line per job on stdout
+                   --socket PATH), one response line per job on stdout;
+                   answers {\"op\": \"stats\"} lines with the metrics registry
+  trace-check      validate a solve --trace JSONL file (--file PATH)
   path             SFM' regularization path from one solve (--p)
   table1           Table 1: two-moons running times & speedups
   table3           Tables 2+3: image segmentation statistics & times
@@ -129,6 +131,11 @@ COMMON FLAGS:
   --quiet          suppress progress logs
   --allow-partial  solve: exit 0 even when the run stops before eps
                    (deadline/cancel/max_iters); default is a nonzero exit
+  --trace PATH     solve: record boundary-sampled trace events and dump
+                   them as JSON lines to PATH after the run (see
+                   OBSERVABILITY.md; validate with trace-check)
+  --trace-cap N    solve: trace ring capacity (default 4096); when full
+                   the oldest events are overwritten, summaries stay exact
 
 SERVE FLAGS:
   --workers N      concurrent solve workers (default 0 = all cores)

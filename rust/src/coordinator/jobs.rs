@@ -9,6 +9,7 @@
 
 use crate::coordinator::json::Json;
 use crate::decompose::{solve_decomposed, DecomposableFn, DecomposeOptions};
+use crate::obs::trace::TraceSink;
 use crate::screening::iaes::{solve_sfm_with_screening, IaesOptions, IaesReport, SolverChoice};
 use crate::screening::{RuleSet, Screener};
 use crate::solvers::frankwolfe::{FwOptions, FwVariant};
@@ -450,6 +451,7 @@ impl JobSpec {
                 "threads",
                 "min_reduction_frac",
                 "record_history",
+                "trace",
                 "decompose",
             ],
         )?;
@@ -486,6 +488,10 @@ impl JobSpec {
             record_history: opt_bool(v, "", "record_history", false)?,
             min_reduction_frac,
             threads: opt_usize(v, "", "threads", 1)?,
+            // Each parsed job gets its own fresh sink: the engine folds
+            // a summary into the report, so serve responses carry the
+            // boundary telemetry without any cross-job sharing.
+            trace: opt_bool(v, "", "trace", false)?.then(TraceSink::new),
             ..Default::default()
         };
         let decompose = match v.get("decompose") {
@@ -534,6 +540,7 @@ impl JobSpec {
             ("threads", Json::Num(self.opts.threads as f64)),
             ("min_reduction_frac", Json::Num(self.opts.min_reduction_frac)),
             ("record_history", Json::Bool(self.opts.record_history)),
+            ("trace", Json::Bool(self.opts.trace.is_some())),
         ];
         if let Some(d) = self.decompose {
             pairs.push((

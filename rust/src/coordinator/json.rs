@@ -3,6 +3,7 @@
 //! string escaping and float formatting — and to read `BENCH_*.json`
 //! trajectories back for the regression comparator.
 
+use crate::obs::trace::KIND_NAMES;
 use crate::screening::iaes::IaesReport;
 use anyhow::{bail, Result};
 use std::fmt::Write as _;
@@ -444,6 +445,39 @@ pub fn report_to_json(report: &IaesReport, with_history: bool) -> Json {
         ("solver_time_s", Json::Num(report.solver_time.as_secs_f64())),
         ("screen_time_s", Json::Num(report.screen_time.as_secs_f64())),
         (
+            // Boundary-sampled telemetry totals (null unless the solve
+            // ran with a trace sink attached). Nanos become seconds here
+            // — the JSON layer is float-based end to end.
+            "trace",
+            match &report.trace {
+                Some(t) => {
+                    let s = |ns: u64| Json::Num(ns as f64 * 1e-9);
+                    Json::obj(vec![
+                        ("events", Json::Num(t.events as f64)),
+                        ("dropped", Json::Num(t.dropped as f64)),
+                        ("screens", Json::Num(t.screens as f64)),
+                        ("contractions", Json::Num(t.contractions as f64)),
+                        ("greedy_s", s(t.greedy_ns)),
+                        ("prox_s", s(t.prox_ns)),
+                        ("screen_s", s(t.screen_ns)),
+                        ("contract_s", s(t.contract_ns)),
+                        (
+                            "kind_s",
+                            Json::obj(
+                                KIND_NAMES
+                                    .iter()
+                                    .zip(&t.kind_ns)
+                                    .map(|(&k, &ns)| (k, s(ns)))
+                                    .collect(),
+                            ),
+                        ),
+                        ("pool_dispatches", Json::Num(t.pool_dispatches as f64)),
+                    ])
+                }
+                None => Json::Null,
+            },
+        ),
+        (
             "triggers",
             Json::Arr(
                 report
@@ -550,6 +584,35 @@ mod tests {
             Some("deadline")
         );
         assert_eq!(parsed.get("converged").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn traced_report_emits_summary_and_untraced_emits_null() {
+        use crate::obs::trace::TraceSink;
+        let f = IwataFn::new(16);
+        let plain = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        let parsed = Json::parse(&report_to_json(&plain, false).to_string()).unwrap();
+        assert!(matches!(parsed.get("trace"), Some(Json::Null)));
+
+        let opts = IaesOptions { trace: Some(TraceSink::new()), ..Default::default() };
+        let traced = solve_sfm_with_screening(&f, &opts).unwrap();
+        let parsed = Json::parse(&report_to_json(&traced, false).to_string()).unwrap();
+        let t = parsed.get("trace").unwrap();
+        // Every major iteration records exactly one boundary event.
+        assert_eq!(
+            t.get("events").and_then(Json::as_num),
+            Some(traced.iters as f64)
+        );
+        assert_eq!(t.get("dropped").and_then(Json::as_num), Some(0.0));
+        assert_eq!(
+            t.get("contractions").and_then(Json::as_num),
+            Some(traced.trace.unwrap().contractions as f64)
+        );
+        // Phase totals are seconds and the kind split names every slot.
+        assert!(t.get("greedy_s").and_then(Json::as_num).unwrap() >= 0.0);
+        for kind in crate::obs::trace::KIND_NAMES {
+            assert!(t.get("kind_s").unwrap().get(kind).is_some(), "kind_s.{kind}");
+        }
     }
 
     #[test]

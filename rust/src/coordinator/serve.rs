@@ -24,14 +24,29 @@
 //!
 //! Responses carry the request's `id` verbatim plus a server-assigned
 //! `seq`, a `status` (`ok` | `partial` | `error` | `rejected`), the
-//! engine report (or `null`), and a structured `error` object whose
+//! engine report (or `null`), a structured `error` object whose
 //! `kind` is one of `invalid` | `queue_full` | `panic` | `numeric` |
-//! `error`. Response *order* across concurrent workers is not
-//! guaranteed — correlate by `id`/`seq`, never by line position.
+//! `error`, the solve wall time `wall_s`, and `queue_wait_s` — how long
+//! the job sat admitted before a worker picked it up (`null` for lines
+//! that never reached the queue). Response *order* across concurrent
+//! workers is not guaranteed — correlate by `id`/`seq`, never by line
+//! position.
+//!
+//! **Telemetry.** Every admission decision and job outcome feeds a
+//! process-wide [`MetricsRegistry`](crate::obs::MetricsRegistry) of
+//! atomic counters, gauges, and fixed-bucket latency histograms. The
+//! registry lives in the shared service state — *outside* the workers —
+//! so counts survive contained job panics and the oracle-pool rebuilds
+//! that follow them (see OBSERVABILITY.md). Clients read it through the
+//! `{"op": "stats"}` control line, answered synchronously (never
+//! queued) with either a JSON snapshot (`"format": "json"`, the
+//! default) or a Prometheus-style text exposition embedded as one
+//! string (`"format": "text"`).
 
 use super::jobs::{kind_name, JobSpec};
 use super::json::{report_to_json, Json};
 use super::runner::panic_message;
+use crate::obs::metrics::MetricsRegistry;
 use crate::runtime::cancel::CancelToken;
 use crate::runtime::failpoint;
 use crate::runtime::pool::WorkerPool;
@@ -88,6 +103,10 @@ struct Pending {
     spec: JobSpec,
     /// Absolute deadline, armed at *admission* so queue time counts.
     deadline_at: Option<Instant>,
+    /// When the job entered the queue — the worker that dequeues it
+    /// reports the difference as `queue_wait_s` (the deadline arms at
+    /// admission, so this is the interval already burning it down).
+    admitted_at: Instant,
     sink: Sink,
 }
 
@@ -105,8 +124,10 @@ struct Shared {
     /// spec. Oracles are plain data (`Submodular: Sync`), so sharing one
     /// across workers never affects a trajectory.
     cache: Mutex<HashMap<String, Arc<dyn Submodular + Send + Sync>>>,
-    cache_hits: AtomicU64,
-    pool_rebuilds: AtomicU64,
+    /// Serve telemetry. Lives here — not in any worker — so counts are
+    /// reset-safe across contained job panics and pool rebuilds: a
+    /// worker that unwinds mid-job never holds the only reference.
+    metrics: MetricsRegistry,
 }
 
 /// Poison-adopting lock: serve state under any mutex is either a plain
@@ -156,8 +177,7 @@ impl ServeCore {
             default_deadline_ms: opts.default_deadline_ms,
             oracle_threads: opts.oracle_threads.max(1),
             cache: Mutex::new(HashMap::new()),
-            cache_hits: AtomicU64::new(0),
-            pool_rebuilds: AtomicU64::new(0),
+            metrics: MetricsRegistry::new(),
         });
         let workers = (0..workers)
             .map(|i| {
@@ -183,12 +203,18 @@ impl ServeCore {
 
     /// Oracle-cache hits so far (telemetry / test hook).
     pub fn cache_hits(&self) -> u64 {
-        self.handle.shared.cache_hits.load(Ordering::Relaxed)
+        self.handle.shared.metrics.cache_hits.get()
     }
 
     /// Worker oracle-pool rebuilds after contained panics (test hook).
     pub fn pool_rebuilds(&self) -> u64 {
-        self.handle.shared.pool_rebuilds.load(Ordering::Relaxed)
+        self.handle.shared.metrics.pool_rebuilds.get()
+    }
+
+    /// The serve metrics registry (telemetry / test hook) — the same
+    /// snapshot the `{"op": "stats"}` control line serves.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.handle.shared.metrics
     }
 
     /// Drain the queue, stop the workers, and join them. Every admitted
@@ -219,18 +245,27 @@ impl ServeHandle {
             return;
         }
         let seq = self.shared.seq.fetch_add(1, Ordering::Relaxed);
+        let m = &self.shared.metrics;
         let parsed = match Json::parse(line) {
             Ok(v) => v,
             Err(e) => {
+                m.jobs_invalid.inc();
                 let msg = format!("job {seq}: line is not valid JSON: {e:#}");
                 reject(sink, &Json::Null, seq, "error", "invalid", msg);
                 return;
             }
         };
+        // Control lines (`{"op": …}`) are answered synchronously from
+        // the registry — they never compete with solves for the queue.
+        if parsed.get("op").is_some() {
+            self.handle_op(&parsed, seq, sink);
+            return;
+        }
         let id = parsed.get("id").cloned().unwrap_or(Json::Null);
         let (deadline_ms, rest) = match split_envelope(parsed) {
             Ok(x) => x,
             Err(e) => {
+                m.jobs_invalid.inc();
                 reject(sink, &id, seq, "error", "invalid", format!("job {seq}: {e:#}"));
                 return;
             }
@@ -238,17 +273,27 @@ impl ServeHandle {
         let spec = match JobSpec::parse(&rest) {
             Ok(s) => s,
             Err(e) => {
+                m.jobs_invalid.inc();
                 reject(sink, &id, seq, "error", "invalid", format!("job {seq}: {e:#}"));
                 return;
             }
         };
         let deadline_ms = deadline_ms.or(self.shared.default_deadline_ms);
-        let deadline_at = deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
-        let job = Pending { seq, id: id.clone(), spec, deadline_at, sink: Arc::clone(sink) };
+        let now = Instant::now();
+        let deadline_at = deadline_ms.map(|ms| now + Duration::from_millis(ms));
+        let job = Pending {
+            seq,
+            id: id.clone(),
+            spec,
+            deadline_at,
+            admitted_at: now,
+            sink: Arc::clone(sink),
+        };
         {
             let mut q = lock(&self.shared.queue);
             if q.len() >= self.shared.cap {
                 drop(q);
+                m.jobs_rejected.inc();
                 let msg = format!(
                     "admission queue full ({} waiting jobs); retry after a response arrives",
                     self.shared.cap
@@ -257,8 +302,71 @@ impl ServeHandle {
                 return;
             }
             q.push_back(job);
+            m.jobs_accepted.inc();
+            m.queue_depth.inc();
         }
         self.shared.available.notify_one();
+    }
+
+    /// Answer a `{"op": …}` control line. The only operation is
+    /// `"stats"`; optional fields are `id` (echoed) and `format`
+    /// (`"json"`, the default, or `"text"` for a Prometheus-style
+    /// exposition embedded as one string). Unknown ops, fields, and
+    /// formats are typed `invalid` errors naming the offender.
+    fn handle_op(&self, v: &Json, seq: u64, sink: &Sink) {
+        let m = &self.shared.metrics;
+        let id = v.get("id").cloned().unwrap_or(Json::Null);
+        let fail = |msg: String| {
+            m.jobs_invalid.inc();
+            reject(sink, &id, seq, "error", "invalid", format!("job {seq}: {msg}"));
+        };
+        if let Json::Obj(pairs) = v {
+            for (k, _) in pairs {
+                if !["op", "id", "format"].contains(&k.as_str()) {
+                    return fail(format!(
+                        "{k}: unknown field (allowed: op, id, format)"
+                    ));
+                }
+            }
+        }
+        match v.get("op") {
+            Some(Json::Str(op)) if op == "stats" => {}
+            Some(Json::Str(op)) => {
+                return fail(format!("op: unknown operation `{op}` (stats)"));
+            }
+            Some(other) => {
+                return fail(format!("op: expected a string, got {}", kind_name(other)));
+            }
+            None => unreachable!("handle_op is only called when `op` is present"),
+        }
+        let text = match v.get("format") {
+            None => false,
+            Some(Json::Str(f)) if f == "json" => false,
+            Some(Json::Str(f)) if f == "text" => true,
+            Some(Json::Str(f)) => {
+                return fail(format!("format: unknown format `{f}` (json|text)"));
+            }
+            Some(other) => {
+                return fail(format!(
+                    "format: expected a string, got {}",
+                    kind_name(other)
+                ));
+            }
+        };
+        // Count the request before snapshotting so the snapshot it
+        // returns already reflects it (deterministic for tests).
+        m.stats_requests.inc();
+        let stats = if text { Json::Str(m.render_text()) } else { m.to_json() };
+        write_line(
+            sink,
+            &Json::obj(vec![
+                ("id", id.clone()),
+                ("seq", Json::Num(seq as f64)),
+                ("status", Json::Str("ok".into())),
+                ("stats", stats),
+                ("error", Json::Null),
+            ]),
+        );
     }
 
     /// Accept request lines on a unix socket; each connection gets its
@@ -329,7 +437,8 @@ fn split_envelope(v: Json) -> Result<(Option<u64>, Json)> {
     }
 }
 
-/// Build one response line.
+/// Build one response line. `queue_wait_s` is `None` for lines that
+/// never reached the admission queue (serialized as `null`).
 fn envelope(
     id: &Json,
     seq: u64,
@@ -337,6 +446,7 @@ fn envelope(
     report: Json,
     error: Option<(&str, String)>,
     wall_s: f64,
+    queue_wait_s: Option<f64>,
 ) -> Json {
     Json::obj(vec![
         ("id", id.clone()),
@@ -354,13 +464,14 @@ fn envelope(
             },
         ),
         ("wall_s", Json::Num(wall_s)),
+        ("queue_wait_s", queue_wait_s.map_or(Json::Null, Json::Num)),
     ])
 }
 
 /// Answer a request that never reached a worker (parse failure or
-/// queue-full rejection): no report, zero wall time.
+/// queue-full rejection): no report, zero wall time, no queue wait.
 fn reject(sink: &Sink, id: &Json, seq: u64, status: &str, kind: &str, msg: String) {
-    write_line(sink, &envelope(id, seq, status, Json::Null, Some((kind, msg)), 0.0));
+    write_line(sink, &envelope(id, seq, status, Json::Null, Some((kind, msg)), 0.0, None));
 }
 
 /// Emit one response line (newline-delimited JSON) and flush, so a
@@ -394,6 +505,9 @@ fn worker_loop(shared: &Arc<Shared>) {
         };
         let Some(job) = job else { return };
         serve_one(shared, &job, &mut pool);
+        // Answered (serve_one always writes a response line) — the
+        // depth gauge covers queued *and* in-flight jobs.
+        shared.metrics.queue_depth.dec();
     }
 }
 
@@ -401,7 +515,10 @@ fn worker_loop(shared: &Arc<Shared>) {
 /// boundary: panics, numeric faults, and deadline expiries all end here
 /// as structured responses — never as a dead worker.
 fn serve_one(shared: &Shared, job: &Pending, pool: &mut Option<Arc<WorkerPool>>) {
+    let m = &shared.metrics;
     let t0 = Instant::now();
+    let queue_wait_s = (t0 - job.admitted_at).as_secs_f64();
+    m.queue_wait.observe(queue_wait_s);
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         failpoint::hit("serve-job");
         run_job(shared, job, pool.clone())
@@ -414,25 +531,58 @@ fn serve_one(shared: &Shared, job: &Pending, pool: &mut Option<Arc<WorkerPool>>)
             } else {
                 "ok"
             };
+            if status == "ok" {
+                m.jobs_ok.inc();
+                m.wall_ok.observe(wall_s);
+            } else {
+                m.jobs_partial.inc();
+                m.wall_partial.observe(wall_s);
+            }
             let rj = report_to_json(&report, job.spec.opts.record_history);
-            envelope(&job.id, job.seq, status, rj, None, wall_s)
+            envelope(&job.id, job.seq, status, rj, None, wall_s, Some(queue_wait_s))
         }
         Ok(Err(err)) => {
             let kind =
                 if err.downcast_ref::<NumericFault>().is_some() { "numeric" } else { "error" };
+            if kind == "numeric" {
+                m.jobs_numeric_faulted.inc();
+            }
+            m.jobs_error.inc();
+            m.wall_error.observe(wall_s);
             let msg = format!("{err:#}");
-            envelope(&job.id, job.seq, "error", Json::Null, Some((kind, msg)), wall_s)
+            envelope(
+                &job.id,
+                job.seq,
+                "error",
+                Json::Null,
+                Some((kind, msg)),
+                wall_s,
+                Some(queue_wait_s),
+            )
         }
         Err(payload) => {
             // Contained job panic. The solve may have unwound through a
             // pooled oracle pass, so rebuild this worker's pool rather
-            // than reason about what state the unwind left it in.
+            // than reason about what state the unwind left it in. The
+            // registry lives in `shared`, not in this worker, so every
+            // count (including this one) survives the rebuild.
             if pool.is_some() {
                 *pool = make_pool(shared.oracle_threads);
-                shared.pool_rebuilds.fetch_add(1, Ordering::Relaxed);
+                m.pool_rebuilds.inc();
             }
+            m.jobs_panicked.inc();
+            m.jobs_error.inc();
+            m.wall_error.observe(wall_s);
             let msg = format!("job panicked: {}", panic_message(payload.as_ref()));
-            envelope(&job.id, job.seq, "error", Json::Null, Some(("panic", msg)), wall_s)
+            envelope(
+                &job.id,
+                job.seq,
+                "error",
+                Json::Null,
+                Some(("panic", msg)),
+                wall_s,
+                Some(queue_wait_s),
+            )
         }
     };
     write_line(&job.sink, &env);
@@ -453,7 +603,7 @@ fn run_job(shared: &Shared, job: &Pending, pool: Option<Arc<WorkerPool>>) -> Res
     let cached = lock(&shared.cache).get(&key).cloned();
     let f = match cached {
         Some(f) => {
-            shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.cache_hits.inc();
             f
         }
         None => {
@@ -645,6 +795,121 @@ mod tests {
         assert_eq!(core.cache_hits(), 1);
         assert_eq!(core.pool_rebuilds(), 0);
         core.finish();
+    }
+
+    #[test]
+    fn responses_carry_queue_wait_alongside_wall_time() {
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        core.submit_line(IWATA_JOB);
+        core.submit_line("{not json");
+        core.finish();
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 2);
+        for env in &lines {
+            assert!(env.get("queue_wait_s").is_some(), "queue_wait_s missing");
+        }
+        let solved = lines.iter().find(|e| status(e) == "ok").unwrap();
+        let wait = field(solved, "queue_wait_s").as_num().unwrap();
+        assert!(wait.is_finite() && wait >= 0.0, "queue_wait_s = {wait}");
+        assert!(field(solved, "wall_s").as_num().unwrap() >= 0.0);
+        // A line that never reached the queue has no queue wait.
+        let rejected = lines.iter().find(|e| status(e) == "error").unwrap();
+        assert!(matches!(field(rejected, "queue_wait_s"), Json::Null));
+    }
+
+    #[test]
+    fn stats_op_round_trips_in_json_and_text() {
+        use crate::obs::metrics::validate_exposition;
+        let buf = Buf::default();
+        let core = ServeCore::start(&ServeOptions::default(), Box::new(buf.clone()));
+        // Scripted mix: one ok, one partial (zero deadline), one invalid.
+        core.submit_line(IWATA_JOB);
+        core.submit_line(
+            r#"{"deadline_ms": 0, "workload": {"kind": "iwata", "p": 24}}"#,
+        );
+        core.submit_line("{not json");
+        // Wait until both admitted jobs are fully answered (the depth
+        // gauge drops after the response line is written).
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while (buf.newlines() < 3 || core.metrics().queue_depth.get() != 0)
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        core.submit_line(r#"{"op": "stats", "id": "s1"}"#);
+        core.submit_line(r#"{"op": "stats", "id": "s2", "format": "text"}"#);
+        core.finish();
+        let lines = buf.lines();
+        assert_eq!(lines.len(), 5);
+        let json_stats = field(by_id(&lines, "s1"), "stats");
+        let jobs = json_stats.get("jobs").unwrap();
+        assert_eq!(jobs.get("accepted").unwrap().as_num(), Some(2.0));
+        assert_eq!(jobs.get("ok").unwrap().as_num(), Some(1.0));
+        assert_eq!(jobs.get("partial").unwrap().as_num(), Some(1.0));
+        assert_eq!(jobs.get("invalid").unwrap().as_num(), Some(1.0));
+        assert_eq!(jobs.get("rejected").unwrap().as_num(), Some(0.0));
+        assert_eq!(json_stats.get("queue_depth").unwrap().as_num(), Some(0.0));
+        assert_eq!(json_stats.get("stats_requests").unwrap().as_num(), Some(1.0));
+        // Histograms carry the same mix: one ok wall sample, one partial,
+        // two queue waits.
+        let wall = json_stats.get("wall_s").unwrap();
+        assert_eq!(wall.get("ok").unwrap().get("count").unwrap().as_num(), Some(1.0));
+        assert_eq!(
+            wall.get("partial").unwrap().get("count").unwrap().as_num(),
+            Some(1.0)
+        );
+        assert_eq!(wall.get("error").unwrap().get("count").unwrap().as_num(), Some(0.0));
+        assert_eq!(
+            json_stats.get("queue_wait_s").unwrap().get("count").unwrap().as_num(),
+            Some(2.0)
+        );
+        // The text form is a valid Prometheus exposition reflecting the
+        // same counts.
+        let text = field(by_id(&lines, "s2"), "stats").as_str().unwrap().to_string();
+        let samples = validate_exposition(&text).expect("exposition validates");
+        assert!(samples > 10, "only {samples} samples");
+        assert!(text.contains("sfm_serve_jobs_total{status=\"ok\"} 1"), "{text}");
+        assert!(text.contains("sfm_serve_jobs_total{status=\"partial\"} 1"), "{text}");
+        assert!(text.contains("sfm_serve_rejects_total{kind=\"invalid\"} 1"), "{text}");
+        assert!(text.contains("sfm_serve_stats_requests_total 2"), "{text}");
+    }
+
+    #[test]
+    fn malformed_op_lines_are_typed_errors_naming_the_field() {
+        let buf = Buf::default();
+        let core =
+            ServeCore::start_without_workers(&ServeOptions::default(), Box::new(buf.clone()));
+        let cases = [
+            (r#"{"op": "frobnicate"}"#, "op"),
+            (r#"{"op": 7}"#, "op"),
+            (r#"{"op": "stats", "verbose": true}"#, "verbose"),
+            (r#"{"op": "stats", "format": "xml"}"#, "format"),
+            (r#"{"op": "stats", "format": 3}"#, "format"),
+        ];
+        for (line, _) in cases {
+            core.submit_line(line);
+        }
+        let lines = buf.lines();
+        assert_eq!(lines.len(), cases.len());
+        for (env, (line, needle)) in lines.iter().zip(cases) {
+            assert_eq!(status(env), "error", "{line}");
+            assert_eq!(error_kind(env), "invalid", "{line}");
+            let msg = field(env, "error").get("message").unwrap().as_str().unwrap();
+            assert!(msg.contains(needle), "`{line}`: got `{msg}`, wanted `{needle}`");
+        }
+        // None of the malformed control lines counted as a served stats
+        // request, but each counted as an invalid submission.
+        assert_eq!(core.metrics().stats_requests.get(), 0);
+        assert_eq!(core.metrics().jobs_invalid.get(), cases.len() as u64);
+        core.finish();
+    }
+
+    fn by_id<'a>(lines: &'a [Json], id: &str) -> &'a Json {
+        lines
+            .iter()
+            .find(|e| e.get("id").and_then(Json::as_str) == Some(id))
+            .unwrap_or_else(|| panic!("no response with id `{id}`"))
     }
 
     #[test]

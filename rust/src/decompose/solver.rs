@@ -61,7 +61,8 @@ use crate::lovasz::{greedy_base_vertex, ContractionMap, GreedyWorkspace};
 use crate::runtime::pool::WorkerPool;
 use crate::screening::iaes::{IaesEngine, IaesOptions, IaesReport};
 use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
-use crate::solvers::{PrimalState, ProxSolver, SolverEvent};
+use crate::obs::trace::{KIND_CARDINALITY, KIND_CHAIN, KIND_GENERIC, KIND_MODULAR};
+use crate::solvers::{PhaseNs, PrimalState, ProxSolver, SolverEvent};
 use crate::submodular::scaled::ScaledFn;
 use crate::submodular::Submodular;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -159,6 +160,22 @@ struct BlockArena {
     card: CardProxWorkspace,
     /// Chain taut-string buffers.
     chain: TautStringWorkspace,
+    /// Trace-timing gate (set via [`ProxSolver::set_trace_timing`]):
+    /// when on, each best response is clocked into `kind_ns`.
+    timing: bool,
+    /// Nanoseconds inside `best_response`, split by component kind
+    /// (`obs::trace::KIND_*` slots); drained by `take_phase_ns`.
+    kind_ns: [u64; 4],
+}
+
+/// `kind_ns` slot of a component kind (`obs::trace::KIND_*` order).
+fn kind_slot(kind: &ComponentKind) -> usize {
+    match kind {
+        ComponentKind::Modular { .. } => KIND_MODULAR,
+        ComponentKind::Cardinality { .. } => KIND_CARDINALITY,
+        ComponentKind::Chain { .. } => KIND_CHAIN,
+        ComponentKind::Generic => KIND_GENERIC,
+    }
 }
 
 /// Rebuild the contracted chain data for a chain component: the Lemma-1
@@ -229,6 +246,9 @@ fn best_response(
     if n == 0 {
         return;
     }
+    // Boundary-discipline clock: one read around the whole block solve,
+    // only when tracing armed the gate (per-kind nanos for the trace).
+    let t0 = arena.timing.then(std::time::Instant::now);
     for k in 0..n {
         st.z[k] = y_global[st.reduced_pos[k]] - st.y[k];
     }
@@ -325,6 +345,9 @@ fn best_response(
                 y_hat[..n].copy_from_slice(&y[..n]);
             }
         }
+    }
+    if let Some(t0) = t0 {
+        arena.kind_ns[kind_slot(st.kind)] += t0.elapsed().as_nanos() as u64;
     }
 }
 
@@ -731,6 +754,24 @@ impl ProxSolver for BlockProxSolver<'_> {
 
     fn greedy_full_sorts(&self) -> u64 {
         self.shared.greedy_ws.full_sorts
+    }
+
+    fn set_trace_timing(&mut self, enabled: bool) {
+        self.shared.trace_timing = enabled;
+        for slot in &mut self.arenas {
+            slot.get_mut().unwrap_or_else(|e| e.into_inner()).timing = enabled;
+        }
+    }
+
+    fn take_phase_ns(&mut self) -> PhaseNs {
+        let mut out = PhaseNs { oracle_ns: self.shared.take_oracle_ns(), kind_ns: [0; 4] };
+        for slot in &mut self.arenas {
+            let arena = slot.get_mut().unwrap_or_else(|e| e.into_inner());
+            for (acc, x) in out.kind_ns.iter_mut().zip(&mut arena.kind_ns) {
+                *acc += std::mem::take(x);
+            }
+        }
+        out
     }
 
     fn name(&self) -> &'static str {

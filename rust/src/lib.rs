@@ -56,6 +56,7 @@ pub mod coordinator;
 pub mod decompose;
 pub mod linalg;
 pub mod lovasz;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod screening;
@@ -74,6 +75,7 @@ pub mod prelude {
         GreedyWorkspace,
     };
     pub use crate::coordinator::serve::{ServeCore, ServeHandle, ServeOptions};
+    pub use crate::obs::{MetricsRegistry, TraceEvent, TraceSink, TraceSummary};
     pub use crate::runtime::cancel::{CancelReason, CancelToken};
     pub use crate::screening::iaes::{
         solve_sfm_with_screening, IaesEngine, IaesOptions, IaesReport, NumericFault,

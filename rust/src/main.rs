@@ -4,7 +4,7 @@
 //! figure has a dedicated subcommand; `all` regenerates the full
 //! evaluation into `--out-dir`.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use sfm_screen::cli::{bench_config, parse_args, USAGE};
 use sfm_screen::coordinator::experiments as exp;
 use sfm_screen::coordinator::jobs::{rule_set, JobSpec, WorkloadSpec};
@@ -30,6 +30,7 @@ fn run(args: &[String]) -> Result<()> {
         "info" => info()?,
         "solve" => solve(&cli.flags)?,
         "serve" => serve(&cli.flags)?,
+        "trace-check" => trace_check(&cli.flags)?,
         "path" => path(&cli.flags)?,
         "table1" => {
             let cfg = bench_config(&cli.flags)?;
@@ -202,8 +203,26 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         ..Default::default()
     };
     opts.record_history = false;
+    // --trace PATH attaches a boundary-sampled trace ring to the solve
+    // and dumps it as JSONL afterwards (one event object per line; the
+    // schema `trace-check` validates). Keep a clone of the sink — the
+    // ring is shared, so events recorded through the job's copy are
+    // visible here after the run.
+    let trace_path = flags.get("trace").map(std::path::PathBuf::from);
+    let trace_sink = match &trace_path {
+        Some(_) => {
+            let cap = flags
+                .get_usize("trace-cap", sfm_screen::obs::trace::DEFAULT_TRACE_CAPACITY)?;
+            Some(sfm_screen::obs::TraceSink::with_capacity(cap))
+        }
+        None => None,
+    };
+    opts.trace = trace_sink.clone();
     let job = JobSpec { name: wl.label(), workload: wl, opts, decompose };
     let res = job.run()?;
+    if let (Some(path), Some(sink)) = (&trace_path, &trace_sink) {
+        write_trace(path, sink)?;
+    }
     let allow_partial = flags.get_bool("allow-partial", false)?;
     if flags.get_bool("json", false)? {
         println!(
@@ -253,6 +272,63 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         );
     }
     check_partial(&res.report, cfg.eps, allow_partial)
+}
+
+/// Dump a solve's trace ring as JSON lines — one event object per
+/// line, oldest first. `trace-check` (and the CI trace smoke leg)
+/// re-parses every line with the crate's own parser.
+fn write_trace(path: &std::path::Path, sink: &sfm_screen::obs::TraceSink) -> Result<()> {
+    use std::io::Write;
+    let events = sink.snapshot();
+    let mut out = std::io::BufWriter::new(
+        std::fs::File::create(path)
+            .with_context(|| format!("creating trace file {}", path.display()))?,
+    );
+    for ev in &events {
+        writeln!(out, "{}", ev.to_json().to_string())?;
+    }
+    out.flush()?;
+    let s = sink.summary();
+    eprintln!(
+        "trace: {} events ({} dropped) -> {}",
+        s.events,
+        s.dropped,
+        path.display()
+    );
+    Ok(())
+}
+
+/// Validate a `solve --trace` JSONL file with the crate's own parser:
+/// every non-empty line must round-trip through
+/// [`TraceEvent::from_json`](sfm_screen::obs::TraceEvent::from_json).
+/// Exits nonzero on the first malformed line (named by line number).
+fn trace_check(flags: &sfm_screen::config::Config) -> Result<()> {
+    let path = flags
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("trace-check needs --file PATH"))?
+        .to_string();
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {path}"))?;
+    let mut events = 0usize;
+    let mut finals = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = sfm_screen::coordinator::json::Json::parse(line)
+            .with_context(|| format!("{path}:{}: not valid JSON", i + 1))?;
+        let ev = sfm_screen::obs::TraceEvent::from_json(&v)
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", i + 1))?;
+        events += 1;
+        if ev.flags & sfm_screen::obs::trace::flags::FINAL != 0 {
+            finals += 1;
+        }
+    }
+    if events == 0 {
+        bail!("{path}: no trace events");
+    }
+    println!("trace-check: {events} events ok ({finals} final) in {path}");
+    Ok(())
 }
 
 /// A partial (unconverged or cancelled) solve exits nonzero unless the

@@ -1,0 +1,585 @@
+//! Serve-mode metrics: lock-free atomic counters/gauges, fixed-bucket
+//! latency histograms, and a Prometheus-style text exposition writer.
+//!
+//! The registry lives in the serve core's shared state (one `Arc` for
+//! the whole service lifetime), so its counts are **reset-safe by
+//! construction**: a worker panic tears down that worker's stack and
+//! the pool is rebuilt, but the atomics live outside every worker and
+//! keep counting across the rebuild. All updates are single `Relaxed`
+//! atomic ops — the registry is written from worker threads and read
+//! by the `{"op": "stats"}` control line without any lock.
+//!
+//! Exposition follows the Prometheus text format conventions
+//! (`# HELP`/`# TYPE` headers, `_bucket{le="…"}`/`_sum`/`_count`
+//! histogram series with cumulative buckets); [`validate_exposition`]
+//! parses that grammar back and checks the histogram invariants — the
+//! serve tests round-trip every emitted line through it.
+
+use crate::coordinator::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current count.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed level (queue depth, in-flight jobs).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Subtract one.
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (seconds, inclusive) of the fixed latency buckets; the
+/// implicit final bucket is `+Inf`. Fixed at compile time so histograms
+/// never allocate and bucket counts are comparable across runs.
+pub const LATENCY_BUCKETS_S: [f64; 8] = [0.001, 0.005, 0.025, 0.1, 0.5, 1.0, 5.0, 30.0];
+
+const BUCKETS: usize = LATENCY_BUCKETS_S.len() + 1;
+
+/// Fixed-bucket latency histogram over [`LATENCY_BUCKETS_S`]. Updates
+/// are two relaxed atomic adds; no allocation, no lock.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    /// Per-bucket observation counts (NOT cumulative; the exposition
+    /// writer accumulates). Slot `i < 8` covers
+    /// `(bounds[i-1], bounds[i]]`; the last slot is the `+Inf` tail.
+    counts: [AtomicU64; BUCKETS],
+    /// Total observed time in nanoseconds.
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// Record one observation of `seconds` (non-finite or negative
+    /// values clamp to zero — wall clocks can't go backwards, but a
+    /// histogram must never panic in a worker).
+    pub fn observe(&self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        let slot = LATENCY_BUCKETS_S
+            .iter()
+            .position(|&b| s <= b)
+            .unwrap_or(LATENCY_BUCKETS_S.len());
+        self.counts[slot].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed values in seconds.
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Raw (non-cumulative) per-bucket counts; the last slot is the
+    /// `+Inf` tail.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        let mut out = [0u64; BUCKETS];
+        for (o, c) in out.iter_mut().zip(&self.counts) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum_s", Json::Num(self.sum_seconds())),
+            ("le", Json::Arr(LATENCY_BUCKETS_S.iter().map(|&b| Json::Num(b)).collect())),
+            (
+                "counts",
+                Json::Arr(
+                    self.bucket_counts().iter().map(|&c| Json::Num(c as f64)).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Every metric the resident solve service exports. Allocated once in
+/// the service's shared state; see the module docs for the reset-safety
+/// argument.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    /// Jobs admitted to the queue (parsed, validated, within capacity).
+    pub jobs_accepted: Counter,
+    /// Submissions rejected before admission: unparseable or invalid.
+    pub jobs_invalid: Counter,
+    /// Submissions rejected because the queue was full.
+    pub jobs_rejected: Counter,
+    /// Completed jobs by terminal status.
+    pub jobs_ok: Counter,
+    /// Jobs that returned a partial result (deadline/cancellation or
+    /// iteration cap).
+    pub jobs_partial: Counter,
+    /// Jobs that ended in an error envelope (panic, numeric fault, or
+    /// internal error).
+    pub jobs_error: Counter,
+    /// Error subset: jobs whose worker panicked (pool rebuilt).
+    pub jobs_panicked: Counter,
+    /// Error subset: jobs stopped by a non-finite gap/primal.
+    pub jobs_numeric_faulted: Counter,
+    /// Workload-instance cache hits.
+    pub cache_hits: Counter,
+    /// Worker-pool rebuilds after a contained panic.
+    pub pool_rebuilds: Counter,
+    /// `{"op": "stats"}` control lines answered.
+    pub stats_requests: Counter,
+    /// Jobs admitted but not yet answered (queued + in flight).
+    pub queue_depth: Gauge,
+    /// Wall time of jobs that finished `ok`.
+    pub wall_ok: Histogram,
+    /// Wall time of jobs that finished `partial`.
+    pub wall_partial: Histogram,
+    /// Wall time of jobs that finished `error` (panics included).
+    pub wall_error: Histogram,
+    /// Admission → worker-pickup latency (the `queue_wait_s` field of
+    /// response envelopes).
+    pub queue_wait: Histogram,
+}
+
+impl MetricsRegistry {
+    /// A zeroed registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The `{"op": "stats"}` JSON body.
+    pub fn to_json(&self) -> Json {
+        let n = |c: &Counter| Json::Num(c.get() as f64);
+        Json::obj(vec![
+            (
+                "jobs",
+                Json::obj(vec![
+                    ("accepted", n(&self.jobs_accepted)),
+                    ("invalid", n(&self.jobs_invalid)),
+                    ("rejected", n(&self.jobs_rejected)),
+                    ("ok", n(&self.jobs_ok)),
+                    ("partial", n(&self.jobs_partial)),
+                    ("error", n(&self.jobs_error)),
+                    ("panicked", n(&self.jobs_panicked)),
+                    ("numeric_faulted", n(&self.jobs_numeric_faulted)),
+                ]),
+            ),
+            ("cache_hits", n(&self.cache_hits)),
+            ("pool_rebuilds", n(&self.pool_rebuilds)),
+            ("stats_requests", n(&self.stats_requests)),
+            ("queue_depth", Json::Num(self.queue_depth.get() as f64)),
+            (
+                "wall_s",
+                Json::obj(vec![
+                    ("ok", self.wall_ok.to_json()),
+                    ("partial", self.wall_partial.to_json()),
+                    ("error", self.wall_error.to_json()),
+                ]),
+            ),
+            ("queue_wait_s", self.queue_wait.to_json()),
+        ])
+    }
+
+    /// Prometheus-style text exposition (`format: "text"` on the stats
+    /// op). One self-contained document; every line passes
+    /// [`validate_exposition`].
+    pub fn render_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counter = |out: &mut String, name: &str, help: &str, c: &Counter| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {}", c.get());
+        };
+        let _ = writeln!(out, "# HELP sfm_serve_jobs_total Completed jobs by status.");
+        let _ = writeln!(out, "# TYPE sfm_serve_jobs_total counter");
+        for (status, c) in [
+            ("ok", &self.jobs_ok),
+            ("partial", &self.jobs_partial),
+            ("error", &self.jobs_error),
+        ] {
+            let _ = writeln!(out, "sfm_serve_jobs_total{{status=\"{status}\"}} {}", c.get());
+        }
+        let _ = writeln!(
+            out,
+            "# HELP sfm_serve_rejects_total Submissions rejected before running."
+        );
+        let _ = writeln!(out, "# TYPE sfm_serve_rejects_total counter");
+        for (kind, c) in
+            [("invalid", &self.jobs_invalid), ("queue_full", &self.jobs_rejected)]
+        {
+            let _ =
+                writeln!(out, "sfm_serve_rejects_total{{kind=\"{kind}\"}} {}", c.get());
+        }
+        counter(
+            &mut out,
+            "sfm_serve_jobs_admitted_total",
+            "Jobs admitted to the queue.",
+            &self.jobs_accepted,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_job_panics_total",
+            "Jobs whose worker panicked (pool rebuilt).",
+            &self.jobs_panicked,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_numeric_faults_total",
+            "Jobs stopped by a non-finite gap or primal.",
+            &self.jobs_numeric_faulted,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_cache_hits_total",
+            "Workload-instance cache hits.",
+            &self.cache_hits,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_pool_rebuilds_total",
+            "Worker-pool rebuilds after a contained panic.",
+            &self.pool_rebuilds,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_stats_requests_total",
+            "Stats control lines answered.",
+            &self.stats_requests,
+        );
+        let _ = writeln!(
+            out,
+            "# HELP sfm_serve_queue_depth Jobs admitted but not yet answered."
+        );
+        let _ = writeln!(out, "# TYPE sfm_serve_queue_depth gauge");
+        let _ = writeln!(out, "sfm_serve_queue_depth {}", self.queue_depth.get());
+        let _ = writeln!(
+            out,
+            "# HELP sfm_serve_job_wall_seconds Job wall time by terminal status."
+        );
+        let _ = writeln!(out, "# TYPE sfm_serve_job_wall_seconds histogram");
+        for (status, h) in [
+            ("ok", &self.wall_ok),
+            ("partial", &self.wall_partial),
+            ("error", &self.wall_error),
+        ] {
+            write_histogram(
+                &mut out,
+                "sfm_serve_job_wall_seconds",
+                &format!("status=\"{status}\","),
+                h,
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP sfm_serve_queue_wait_seconds Admission-to-pickup latency."
+        );
+        let _ = writeln!(out, "# TYPE sfm_serve_queue_wait_seconds histogram");
+        write_histogram(&mut out, "sfm_serve_queue_wait_seconds", "", &self.queue_wait);
+        out
+    }
+}
+
+/// One histogram series: cumulative `_bucket` lines (Prometheus
+/// convention), then `_sum` and `_count`. `labels` is either empty or
+/// `key="value",` pairs each ending in a comma (the `le` label is
+/// appended after them).
+fn write_histogram(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, &b) in LATENCY_BUCKETS_S.iter().enumerate() {
+        cum += counts[i];
+        let _ = writeln!(out, "{name}_bucket{{{labels}le=\"{b}\"}} {cum}");
+    }
+    cum += counts[LATENCY_BUCKETS_S.len()];
+    let _ = writeln!(out, "{name}_bucket{{{labels}le=\"+Inf\"}} {cum}");
+    let trimmed = labels.trim_end_matches(',');
+    if trimmed.is_empty() {
+        let _ = writeln!(out, "{name}_sum {}", h.sum_seconds());
+        let _ = writeln!(out, "{name}_count {}", h.count());
+    } else {
+        let _ = writeln!(out, "{name}_sum{{{trimmed}}} {}", h.sum_seconds());
+        let _ = writeln!(out, "{name}_count{{{trimmed}}} {}", h.count());
+    }
+}
+
+/// Parse a text exposition document back, checking the line grammar
+/// (`# HELP`/`# TYPE` headers, `name{labels} value` samples) and the
+/// histogram invariants (buckets cumulative and non-decreasing, `+Inf`
+/// bucket equal to `_count`). Returns the number of sample lines.
+/// Errors name the offending line. Test/CI support — never on a solve
+/// path.
+pub fn validate_exposition(text: &str) -> Result<usize, String> {
+    let mut samples = 0usize;
+    let mut typed: BTreeMap<String, String> = BTreeMap::new();
+    // (family, labels-without-le) → cumulative bucket counts in order.
+    let mut buckets: BTreeMap<(String, String), Vec<(String, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+    let mut sums: BTreeMap<(String, String), bool> = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            let body = parts.next().unwrap_or("");
+            match keyword {
+                "HELP" if !name.is_empty() && !body.is_empty() => {}
+                "TYPE" if !name.is_empty() => {
+                    if !matches!(body, "counter" | "gauge" | "histogram") {
+                        return Err(format!("bad TYPE `{body}` in line `{line}`"));
+                    }
+                    typed.insert(name.to_string(), body.to_string());
+                }
+                _ => return Err(format!("malformed comment line `{line}`")),
+            }
+            continue;
+        }
+        // Sample: name{labels} value | name value.
+        let (name_labels, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("sample line `{line}` has no value"))?;
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("bad sample value `{value}` in line `{line}`"))?;
+        let (name, labels) = match name_labels.split_once('{') {
+            Some((n, rest)) => {
+                let labels = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("unclosed labels in line `{line}`"))?;
+                (n, labels)
+            }
+            None => (name_labels, ""),
+        };
+        if name.is_empty()
+            || !name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+            || name.starts_with(|c: char| c.is_ascii_digit())
+        {
+            return Err(format!("bad metric name `{name}` in line `{line}`"));
+        }
+        let mut le: Option<String> = None;
+        let mut others: Vec<String> = Vec::new();
+        if !labels.is_empty() {
+            for pair in labels.split(',') {
+                let (k, quoted) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad label `{pair}` in line `{line}`"))?;
+                let val = quoted
+                    .strip_prefix('"')
+                    .and_then(|q| q.strip_suffix('"'))
+                    .ok_or_else(|| format!("unquoted label `{pair}` in line `{line}`"))?;
+                if k == "le" {
+                    le = Some(val.to_string());
+                } else {
+                    others.push(format!("{k}={val}"));
+                }
+            }
+        }
+        others.sort();
+        let series = others.join(",");
+        samples += 1;
+        if let Some(family) = name.strip_suffix("_bucket") {
+            let le = le
+                .ok_or_else(|| format!("bucket line `{line}` is missing an le label"))?;
+            if typed.get(family).map(String::as_str) != Some("histogram") {
+                return Err(format!("`{name}` has no histogram TYPE declaration"));
+            }
+            buckets
+                .entry((family.to_string(), series))
+                .or_default()
+                .push((le, v));
+        } else if let Some(family) = name.strip_suffix("_count") {
+            if typed.get(family).map(String::as_str) == Some("histogram") {
+                counts.insert((family.to_string(), series), v);
+            }
+        } else if let Some(family) = name.strip_suffix("_sum") {
+            if typed.get(family).map(String::as_str) == Some("histogram") {
+                sums.insert((family.to_string(), series), true);
+            }
+        }
+    }
+    for ((family, series), series_buckets) in &buckets {
+        let mut prev = -1.0;
+        let mut inf: Option<f64> = None;
+        for (le, v) in series_buckets {
+            if *v < prev {
+                return Err(format!(
+                    "histogram `{family}{{{series}}}` buckets not cumulative at le={le}"
+                ));
+            }
+            prev = *v;
+            if le == "+Inf" {
+                inf = Some(*v);
+            } else {
+                le.parse::<f64>().map_err(|_| {
+                    format!("histogram `{family}` has a non-numeric le `{le}`")
+                })?;
+            }
+        }
+        let inf =
+            inf.ok_or_else(|| format!("histogram `{family}` is missing +Inf bucket"))?;
+        let total = counts.get(&(family.clone(), series.clone())).ok_or_else(|| {
+            format!("histogram `{family}{{{series}}}` is missing a _count sample")
+        })?;
+        if inf != *total {
+            return Err(format!(
+                "histogram `{family}{{{series}}}`: +Inf bucket {inf} != count {total}"
+            ));
+        }
+        if !sums.contains_key(&(family.clone(), series.clone())) {
+            return Err(format!(
+                "histogram `{family}{{{series}}}` is missing a _sum sample"
+            ));
+        }
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_observations_into_fixed_bounds() {
+        let h = Histogram::default();
+        h.observe(0.0005); // ≤ 0.001 → slot 0
+        h.observe(0.003); // ≤ 0.005 → slot 1
+        h.observe(0.003);
+        h.observe(2.0); // ≤ 5.0 → slot 6
+        h.observe(100.0); // +Inf tail
+        h.observe(f64::NAN); // clamps to 0 → slot 0
+        h.observe(-3.0); // clamps to 0 → slot 0
+        let counts = h.bucket_counts();
+        assert_eq!(counts[0], 3);
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts[6], 1);
+        assert_eq!(counts[BUCKETS - 1], 1);
+        assert_eq!(h.count(), 7);
+        assert!((h.sum_seconds() - 102.0065).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exposition_round_trips_through_the_validator() {
+        let reg = MetricsRegistry::new();
+        reg.jobs_accepted.add(5);
+        reg.jobs_ok.add(3);
+        reg.jobs_partial.inc();
+        reg.jobs_error.inc();
+        reg.jobs_panicked.inc();
+        reg.cache_hits.add(2);
+        reg.queue_depth.inc();
+        for s in [0.0004, 0.02, 0.3] {
+            reg.wall_ok.observe(s);
+        }
+        reg.wall_partial.observe(0.9);
+        reg.wall_error.observe(7.0);
+        for s in [0.0001, 0.0001, 0.04] {
+            reg.queue_wait.observe(s);
+        }
+        let text = reg.render_text();
+        let samples = validate_exposition(&text).unwrap_or_else(|e| panic!("{e}"));
+        // 3 status + 2 reject + 6 scalar counters + 1 gauge
+        // + 4 histograms × (9 buckets + sum + count) = 56.
+        assert_eq!(samples, 12 + 4 * (BUCKETS + 2));
+        assert!(text.contains("sfm_serve_jobs_total{status=\"ok\"} 3"));
+        assert!(text.contains("sfm_serve_queue_depth 1"));
+        assert!(text.contains(
+            "sfm_serve_job_wall_seconds_bucket{status=\"ok\",le=\"+Inf\"} 3"
+        ));
+        assert!(text.contains("sfm_serve_job_wall_seconds_count{status=\"ok\"} 3"));
+    }
+
+    #[test]
+    fn validator_rejects_broken_documents() {
+        for (doc, needle) in [
+            ("# NOPE x y\n", "malformed comment"),
+            ("# TYPE m widget\n", "bad TYPE"),
+            ("m\n", "no value"),
+            ("m abc\n", "bad sample value"),
+            ("1up 3\n", "bad metric name"),
+            ("m{le=\"0.1\" 3\n", "unclosed labels"),
+            ("m{le=0.1} 3\n", "unquoted label"),
+            (
+                "# TYPE h histogram\nh_bucket{le=\"0.1\"} 3\nh_bucket{le=\"+Inf\"} 2\n\
+                 h_sum 1\nh_count 2\n",
+                "not cumulative",
+            ),
+            (
+                "# TYPE h histogram\nh_bucket{le=\"0.1\"} 1\nh_sum 1\nh_count 1\n",
+                "missing +Inf",
+            ),
+            (
+                "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 2\n",
+                "!= count",
+            ),
+            (
+                "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 2\nh_count 2\n",
+                "missing a _sum",
+            ),
+            ("h_bucket{le=\"+Inf\"} 2\n", "no histogram TYPE"),
+        ] {
+            let err = validate_exposition(doc).unwrap_err();
+            assert!(err.contains(needle), "doc `{doc}`: wanted `{needle}` in `{err}`");
+        }
+    }
+
+    #[test]
+    fn registry_json_carries_raw_bucket_counts() {
+        let reg = MetricsRegistry::new();
+        reg.jobs_ok.add(2);
+        reg.wall_ok.observe(0.0005);
+        reg.wall_ok.observe(0.3);
+        let j = reg.to_json();
+        assert_eq!(
+            j.get("jobs").and_then(|o| o.get("ok")).and_then(Json::as_num),
+            Some(2.0)
+        );
+        let wall = j.get("wall_s").and_then(|o| o.get("ok")).unwrap();
+        assert_eq!(wall.get("count").and_then(Json::as_num), Some(2.0));
+        let counts = wall.get("counts").and_then(Json::as_array).unwrap();
+        assert_eq!(counts.len(), BUCKETS);
+        assert_eq!(counts[0].as_num(), Some(1.0));
+        // 0.3 lands in the (0.1, 0.5] bucket — slot 4.
+        assert_eq!(counts[4].as_num(), Some(1.0));
+        // The emitted JSON parses back (serve embeds it in a response
+        // line).
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,28 @@
+//! Observability for the solve engine and the resident service.
+//!
+//! Two independent layers, both built so that *not* observing costs
+//! nothing and observing costs almost nothing:
+//!
+//! * [`trace`] — boundary-sampled solve traces: a preallocated ring of
+//!   fixed-size [`TraceEvent`]s the IAES engine records **only at
+//!   major-iteration boundaries** (the same points where cooperative
+//!   cancellation is checked — the dual is valid in B(F̂) there and the
+//!   solver inner loops stay untouched). `IaesOptions::trace = None` is
+//!   bitwise inert; an attached sink never changes the numerics, only
+//!   adds boundary clock reads.
+//! * [`metrics`] — the serve-mode [`MetricsRegistry`]: atomic
+//!   counters/gauges and fixed-bucket latency histograms, answered over
+//!   the serve protocol by `{"op": "stats"}` as JSON or Prometheus-style
+//!   text exposition.
+//!
+//! Schemas, the boundary-sampling argument, and the overhead budget are
+//! documented in OBSERVABILITY.md at the repo root. The hot-path lint
+//! (`sfm_lint`, see LINTS.md) bans any `TraceSink`/`MetricsRegistry`
+//! call inside hot function bodies, pinning the boundary discipline
+//! structurally.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{validate_exposition, Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{TraceEvent, TraceRing, TraceSink, TraceSummary};

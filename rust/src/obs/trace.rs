@@ -1,0 +1,604 @@
+//! Boundary-sampled solve traces: a preallocated ring of fixed-size
+//! [`TraceEvent`]s recorded **only at major-iteration boundaries**.
+//!
+//! The sampling discipline mirrors `runtime::cancel`: the IAES engine
+//! consults the sink exactly where the dual iterate is valid in B(F̂) —
+//! after a completed prox step, after a screening pass, after a
+//! contraction — never inside a solver inner loop or an oracle pass.
+//! Consequences:
+//!
+//! * an unattached sink (`IaesOptions::trace = None`) is **bitwise
+//!   inert**: the engine takes the same branches, performs the same
+//!   arithmetic, and allocates nothing extra (pinned by
+//!   `tests/determinism.rs`);
+//! * an attached sink adds one clock read per phase span plus one
+//!   mutex round-trip per major iteration — amortized to noise against
+//!   an O(p log p) greedy pass (the `obs/trace-overhead` micro row
+//!   budgets this at ≤ 2%);
+//! * recording is allocation-free at steady state: the ring is
+//!   pre-sized at attach time and overwrites its oldest slot when full
+//!   (certified by `tests/zero_alloc.rs`).
+//!
+//! Events serialize through [`coordinator::json`](crate::coordinator::json)
+//! as one JSON object per line (`solve --trace PATH`), and
+//! [`TraceEvent::from_json`] parses that schema back — the CI trace
+//! smoke leg round-trips every emitted line through it. Summaries are
+//! exact even when the ring wraps: totals accumulate on push, not from
+//! surviving slots.
+
+use crate::coordinator::json::Json;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Default ring capacity when a sink is attached without an explicit
+/// size (`TraceSink::new`, `solve --trace` without `--trace-cap`).
+pub const DEFAULT_TRACE_CAPACITY: usize = 4096;
+
+/// Slot of the decompose block solver's `Modular` components in
+/// [`TraceEvent::kind_ns`] / [`TraceSummary::kind_ns`].
+pub const KIND_MODULAR: usize = 0;
+/// Slot of `Cardinality` components.
+pub const KIND_CARDINALITY: usize = 1;
+/// Slot of `Chain` components.
+pub const KIND_CHAIN: usize = 2;
+/// Slot of `Generic` (per-block min-norm) components.
+pub const KIND_GENERIC: usize = 3;
+/// JSON key of each `kind_ns` slot, indexed by the `KIND_*` constants.
+pub const KIND_NAMES: [&str; 4] = ["modular", "cardinality", "chain", "generic"];
+
+/// Bit flags marking what happened at a recorded boundary. An event
+/// with `flags == 0` is a plain major iteration (step + gap check, no
+/// screening trigger).
+pub mod flags {
+    /// A screening pass ran at this boundary (`screen_ns`,
+    /// `new_active`, `new_inactive` are meaningful).
+    pub const SCREEN: u32 = 1;
+    /// The certificate cleared the contraction threshold and the ground
+    /// set was rebuilt (`contract_ns` covers the rebuild + restart).
+    pub const CONTRACTION: u32 = 1 << 1;
+    /// The post-contraction restart projected the corral through the
+    /// survivor map (warm restart).
+    pub const WARM_RESTART: u32 = 1 << 2;
+    /// The post-contraction restart discarded the corral (cold restart).
+    pub const COLD_RESTART: u32 = 1 << 3;
+    /// The run stopped at this boundary on a cooperative cancellation.
+    pub const CANCELLED: u32 = 1 << 4;
+    /// The cancellation was a deadline expiry (set alongside
+    /// `CANCELLED`).
+    pub const DEADLINE: u32 = 1 << 5;
+    /// The contraction emptied the ground set (set alongside
+    /// `CONTRACTION`).
+    pub const EMPTIED: u32 = 1 << 6;
+    /// The last event of the run (converged, iteration cap, cancelled,
+    /// or emptied).
+    pub const FINAL: u32 = 1 << 7;
+}
+
+/// `(bit, tag)` pairs for JSON serialization of [`TraceEvent::flags`].
+const FLAG_TAGS: [(u32, &str); 8] = [
+    (flags::SCREEN, "screen"),
+    (flags::CONTRACTION, "contraction"),
+    (flags::WARM_RESTART, "warm-restart"),
+    (flags::COLD_RESTART, "cold-restart"),
+    (flags::CANCELLED, "cancelled"),
+    (flags::DEADLINE, "deadline"),
+    (flags::EMPTIED, "emptied"),
+    (flags::FINAL, "final"),
+];
+
+/// One major-iteration boundary, fixed-size (`Copy`, no heap) so ring
+/// slots can be overwritten in place without allocating.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceEvent {
+    /// Global major-iteration index (1-based, monotone across restarts).
+    pub iter: u64,
+    /// Boundary markers (see [`flags`]).
+    pub flags: u32,
+    /// Primal objective at the boundary (best Lovász level value).
+    pub primal: f64,
+    /// Dual objective at the boundary.
+    pub dual: f64,
+    /// Duality gap used by the screening gate.
+    pub gap: f64,
+    /// Screening-ball radius `r = sqrt(2·gap)` (Theorem 7).
+    pub radius: f64,
+    /// Elements certified active so far (∈ every minimizer).
+    pub active: u32,
+    /// Elements certified inactive so far (∉ any minimizer).
+    pub inactive: u32,
+    /// Undecided elements still in the reduced problem.
+    pub survivors: u32,
+    /// Elements newly certified active by this boundary's screen.
+    pub new_active: u32,
+    /// Elements newly certified inactive by this boundary's screen.
+    pub new_inactive: u32,
+    /// Nanoseconds the step spent in greedy/certificate oracle passes.
+    pub greedy_ns: u64,
+    /// Nanoseconds the step spent in prox updates (step minus oracle).
+    pub prox_ns: u64,
+    /// Nanoseconds spent evaluating the screening rules.
+    pub screen_ns: u64,
+    /// Nanoseconds spent contracting the ground set and restarting
+    /// (zero unless `CONTRACTION` is set).
+    pub contract_ns: u64,
+    /// Decompose only: per-component-kind nanoseconds inside the block
+    /// sweeps, indexed by the `KIND_*` constants. All-zero for
+    /// monolithic solves.
+    pub kind_ns: [u64; 4],
+}
+
+impl TraceEvent {
+    /// Human-readable tags for the set flag bits.
+    pub fn tags(&self) -> Vec<&'static str> {
+        FLAG_TAGS
+            .iter()
+            .filter(|(bit, _)| self.flags & bit != 0)
+            .map(|&(_, tag)| tag)
+            .collect()
+    }
+
+    /// Serialize as one JSON object (the `--trace` JSONL schema; see
+    /// OBSERVABILITY.md).
+    pub fn to_json(&self) -> Json {
+        let ns = |n: u64| Json::Num(n as f64);
+        let tags: Vec<Json> =
+            self.tags().iter().map(|t| Json::Str(t.to_string())).collect();
+        Json::obj(vec![
+            ("iter", ns(self.iter)),
+            ("tags", Json::Arr(tags)),
+            ("primal", Json::Num(self.primal)),
+            ("dual", Json::Num(self.dual)),
+            ("gap", Json::Num(self.gap)),
+            ("radius", Json::Num(self.radius)),
+            ("active", ns(self.active as u64)),
+            ("inactive", ns(self.inactive as u64)),
+            ("survivors", ns(self.survivors as u64)),
+            ("new_active", ns(self.new_active as u64)),
+            ("new_inactive", ns(self.new_inactive as u64)),
+            ("greedy_ns", ns(self.greedy_ns)),
+            ("prox_ns", ns(self.prox_ns)),
+            ("screen_ns", ns(self.screen_ns)),
+            ("contract_ns", ns(self.contract_ns)),
+            (
+                "kind_ns",
+                Json::Obj(
+                    KIND_NAMES
+                        .iter()
+                        .zip(self.kind_ns)
+                        .map(|(k, v)| (k.to_string(), ns(v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a JSON trace event back, validating the full schema.
+    /// Errors name the offending field — the CI trace smoke leg and
+    /// `trace-check` rely on this to reject corrupt JSONL loudly.
+    pub fn from_json(v: &Json) -> Result<TraceEvent, String> {
+        if !matches!(v, Json::Obj(_)) {
+            return Err("trace event must be a JSON object".to_string());
+        }
+        let known = [
+            "iter",
+            "tags",
+            "primal",
+            "dual",
+            "gap",
+            "radius",
+            "active",
+            "inactive",
+            "survivors",
+            "new_active",
+            "new_inactive",
+            "greedy_ns",
+            "prox_ns",
+            "screen_ns",
+            "contract_ns",
+            "kind_ns",
+        ];
+        if let Json::Obj(pairs) = v {
+            for (k, _) in pairs {
+                if !known.contains(&k.as_str()) {
+                    return Err(format!("unknown trace event field `{k}`"));
+                }
+            }
+        }
+        let num = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .ok_or_else(|| format!("missing trace event field `{key}`"))?
+                .as_num()
+                .ok_or_else(|| format!("trace event field `{key}` must be a number"))
+        };
+        let uint = |key: &str| -> Result<u64, String> {
+            let x = num(key)?;
+            if !x.is_finite() || x < 0.0 || x != x.trunc() {
+                return Err(format!(
+                    "trace event field `{key}` must be a non-negative integer"
+                ));
+            }
+            Ok(x as u64)
+        };
+        let mut ev = TraceEvent {
+            iter: uint("iter")?,
+            flags: 0,
+            primal: num("primal")?,
+            dual: num("dual")?,
+            gap: num("gap")?,
+            radius: num("radius")?,
+            active: uint("active")? as u32,
+            inactive: uint("inactive")? as u32,
+            survivors: uint("survivors")? as u32,
+            new_active: uint("new_active")? as u32,
+            new_inactive: uint("new_inactive")? as u32,
+            greedy_ns: uint("greedy_ns")?,
+            prox_ns: uint("prox_ns")?,
+            screen_ns: uint("screen_ns")?,
+            contract_ns: uint("contract_ns")?,
+            kind_ns: [0; 4],
+        };
+        let tags = v
+            .get("tags")
+            .ok_or_else(|| "missing trace event field `tags`".to_string())?
+            .as_array()
+            .ok_or_else(|| "trace event field `tags` must be an array".to_string())?;
+        for tag in tags {
+            let name = tag
+                .as_str()
+                .ok_or_else(|| "trace event field `tags` must hold strings".to_string())?;
+            let bit = FLAG_TAGS
+                .iter()
+                .find(|(_, t)| *t == name)
+                .map(|&(bit, _)| bit)
+                .ok_or_else(|| format!("unknown trace event tag `{name}`"))?;
+            ev.flags |= bit;
+        }
+        let kinds = v
+            .get("kind_ns")
+            .ok_or_else(|| "missing trace event field `kind_ns`".to_string())?;
+        if let Json::Obj(pairs) = kinds {
+            for (k, _) in pairs {
+                if !KIND_NAMES.contains(&k.as_str()) {
+                    return Err(format!("unknown trace event field `kind_ns.{k}`"));
+                }
+            }
+        } else {
+            return Err("trace event field `kind_ns` must be an object".to_string());
+        }
+        for (slot, name) in KIND_NAMES.iter().enumerate() {
+            let x = kinds
+                .get(name)
+                .ok_or_else(|| format!("missing trace event field `kind_ns.{name}`"))?
+                .as_num()
+                .ok_or_else(|| format!("trace event field `kind_ns.{name}` must be a number"))?;
+            if !x.is_finite() || x < 0.0 || x != x.trunc() {
+                return Err(format!(
+                    "trace event field `kind_ns.{name}` must be a non-negative integer"
+                ));
+            }
+            ev.kind_ns[slot] = x as u64;
+        }
+        Ok(ev)
+    }
+}
+
+/// Exact totals over every event ever pushed (ring wrap loses events,
+/// never totals — they accumulate on push). Folded into
+/// `IaesReport::trace` and serve response lines.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Events recorded (including any later overwritten by wrap).
+    pub events: u64,
+    /// Events overwritten because the ring was full.
+    pub dropped: u64,
+    /// Boundaries at which a screening pass ran.
+    pub screens: u64,
+    /// Contractions (ground-set rebuilds).
+    pub contractions: u64,
+    /// Total nanoseconds in greedy/certificate oracle passes.
+    pub greedy_ns: u64,
+    /// Total nanoseconds in prox updates.
+    pub prox_ns: u64,
+    /// Total nanoseconds in screening-rule evaluation.
+    pub screen_ns: u64,
+    /// Total nanoseconds in contraction rebuilds + restarts.
+    pub contract_ns: u64,
+    /// Decompose only: per-component-kind totals (`KIND_*` slots).
+    pub kind_ns: [u64; 4],
+    /// Fork-join regions dispatched to the worker pool during the run
+    /// (delta of `WorkerPool::dispatches`; zero for sequential solves).
+    pub pool_dispatches: u64,
+}
+
+impl TraceSummary {
+    fn absorb(&mut self, ev: &TraceEvent) {
+        self.events += 1;
+        if ev.flags & flags::SCREEN != 0 {
+            self.screens += 1;
+        }
+        if ev.flags & flags::CONTRACTION != 0 {
+            self.contractions += 1;
+        }
+        self.greedy_ns += ev.greedy_ns;
+        self.prox_ns += ev.prox_ns;
+        self.screen_ns += ev.screen_ns;
+        self.contract_ns += ev.contract_ns;
+        for (acc, &x) in self.kind_ns.iter_mut().zip(&ev.kind_ns) {
+            *acc += x;
+        }
+    }
+}
+
+/// Preallocated overwrite-oldest event ring. All slots are materialized
+/// at construction, so `push` never allocates.
+#[derive(Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    /// Next write position.
+    head: usize,
+    /// Valid events currently held (≤ capacity).
+    len: usize,
+    totals: TraceSummary,
+}
+
+impl TraceRing {
+    /// A ring holding up to `cap` events (`cap` is clamped to ≥ 1);
+    /// every slot is allocated up front.
+    pub fn with_capacity(cap: usize) -> TraceRing {
+        TraceRing {
+            buf: vec![TraceEvent::default(); cap.max(1)],
+            head: 0,
+            len: 0,
+            totals: TraceSummary::default(),
+        }
+    }
+
+    /// Slot count (fixed at construction).
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no event has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Record one event, overwriting the oldest slot when full. Never
+    /// allocates (the buffer is pre-sized and `TraceEvent` is `Copy`).
+    pub fn push(&mut self, ev: &TraceEvent) {
+        let cap = self.buf.len();
+        if self.len == cap {
+            self.totals.dropped += 1;
+        } else {
+            self.len += 1;
+        }
+        self.buf[self.head] = *ev;
+        self.head = (self.head + 1) % cap;
+        self.totals.absorb(ev);
+    }
+
+    /// Surviving events, oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(move |i| &self.buf[(start + i) % cap])
+    }
+
+    /// Exact running totals (independent of ring wrap).
+    pub fn summary(&self) -> TraceSummary {
+        self.totals
+    }
+
+    /// Fold externally-counted pool fork-join regions into the totals
+    /// (the engine records the `WorkerPool::dispatches` delta here).
+    pub fn add_pool_dispatches(&mut self, n: u64) {
+        self.totals.pool_dispatches += n;
+    }
+}
+
+/// Cloneable handle to a shared [`TraceRing`]. The engine records
+/// through it at major-iteration boundaries; the caller snapshots or
+/// summarizes after (or during) the run. One mutex round-trip per
+/// boundary — never inside a solver inner loop.
+#[derive(Clone, Debug)]
+pub struct TraceSink {
+    ring: Arc<Mutex<TraceRing>>,
+}
+
+impl TraceSink {
+    /// A sink with the default ring capacity.
+    pub fn new() -> TraceSink {
+        TraceSink::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+
+    /// A sink holding up to `cap` events.
+    pub fn with_capacity(cap: usize) -> TraceSink {
+        TraceSink { ring: Arc::new(Mutex::new(TraceRing::with_capacity(cap))) }
+    }
+
+    /// Lock the ring, adopting a poisoned lock: the ring holds plain
+    /// counters and `Copy` slots, so any interrupted write left it
+    /// structurally intact.
+    fn ring(&self) -> MutexGuard<'_, TraceRing> {
+        self.ring.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Record one boundary event (allocation-free; see
+    /// [`TraceRing::push`]).
+    pub fn record(&self, ev: &TraceEvent) {
+        self.ring().push(ev);
+    }
+
+    /// Fold pool fork-join region counts into the summary.
+    pub fn add_pool_dispatches(&self, n: u64) {
+        self.ring().add_pool_dispatches(n);
+    }
+
+    /// Copy out the surviving events, oldest → newest.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        self.ring().iter().copied().collect()
+    }
+
+    /// Exact totals over the whole run so far.
+    pub fn summary(&self) -> TraceSummary {
+        self.ring().summary()
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.ring().capacity()
+    }
+
+    /// Events currently held in the ring.
+    pub fn len(&self) -> usize {
+        self.ring().len()
+    }
+
+    /// True when nothing has been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.ring().is_empty()
+    }
+}
+
+impl Default for TraceSink {
+    fn default() -> TraceSink {
+        TraceSink::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(iter: u64, flags: u32, greedy_ns: u64) -> TraceEvent {
+        TraceEvent {
+            iter,
+            flags,
+            primal: 1.5,
+            dual: -0.5,
+            gap: 2.0,
+            radius: 2.0,
+            active: 1,
+            inactive: 2,
+            survivors: 7,
+            new_active: 0,
+            new_inactive: 1,
+            greedy_ns,
+            prox_ns: 10,
+            screen_ns: 3,
+            contract_ns: 0,
+            kind_ns: [1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_but_totals_stay_exact() {
+        let mut ring = TraceRing::with_capacity(3);
+        for i in 0..5 {
+            ring.push(&ev(i + 1, if i % 2 == 0 { flags::SCREEN } else { 0 }, 100));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.capacity(), 3);
+        let iters: Vec<u64> = ring.iter().map(|e| e.iter).collect();
+        assert_eq!(iters, vec![3, 4, 5], "oldest events must be overwritten first");
+        let s = ring.summary();
+        assert_eq!(s.events, 5);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.screens, 3);
+        assert_eq!(s.greedy_ns, 500, "totals must include overwritten events");
+        assert_eq!(s.kind_ns, [5, 10, 15, 20]);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped_to_one_slot() {
+        let mut ring = TraceRing::with_capacity(0);
+        assert_eq!(ring.capacity(), 1);
+        ring.push(&ev(1, 0, 1));
+        ring.push(&ev(2, 0, 1));
+        assert_eq!(ring.len(), 1);
+        assert_eq!(ring.iter().next().unwrap().iter, 2);
+        assert_eq!(ring.summary().events, 2);
+        assert_eq!(ring.summary().dropped, 1);
+    }
+
+    #[test]
+    fn event_json_roundtrip_is_lossless() {
+        let original = ev(42, flags::SCREEN | flags::CONTRACTION | flags::WARM_RESTART, 7);
+        let text = original.to_json().to_string();
+        let back = TraceEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, original);
+        // A flagless event round-trips too (empty tags array).
+        let plain = ev(1, 0, 0);
+        let back = TraceEvent::from_json(&Json::parse(&plain.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, plain);
+    }
+
+    #[test]
+    fn event_parser_names_the_offending_field() {
+        let good = ev(3, flags::FINAL, 9).to_json().to_string();
+        let cases: Vec<(Json, &str)> = vec![
+            (Json::parse(&good.replace("\"gap\"", "\"gaap\"")).unwrap(), "gaap"),
+            (Json::parse(&good.replace("\"iter\":3", "\"iter\":-1")).unwrap(), "iter"),
+            (Json::parse(&good.replace("\"iter\":3", "\"iter\":3.5")).unwrap(), "iter"),
+            (
+                Json::parse(&good.replace("[\"final\"]", "[\"finale\"]")).unwrap(),
+                "finale",
+            ),
+            (
+                Json::parse(&good.replace("\"survivors\":7", "\"survivors\":\"x\""))
+                    .unwrap(),
+                "survivors",
+            ),
+            (
+                Json::parse(&good.replace("\"chain\":3", "\"chain\":-3")).unwrap(),
+                "chain",
+            ),
+            (Json::parse("[1,2]").unwrap(), "object"),
+        ];
+        for (doc, needle) in cases {
+            let err = TraceEvent::from_json(&doc).unwrap_err();
+            assert!(err.contains(needle), "wanted `{needle}` in `{err}`");
+        }
+        // Dropping a field names it as missing.
+        let no_gap = Json::obj(vec![("iter", Json::Num(1.0))]);
+        let err = TraceEvent::from_json(&no_gap).unwrap_err();
+        assert!(err.contains("primal") || err.contains("missing"), "got `{err}`");
+    }
+
+    #[test]
+    fn non_finite_floats_survive_the_jsonl_round_trip() {
+        // The emitter writes NaN/inf as null; the parser reads null
+        // back as NaN rather than erroring (same contract as
+        // `Json::as_num`). A cancelled first boundary can carry a
+        // pre-step NaN primal, so the trace pipeline must not choke.
+        let mut e = ev(1, flags::CANCELLED | flags::FINAL, 0);
+        e.primal = f64::NAN;
+        let back = TraceEvent::from_json(&Json::parse(&e.to_json().to_string()).unwrap())
+            .unwrap();
+        assert!(back.primal.is_nan());
+        assert_eq!(back.flags, e.flags);
+    }
+
+    #[test]
+    fn sink_is_shared_across_clones() {
+        let sink = TraceSink::with_capacity(8);
+        let other = sink.clone();
+        sink.record(&ev(1, 0, 5));
+        other.record(&ev(2, flags::SCREEN, 5));
+        other.add_pool_dispatches(3);
+        assert_eq!(sink.len(), 2);
+        let s = sink.summary();
+        assert_eq!(s.events, 2);
+        assert_eq!(s.screens, 1);
+        assert_eq!(s.pool_dispatches, 3);
+        let snap = sink.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].iter, 1);
+        assert_eq!(snap[1].iter, 2);
+    }
+}

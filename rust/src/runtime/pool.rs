@@ -41,7 +41,7 @@
 use std::marker::PhantomData;
 use std::ops::Range;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -75,6 +75,10 @@ struct Shared {
     go: Condvar,
     /// The dispatcher parks here until `remaining == 0`.
     done: Condvar,
+    /// Monotone count of dispatched fork-join jobs — mirrors `epoch`
+    /// but readable without the control lock, for telemetry snapshots
+    /// ([`WorkerPool::dispatches`]). Never consulted by workers.
+    dispatches: AtomicU64,
 }
 
 /// A fixed-size pool of parked worker threads (see the module docs).
@@ -112,6 +116,7 @@ impl WorkerPool {
             }),
             go: Condvar::new(),
             done: Condvar::new(),
+            dispatches: AtomicU64::new(0),
         });
         let handles = (0..workers)
             .map(|w| {
@@ -128,6 +133,14 @@ impl WorkerPool {
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.handles.len()
+    }
+
+    /// Monotone count of fork-join jobs dispatched over the pool's
+    /// lifetime. Telemetry readers snapshot this before and after a
+    /// solve and report the delta; the counter itself never feeds back
+    /// into scheduling, so reading it cannot perturb a trajectory.
+    pub fn dispatches(&self) -> u64 {
+        self.shared.dispatches.load(Ordering::Relaxed)
     }
 
     /// Run `job(worker_index)` once on **every** worker and block until
@@ -224,6 +237,7 @@ impl WorkerPool {
         c.epoch += 1;
         c.remaining = self.handles.len();
         drop(c);
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
         self.shared.go.notify_all();
     }
 

@@ -14,6 +14,7 @@
 
 use super::rules::RustScreener;
 use super::{RuleSet, ScreenInputs, Screener};
+use crate::obs::trace::{flags as tflags, TraceEvent, TraceSink, TraceSummary};
 use crate::runtime::cancel::{CancelReason, CancelToken};
 use crate::runtime::failpoint;
 use crate::runtime::pool::WorkerPool;
@@ -144,6 +145,16 @@ pub struct IaesOptions {
     /// serve-mode resident-pool path — one persistent pool per serve
     /// worker, reused across jobs, rebuilt only after a contained panic.
     pub oracle_pool: Option<Arc<WorkerPool>>,
+    /// Boundary-sampled solve telemetry: when set, the engine records one
+    /// fixed-size [`TraceEvent`] into this sink at every major-iteration
+    /// boundary — the same boundary discipline as `cancel`, where the
+    /// dual is a valid point of B(F̂) — with per-phase wall clocks
+    /// drained from the solver. `None` is bitwise inert (not one extra
+    /// clock read or branch happens), and an *attached* sink still never
+    /// changes a trajectory bit: timing is read-only and the sink is
+    /// consulted only between iterations. The determinism suite
+    /// certifies both properties.
+    pub trace: Option<TraceSink>,
 }
 
 impl Default for IaesOptions {
@@ -162,6 +173,7 @@ impl Default for IaesOptions {
             threads: 1,
             cancel: None,
             oracle_pool: None,
+            trace: None,
         }
     }
 }
@@ -181,6 +193,7 @@ impl std::fmt::Debug for IaesOptions {
             .field("threads", &self.threads)
             .field("cancel", &self.cancel.is_some())
             .field("oracle_pool", &self.oracle_pool.is_some())
+            .field("trace", &self.trace.is_some())
             .finish()
     }
 }
@@ -274,6 +287,11 @@ pub struct IaesReport {
     /// and the trigger log remain safe: every certificate fired before
     /// the stop is a valid Lemma-2/3 certificate.
     pub cancel_reason: Option<CancelReason>,
+    /// Boundary-sampled telemetry totals: `Some` exactly when
+    /// [`IaesOptions::trace`] was attached. Running sums over *every*
+    /// recorded event (exact even after the ring wrapped) plus the
+    /// pooled monolithic oracle's fork-join dispatch delta for this run.
+    pub trace: Option<TraceSummary>,
 }
 
 impl IaesReport {
@@ -357,6 +375,7 @@ impl<'a> IaesEngine<'a> {
         let mut converged = true;
         let mut cancel_reason = None;
         let cancel = self.opts.cancel.clone();
+        let trace = self.opts.trace.clone();
 
         // Residual primal (kept alive across restarts for warm starts).
         let mut w_restricted: Vec<f64> = vec![0.0; self.kept.len()];
@@ -402,7 +421,7 @@ impl<'a> IaesEngine<'a> {
         } else {
             1
         };
-        let _oracle_pool = if monolithic && greedy_threads > 1 {
+        let oracle_pool = if monolithic && greedy_threads > 1 {
             let pool = match self.opts.oracle_pool.clone() {
                 Some(pool) => pool,
                 None => Arc::new(WorkerPool::new(greedy_threads - 1)),
@@ -412,6 +431,19 @@ impl<'a> IaesEngine<'a> {
         } else {
             None
         };
+        // Telemetry arming: flipping the solver's phase clocks on is the
+        // only per-run setup tracing needs. The clocks are read-only —
+        // their values never feed back into an iterate — so an attached
+        // sink cannot change a trajectory bit; with `trace: None` this
+        // whole layer is dead code (not even the `Instant` reads happen).
+        if trace.is_some() {
+            solver.set_trace_timing(true);
+        }
+        let pool_dispatch_base = oracle_pool.as_ref().map_or(0, |p| p.dispatches());
+        // Contract/restart wall-nanos accumulated since the last recorded
+        // event: the solver restart runs *after* its contraction event was
+        // recorded, so its cost carries into the next boundary's span.
+        let mut carry_contract_ns: u64 = 0;
         // Persistent contraction buffers: `survivors`/`w_surv` double-
         // buffer against `kept`/`w_restricted` via swap, so a contraction
         // allocates nothing once the run's high-water capacity is reached.
@@ -427,6 +459,7 @@ impl<'a> IaesEngine<'a> {
                 // Restart from the restricted primal (step 14): warm —
                 // solver state projected through the contraction — or the
                 // cold rebuild when warm restarts are disabled.
+                let t_r = trace.is_some().then(Instant::now);
                 if warm_pending {
                     solver.reset_mapped(&scaled, &w_restricted, &map);
                 } else {
@@ -434,6 +467,13 @@ impl<'a> IaesEngine<'a> {
                     solver.reset(&scaled, &w_restricted);
                 }
                 warm_pending = false;
+                if let Some(t_r) = t_r {
+                    // The restart's greedy pass is already inside this
+                    // wall span; drain the solver's phase clocks so it
+                    // cannot leak into the next step's greedy/prox split.
+                    let _ = solver.take_phase_ns();
+                    carry_contract_ns += t_r.elapsed().as_nanos() as u64;
+                }
             }
             let f_v = scaled.eval_full();
             let mut q_gate = solver.gap(); // gap at last trigger (q in Alg. 2)
@@ -452,12 +492,34 @@ impl<'a> IaesEngine<'a> {
                     cancel_reason = Some(reason);
                     w_restricted.clear();
                     w_restricted.extend_from_slice(solver.w());
+                    if let Some(sink) = trace.as_ref() {
+                        // No step ran this boundary: gap/radius are the
+                        // last step's, primal/dual unknown (→ null).
+                        let mut flags = tflags::CANCELLED | tflags::FINAL;
+                        if reason == CancelReason::DeadlineExpired {
+                            flags |= tflags::DEADLINE;
+                        }
+                        sink.record(&TraceEvent {
+                            iter: total_iters as u64,
+                            flags,
+                            primal: f64::NAN,
+                            dual: f64::NAN,
+                            gap: final_gap,
+                            radius: (2.0 * final_gap).sqrt(),
+                            active: (self.active.len() + pending_a_count) as u32,
+                            inactive: (self.inactive.len() + pending_i_count) as u32,
+                            survivors: self.kept.len() as u32,
+                            contract_ns: std::mem::take(&mut carry_contract_ns),
+                            ..TraceEvent::default()
+                        });
+                    }
                     break 'outer;
                 }
                 failpoint::hit("iaes-iter");
                 let t0 = Instant::now();
                 let ev = solver.step(&scaled);
-                solver_time += t0.elapsed();
+                let step_dt = t0.elapsed();
+                solver_time += step_dt;
                 total_iters += 1;
                 // Non-finite guard: a NaN/∞ gap makes the Theorem-3
                 // screening radius meaningless, so screening from it would
@@ -471,6 +533,24 @@ impl<'a> IaesEngine<'a> {
                     .into());
                 }
                 final_gap = gap;
+                // Boundary telemetry: one fixed-size stack event per
+                // major iteration, phase clocks drained exactly once per
+                // step so greedy/prox attribution stays per-boundary.
+                // Nothing here escapes unless a sink is attached.
+                let mut tev = TraceEvent::default();
+                if trace.is_some() {
+                    let ph = solver.take_phase_ns();
+                    let step_ns = step_dt.as_nanos() as u64;
+                    tev.iter = total_iters as u64;
+                    tev.primal = ev.primal_value;
+                    tev.dual = ev.dual_value;
+                    tev.gap = gap;
+                    tev.radius = (2.0 * gap).sqrt();
+                    tev.greedy_ns = ph.oracle_ns.min(step_ns);
+                    tev.prox_ns = step_ns.saturating_sub(ph.oracle_ns);
+                    tev.kind_ns = ph.kind_ns;
+                    tev.contract_ns = std::mem::take(&mut carry_contract_ns);
+                }
 
                 if self.opts.record_history {
                     history.push(IterRecord {
@@ -489,12 +569,25 @@ impl<'a> IaesEngine<'a> {
                     converged = gap < self.opts.eps;
                     w_restricted.clear();
                     w_restricted.extend_from_slice(solver.w());
+                    if let Some(sink) = trace.as_ref() {
+                        tev.flags |= tflags::FINAL;
+                        tev.active = (self.active.len() + pending_a_count) as u32;
+                        tev.inactive = (self.inactive.len() + pending_i_count) as u32;
+                        tev.survivors = self.kept.len() as u32;
+                        sink.record(&tev);
+                    }
                     break 'outer;
                 }
 
                 let should_screen = !self.opts.rules.is_empty()
                     && gap < self.opts.rho * q_gate;
                 if !should_screen {
+                    if let Some(sink) = trace.as_ref() {
+                        tev.active = (self.active.len() + pending_a_count) as u32;
+                        tev.inactive = (self.inactive.len() + pending_i_count) as u32;
+                        tev.survivors = self.kept.len() as u32;
+                        sink.record(&tev);
+                    }
                     continue;
                 }
 
@@ -547,6 +640,13 @@ impl<'a> IaesEngine<'a> {
                     screen_time: dt,
                 });
                 q_gate = gap;
+                if trace.is_some() {
+                    let last = triggers.last().expect("trigger just pushed");
+                    tev.flags |= tflags::SCREEN;
+                    tev.screen_ns = dt.as_nanos() as u64;
+                    tev.new_active = last.new_active as u32;
+                    tev.new_inactive = last.new_inactive as u32;
+                }
 
                 // Contract only when the batch is worth a solver restart
                 // (Remark 4 cost/benefit; min_reduction_frac = 0 restarts
@@ -558,8 +658,15 @@ impl<'a> IaesEngine<'a> {
                 if pending_total == 0
                     || (pending_total < threshold && pending_total < self.kept.len())
                 {
+                    if let Some(sink) = trace.as_ref() {
+                        tev.active = (self.active.len() + pending_a_count) as u32;
+                        tev.inactive = (self.inactive.len() + pending_i_count) as u32;
+                        tev.survivors = self.kept.len() as u32;
+                        sink.record(&tev);
+                    }
                     continue;
                 }
+                let t_c = trace.is_some().then(Instant::now);
 
                 // Contract the ground set: move pending certificates out.
                 // All buffers are persistent: survivors/w_surv refill and
@@ -605,6 +712,23 @@ impl<'a> IaesEngine<'a> {
                     emptied = true;
                     final_gap = 0.0;
                 }
+                if let Some(sink) = trace.as_ref() {
+                    if let Some(t_c) = t_c {
+                        tev.contract_ns += t_c.elapsed().as_nanos() as u64;
+                    }
+                    tev.flags |= tflags::CONTRACTION;
+                    if self.kept.is_empty() {
+                        tev.flags |= tflags::EMPTIED | tflags::FINAL;
+                    } else if warm_pending {
+                        tev.flags |= tflags::WARM_RESTART;
+                    } else {
+                        tev.flags |= tflags::COLD_RESTART;
+                    }
+                    tev.active = self.active.len() as u32;
+                    tev.inactive = self.inactive.len() as u32;
+                    tev.survivors = self.kept.len() as u32;
+                    sink.record(&tev);
+                }
                 // Re-target the scaled problem + solver (outer loop).
                 continue 'outer;
             }
@@ -632,6 +756,17 @@ impl<'a> IaesEngine<'a> {
         minimizer.sort_unstable();
         let minimum = self.f.eval_ids(&minimizer);
 
+        // Fold the pooled oracle's fork-join dispatch delta into the
+        // summary: how many greedy passes this run fanned over the pool.
+        let trace_summary = trace.as_ref().map(|sink| {
+            if let Some(pool) = oracle_pool.as_ref() {
+                sink.add_pool_dispatches(
+                    pool.dispatches().saturating_sub(pool_dispatch_base),
+                );
+            }
+            sink.summary()
+        });
+
         Ok(IaesReport {
             minimizer,
             minimum,
@@ -648,6 +783,7 @@ impl<'a> IaesEngine<'a> {
             block_threads: None,
             greedy_threads: (monolithic && greedy_threads > 1).then_some(greedy_threads),
             cancel_reason,
+            trace: trace_summary,
         })
     }
 }
@@ -903,6 +1039,36 @@ mod tests {
         assert_eq!(tokened.minimizer, plain.minimizer);
         assert_eq!(tokened.iters, plain.iters);
         assert_eq!(tokened.final_gap.to_bits(), plain.final_gap.to_bits());
+    }
+
+    #[test]
+    fn attached_trace_sink_is_bitwise_inert_and_summarizes_the_run() {
+        // Tracing is observation only: an attached sink must reproduce
+        // the untraced trajectory bit for bit, and the summary must
+        // account for every major iteration exactly once.
+        let f = IwataFn::new(18);
+        let plain = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        assert!(plain.trace.is_none(), "untraced runs carry no summary");
+        let sink = TraceSink::new();
+        let opts = IaesOptions { trace: Some(sink.clone()), ..Default::default() };
+        let traced = solve_sfm_with_screening(&f, &opts).unwrap();
+        assert_eq!(traced.minimum.to_bits(), plain.minimum.to_bits());
+        assert_eq!(traced.minimizer, plain.minimizer);
+        assert_eq!(traced.iters, plain.iters);
+        assert_eq!(traced.final_gap.to_bits(), plain.final_gap.to_bits());
+        let s = traced.trace.expect("traced run must return a summary");
+        assert_eq!(s.events, traced.iters as u64, "one event per major iteration");
+        assert_eq!(s.dropped, 0);
+        assert_eq!(s.screens, traced.triggers.len() as u64);
+        let events = sink.snapshot();
+        assert_eq!(events.len() as u64, s.events);
+        let last = events.last().expect("non-empty trace");
+        assert_ne!(last.flags & tflags::FINAL, 0, "last event is terminal");
+        assert!(events.iter().all(|e| e.gap.is_finite() && e.iter >= 1));
+        // Phase spans accounted: per-event greedy+prox sums match the
+        // summary totals (absorbed on push, exact even if wrapped).
+        let greedy: u64 = events.iter().map(|e| e.greedy_ns).sum();
+        assert_eq!(greedy, s.greedy_ns);
     }
 
     #[test]

@@ -477,6 +477,14 @@ impl ProxSolver for FrankWolfe {
         self.shared.greedy_ws.set_pool(pool);
     }
 
+    fn set_trace_timing(&mut self, enabled: bool) {
+        self.shared.trace_timing = enabled;
+    }
+
+    fn take_phase_ns(&mut self) -> super::PhaseNs {
+        super::PhaseNs { oracle_ns: self.shared.take_oracle_ns(), kind_ns: [0; 4] }
+    }
+
     fn name(&self) -> &'static str {
         match self.opts.variant {
             FwVariant::Plain => "frank-wolfe",

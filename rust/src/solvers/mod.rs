@@ -44,6 +44,20 @@ pub struct SolverEvent {
     pub primal_value: f64,
 }
 
+/// Per-phase nanosecond accumulators drained by the IAES engine at
+/// major-iteration boundaries (trace plumbing; see
+/// [`obs::trace`](crate::obs::trace)). All-zero unless trace timing is
+/// enabled on the solver.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseNs {
+    /// Nanoseconds inside greedy/certificate oracle passes.
+    pub oracle_ns: u64,
+    /// Decompose only: nanoseconds inside the block best-response
+    /// sweeps, split by component kind (slots follow
+    /// `obs::trace::KIND_*`). All-zero for monolithic solvers.
+    pub kind_ns: [u64; 4],
+}
+
 /// A dual solver for (Q-D) that also maintains the PAV-refined primal.
 pub trait ProxSolver {
     /// One major iteration (exactly one greedy oracle pass).
@@ -106,6 +120,25 @@ pub trait ProxSolver {
         let _ = pool;
     }
 
+    /// Enable (or disable) boundary phase timing. When on, the solver
+    /// accumulates per-phase nanoseconds for
+    /// [`take_phase_ns`](Self::take_phase_ns); the IAES engine flips
+    /// this once per run when a trace sink is attached. Timing only
+    /// reads clocks around existing spans — it never changes a
+    /// trajectory bit (pinned by the traced-vs-untraced determinism
+    /// tests). The default is a no-op for solvers with no phases to
+    /// report.
+    fn set_trace_timing(&mut self, enabled: bool) {
+        let _ = enabled;
+    }
+
+    /// Drain the per-phase nanoseconds accumulated since the last call
+    /// (zeroing the accumulators). Always default when trace timing is
+    /// off.
+    fn take_phase_ns(&mut self) -> PhaseNs {
+        PhaseNs::default()
+    }
+
     /// Human-readable solver name (reports/benches).
     fn name(&self) -> &'static str;
 }
@@ -124,6 +157,12 @@ pub(crate) struct PrimalState {
     pub pav_ws: PavWorkspace,
     pav_buf: Vec<f64>,
     neg_gain_buf: Vec<f64>,
+    /// Trace-timing gate: when set, every greedy pass is clocked into
+    /// `oracle_ns`. Off by default — an untraced solve reads no clocks
+    /// here.
+    pub trace_timing: bool,
+    /// Nanoseconds spent in greedy passes since the last drain.
+    pub oracle_ns: u64,
 }
 
 impl PrimalState {
@@ -137,7 +176,15 @@ impl PrimalState {
             pav_ws: PavWorkspace::default(),
             pav_buf: vec![0.0; p],
             neg_gain_buf: vec![0.0; p],
+            trace_timing: false,
+            oracle_ns: 0,
         }
+    }
+
+    /// Drain the greedy-span accumulator (zero unless
+    /// [`trace_timing`](Self::trace_timing) is set).
+    pub fn take_oracle_ns(&mut self) -> u64 {
+        std::mem::take(&mut self.oracle_ns)
     }
 
     pub fn resize(&mut self, p: usize) {
@@ -165,7 +212,13 @@ impl PrimalState {
             *d = -xi;
         }
         let dir = std::mem::take(&mut self.pav_buf);
+        // Boundary-discipline clock: read only around the whole oracle
+        // pass, and only when a trace sink armed the gate.
+        let t0 = self.trace_timing.then(std::time::Instant::now);
         let info = greedy_base_vertex(f, &dir, &mut self.greedy_ws, q);
+        if let Some(t0) = t0 {
+            self.oracle_ns += t0.elapsed().as_nanos() as u64;
+        }
         self.pav_buf = dir;
         self.fc = self.fc.min(info.best_level_value);
 
@@ -217,7 +270,11 @@ impl PrimalState {
         let p = f.ground_size();
         self.resize(p);
         self.w.copy_from_slice(w_init);
+        let t0 = self.trace_timing.then(std::time::Instant::now);
         let info = greedy_base_vertex(f, w_init, &mut self.greedy_ws, s_out);
+        if let Some(t0) = t0 {
+            self.oracle_ns += t0.elapsed().as_nanos() as u64;
+        }
         self.fc = self.fc.min(info.best_level_value);
         dot(w_init, s_out)
     }

@@ -9,6 +9,7 @@
 
 use sfm_screen::brute::brute_force_sfm;
 use sfm_screen::lovasz::{sup_level_set, ContractionMap};
+use sfm_screen::obs::TraceSink;
 use sfm_screen::rng::Pcg64;
 use sfm_screen::screening::iaes::{solve_sfm_with_screening, IaesOptions, IaesReport};
 use sfm_screen::solvers::frankwolfe::{FrankWolfe, FwOptions};
@@ -398,5 +399,64 @@ fn iaes_monolithic_solve_is_bitwise_identical_across_thread_counts() {
         assert_eq!(r.minimizer, base.minimizer, "t={t}");
         assert_eq!(r.minimum.to_bits(), base.minimum.to_bits(), "t={t}");
         assert_eq!(r.final_gap.to_bits(), base.final_gap.to_bits(), "t={t}");
+    }
+}
+
+/// Tracing is observation only: a traced monolithic solve must match
+/// the untraced one bit for bit at every thread count — same history,
+/// same triggers, same minimizer — and the recorded events must mirror
+/// the per-iteration history exactly (clock fields aside).
+#[test]
+fn iaes_traced_solve_is_bitwise_identical_to_untraced_across_threads() {
+    let f = seeded_kernel_cut(150, 2025);
+    let run = |threads: usize, trace: Option<TraceSink>| {
+        let opts = IaesOptions {
+            eps: 1e-9,
+            min_reduction_frac: 0.0, // contract on every certificate
+            threads,
+            trace,
+            ..Default::default()
+        };
+        solve_sfm_with_screening(&f, &opts).unwrap()
+    };
+    for t in [1usize, 2, 4] {
+        let plain = run(t, None);
+        assert!(plain.trace.is_none(), "t={t}: untraced run carries no summary");
+        let sink = TraceSink::new();
+        let traced = run(t, Some(sink.clone()));
+        assert_eq!(traced.iters, plain.iters, "t={t}");
+        assert_eq!(traced.history.len(), plain.history.len(), "t={t}");
+        for (x, y) in traced.history.iter().zip(&plain.history) {
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits(), "t={t}, iter {}", x.iter);
+            assert_eq!(x.p_remaining, y.p_remaining, "t={t}");
+            assert_eq!(x.active, y.active, "t={t}");
+            assert_eq!(x.inactive, y.inactive, "t={t}");
+        }
+        assert_eq!(traced.triggers.len(), plain.triggers.len(), "t={t}");
+        for (x, y) in traced.triggers.iter().zip(&plain.triggers) {
+            assert_eq!(x.iter, y.iter, "t={t}");
+            assert_eq!(x.gap.to_bits(), y.gap.to_bits(), "t={t}");
+            assert_eq!(x.new_active_ids, y.new_active_ids, "t={t}");
+            assert_eq!(x.new_inactive_ids, y.new_inactive_ids, "t={t}");
+        }
+        assert_eq!(traced.minimizer, plain.minimizer, "t={t}");
+        assert_eq!(traced.minimum.to_bits(), plain.minimum.to_bits(), "t={t}");
+        assert_eq!(traced.final_gap.to_bits(), plain.final_gap.to_bits(), "t={t}");
+        // The trace saw exactly the iterations the history recorded, with
+        // the same gaps — boundary sampling, nothing interpolated.
+        let events = sink.snapshot();
+        assert_eq!(events.len(), plain.history.len(), "t={t}");
+        for (e, h) in events.iter().zip(&plain.history) {
+            assert_eq!(e.iter as usize, h.iter, "t={t}");
+            assert_eq!(e.gap.to_bits(), h.gap.to_bits(), "t={t}");
+        }
+        let s = traced.trace.expect("traced run must return a summary");
+        assert_eq!(s.events, traced.iters as u64, "t={t}");
+        assert_eq!(s.screens, traced.triggers.len() as u64, "t={t}");
+        if t == 1 {
+            assert_eq!(s.pool_dispatches, 0, "t=1 runs without a pool");
+        } else {
+            assert!(s.pool_dispatches > 0, "t={t}: pooled passes must be counted");
+        }
     }
 }

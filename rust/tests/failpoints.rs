@@ -133,6 +133,57 @@ fn oracle_panic_is_contained_and_the_pool_rebuilt() {
     }
 }
 
+/// The serve metrics registry lives outside the workers, so a contained
+/// panic and the ensuing pool rebuild must not reset a single counter:
+/// the poisoned job stays accounted as panicked + error, the follow-up
+/// job as ok, and a stats line answered after the rebuild reports all
+/// of it.
+#[test]
+fn metrics_survive_a_worker_panic_and_pool_rebuild() {
+    let _g = serial();
+    failpoint::reset();
+    let buf = Buf::default();
+    let opts = ServeOptions { workers: 1, oracle_threads: 2, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("oracle", FpAction::Panic, 1);
+    core.submit_line(r#"{"id": "doomed", "workload": {"kind": "iwata", "p": 26}}"#);
+    core.submit_line(r#"{"id": "after", "workload": {"kind": "iwata", "p": 26}}"#);
+    buf.wait_for(2);
+    // The gauge covers queued + in-flight; wait for the worker to fully
+    // retire both jobs so every histogram observation has landed.
+    let t0 = Instant::now();
+    while core.metrics().queue_depth.get() != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "jobs never drained");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    core.submit_line(r#"{"id": "stats", "op": "stats"}"#);
+    buf.wait_for(3);
+    core.finish();
+    failpoint::reset();
+
+    let m = core.metrics();
+    assert_eq!(m.pool_rebuilds.get(), 1, "one contained panic → one rebuild");
+    assert_eq!(m.jobs_panicked.get(), 1);
+    assert_eq!(m.jobs_error.get(), 1);
+    assert_eq!(m.jobs_ok.get(), 1);
+    assert_eq!(m.jobs_accepted.get(), 2);
+    assert_eq!(m.queue_depth.get(), 0);
+    assert_eq!(m.wall_error.count(), 1);
+    assert_eq!(m.wall_ok.count(), 1);
+    assert_eq!(m.queue_wait.count(), 2, "both jobs observed a queue wait");
+
+    let lines = buf.lines();
+    let stats = by_id(&lines, "stats");
+    assert_eq!(status(stats), "ok");
+    let jobs = stats.get("stats").unwrap().get("jobs").unwrap();
+    assert_eq!(jobs.get("panicked").unwrap().as_num(), Some(1.0));
+    assert_eq!(jobs.get("ok").unwrap().as_num(), Some(1.0));
+    assert_eq!(
+        stats.get("stats").unwrap().get("pool_rebuilds").unwrap().as_num(),
+        Some(1.0)
+    );
+}
+
 /// A NaN injected into the duality gap is refused by the engine's
 /// non-finite guard as a typed [`NumericFault`] — screening never sees
 /// an undefined radius.

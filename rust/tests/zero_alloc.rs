@@ -304,6 +304,50 @@ fn warm_restart_across_contraction_is_zero_alloc() {
     );
 }
 
+/// Steady-state tracing is allocation-free: the ring is pre-sized at
+/// attach time, recording overwrites the oldest slot in place once
+/// full, and the per-step phase-clock drain is plain arithmetic. A
+/// traced solve round — steps with trace timing enabled, one phase
+/// drain and one boundary record per step, exactly the engine's
+/// cadence — must allocate nothing at the high-water mark. The tiny
+/// ring capacity forces the wrap path into the measured window.
+#[test]
+fn traced_solve_steady_state_is_zero_alloc() {
+    use sfm_screen::obs::{TraceEvent, TraceSink};
+    let p = 48;
+    let inner = seeded_kernel_cut(p, 4242);
+    let kept_full: Vec<usize> = (0..p).collect();
+    let w_full = vec![0.0; p];
+    let mut scaled = ScaledFn::new(&inner, &[], kept_full.clone());
+    let mut solver = MinNormPoint::new(&scaled, MinNormOptions::default(), None);
+    solver.set_trace_timing(true);
+    let sink = TraceSink::with_capacity(8);
+    let mut iter = 0u64;
+    let mut round = || {
+        scaled.set_reduction(&[], &kept_full);
+        solver.reset(&scaled, &w_full);
+        for _ in 0..6 {
+            let ev = solver.step(&scaled);
+            let ph = solver.take_phase_ns();
+            iter += 1;
+            let mut tev = TraceEvent::default();
+            tev.iter = iter;
+            tev.gap = ev.gap;
+            tev.greedy_ns = ph.oracle_ns;
+            tev.kind_ns = ph.kind_ns;
+            sink.record(&tev);
+        }
+    };
+    for _ in 0..4 {
+        round();
+    }
+    let n = count_allocs(&mut round);
+    assert_eq!(n, 0, "traced steady-state round allocated {n} times after warm-up");
+    let s = sink.summary();
+    assert_eq!(s.events, iter, "summary must count every record, wrap included");
+    assert!(s.dropped > 0, "the measured window must have wrapped the ring");
+}
+
 /// Same cycle for the Frank–Wolfe solver: with the atom keys interned in
 /// a flat `IndexMat` and the hash-sorted id lookup replacing the old
 /// owned-key HashMap, the FW contraction restart — including the
