@@ -1,7 +1,7 @@
 # Developer conveniences. The offline build container has no rust
 # toolchain — these targets are for CI / driver machines.
 
-.PHONY: baseline bench test lint miri tsan
+.PHONY: baseline bench test lint miri tsan crash-resume
 
 # Record BENCH_micro.baseline.json at CI's smoke sizes so the
 # compare_bench gate fails regressions instead of only self-diffing.
@@ -26,6 +26,25 @@ test:
 # nonzero with file:line diagnostics on any violation.
 lint:
 	cd rust && cargo run --bin sfm_lint
+
+# Crash-resume smoke (RELIABILITY.md): an armed failpoint kills a
+# checkpointed solve at the 4th boundary; resuming from the snapshot it
+# left behind must land on the uninterrupted run's minimizer. Mirrors
+# the CI leg of the same name.
+crash-resume:
+	cd rust && cargo run --release --features failpoint --bin sfm-screen -- solve \
+		--workload iwata --p 48 --quiet --json > /tmp/sfm_direct.json
+	cd rust && ! SFM_FAILPOINT='iaes-iter=panic@4' cargo run --release --features failpoint \
+		--bin sfm-screen -- solve --workload iwata --p 48 --quiet --checkpoint /tmp/sfm_ck.jsonl
+	cd rust && cargo run --release --features failpoint --bin sfm-screen -- \
+		checkpoint-check --file /tmp/sfm_ck.jsonl
+	cd rust && cargo run --release --features failpoint --bin sfm-screen -- solve \
+		--workload iwata --p 48 --quiet --json --resume /tmp/sfm_ck.jsonl > /tmp/sfm_resumed.json
+	python3 -c "import json; d = json.load(open('/tmp/sfm_direct.json')); \
+		r = json.load(open('/tmp/sfm_resumed.json')); \
+		assert abs(d['minimum'] - r['minimum']) < 1e-6, (d['minimum'], r['minimum']); \
+		assert d['minimizer'] == r['minimizer'], 'resumed minimizer diverged'"
+	@echo "crash-resume smoke ok"
 
 # Miri leg: interpret the unsafe fork-join and linalg cores under the
 # aliasing/UB checker. SFM_PROP_CASES caps the property suites so the

@@ -137,6 +137,7 @@ impl Config {
             "worker_loop",
             "serve_one",
             "run_job",
+            "retry_backoff",
             "submit_line_with",
             "split_envelope",
             "envelope",
@@ -491,7 +492,7 @@ const HOT_METHODS: &[&str] = &["to_vec", "to_string", "to_owned", "collect"];
 const OBS_METHODS: &[&str] = &["record", "observe", "add_pool_dispatches"];
 const HOT_TYPES: &[&str] = &[
     "Vec", "String", "Box", "Rc", "Arc", "VecDeque", "HashMap", "HashSet", "BTreeMap",
-    "Instant", "SystemTime", "Pcg64", "TraceSink", "MetricsRegistry",
+    "Instant", "SystemTime", "Pcg64", "TraceSink", "MetricsRegistry", "CheckpointSink",
 ];
 
 fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
@@ -529,9 +530,11 @@ fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
             let bad = match name {
                 "Instant" | "SystemTime" => assoc == "now",
                 "Pcg64" => true, // any RNG construction/use is nondeterministic state
-                // Observability handles must never be constructed or
-                // touched inside a hot kernel — any associated call.
-                "TraceSink" | "MetricsRegistry" => true,
+                // Observability/checkpoint handles must never be
+                // constructed or touched inside a hot kernel — any
+                // associated call (snapshots are boundary-sampled,
+                // RELIABILITY.md).
+                "TraceSink" | "MetricsRegistry" | "CheckpointSink" => true,
                 _ => matches!(assoc, "new" | "with_capacity" | "from"),
             };
             if bad {

@@ -94,6 +94,7 @@ COMMANDS:
                    --socket PATH), one response line per job on stdout;
                    answers {\"op\": \"stats\"} lines with the metrics registry
   trace-check      validate a solve --trace JSONL file (--file PATH)
+  checkpoint-check validate a solve --checkpoint JSONL file (--file PATH)
   path             SFM' regularization path from one solve (--p)
   table1           Table 1: two-moons running times & speedups
   table3           Tables 2+3: image segmentation statistics & times
@@ -136,6 +137,13 @@ COMMON FLAGS:
                    OBSERVABILITY.md; validate with trace-check)
   --trace-cap N    solve: trace ring capacity (default 4096); when full
                    the oldest events are overwritten, summaries stay exact
+  --checkpoint PATH  solve: snapshot the solve at major-iteration
+                   boundaries, atomically replacing PATH each time (see
+                   RELIABILITY.md; validate with checkpoint-check)
+  --checkpoint-every N  solve: snapshot cadence in boundaries (default 1)
+  --resume PATH    solve: restart from a checkpoint instead of cold —
+                   screened sets are re-installed and solver atoms
+                   regenerated from their stored orders
 
 SERVE FLAGS:
   --workers N      concurrent solve workers (default 0 = all cores)
@@ -146,6 +154,12 @@ SERVE FLAGS:
                    major-iteration boundaries; partial results stay safe)
   --oracle-threads N  greedy-oracle lanes per worker (default 1;
                    bit-identical at every lane count)
+  --retries N      re-admit a panicked or numeric-faulted job up to N
+                   times from its last in-memory boundary checkpoint
+                   (default 0 = answer on the first failure)
+  --retry-backoff-ms B  base backoff before a retry, doubled per attempt
+                   and clamped to the job's original admission deadline
+                   (default 100)
   --socket PATH    additional unix-socket ingress (responses per
                    connection)
 ";

@@ -46,11 +46,15 @@
 use super::jobs::{kind_name, JobSpec};
 use super::json::{report_to_json, Json};
 use super::runner::panic_message;
+use crate::decompose::{solve_decomposed, solve_decomposed_resumed};
 use crate::obs::metrics::MetricsRegistry;
 use crate::runtime::cancel::CancelToken;
 use crate::runtime::failpoint;
 use crate::runtime::pool::WorkerPool;
-use crate::screening::iaes::{solve_sfm_with_screening, IaesReport, NumericFault};
+use crate::screening::checkpoint::{CheckpointConf, CheckpointSink, SolveCheckpoint};
+use crate::screening::iaes::{
+    solve_sfm_with_screening, IaesEngine, IaesReport, NumericFault,
+};
 use crate::submodular::Submodular;
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -82,6 +86,16 @@ pub struct ServeOptions {
     pub oracle_threads: usize,
     /// Optional unix-socket ingress path.
     pub socket: Option<PathBuf>,
+    /// Extra attempts for jobs that end in a contained panic or numeric
+    /// fault (`0`, the default, answers on the first failure — the PR-8
+    /// behavior). Retry-armed jobs carry an in-memory boundary
+    /// checkpoint, so a retried attempt resumes from the last safe
+    /// snapshot instead of restarting cold.
+    pub retries: usize,
+    /// Base backoff before a retry, doubled per attempt and clamped so
+    /// the sleep never extends past the job's original admission
+    /// deadline.
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -92,6 +106,8 @@ impl Default for ServeOptions {
             default_deadline_ms: None,
             oracle_threads: 1,
             socket: None,
+            retries: 0,
+            retry_backoff_ms: 100,
         }
     }
 }
@@ -120,6 +136,8 @@ struct Shared {
     default_sink: Sink,
     default_deadline_ms: Option<u64>,
     oracle_threads: usize,
+    retries: usize,
+    retry_backoff_ms: u64,
     /// Immutable-oracle cache for monolithic jobs, keyed by workload
     /// spec. Oracles are plain data (`Submodular: Sync`), so sharing one
     /// across workers never affects a trajectory.
@@ -176,6 +194,8 @@ impl ServeCore {
             default_sink: Arc::new(Mutex::new(sink)),
             default_deadline_ms: opts.default_deadline_ms,
             oracle_threads: opts.oracle_threads.max(1),
+            retries: opts.retries,
+            retry_backoff_ms: opts.retry_backoff_ms,
             cache: Mutex::new(HashMap::new()),
             metrics: MetricsRegistry::new(),
         });
@@ -511,92 +531,167 @@ fn worker_loop(shared: &Arc<Shared>) {
     }
 }
 
+/// Budgeted backoff before a retry: `retry_backoff_ms · 2^(attempt-1)`,
+/// clamped so the sleep can never extend past the job's *original*
+/// admission deadline — a retry may burn whatever budget the failed
+/// attempt left, never grow it.
+fn retry_backoff(shared: &Shared, job: &Pending, attempt: usize) {
+    let shift = attempt.saturating_sub(1).min(16) as u32;
+    let ms = shared.retry_backoff_ms.saturating_mul(1u64 << shift);
+    let mut delay = Duration::from_millis(ms);
+    if let Some(d) = job.deadline_at {
+        delay = delay.min(d.saturating_duration_since(Instant::now()));
+    }
+    if !delay.is_zero() {
+        std::thread::sleep(delay);
+    }
+}
+
 /// Run one admitted job and write its response. This is the containment
 /// boundary: panics, numeric faults, and deadline expiries all end here
-/// as structured responses — never as a dead worker.
+/// as structured responses — never as a dead worker. With `--retries`,
+/// a panicked or numeric-faulted attempt is re-admitted from the job's
+/// last in-memory boundary checkpoint (cold when none was captured yet)
+/// after a budgeted backoff; `wall_s` covers every attempt, and the
+/// deadline keeps counting from the original admission.
 fn serve_one(shared: &Shared, job: &Pending, pool: &mut Option<Arc<WorkerPool>>) {
     let m = &shared.metrics;
     let t0 = Instant::now();
     let queue_wait_s = (t0 - job.admitted_at).as_secs_f64();
     m.queue_wait.observe(queue_wait_s);
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
-        failpoint::hit("serve-job");
-        run_job(shared, job, pool.clone())
-    }));
-    let wall_s = t0.elapsed().as_secs_f64();
-    let env = match outcome {
-        Ok(Ok(report)) => {
-            let status = if report.cancel_reason.is_some() || !report.converged {
-                "partial"
-            } else {
-                "ok"
-            };
-            if status == "ok" {
-                m.jobs_ok.inc();
-                m.wall_ok.observe(wall_s);
-            } else {
-                m.jobs_partial.inc();
-                m.wall_partial.observe(wall_s);
-            }
-            let rj = report_to_json(&report, job.spec.opts.record_history);
-            envelope(&job.id, job.seq, status, rj, None, wall_s, Some(queue_wait_s))
+    // Per-job in-memory checkpoint slot, armed only when retries are
+    // configured: a zero-retry service runs exactly the PR-8 path.
+    let sink = (shared.retries > 0).then(CheckpointSink::in_memory);
+    let mut attempt = 0usize;
+    let env = loop {
+        let resume = if attempt > 0 {
+            sink.as_ref().and_then(CheckpointSink::latest)
+        } else {
+            None
+        };
+        if resume.is_some() {
+            m.resumes.inc();
         }
-        Ok(Err(err)) => {
-            let kind =
-                if err.downcast_ref::<NumericFault>().is_some() { "numeric" } else { "error" };
-            if kind == "numeric" {
-                m.jobs_numeric_faulted.inc();
+        let ckpt = sink.clone().map(|s| CheckpointConf::new(s, 1));
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            failpoint::hit("serve-job");
+            run_job(shared, job, pool.clone(), ckpt, resume)
+        }));
+        let wall_s = t0.elapsed().as_secs_f64();
+        match outcome {
+            Ok(Ok(report)) => {
+                let status = if report.cancel_reason.is_some() || !report.converged {
+                    "partial"
+                } else {
+                    "ok"
+                };
+                if status == "ok" {
+                    m.jobs_ok.inc();
+                    m.wall_ok.observe(wall_s);
+                } else {
+                    m.jobs_partial.inc();
+                    m.wall_partial.observe(wall_s);
+                }
+                let rj = report_to_json(&report, job.spec.opts.record_history);
+                break envelope(
+                    &job.id,
+                    job.seq,
+                    status,
+                    rj,
+                    None,
+                    wall_s,
+                    Some(queue_wait_s),
+                );
             }
-            m.jobs_error.inc();
-            m.wall_error.observe(wall_s);
-            let msg = format!("{err:#}");
-            envelope(
-                &job.id,
-                job.seq,
-                "error",
-                Json::Null,
-                Some((kind, msg)),
-                wall_s,
-                Some(queue_wait_s),
-            )
-        }
-        Err(payload) => {
-            // Contained job panic. The solve may have unwound through a
-            // pooled oracle pass, so rebuild this worker's pool rather
-            // than reason about what state the unwind left it in. The
-            // registry lives in `shared`, not in this worker, so every
-            // count (including this one) survives the rebuild.
-            if pool.is_some() {
-                *pool = make_pool(shared.oracle_threads);
-                m.pool_rebuilds.inc();
+            Ok(Err(err)) => {
+                let numeric = err.downcast_ref::<NumericFault>().is_some();
+                if numeric {
+                    m.jobs_numeric_faulted.inc();
+                }
+                if numeric && attempt < shared.retries {
+                    attempt += 1;
+                    m.jobs_retried.inc();
+                    retry_backoff(shared, job, attempt);
+                    continue;
+                }
+                let kind = if numeric { "numeric" } else { "error" };
+                m.jobs_error.inc();
+                m.wall_error.observe(wall_s);
+                let msg = format!("{err:#}");
+                break envelope(
+                    &job.id,
+                    job.seq,
+                    "error",
+                    Json::Null,
+                    Some((kind, msg)),
+                    wall_s,
+                    Some(queue_wait_s),
+                );
             }
-            m.jobs_panicked.inc();
-            m.jobs_error.inc();
-            m.wall_error.observe(wall_s);
-            let msg = format!("job panicked: {}", panic_message(payload.as_ref()));
-            envelope(
-                &job.id,
-                job.seq,
-                "error",
-                Json::Null,
-                Some(("panic", msg)),
-                wall_s,
-                Some(queue_wait_s),
-            )
+            Err(payload) => {
+                // Contained job panic. The solve may have unwound through
+                // a pooled oracle pass, so rebuild this worker's pool
+                // rather than reason about what state the unwind left it
+                // in — a retried attempt must start from a sound pool.
+                // The registry lives in `shared`, not in this worker, so
+                // every count (including this one) survives the rebuild.
+                if pool.is_some() {
+                    *pool = make_pool(shared.oracle_threads);
+                    m.pool_rebuilds.inc();
+                }
+                m.jobs_panicked.inc();
+                if attempt < shared.retries {
+                    attempt += 1;
+                    m.jobs_retried.inc();
+                    retry_backoff(shared, job, attempt);
+                    continue;
+                }
+                m.jobs_error.inc();
+                m.wall_error.observe(wall_s);
+                let msg = format!("job panicked: {}", panic_message(payload.as_ref()));
+                break envelope(
+                    &job.id,
+                    job.seq,
+                    "error",
+                    Json::Null,
+                    Some(("panic", msg)),
+                    wall_s,
+                    Some(queue_wait_s),
+                );
+            }
         }
     };
+    if let Some(s) = &sink {
+        m.checkpoints_written.add(s.written());
+    }
     write_line(&job.sink, &env);
 }
 
 /// Execute the solve for one job, arming the cancel token and (for
 /// monolithic jobs) the shared-instance cache and the worker's oracle
-/// pool. Decomposed jobs fall back to [`JobSpec::run`] — the block
-/// solver owns its own parallelism and instances are not cached.
-fn run_job(shared: &Shared, job: &Pending, pool: Option<Arc<WorkerPool>>) -> Result<IaesReport> {
+/// pool. Decomposed jobs go through the block solver — it owns its own
+/// parallelism and instances are not cached. `ckpt` attaches boundary
+/// checkpointing; `resume` restarts the solve from a snapshot instead
+/// of cold (both `None` outside retry-armed services).
+fn run_job(
+    shared: &Shared,
+    job: &Pending,
+    pool: Option<Arc<WorkerPool>>,
+    ckpt: Option<CheckpointConf>,
+    resume: Option<SolveCheckpoint>,
+) -> Result<IaesReport> {
     let mut spec = job.spec.clone();
+    // Retries re-arm from the job's *original* admission instant: a
+    // resumed attempt inherits whatever deadline budget the failed
+    // attempt left, never a fresh window.
     spec.opts.cancel = job.deadline_at.map(CancelToken::with_deadline_at);
-    if spec.decompose.is_some() {
-        return Ok(spec.run()?.report);
+    spec.opts.checkpoint = ckpt;
+    if let Some(dopts) = spec.decompose {
+        let f = spec.workload.build_decomposed()?;
+        return match resume {
+            Some(ck) => solve_decomposed_resumed(&f, &spec.opts, dopts, ck),
+            None => solve_decomposed(&f, &spec.opts, dopts),
+        };
     }
     spec.opts.oracle_pool = pool;
     let key = spec.workload.cache_key();
@@ -612,7 +707,10 @@ fn run_job(shared: &Shared, job: &Pending, pool: Option<Arc<WorkerPool>>) -> Res
             f
         }
     };
-    solve_sfm_with_screening(f.as_ref(), &spec.opts)
+    match resume {
+        Some(ck) => IaesEngine::new(f.as_ref(), spec.opts.clone()).resume_from(ck)?.run(),
+        None => solve_sfm_with_screening(f.as_ref(), &spec.opts),
+    }
 }
 
 /// Run the resident service: responses to stdout, requests from stdin

@@ -41,7 +41,9 @@ pub mod chain;
 pub mod prox;
 pub mod solver;
 
-pub use solver::{solve_decomposed, BlockProxSolver, DecomposeOptions};
+pub use solver::{
+    solve_decomposed, solve_decomposed_resumed, BlockProxSolver, DecomposeOptions,
+};
 
 use crate::submodular::concave_card::ConcaveCardFn;
 use crate::submodular::cut::CutFn;

@@ -62,7 +62,8 @@ use crate::runtime::pool::WorkerPool;
 use crate::screening::iaes::{IaesEngine, IaesOptions, IaesReport};
 use crate::solvers::minnorm::{MinNormOptions, MinNormPoint};
 use crate::obs::trace::{KIND_CARDINALITY, KIND_CHAIN, KIND_GENERIC, KIND_MODULAR};
-use crate::solvers::{PhaseNs, PrimalState, ProxSolver, SolverEvent};
+use crate::screening::checkpoint::SolveCheckpoint;
+use crate::solvers::{ComponentState, PhaseNs, PrimalState, ProxSolver, SolverEvent, SolverState};
 use crate::submodular::scaled::ScaledFn;
 use crate::submodular::Submodular;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -752,6 +753,107 @@ impl ProxSolver for BlockProxSolver<'_> {
         crate::lovasz::debug_assert_dual_feasible(f, &self.y, "BlockProxSolver::reset");
     }
 
+    fn export_state(&self) -> Option<SolverState> {
+        // Decomposed snapshots carry no corral: the per-component inner
+        // solvers rebuild their corrals on the first best response. What
+        // a safe resume needs is each feasible block dual `y_i` (the
+        // aggregate `y = Σ y_i ∈ B(F̂)` is then feasible by construction)
+        // plus the translation reference `z_prev` for format fidelity.
+        let mut components = Vec::with_capacity(self.comps.len());
+        for slot in &self.comps {
+            let st = slot.lock().unwrap_or_else(|e| e.into_inner());
+            components.push(ComponentState {
+                y: st.y.clone(),
+                z_prev: st.z_prev.clone(),
+            });
+        }
+        Some(SolverState {
+            kind: self.name().to_string(),
+            orders: Vec::new(),
+            weights: Vec::new(),
+            dual: self.y.clone(),
+            components,
+        })
+    }
+
+    fn restore(
+        &mut self,
+        f: &dyn Submodular,
+        w_init: &[f64],
+        state: &SolverState,
+    ) -> anyhow::Result<()> {
+        // Called after `reset_mapped` rebuilt every component's reduction
+        // for the checkpointed active/kept partition: the restored `y_i`
+        // were feasible in exactly these contracted `B(F̂_i)` when the
+        // boundary was snapshotted, so copying them back re-enters the
+        // product polytope without touching any oracle.
+        if state.kind != self.name() {
+            anyhow::bail!(
+                "snapshot kind '{}' does not match solver '{}'",
+                state.kind,
+                self.name()
+            );
+        }
+        if !state.orders.is_empty() || !state.weights.is_empty() {
+            anyhow::bail!(
+                "decomposed snapshot must not carry a corral \
+                 ({} orders, {} weights)",
+                state.orders.len(),
+                state.weights.len()
+            );
+        }
+        if state.components.len() != self.comps.len() {
+            anyhow::bail!(
+                "snapshot has {} components, decomposition has {}",
+                state.components.len(),
+                self.comps.len()
+            );
+        }
+        let p = f.ground_size();
+        if state.dual.len() != p || w_init.len() != p || self.y.len() != p {
+            anyhow::bail!(
+                "snapshot dual has {} entries, reduced problem has {}",
+                state.dual.len(),
+                p
+            );
+        }
+        for (ci, (slot, cs)) in self.comps.iter_mut().zip(&state.components).enumerate() {
+            let st = slot.get_mut().unwrap_or_else(|e| e.into_inner());
+            let n = st.local_kept.len();
+            if cs.y.len() != n || cs.z_prev.len() != n {
+                anyhow::bail!(
+                    "component {ci}: snapshot carries {} duals, reduction \
+                     keeps {n} elements (corrupted or mismatched checkpoint)",
+                    cs.y.len()
+                );
+            }
+            st.y.clear();
+            st.y.extend_from_slice(&cs.y);
+            st.z_prev.clear();
+            st.z_prev.extend_from_slice(&cs.z_prev);
+            // The inner corral was not snapshotted: the next best response
+            // cold-resets the block solver from the restored iterate.
+            st.warm = false;
+        }
+        self.aggregate();
+        let mut err = 0.0f64;
+        for (a, b) in self.y.iter().zip(&state.dual) {
+            let d = (a - b).abs();
+            if d > err {
+                err = d;
+            }
+        }
+        if !(err <= 1e-6) {
+            anyhow::bail!(
+                "regenerated aggregate dual deviates from snapshot by \
+                 {err:.3e} (corrupted or mismatched checkpoint)"
+            );
+        }
+        self.close_gap(f, w_init);
+        crate::lovasz::debug_assert_dual_feasible(f, &self.y, "BlockProxSolver::restore");
+        Ok(())
+    }
+
     fn greedy_full_sorts(&self) -> u64 {
         self.shared.greedy_ws.full_sorts
     }
@@ -794,6 +896,28 @@ pub fn solve_decomposed(
     let solver = BlockProxSolver::new(f, dopts);
     let workers = solver.num_threads();
     let mut report = IaesEngine::with_solver(f, opts, Box::new(solver)).run()?;
+    report.block_threads = Some(workers);
+    Ok(report)
+}
+
+/// [`solve_decomposed`], resumed from a boundary snapshot: the engine
+/// replays the checkpointed reduction through the per-component
+/// contraction machinery, the block solver re-enters the product polytope
+/// from the stored `y_i`, and the solve continues from the snapshotted
+/// major iteration.
+pub fn solve_decomposed_resumed(
+    f: &DecomposableFn,
+    opts: &IaesOptions,
+    dopts: DecomposeOptions,
+    ck: SolveCheckpoint,
+) -> anyhow::Result<IaesReport> {
+    let mut opts = opts.clone();
+    opts.warm_restart = true;
+    let solver = BlockProxSolver::new(f, dopts);
+    let workers = solver.num_threads();
+    let mut report = IaesEngine::with_solver(f, opts, Box::new(solver))
+        .resume_from(ck)?
+        .run()?;
     report.block_threads = Some(workers);
     Ok(report)
 }
@@ -1107,6 +1231,86 @@ mod tests {
             );
             assert_eq!(report.block_threads, Some(2), "worker count missing");
         }
+    }
+
+    #[test]
+    fn decomposed_checkpoint_resume_reaches_the_minimizer() {
+        // Mid-solve snapshot on the block path: truncate, resume in a
+        // fresh engine + fresh block solver, land on the brute minimum.
+        use crate::screening::checkpoint::{CheckpointConf, CheckpointSink};
+        let mut rng = Pcg64::seeded(67);
+        for (p, threads) in [(9usize, 1usize), (11, 4)] {
+            let dec = random_star_decomposition(p, &mut rng);
+            let brute = brute_force_sfm(&dec, 1e-9);
+            let base = IaesOptions { eps: 1e-9, ..Default::default() };
+            let sink = CheckpointSink::in_memory();
+            let truncated = IaesOptions {
+                max_iters: 3,
+                checkpoint: Some(CheckpointConf::new(sink.clone(), 1)),
+                ..base.clone()
+            };
+            let dopts = DecomposeOptions { threads, ..Default::default() };
+            solve_decomposed(&dec, &truncated, dopts).unwrap();
+            let Some(ck) = sink.latest() else {
+                continue; // converged before the first boundary was due
+            };
+            ck.validate().unwrap();
+            assert!(
+                ck.solver.as_ref().is_some_and(|s| !s.components.is_empty()),
+                "decomposed snapshot must carry component duals"
+            );
+            // Safety of the snapshotted certificates against brute force.
+            for &a in &ck.active {
+                assert!(brute.minimal.contains(&a), "ckpt active {a} unsafe");
+            }
+            for &i in &ck.inactive {
+                assert!(!brute.maximal.contains(&i), "ckpt inactive {i} unsafe");
+            }
+            // Round-trip through the wire format, as a real resume would.
+            let ck = SolveCheckpoint::from_jsonl(&ck.to_jsonl()).unwrap();
+            let report = solve_decomposed_resumed(&dec, &base, dopts, ck).unwrap();
+            assert!(
+                (report.minimum - brute.minimum).abs() < 1e-6,
+                "p={p} t={threads}: resumed {} vs brute {}",
+                report.minimum,
+                brute.minimum
+            );
+            assert_eq!(report.block_threads, Some(threads));
+        }
+    }
+
+    #[test]
+    fn block_restore_rejects_mismatched_snapshots() {
+        let mut rng = Pcg64::seeded(71);
+        let dec = random_star_decomposition(8, &mut rng);
+        let mut solver = BlockProxSolver::new(&dec, DecomposeOptions {
+            threads: 1,
+            ..Default::default()
+        });
+        for _ in 0..4 {
+            solver.step(&dec);
+        }
+        let state = solver.export_state().expect("block solver exports state");
+        assert_eq!(state.kind, "block-prox");
+        assert_eq!(state.components.len(), solver.num_components());
+        // Tampered aggregate dual → integrity gate.
+        let mut bad = state.clone();
+        bad.dual[0] += 0.5;
+        let w0 = vec![0.0; dec.ground_size()];
+        let err = solver.restore(&dec, &w0, &bad).unwrap_err();
+        assert!(err.to_string().contains("deviates from snapshot"), "got: {err}");
+        // Wrong component count → named rejection.
+        let mut bad = state.clone();
+        bad.components.pop();
+        let err = solver.restore(&dec, &w0, &bad).unwrap_err();
+        assert!(err.to_string().contains("components"), "got: {err}");
+        // A faithful snapshot restores and the solver still converges.
+        solver.restore(&dec, &w0, &state).unwrap();
+        assert!(in_base_polytope(&dec, solver.s(), 1e-7));
+        run(&mut solver, &dec, 800, 1e-10);
+        assert!(solver.gap() < 1e-10, "gap {}", solver.gap());
+        let brute = brute_force_sfm(&dec, 1e-9);
+        assert_eq!(sup_level_set(solver.w(), 0.0), brute.minimal);
     }
 
     #[test]

@@ -19,6 +19,17 @@ fn main() {
 }
 
 fn run(args: &[String]) -> Result<()> {
+    // SFM_FAILPOINT=site=action@N[,site=action@N...] arms deterministic
+    // fault injection before any solve starts (the CI crash-resume
+    // smoke). Errors loudly — including on builds without
+    // `--features failpoint`, where arming is impossible — so a
+    // misconfigured crash test can never pass vacuously.
+    if let Ok(specs) = std::env::var("SFM_FAILPOINT") {
+        for spec in specs.split(',').filter(|s| !s.trim().is_empty()) {
+            sfm_screen::runtime::failpoint::arm_from_spec(spec.trim())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+    }
     let cli = parse_args(args)?;
     if cli.flags.get("help").is_some() && cli.command != "help" {
         println!("{USAGE}");
@@ -31,6 +42,7 @@ fn run(args: &[String]) -> Result<()> {
         "solve" => solve(&cli.flags)?,
         "serve" => serve(&cli.flags)?,
         "trace-check" => trace_check(&cli.flags)?,
+        "checkpoint-check" => checkpoint_check(&cli.flags)?,
         "path" => path(&cli.flags)?,
         "table1" => {
             let cfg = bench_config(&cli.flags)?;
@@ -107,6 +119,8 @@ fn serve(flags: &sfm_screen::config::Config) -> Result<()> {
             None => None,
         },
         oracle_threads: flags.get_usize("oracle-threads", 1)?,
+        retries: flags.get_usize("retries", 0)?,
+        retry_backoff_ms: flags.get_u64("retry-backoff-ms", 100)?,
         socket: flags.get("socket").map(std::path::PathBuf::from),
     };
     sfm_screen::coordinator::serve::serve(&opts)
@@ -218,10 +232,56 @@ fn solve(flags: &sfm_screen::config::Config) -> Result<()> {
         None => None,
     };
     opts.trace = trace_sink.clone();
+    // --checkpoint PATH attaches a boundary checkpoint sink: every
+    // --checkpoint-every N major iterations (default 1) the engine
+    // snapshots its screened sets + solver state, atomically replacing
+    // PATH (see RELIABILITY.md; validate with checkpoint-check). Keep a
+    // clone of the sink — it is shared, so the written() count is
+    // visible here after the run.
+    let ckpt_path = flags.get("checkpoint").map(std::path::PathBuf::from);
+    let ckpt_sink = ckpt_path
+        .as_ref()
+        .map(|p| sfm_screen::screening::checkpoint::CheckpointSink::to_file(p.clone()));
+    if let Some(sink) = &ckpt_sink {
+        let every = flags.get_usize("checkpoint-every", 1)?;
+        opts.checkpoint =
+            Some(sfm_screen::screening::checkpoint::CheckpointConf::new(sink.clone(), every));
+    }
     let job = JobSpec { name: wl.label(), workload: wl, opts, decompose };
-    let res = job.run()?;
+    // --resume PATH restarts from a boundary snapshot instead of cold:
+    // the checkpoint's screened sets are re-installed and its solver
+    // atoms regenerated from their stored orders on the contracted
+    // oracle (never coordinate-projected — see RELIABILITY.md).
+    let resume_path = flags.get("resume").map(std::path::PathBuf::from);
+    let res = match &resume_path {
+        Some(p) => {
+            let ck = sfm_screen::screening::checkpoint::load(p)?;
+            let t0 = std::time::Instant::now();
+            let report = match job.decompose {
+                Some(dopts) => {
+                    let f = job.workload.build_decomposed()?;
+                    sfm_screen::decompose::solve_decomposed_resumed(&f, &job.opts, dopts, ck)?
+                }
+                None => {
+                    let f = job.workload.build()?;
+                    sfm_screen::screening::iaes::IaesEngine::new(f.as_ref(), job.opts.clone())
+                        .resume_from(ck)?
+                        .run()?
+                }
+            };
+            sfm_screen::coordinator::jobs::JobResult {
+                name: job.name.clone(),
+                wall: t0.elapsed(),
+                report,
+            }
+        }
+        None => job.run()?,
+    };
     if let (Some(path), Some(sink)) = (&trace_path, &trace_sink) {
         write_trace(path, sink)?;
+    }
+    if let (Some(path), Some(sink)) = (&ckpt_path, &ckpt_sink) {
+        eprintln!("checkpoint: {} snapshots -> {}", sink.written(), path.display());
     }
     let allow_partial = flags.get_bool("allow-partial", false)?;
     if flags.get_bool("json", false)? {
@@ -328,6 +388,34 @@ fn trace_check(flags: &sfm_screen::config::Config) -> Result<()> {
         bail!("{path}: no trace events");
     }
     println!("trace-check: {events} events ok ({finals} final) in {path}");
+    Ok(())
+}
+
+/// Validate a `solve --checkpoint` JSONL file with the crate's own
+/// strict parser: versioned header, no unknown fields, internal
+/// consistency (partition, sortedness, finite duals), and byte-stable
+/// re-emission. Exits nonzero on the first violation, naming the field.
+fn checkpoint_check(flags: &sfm_screen::config::Config) -> Result<()> {
+    let path = flags
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("checkpoint-check needs --file PATH"))?
+        .to_string();
+    let p = std::path::PathBuf::from(&path);
+    let ck = sfm_screen::screening::checkpoint::load(&p)?;
+    let text =
+        std::fs::read_to_string(&p).with_context(|| format!("reading {path}"))?;
+    if ck.to_jsonl() != text {
+        bail!("{path}: re-emission is not byte-identical (non-canonical checkpoint)");
+    }
+    println!(
+        "checkpoint-check: iter {} of a {}-element solve ok \
+         ({} active + {} inactive screened, {} kept) in {path}",
+        ck.iter,
+        ck.p_total,
+        ck.active.len(),
+        ck.inactive.len(),
+        ck.kept.len()
+    );
     Ok(())
 }
 

@@ -161,6 +161,15 @@ pub struct MetricsRegistry {
     pub pool_rebuilds: Counter,
     /// `{"op": "stats"}` control lines answered.
     pub stats_requests: Counter,
+    /// Job attempts re-admitted after a contained panic or numeric
+    /// fault (serve `--retries`; one increment per extra attempt).
+    pub jobs_retried: Counter,
+    /// Retry attempts that resumed from a boundary checkpoint instead
+    /// of restarting cold.
+    pub resumes: Counter,
+    /// Boundary checkpoints captured by solve engines on behalf of
+    /// retry-armed jobs.
+    pub checkpoints_written: Counter,
     /// Jobs admitted but not yet answered (queued + in flight).
     pub queue_depth: Gauge,
     /// Wall time of jobs that finished `ok`.
@@ -195,11 +204,14 @@ impl MetricsRegistry {
                     ("error", n(&self.jobs_error)),
                     ("panicked", n(&self.jobs_panicked)),
                     ("numeric_faulted", n(&self.jobs_numeric_faulted)),
+                    ("retried", n(&self.jobs_retried)),
                 ]),
             ),
             ("cache_hits", n(&self.cache_hits)),
             ("pool_rebuilds", n(&self.pool_rebuilds)),
             ("stats_requests", n(&self.stats_requests)),
+            ("resumes", n(&self.resumes)),
+            ("checkpoints_written", n(&self.checkpoints_written)),
             ("queue_depth", Json::Num(self.queue_depth.get() as f64)),
             (
                 "wall_s",
@@ -278,6 +290,24 @@ impl MetricsRegistry {
             "sfm_serve_stats_requests_total",
             "Stats control lines answered.",
             &self.stats_requests,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_jobs_retried_total",
+            "Job attempts re-admitted after a contained fault.",
+            &self.jobs_retried,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_resumes_total",
+            "Retry attempts resumed from a boundary checkpoint.",
+            &self.resumes,
+        );
+        counter(
+            &mut out,
+            "sfm_serve_checkpoints_written_total",
+            "Boundary checkpoints captured for retry-armed jobs.",
+            &self.checkpoints_written,
         );
         let _ = writeln!(
             out,
@@ -503,6 +533,9 @@ mod tests {
         reg.jobs_error.inc();
         reg.jobs_panicked.inc();
         reg.cache_hits.add(2);
+        reg.jobs_retried.inc();
+        reg.resumes.inc();
+        reg.checkpoints_written.add(4);
         reg.queue_depth.inc();
         for s in [0.0004, 0.02, 0.3] {
             reg.wall_ok.observe(s);
@@ -514,10 +547,13 @@ mod tests {
         }
         let text = reg.render_text();
         let samples = validate_exposition(&text).unwrap_or_else(|e| panic!("{e}"));
-        // 3 status + 2 reject + 6 scalar counters + 1 gauge
-        // + 4 histograms × (9 buckets + sum + count) = 56.
-        assert_eq!(samples, 12 + 4 * (BUCKETS + 2));
+        // 3 status + 2 reject + 9 scalar counters + 1 gauge
+        // + 4 histograms × (9 buckets + sum + count) = 59.
+        assert_eq!(samples, 15 + 4 * (BUCKETS + 2));
         assert!(text.contains("sfm_serve_jobs_total{status=\"ok\"} 3"));
+        assert!(text.contains("sfm_serve_jobs_retried_total 1"));
+        assert!(text.contains("sfm_serve_resumes_total 1"));
+        assert!(text.contains("sfm_serve_checkpoints_written_total 4"));
         assert!(text.contains("sfm_serve_queue_depth 1"));
         assert!(text.contains(
             "sfm_serve_job_wall_seconds_bucket{status=\"ok\",le=\"+Inf\"} 3"

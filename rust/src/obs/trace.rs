@@ -71,10 +71,13 @@ pub mod flags {
     /// The last event of the run (converged, iteration cap, cancelled,
     /// or emptied).
     pub const FINAL: u32 = 1 << 7;
+    /// The run was resumed from a boundary checkpoint (set on every
+    /// event of the resumed run, so spliced traces are attributable).
+    pub const RESUMED: u32 = 1 << 8;
 }
 
 /// `(bit, tag)` pairs for JSON serialization of [`TraceEvent::flags`].
-const FLAG_TAGS: [(u32, &str); 8] = [
+const FLAG_TAGS: [(u32, &str); 9] = [
     (flags::SCREEN, "screen"),
     (flags::CONTRACTION, "contraction"),
     (flags::WARM_RESTART, "warm-restart"),
@@ -83,6 +86,7 @@ const FLAG_TAGS: [(u32, &str); 8] = [
     (flags::DEADLINE, "deadline"),
     (flags::EMPTIED, "emptied"),
     (flags::FINAL, "final"),
+    (flags::RESUMED, "resumed"),
 ];
 
 /// One major-iteration boundary, fixed-size (`Copy`, no heap) so ring
@@ -531,6 +535,12 @@ mod tests {
         let text = original.to_json().to_string();
         let back = TraceEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, original);
+        // The resumed marker survives the round trip by name.
+        let resumed = ev(43, flags::RESUMED | flags::FINAL, 7);
+        let text = resumed.to_json().to_string();
+        assert!(text.contains("\"resumed\""), "{text}");
+        let back = TraceEvent::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, resumed);
         // A flagless event round-trips too (empty tags array).
         let plain = ev(1, 0, 0);
         let back = TraceEvent::from_json(&Json::parse(&plain.to_json().to_string()).unwrap())

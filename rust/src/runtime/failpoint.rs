@@ -32,6 +32,65 @@ pub enum FpAction {
     Delay(std::time::Duration),
 }
 
+/// Parse a textual arming spec `site=action@N` (action: `panic`, `nan`,
+/// or `delay:MS`; `N` is the 1-based hit index). Shared by both feature
+/// arms so a misspelled spec is rejected loudly even in builds where
+/// arming itself is impossible.
+fn parse_spec(spec: &str) -> Result<(String, FpAction, u64), String> {
+    let (site, rest) = spec
+        .split_once('=')
+        .ok_or_else(|| format!("failpoint spec `{spec}` missing `=` (want site=action@N)"))?;
+    if site.is_empty() {
+        return Err(format!("failpoint spec `{spec}` has an empty site name"));
+    }
+    let (action, at) = rest
+        .split_once('@')
+        .ok_or_else(|| format!("failpoint spec `{spec}` missing `@` (want site=action@N)"))?;
+    let at: u64 = at
+        .parse()
+        .map_err(|_| format!("failpoint spec `{spec}`: hit index `{at}` is not a number"))?;
+    if at == 0 {
+        return Err(format!("failpoint spec `{spec}`: hit index is 1-based"));
+    }
+    let action = if action == "panic" {
+        FpAction::Panic
+    } else if action == "nan" {
+        FpAction::Nan
+    } else if let Some(ms) = action.strip_prefix("delay:") {
+        let ms: u64 = ms.parse().map_err(|_| {
+            format!("failpoint spec `{spec}`: delay `{ms}` is not a millisecond count")
+        })?;
+        FpAction::Delay(std::time::Duration::from_millis(ms))
+    } else {
+        return Err(format!(
+            "failpoint spec `{spec}`: unknown action `{action}` (panic | nan | delay:MS)"
+        ));
+    };
+    Ok((site.to_string(), action, at))
+}
+
+/// Arm a site from a `site=action@N` spec (the `SFM_FAILPOINT`
+/// environment hook used by the CI crash-resume smoke). Errors on a
+/// malformed spec — and, in builds without `--features failpoint`, on
+/// every spec: silently ignoring an armed fault would let a
+/// misconfigured crash test pass vacuously.
+#[cfg(feature = "failpoint")]
+pub fn arm_from_spec(spec: &str) -> Result<(), String> {
+    let (site, action, at) = parse_spec(spec)?;
+    arm(&site, action, at);
+    Ok(())
+}
+
+/// Refusal stub (feature `failpoint` disabled): validates the spec, then
+/// reports that this build cannot arm it.
+#[cfg(not(feature = "failpoint"))]
+pub fn arm_from_spec(spec: &str) -> Result<(), String> {
+    let _ = parse_spec(spec)?;
+    Err(format!(
+        "failpoint spec `{spec}` requires a build with --features failpoint"
+    ))
+}
+
 #[cfg(feature = "failpoint")]
 mod imp {
     use super::FpAction;
@@ -156,6 +215,33 @@ mod tests {
     fn serial() -> std::sync::MutexGuard<'static, ()> {
         static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
         LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn spec_arming_round_trips_and_rejects_garbage() {
+        let _g = serial();
+        reset();
+        arm_from_spec("t-spec=panic@2").unwrap();
+        hit("t-spec"); // hit 1: pass
+        let err = std::panic::catch_unwind(|| hit("t-spec")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("t-spec"), "panic message: {msg}");
+        arm_from_spec("t-spec2=delay:5@1").unwrap();
+        arm_from_spec("t-spec3=nan@1").unwrap();
+        assert!(eval_f64("t-spec3", 1.0).is_nan());
+        for bad in [
+            "no-equals",
+            "site=panic",
+            "=panic@1",
+            "site=panic@0",
+            "site=panic@x",
+            "site=explode@1",
+            "site=delay:abc@1",
+        ] {
+            let err = arm_from_spec(bad).unwrap_err();
+            assert!(err.contains("failpoint spec"), "spec `{bad}`: {err}");
+        }
+        reset();
     }
 
     #[test]

@@ -1,0 +1,739 @@
+//! Checkpoint/resume for IAES solves.
+//!
+//! A [`SolveCheckpoint`] is captured **only at major-iteration
+//! boundaries** — the same points where the cancellation-boundary
+//! invariant already makes partial deadline reports safe: the dual
+//! iterate is a valid point of `B(F̂)`, the gap is a valid screening
+//! radius, and the Lemma-2/3 screened sets are monotone. Snapshot state
+//! between boundaries is never observed, so a resume can never see a
+//! half-updated corral or an uncertified screening decision.
+//!
+//! Atoms are stored as their **generating greedy permutations** (the
+//! [`SolverState`] convention), never as raw coordinate vectors: resume
+//! replays each order on the reduced oracle and obtains vertices of the
+//! current base polytope *by construction* — the regeneration invariant
+//! that already underpins warm restarts (`reset_mapped`). After the
+//! replay, the gap is re-closed against the rebuilt corral so the
+//! screening radius stays valid.
+//!
+//! Serialization is strict JSONL through [`coordinator::json`]
+//! (crate-local parser: unknown fields rejected by name, `NaN ↔ null`,
+//! versioned header line). See RELIABILITY.md for the format and the
+//! boundary-safety argument.
+//!
+//! [`coordinator::json`]: crate::coordinator::json
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::json::Json;
+use crate::solvers::{ComponentState, SolverState};
+
+/// Format tag carried by the JSONL header line.
+pub const FORMAT: &str = "sfm-checkpoint";
+/// Current checkpoint format version; bumped on any schema change.
+pub const VERSION: u64 = 1;
+
+/// Boundary snapshot of an IAES solve: everything needed to rebuild a
+/// feasible engine + solver state at the checkpoint's reduction. Element
+/// ids are **original** (pre-reduction) indices throughout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveCheckpoint {
+    /// Major iterations completed when the snapshot was taken (≥ 1).
+    pub iter: usize,
+    /// Ground-set size of the original (unreduced) problem.
+    pub p_total: usize,
+    /// Elements certified in every minimizer (fixed active set).
+    pub active: Vec<usize>,
+    /// Elements certified in no minimizer (fixed inactive set).
+    pub inactive: Vec<usize>,
+    /// Surviving (unscreened) elements, ascending — the survivor map.
+    pub kept: Vec<usize>,
+    /// Certified-active elements awaiting the next contraction batch
+    /// (subset of `kept`; certification can precede contraction).
+    pub pending_active: Vec<usize>,
+    /// Certified-inactive elements awaiting the next contraction batch.
+    pub pending_inactive: Vec<usize>,
+    /// Restricted primal iterate `ŵ`, one entry per `kept` element.
+    pub w: Vec<f64>,
+    /// Duality gap at the boundary (the screening radius).
+    pub gap: f64,
+    /// Gap recorded at the last restart — the `ρ`-trigger gate.
+    pub q_gate: f64,
+    /// Solver dual state (atoms as generating orders), or `None` when
+    /// the solver maintains no replayable decomposition (plain FW):
+    /// resume then cold-resets at the checkpoint's reduction, which is
+    /// always safe — the screening progress lives in the element sets.
+    pub solver: Option<SolverState>,
+}
+
+impl SolveCheckpoint {
+    /// Serialize to the two-line JSONL document (header + state).
+    pub fn to_jsonl(&self) -> String {
+        let header = Json::obj(vec![
+            ("format", Json::Str(FORMAT.to_string())),
+            ("version", Json::Num(VERSION as f64)),
+        ]);
+        let mut out = header.to_string();
+        out.push('\n');
+        out.push_str(&self.to_json().to_string());
+        out.push('\n');
+        out
+    }
+
+    /// The state line as a JSON object (no header).
+    pub fn to_json(&self) -> Json {
+        let solver = match &self.solver {
+            None => Json::Null,
+            Some(st) => Json::obj(vec![
+                ("kind", Json::Str(st.kind.clone())),
+                (
+                    "orders",
+                    Json::Arr(st.orders.iter().map(|o| ids(o)).collect()),
+                ),
+                ("weights", nums(&st.weights)),
+                ("dual", nums(&st.dual)),
+                (
+                    "components",
+                    Json::Arr(
+                        st.components
+                            .iter()
+                            .map(|c| {
+                                Json::obj(vec![
+                                    ("y", nums(&c.y)),
+                                    ("z_prev", nums(&c.z_prev)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        Json::obj(vec![
+            ("iter", Json::Num(self.iter as f64)),
+            ("p_total", Json::Num(self.p_total as f64)),
+            ("active", ids(&self.active)),
+            ("inactive", ids(&self.inactive)),
+            ("kept", ids(&self.kept)),
+            ("pending_active", ids(&self.pending_active)),
+            ("pending_inactive", ids(&self.pending_inactive)),
+            ("w", nums(&self.w)),
+            ("gap", Json::Num(self.gap)),
+            ("q_gate", Json::Num(self.q_gate)),
+            ("solver", solver),
+        ])
+    }
+
+    /// Parse a two-line JSONL document. Strict: versioned header
+    /// required, unknown fields rejected by name, truncation rejected.
+    /// Structural validity only — call [`validate`](Self::validate)
+    /// before resuming from the result.
+    pub fn from_jsonl(text: &str) -> Result<SolveCheckpoint> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = lines
+            .next()
+            .context("empty checkpoint file (missing header line)")?;
+        let header =
+            Json::parse(header).context("checkpoint header is not valid JSON")?;
+        known_fields(&header, &["format", "version"], "checkpoint header")?;
+        let format = req(&header, "format", "checkpoint header")?
+            .as_str()
+            .context("field 'format' in checkpoint header is not a string")?;
+        if format != FORMAT {
+            bail!("field 'format' is '{format}', expected '{FORMAT}'");
+        }
+        let version = uint_field(&header, "version", "checkpoint header")?;
+        if version as u64 != VERSION {
+            bail!("unsupported checkpoint version {version} (expected {VERSION})");
+        }
+        let state = lines
+            .next()
+            .context("truncated checkpoint (missing state line)")?;
+        if lines.next().is_some() {
+            bail!("trailing content after the checkpoint state line");
+        }
+        let state = Json::parse(state).context("checkpoint state is not valid JSON")?;
+        Self::from_json(&state)
+    }
+
+    /// Parse the state object (strict, unknown fields rejected by name).
+    pub fn from_json(v: &Json) -> Result<SolveCheckpoint> {
+        const KNOWN: &[&str] = &[
+            "iter",
+            "p_total",
+            "active",
+            "inactive",
+            "kept",
+            "pending_active",
+            "pending_inactive",
+            "w",
+            "gap",
+            "q_gate",
+            "solver",
+        ];
+        known_fields(v, KNOWN, "checkpoint state")?;
+        let solver = match req(v, "solver", "checkpoint state")? {
+            Json::Null => None,
+            sv => Some(parse_solver(sv)?),
+        };
+        Ok(SolveCheckpoint {
+            iter: uint_field(v, "iter", "checkpoint state")?,
+            p_total: uint_field(v, "p_total", "checkpoint state")?,
+            active: id_array(v, "active")?,
+            inactive: id_array(v, "inactive")?,
+            kept: id_array(v, "kept")?,
+            pending_active: id_array(v, "pending_active")?,
+            pending_inactive: id_array(v, "pending_inactive")?,
+            w: num_array(req(v, "w", "checkpoint state")?, "w")?,
+            gap: num_field(v, "gap")?,
+            q_gate: num_field(v, "q_gate")?,
+            solver,
+        })
+    }
+
+    /// Semantic validation: the snapshot must describe a coherent
+    /// boundary state before anything resumes from it. Errors name the
+    /// offending field.
+    pub fn validate(&self) -> Result<()> {
+        if self.iter == 0 {
+            bail!("field 'iter' must be ≥ 1 (checkpoints exist only at boundaries)");
+        }
+        if self.p_total == 0 {
+            bail!("field 'p_total' must be ≥ 1");
+        }
+        if self.kept.is_empty() {
+            bail!("field 'kept' is empty (an exhausted solve has no boundary state)");
+        }
+        // active ∪ inactive ∪ kept must partition 0..p_total.
+        let mut owner = vec![0u8; self.p_total];
+        for (field, set, tag) in [
+            ("active", &self.active, 1u8),
+            ("inactive", &self.inactive, 2u8),
+            ("kept", &self.kept, 3u8),
+        ] {
+            for &i in set {
+                if i >= self.p_total {
+                    bail!("field '{field}' holds id {i} ≥ p_total {}", self.p_total);
+                }
+                if owner[i] != 0 {
+                    bail!("element {i} appears in more than one of active/inactive/kept (field '{field}')");
+                }
+                owner[i] = tag;
+            }
+        }
+        if let Some(i) = owner.iter().position(|&t| t == 0) {
+            bail!("element {i} is missing from active/inactive/kept (fields must partition the ground set)");
+        }
+        for i in 1..self.kept.len() {
+            if self.kept[i - 1] >= self.kept[i] {
+                bail!("field 'kept' is not strictly ascending");
+            }
+        }
+        for (field, set, want) in [
+            ("pending_active", &self.pending_active, 3u8),
+            ("pending_inactive", &self.pending_inactive, 3u8),
+        ] {
+            for &i in set {
+                if i >= self.p_total || owner[i] != want {
+                    bail!("field '{field}' holds id {i} outside the kept set");
+                }
+            }
+        }
+        for i in &self.pending_active {
+            if self.pending_inactive.contains(i) {
+                bail!("element {i} is in both pending_active and pending_inactive");
+            }
+        }
+        if self.w.len() != self.kept.len() {
+            bail!(
+                "field 'w' has {} entries for {} kept elements",
+                self.w.len(),
+                self.kept.len()
+            );
+        }
+        if self.w.iter().any(|x| !x.is_finite()) {
+            bail!("field 'w' holds a non-finite entry");
+        }
+        if !self.gap.is_finite() {
+            bail!("field 'gap' is not finite");
+        }
+        if !self.q_gate.is_finite() {
+            bail!("field 'q_gate' is not finite");
+        }
+        if let Some(st) = &self.solver {
+            let p = self.kept.len();
+            if st.dual.len() != p {
+                bail!(
+                    "field 'dual' has {} coordinates for {} kept elements",
+                    st.dual.len(),
+                    p
+                );
+            }
+            if st.dual.iter().any(|x| !x.is_finite()) {
+                bail!("field 'dual' holds a non-finite entry");
+            }
+            if st.weights.len() != st.orders.len() {
+                bail!(
+                    "field 'weights' has {} entries for {} orders",
+                    st.weights.len(),
+                    st.orders.len()
+                );
+            }
+            if st.weights.iter().any(|x| !x.is_finite() || *x < 0.0) {
+                bail!("field 'weights' holds a negative or non-finite entry");
+            }
+            // Orders are validated as permutations only when the solver
+            // carries atoms at the engine reduction (components carry
+            // their own local orders through best-response regeneration).
+            if st.components.is_empty() {
+                let mut seen = vec![false; p];
+                for order in &st.orders {
+                    if order.len() != p {
+                        bail!(
+                            "field 'orders' holds an order of {} entries for {} kept elements",
+                            order.len(),
+                            p
+                        );
+                    }
+                    seen.iter_mut().for_each(|s| *s = false);
+                    for &j in order {
+                        if j >= p || seen[j] {
+                            bail!("field 'orders' holds a non-permutation order");
+                        }
+                        seen[j] = true;
+                    }
+                }
+            }
+            for c in &st.components {
+                if c.y.iter().any(|x| !x.is_finite()) {
+                    bail!("field 'y' holds a non-finite entry");
+                }
+                if c.z_prev.iter().any(|x| !x.is_finite()) {
+                    bail!("field 'z_prev' holds a non-finite entry");
+                }
+                if c.z_prev.len() != c.y.len() {
+                    bail!(
+                        "field 'z_prev' has {} entries for a component of {} elements",
+                        c.z_prev.len(),
+                        c.y.len()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn ids(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&i| Json::Num(i as f64)).collect())
+}
+
+fn nums(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn known_fields(v: &Json, known: &[&str], what: &str) -> Result<()> {
+    let Json::Obj(pairs) = v else {
+        bail!("{what} is not a JSON object");
+    };
+    for (k, _) in pairs {
+        if !known.contains(&k.as_str()) {
+            bail!("unknown field '{k}' in {what}");
+        }
+    }
+    Ok(())
+}
+
+fn req<'a>(v: &'a Json, key: &str, what: &str) -> Result<&'a Json> {
+    v.get(key)
+        .with_context(|| format!("missing field '{key}' in {what}"))
+}
+
+fn num_field(v: &Json, key: &str) -> Result<f64> {
+    req(v, key, "checkpoint state")?
+        .as_num()
+        .with_context(|| format!("field '{key}' is not a number"))
+}
+
+fn uint_field(v: &Json, key: &str, what: &str) -> Result<usize> {
+    let x = req(v, key, what)?
+        .as_num()
+        .with_context(|| format!("field '{key}' in {what} is not a number"))?;
+    if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+        bail!("field '{key}' in {what} is not a non-negative integer");
+    }
+    Ok(x as usize)
+}
+
+fn id_array(v: &Json, key: &str) -> Result<Vec<usize>> {
+    let arr = req(v, key, "checkpoint state")?
+        .as_array()
+        .with_context(|| format!("field '{key}' is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let x = item
+            .as_num()
+            .with_context(|| format!("field '{key}' holds a non-numeric entry"))?;
+        if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+            bail!("field '{key}' holds a non-integer entry");
+        }
+        out.push(x as usize);
+    }
+    Ok(out)
+}
+
+fn num_array(v: &Json, key: &str) -> Result<Vec<f64>> {
+    let arr = v
+        .as_array()
+        .with_context(|| format!("field '{key}' is not an array"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        out.push(
+            item.as_num()
+                .with_context(|| format!("field '{key}' holds a non-numeric entry"))?,
+        );
+    }
+    Ok(out)
+}
+
+fn parse_solver(v: &Json) -> Result<SolverState> {
+    known_fields(
+        v,
+        &["kind", "orders", "weights", "dual", "components"],
+        "solver state",
+    )?;
+    let kind = req(v, "kind", "solver state")?
+        .as_str()
+        .context("field 'kind' is not a string")?
+        .to_string();
+    let orders_v = req(v, "orders", "solver state")?
+        .as_array()
+        .context("field 'orders' is not an array")?;
+    let mut orders = Vec::with_capacity(orders_v.len());
+    for (i, o) in orders_v.iter().enumerate() {
+        let o = o
+            .as_array()
+            .with_context(|| format!("field 'orders'[{i}] is not an array"))?;
+        let mut order = Vec::with_capacity(o.len());
+        for item in o {
+            let x = item
+                .as_num()
+                .context("field 'orders' holds a non-numeric entry")?;
+            if !x.is_finite() || x < 0.0 || x.fract() != 0.0 {
+                bail!("field 'orders' holds a non-integer entry");
+            }
+            order.push(x as usize);
+        }
+        orders.push(order);
+    }
+    let comps_v = req(v, "components", "solver state")?
+        .as_array()
+        .context("field 'components' is not an array")?;
+    let mut components = Vec::with_capacity(comps_v.len());
+    for c in comps_v {
+        known_fields(c, &["y", "z_prev"], "component state")?;
+        components.push(ComponentState {
+            y: num_array(req(c, "y", "component state")?, "y")?,
+            z_prev: num_array(req(c, "z_prev", "component state")?, "z_prev")?,
+        });
+    }
+    Ok(SolverState {
+        kind,
+        orders,
+        weights: num_array(req(v, "weights", "solver state")?, "weights")?,
+        dual: num_array(req(v, "dual", "solver state")?, "dual")?,
+        components,
+    })
+}
+
+/// Checkpoint cadence + destination attached to
+/// [`IaesOptions::checkpoint`](crate::screening::iaes::IaesOptions):
+/// a snapshot is stored every `every` major-iteration boundaries.
+/// `None` on the option is bitwise inert (same discipline as
+/// trace/cancel); an attached-but-not-due sink costs two integer
+/// compares per boundary and allocates nothing.
+#[derive(Clone, Debug)]
+pub struct CheckpointConf {
+    /// Where snapshots go (in-memory slot, optionally mirrored to disk).
+    pub sink: CheckpointSink,
+    /// Store every N boundaries (clamped to ≥ 1).
+    pub every: usize,
+}
+
+impl CheckpointConf {
+    /// Sink with the given cadence.
+    pub fn new(sink: CheckpointSink, every: usize) -> Self {
+        CheckpointConf { sink, every: every.max(1) }
+    }
+}
+
+/// Destination for boundary snapshots: an in-memory latest-value slot
+/// (what the serve-mode retry path resumes from), optionally mirrored to
+/// a file via an atomic tmp-then-rename write (what `solve --checkpoint`
+/// uses). Cloning shares the slot.
+#[derive(Clone, Debug)]
+pub struct CheckpointSink {
+    inner: Arc<SinkInner>,
+}
+
+#[derive(Debug)]
+struct SinkInner {
+    slot: Mutex<Option<SolveCheckpoint>>,
+    written: AtomicU64,
+    path: Option<PathBuf>,
+}
+
+impl CheckpointSink {
+    /// In-memory slot only (serve-mode retries).
+    pub fn in_memory() -> Self {
+        CheckpointSink {
+            inner: Arc::new(SinkInner {
+                slot: Mutex::new(None),
+                written: AtomicU64::new(0),
+                path: None,
+            }),
+        }
+    }
+
+    /// Slot mirrored to `path` on every store (atomic replace: the file
+    /// is always a complete, parseable document — a crash mid-store
+    /// leaves the previous snapshot intact).
+    pub fn to_file(path: impl Into<PathBuf>) -> Self {
+        CheckpointSink {
+            inner: Arc::new(SinkInner {
+                slot: Mutex::new(None),
+                written: AtomicU64::new(0),
+                path: Some(path.into()),
+            }),
+        }
+    }
+
+    /// Store a snapshot (replacing the previous one). File mirroring
+    /// errors propagate — a solve asked to checkpoint must not silently
+    /// run without durability.
+    pub fn store(&self, ck: SolveCheckpoint) -> Result<()> {
+        if let Some(path) = &self.inner.path {
+            let mut tmp = path.as_os_str().to_owned();
+            tmp.push(".tmp");
+            let tmp = PathBuf::from(tmp);
+            std::fs::write(&tmp, ck.to_jsonl())
+                .with_context(|| format!("writing checkpoint to {}", tmp.display()))?;
+            std::fs::rename(&tmp, path).with_context(|| {
+                format!("replacing checkpoint at {}", path.display())
+            })?;
+        }
+        let mut slot = match self.inner.slot.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *slot = Some(ck);
+        drop(slot);
+        self.inner.written.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The most recent snapshot, if any.
+    pub fn latest(&self) -> Option<SolveCheckpoint> {
+        let slot = match self.inner.slot.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        slot.clone()
+    }
+
+    /// Snapshots stored over this sink's lifetime.
+    pub fn written(&self) -> u64 {
+        self.inner.written.load(Ordering::Relaxed)
+    }
+}
+
+/// Read and strictly parse a checkpoint file, then
+/// [`validate`](SolveCheckpoint::validate) it. The `checkpoint-check`
+/// subcommand and `solve --resume` both enter here.
+pub fn load(path: &std::path::Path) -> Result<SolveCheckpoint> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    let ck = SolveCheckpoint::from_jsonl(&text)
+        .with_context(|| format!("parsing checkpoint {}", path.display()))?;
+    ck.validate()
+        .with_context(|| format!("validating checkpoint {}", path.display()))?;
+    Ok(ck)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::testutil::forall_rng;
+
+    fn sample(rng: &mut Pcg64, with_solver: bool, with_components: bool) -> SolveCheckpoint {
+        let p = 6 + rng.below(10);
+        let mut ids: Vec<usize> = (0..p).collect();
+        // Random partition: first chunk active, second inactive, rest kept.
+        for i in (1..p).rev() {
+            let j = rng.below(i + 1);
+            ids.swap(i, j);
+        }
+        let na = rng.below(p / 3 + 1);
+        let ni = rng.below(p / 3 + 1);
+        let active: Vec<usize> = ids[..na].to_vec();
+        let inactive: Vec<usize> = ids[na..na + ni].to_vec();
+        let mut kept: Vec<usize> = ids[na + ni..].to_vec();
+        kept.sort_unstable();
+        let k = kept.len();
+        let solver = with_solver.then(|| {
+            let m = 1 + rng.below(3);
+            let orders: Vec<Vec<usize>> = (0..m)
+                .map(|_| {
+                    let mut o: Vec<usize> = (0..k).collect();
+                    for i in (1..k).rev() {
+                        let j = rng.below(i + 1);
+                        o.swap(i, j);
+                    }
+                    o
+                })
+                .collect();
+            let components = if with_components {
+                (0..2)
+                    .map(|_| ComponentState {
+                        y: rng.uniform_vec(3, -1.0, 1.0),
+                        z_prev: rng.uniform_vec(3, -1.0, 1.0),
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            SolverState {
+                kind: "min-norm".into(),
+                orders,
+                weights: (0..m).map(|_| rng.uniform(0.0, 1.0)).collect(),
+                dual: rng.uniform_vec(k, -2.0, 2.0),
+                components,
+            }
+        });
+        SolveCheckpoint {
+            iter: 1 + rng.below(100),
+            p_total: p,
+            active,
+            inactive,
+            kept,
+            pending_active: Vec::new(),
+            pending_inactive: Vec::new(),
+            w: rng.uniform_vec(k, -2.0, 2.0),
+            gap: rng.uniform(0.0, 5.0),
+            q_gate: rng.uniform(0.0, 5.0),
+            solver,
+        }
+    }
+
+    #[test]
+    fn round_trip_is_byte_stable() {
+        forall_rng(40, |rng| {
+            let with_solver = rng.below(2) == 0;
+            let with_components = rng.below(2) == 0;
+            let ck = sample(rng, with_solver, with_components);
+            ck.validate().map_err(|e| format!("sample invalid: {e}"))?;
+            let text = ck.to_jsonl();
+            let back = SolveCheckpoint::from_jsonl(&text)
+                .map_err(|e| format!("parse failed: {e}"))?;
+            if back != ck {
+                return Err("value round trip mismatch".into());
+            }
+            if back.to_jsonl() != text {
+                return Err("emit→parse→emit is not byte-stable".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nan_gap_round_trips_through_null() {
+        let mut rng = Pcg64::seeded(7);
+        let mut ck = sample(&mut rng, false, false);
+        ck.gap = f64::NAN;
+        let text = ck.to_jsonl();
+        assert!(text.contains("\"gap\":null"), "{text}");
+        let back = SolveCheckpoint::from_jsonl(&text).expect("parse");
+        assert!(back.gap.is_nan());
+        assert_eq!(back.to_jsonl(), text, "null NaN emit not byte-stable");
+        // ... and semantic validation rejects it by name.
+        let err = back.validate().expect_err("NaN gap must not validate");
+        assert!(err.to_string().contains("'gap'"), "{err}");
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_by_name() {
+        let mut rng = Pcg64::seeded(9);
+        let ck = sample(&mut rng, true, false);
+        let text = ck.to_jsonl();
+        let tampered = text.replacen("\"iter\":", "\"itre\":", 1);
+        let err = SolveCheckpoint::from_jsonl(&tampered).expect_err("must reject");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown field 'itre'"), "{msg}");
+        let tampered = text.replacen("\"gap\":", "\"gap2\":", 1);
+        let err = SolveCheckpoint::from_jsonl(&tampered).expect_err("must reject");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("'gap2'") || msg.contains("'gap'"), "{msg}");
+    }
+
+    #[test]
+    fn truncated_and_corrupted_documents_are_rejected() {
+        let mut rng = Pcg64::seeded(11);
+        let ck = sample(&mut rng, true, true);
+        let text = ck.to_jsonl();
+        let header_only = text.lines().next().unwrap().to_string();
+        let err = SolveCheckpoint::from_jsonl(&header_only).expect_err("truncated");
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        let err = SolveCheckpoint::from_jsonl("").expect_err("empty");
+        assert!(format!("{err:#}").contains("missing header"), "{err:#}");
+        // Chop the state line mid-document: not valid JSON.
+        let chopped = &text[..text.len() - 10];
+        assert!(SolveCheckpoint::from_jsonl(chopped).is_err());
+        // Wrong version.
+        let wrong = text.replacen("\"version\":1", "\"version\":99", 1);
+        let err = SolveCheckpoint::from_jsonl(&wrong).expect_err("version");
+        assert!(format!("{err:#}").contains("version 99"), "{err:#}");
+        // Wrong format tag.
+        let wrong = text.replacen(FORMAT, "sfm-trace", 1);
+        assert!(SolveCheckpoint::from_jsonl(&wrong).is_err());
+    }
+
+    #[test]
+    fn validate_names_partition_violations() {
+        let mut rng = Pcg64::seeded(13);
+        let mut ck = sample(&mut rng, false, false);
+        ck.validate().expect("sample valid");
+        let moved = ck.kept[0];
+        ck.active.push(moved);
+        let err = ck.validate().expect_err("duplicate element");
+        assert!(err.to_string().contains("more than one"), "{err}");
+        ck.active.pop();
+        ck.w.push(0.0);
+        let err = ck.validate().expect_err("w length");
+        assert!(err.to_string().contains("'w'"), "{err}");
+    }
+
+    #[test]
+    fn sink_slot_and_file_mirroring() {
+        let mut rng = Pcg64::seeded(17);
+        let ck = sample(&mut rng, true, false);
+        let mem = CheckpointSink::in_memory();
+        assert!(mem.latest().is_none());
+        assert_eq!(mem.written(), 0);
+        mem.store(ck.clone()).expect("store");
+        assert_eq!(mem.written(), 1);
+        assert_eq!(mem.latest().as_ref(), Some(&ck));
+
+        let dir = std::env::temp_dir().join("sfm_ckpt_test");
+        std::fs::create_dir_all(&dir).expect("tmpdir");
+        let path = dir.join(format!("ck_{}.jsonl", std::process::id()));
+        let file = CheckpointSink::to_file(&path);
+        file.store(ck.clone()).expect("store to file");
+        let loaded = load(&path).expect("load");
+        assert_eq!(loaded, ck);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -12,6 +12,7 @@
 //! problem), or the gap reaches `ε` and the remaining signs of `ŵ` decide
 //! the leftover elements (`A* = Ê ∪ {ŵ > 0}`).
 
+use super::checkpoint::{CheckpointConf, SolveCheckpoint};
 use super::rules::RustScreener;
 use super::{RuleSet, ScreenInputs, Screener};
 use crate::obs::trace::{flags as tflags, TraceEvent, TraceSink, TraceSummary};
@@ -155,6 +156,17 @@ pub struct IaesOptions {
     /// consulted only between iterations. The determinism suite
     /// certifies both properties.
     pub trace: Option<TraceSink>,
+    /// Boundary checkpointing: when set, the engine stores a
+    /// [`SolveCheckpoint`] into the attached sink every
+    /// `every` major-iteration boundaries — the same boundary
+    /// discipline as `cancel`/`trace`, where the dual is a valid point
+    /// of B(F̂) and the screened sets are Lemma-2/3 safe, so every
+    /// snapshot is a provably safe resume point. `None` is bitwise
+    /// inert; an attached-but-not-due sink costs two integer compares
+    /// per boundary and allocates nothing (certified by the zero-alloc
+    /// suite). Storage errors fail the solve — a run asked to
+    /// checkpoint must not silently lose durability.
+    pub checkpoint: Option<CheckpointConf>,
 }
 
 impl Default for IaesOptions {
@@ -174,6 +186,7 @@ impl Default for IaesOptions {
             cancel: None,
             oracle_pool: None,
             trace: None,
+            checkpoint: None,
         }
     }
 }
@@ -194,6 +207,7 @@ impl std::fmt::Debug for IaesOptions {
             .field("cancel", &self.cancel.is_some())
             .field("oracle_pool", &self.oracle_pool.is_some())
             .field("trace", &self.trace.is_some())
+            .field("checkpoint", &self.checkpoint.is_some())
             .finish()
     }
 }
@@ -314,6 +328,8 @@ pub struct IaesEngine<'a> {
     /// Caller-provided solver (decomposed solves); `None` → built from
     /// `opts.solver`.
     solver_override: Option<Box<dyn ProxSolver + 'a>>,
+    /// Boundary snapshot to resume from ([`resume_from`](Self::resume_from)).
+    resume: Option<SolveCheckpoint>,
 }
 
 impl<'a> IaesEngine<'a> {
@@ -327,7 +343,32 @@ impl<'a> IaesEngine<'a> {
             inactive: Vec::new(),
             kept: (0..p).collect(),
             solver_override: None,
+            resume: None,
         }
+    }
+
+    /// Arm the engine to resume from a boundary snapshot instead of
+    /// starting cold: the snapshot's fixed active/inactive sets, survivor
+    /// map, pending certificates, restricted primal, and solver dual
+    /// state are all re-installed, and `run()` continues the solve from
+    /// iteration `ck.iter`. Solver atoms are regenerated by replaying
+    /// their stored greedy orders on the reduced oracle (never
+    /// coordinate-projected), then the gap is re-closed against the
+    /// rebuilt corral — so the resumed screening radius is valid and
+    /// every certificate in the snapshot stays Lemma-2/3 safe.
+    pub fn resume_from(mut self, ck: SolveCheckpoint) -> anyhow::Result<Self> {
+        ck.validate()?;
+        anyhow::ensure!(
+            ck.p_total == self.f.ground_size(),
+            "checkpoint is for a {}-element problem, this one has {}",
+            ck.p_total,
+            self.f.ground_size()
+        );
+        self.active = ck.active.clone();
+        self.inactive = ck.inactive.clone();
+        self.kept = ck.kept.clone();
+        self.resume = Some(ck);
+        Ok(self)
     }
 
     /// Create an engine that drives a caller-provided solver instead of
@@ -376,6 +417,7 @@ impl<'a> IaesEngine<'a> {
         let mut cancel_reason = None;
         let cancel = self.opts.cancel.clone();
         let trace = self.opts.trace.clone();
+        let ckpt = self.opts.checkpoint.clone();
 
         // Residual primal (kept alive across restarts for warm starts).
         let mut w_restricted: Vec<f64> = vec![0.0; self.kept.len()];
@@ -386,13 +428,64 @@ impl<'a> IaesEngine<'a> {
         let mut pending_i_count = 0usize;
         let mut pending_total = 0usize;
 
+        // Resume injection: `resume_from` already installed the
+        // snapshot's element sets, so the reduction below is built at the
+        // checkpoint's survivor map. Here the aligned runtime state comes
+        // back: iteration count, restricted primal, and the certificates
+        // that were pending (certified but not yet contracted) when the
+        // snapshot was taken.
+        let resume_state = self.resume.take();
+        let resumed = resume_state.is_some();
+        let resumed_flags = if resumed { tflags::RESUMED } else { 0 };
+        let mut skip_restart = resumed;
+        let mut last_ckpt_iter = 0usize;
+        let mut resume_gate: Option<f64> = None;
+        if let Some(ck) = &resume_state {
+            total_iters = ck.iter;
+            final_gap = ck.gap;
+            last_ckpt_iter = ck.iter;
+            resume_gate = Some(ck.q_gate);
+            w_restricted.clear();
+            w_restricted.extend_from_slice(&ck.w);
+            for &orig in &ck.pending_active {
+                if let Ok(j) = self.kept.binary_search(&orig) {
+                    pending_a[j] = true;
+                    pending_a_count += 1;
+                    pending_total += 1;
+                }
+            }
+            for &orig in &ck.pending_inactive {
+                if let Ok(j) = self.kept.binary_search(&orig) {
+                    pending_i[j] = true;
+                    pending_i_count += 1;
+                    pending_total += 1;
+                }
+            }
+        }
+
         // One ScaledFn and one solver for the whole run: every restart
         // re-targets them in place (set_reduction + reset), so the
         // translation buffers, corral/atom storage, Gram factor, and
         // greedy/PAV/oracle scratch all persist across contractions
         // instead of being rebuilt from scratch.
         let monolithic = self.solver_override.is_none();
-        let mut scaled = ScaledFn::new(self.f, &self.active, self.kept.clone());
+        // Survivor map of the most recent contraction (buffer reused for
+        // the whole run); `warm_pending` says the map and the
+        // already-contracted `scaled` describe the next restart.
+        let mut map = crate::lovasz::ContractionMap::new();
+        let mut scaled = if resumed && !monolithic {
+            // Decomposed resume: rebuild the reduction through the same
+            // contraction path a live run takes, so the survivor map is
+            // available to bring the caller-provided solver (initialized
+            // on the full problem) to the checkpoint's reduction via the
+            // ordinary warm-restart machinery.
+            let mut s = ScaledFn::new(self.f, &[], (0..p_total).collect());
+            map.remap_argsort = self.opts.argsort_remap;
+            s.contract(&self.active, &self.kept, &mut map);
+            s
+        } else {
+            ScaledFn::new(self.f, &self.active, self.kept.clone())
+        };
         let mut solver: Box<dyn ProxSolver + 'a> = match self.solver_override.take() {
             Some(s) => s,
             None => self.opts.solver.build(&scaled),
@@ -449,13 +542,33 @@ impl<'a> IaesEngine<'a> {
         // allocates nothing once the run's high-water capacity is reached.
         let mut survivors: Vec<usize> = Vec::with_capacity(self.kept.len());
         let mut w_surv: Vec<f64> = Vec::with_capacity(self.kept.len());
-        // Survivor map of the most recent contraction (buffer reused for
-        // the whole run); `warm_pending` says the map and the
-        // already-contracted `scaled` describe the next restart.
-        let mut map = crate::lovasz::ContractionMap::new();
         let mut warm_pending = false;
+        // Resume, final leg: re-install the solver's dual state at the
+        // checkpoint's reduction. Atoms are regenerated by replaying
+        // their stored greedy orders on the reduced oracle (`restore` —
+        // the regeneration invariant, never a coordinate projection) and
+        // the gap is re-closed against the rebuilt corral. A snapshot
+        // with no solver state (plain FW) falls back to the cold step-14
+        // reset, which is always safe.
+        if let Some(ck) = &resume_state {
+            if !monolithic {
+                // Bring the caller-provided solver (initialized on the
+                // full problem) to the checkpoint's reduction first.
+                solver.reset_mapped(&scaled, &w_restricted, &map);
+            }
+            match &ck.solver {
+                Some(state) => solver
+                    .restore(&scaled, &w_restricted, state)
+                    .map_err(|e| e.context("resuming solver state from checkpoint"))?,
+                None => {
+                    if monolithic {
+                        solver.reset(&scaled, &w_restricted);
+                    }
+                }
+            }
+        }
         'outer: while !self.kept.is_empty() {
-            if total_iters > 0 {
+            if total_iters > 0 && !std::mem::take(&mut skip_restart) {
                 // Restart from the restricted primal (step 14): warm —
                 // solver state projected through the contraction — or the
                 // cold rebuild when warm restarts are disabled.
@@ -480,6 +593,15 @@ impl<'a> IaesEngine<'a> {
             if !q_gate.is_finite() {
                 q_gate = f64::INFINITY;
             }
+            if let Some(gate) = resume_gate.take() {
+                // The checkpointed trigger gate survives the resume so
+                // the screening cadence picks up where it left off; a
+                // smaller gate only makes screening fire sooner, which
+                // is always safe.
+                if gate.is_finite() {
+                    q_gate = q_gate.min(gate);
+                }
+            }
 
             loop {
                 // Cancellation boundary: between major iterations the dual
@@ -495,7 +617,8 @@ impl<'a> IaesEngine<'a> {
                     if let Some(sink) = trace.as_ref() {
                         // No step ran this boundary: gap/radius are the
                         // last step's, primal/dual unknown (→ null).
-                        let mut flags = tflags::CANCELLED | tflags::FINAL;
+                        let mut flags =
+                            tflags::CANCELLED | tflags::FINAL | resumed_flags;
                         if reason == CancelReason::DeadlineExpired {
                             flags |= tflags::DEADLINE;
                         }
@@ -514,6 +637,41 @@ impl<'a> IaesEngine<'a> {
                         });
                     }
                     break 'outer;
+                }
+                // Checkpoint boundary: the dual is a valid point of
+                // B(F̂), the gap is a valid screening radius, and every
+                // certificate so far is Lemma-2/3 safe — exactly the
+                // state a resume needs. Due-check first: an attached but
+                // not-due sink costs two integer compares and allocates
+                // nothing (the zero-alloc suite certifies this).
+                if let Some(conf) = ckpt.as_ref() {
+                    if total_iters > last_ckpt_iter
+                        && total_iters % conf.every.max(1) == 0
+                    {
+                        last_ckpt_iter = total_iters;
+                        let mut pending_active = Vec::new();
+                        let mut pending_inactive = Vec::new();
+                        for (j, &orig) in self.kept.iter().enumerate() {
+                            if pending_a[j] {
+                                pending_active.push(orig);
+                            } else if pending_i[j] {
+                                pending_inactive.push(orig);
+                            }
+                        }
+                        conf.sink.store(SolveCheckpoint {
+                            iter: total_iters,
+                            p_total,
+                            active: self.active.clone(),
+                            inactive: self.inactive.clone(),
+                            kept: self.kept.clone(),
+                            pending_active,
+                            pending_inactive,
+                            w: solver.w().to_vec(),
+                            gap: solver.gap(),
+                            q_gate,
+                            solver: solver.export_state(),
+                        })?;
+                    }
                 }
                 failpoint::hit("iaes-iter");
                 let t0 = Instant::now();
@@ -539,6 +697,7 @@ impl<'a> IaesEngine<'a> {
                 // Nothing here escapes unless a sink is attached.
                 let mut tev = TraceEvent::default();
                 if trace.is_some() {
+                    tev.flags = resumed_flags;
                     let ph = solver.take_phase_ns();
                     let step_ns = step_dt.as_nanos() as u64;
                     tev.iter = total_iters as u64;
@@ -1154,5 +1313,132 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn attached_checkpoint_sink_is_bitwise_inert() {
+        // Checkpoint capture is observation only: an attached sink must
+        // reproduce the unchecked trajectory bit for bit, whether the
+        // cadence fires every round or never.
+        use crate::screening::checkpoint::{CheckpointConf, CheckpointSink};
+        let f = IwataFn::new(18);
+        let plain = solve_sfm_with_screening(&f, &IaesOptions::default()).unwrap();
+        for every in [1usize, 1_000_000] {
+            let sink = CheckpointSink::in_memory();
+            let opts = IaesOptions {
+                checkpoint: Some(CheckpointConf::new(sink.clone(), every)),
+                ..Default::default()
+            };
+            let ckpted = solve_sfm_with_screening(&f, &opts).unwrap();
+            assert_eq!(ckpted.minimum.to_bits(), plain.minimum.to_bits());
+            assert_eq!(ckpted.minimizer, plain.minimizer);
+            assert_eq!(ckpted.iters, plain.iters);
+            assert_eq!(ckpted.final_gap.to_bits(), plain.final_gap.to_bits());
+            if every == 1 {
+                assert!(sink.written() >= 1, "every-round cadence must store");
+                let ck = sink.latest().expect("stored checkpoint retrievable");
+                ck.validate().expect("stored checkpoint is self-consistent");
+                // Byte-stable through the strict JSONL codec.
+                let line = ck.to_jsonl();
+                let back = SolveCheckpoint::from_jsonl(&line).unwrap();
+                assert_eq!(back.to_jsonl(), line);
+            } else {
+                assert_eq!(sink.written(), 0, "never-due cadence stores nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn resume_from_mid_solve_checkpoint_reaches_the_minimizer() {
+        // Kill/resume safety at the engine level: truncate a solve at a
+        // few major iterations, snapshot the boundary, resume in a fresh
+        // engine, and land on the brute-force minimum. The checkpoint's
+        // certified sets must be safe (⊆ minimal / ∩ maximal = ∅) and the
+        // resumed run must never lose certified elements.
+        forall_rng(8, |rng| {
+            use crate::screening::checkpoint::{CheckpointConf, CheckpointSink};
+            let p = 8 + rng.below(6);
+            let f = random_kernel_cut(p, rng);
+            let brute = brute_force_sfm(&f, 1e-7);
+            let base = IaesOptions { eps: 1e-9, ..Default::default() };
+            let cut = 2 + rng.below(4) as usize;
+            let sink = CheckpointSink::in_memory();
+            let truncated = IaesOptions {
+                max_iters: cut,
+                checkpoint: Some(CheckpointConf::new(sink.clone(), 1)),
+                ..base.clone()
+            };
+            let partial =
+                solve_sfm_with_screening(&f, &truncated).map_err(|e| e.to_string())?;
+            let Some(ck) = sink.latest() else {
+                // Converged inside the budget before any boundary was due;
+                // nothing to resume.
+                return Ok(());
+            };
+            ck.validate().map_err(|e| e.to_string())?;
+            // Safety of the snapshotted certificates.
+            for &a in &ck.active {
+                if !brute.minimal.contains(&a) {
+                    return Err(format!("ckpt active {a} outside minimal minimizer"));
+                }
+            }
+            for &i in &ck.inactive {
+                if brute.maximal.contains(&i) {
+                    return Err(format!("ckpt inactive {i} inside maximal minimizer"));
+                }
+            }
+            // Round-trip through the serialized form, as a real resume would.
+            let ck = SolveCheckpoint::from_jsonl(&ck.to_jsonl())
+                .map_err(|e| e.to_string())?;
+            let resumed = IaesEngine::new(&f, base.clone())
+                .resume_from(ck.clone())
+                .map_err(|e| e.to_string())?
+                .run()
+                .map_err(|e| e.to_string())?;
+            if (resumed.minimum - brute.minimum).abs() > 1e-6 {
+                return Err(format!(
+                    "resumed {} vs brute {} (cut at {cut}, partial iters {})",
+                    resumed.minimum, brute.minimum, partial.iters
+                ));
+            }
+            if resumed.screened_active < ck.active.len()
+                || resumed.screened_inactive < ck.inactive.len()
+            {
+                return Err(format!(
+                    "resumed run lost certified elements: {}/{} < {}/{}",
+                    resumed.screened_active,
+                    resumed.screened_inactive,
+                    ck.active.len(),
+                    ck.inactive.len()
+                ));
+            }
+            if resumed.iters < ck.iter {
+                return Err(format!(
+                    "resumed iteration counter went backwards: {} < {}",
+                    resumed.iters, ck.iter
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_problem_size() {
+        use crate::screening::checkpoint::{CheckpointConf, CheckpointSink};
+        let f = IwataFn::new(12);
+        let sink = CheckpointSink::in_memory();
+        let opts = IaesOptions {
+            max_iters: 3,
+            checkpoint: Some(CheckpointConf::new(sink.clone(), 1)),
+            ..Default::default()
+        };
+        solve_sfm_with_screening(&f, &opts).unwrap();
+        let ck = sink.latest().expect("boundary stored");
+        let g = IwataFn::new(13);
+        let err = IaesEngine::new(&g, IaesOptions::default())
+            .resume_from(ck)
+            .err()
+            .expect("size mismatch must be rejected");
+        assert!(err.to_string().contains("12-element"), "got: {err}");
     }
 }

@@ -19,6 +19,7 @@
 //! executed via PJRT ([`crate::runtime`]). Both are exercised against each
 //! other in the test suite.
 
+pub mod checkpoint;
 pub mod estimate;
 pub mod iaes;
 pub mod parametric;

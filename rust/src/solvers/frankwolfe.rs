@@ -485,6 +485,145 @@ impl ProxSolver for FrankWolfe {
         super::PhaseNs { oracle_ns: self.shared.take_oracle_ns(), kind_ns: [0; 4] }
     }
 
+    fn export_state(&self) -> Option<super::SolverState> {
+        // Plain FW maintains no atom decomposition (`step_plain` moves x
+        // directly), so there is nothing replayable to snapshot — resume
+        // falls back to the cold step-14 reset at the checkpoint's
+        // reduction, same rationale as the `reset_mapped` guard above.
+        if self.opts.variant == FwVariant::Plain {
+            return None;
+        }
+        let m = self.weights.len();
+        if m == 0 || self.keys.len() != m {
+            return None;
+        }
+        Some(super::SolverState {
+            kind: self.name().to_string(),
+            orders: (0..m).map(|i| self.keys.row(i).to_vec()).collect(),
+            weights: self.weights.clone(),
+            dual: self.x.clone(),
+            components: Vec::new(),
+        })
+    }
+
+    fn restore(
+        &mut self,
+        f: &dyn Submodular,
+        w_init: &[f64],
+        state: &super::SolverState,
+    ) -> anyhow::Result<()> {
+        let p = f.ground_size();
+        anyhow::ensure!(
+            state.kind == self.name(),
+            "snapshot kind '{}' does not match solver '{}'",
+            state.kind,
+            self.name()
+        );
+        anyhow::ensure!(
+            state.components.is_empty(),
+            "monolithic snapshot must not carry component state"
+        );
+        anyhow::ensure!(!state.orders.is_empty(), "snapshot has no atoms");
+        anyhow::ensure!(
+            state.weights.len() == state.orders.len(),
+            "snapshot has {} weights for {} atoms",
+            state.weights.len(),
+            state.orders.len()
+        );
+        anyhow::ensure!(
+            state.dual.len() == p && w_init.len() == p,
+            "snapshot dual has {} coordinates, problem has {p}",
+            state.dual.len()
+        );
+        let mut seen = vec![false; p];
+        for order in &state.orders {
+            anyhow::ensure!(
+                order.len() == p,
+                "atom order has {} entries, problem has {p}",
+                order.len()
+            );
+            seen.iter_mut().for_each(|s| *s = false);
+            for &j in order {
+                anyhow::ensure!(
+                    j < p && !seen[j],
+                    "atom order is not a permutation of 0..{p}"
+                );
+                seen[j] = true;
+            }
+        }
+        for &wgt in &state.weights {
+            anyhow::ensure!(
+                wgt.is_finite() && wgt >= 0.0,
+                "atom weight {wgt} is not finite and non-negative"
+            );
+        }
+        // Rebuild the atom set by replaying each generating order on the
+        // oracle (regeneration invariant — never coordinate-projected),
+        // merging any duplicate orders through the interned-key index.
+        self.x.resize(p, 0.0);
+        self.dir.resize(p, 0.0);
+        self.atoms.reset(p);
+        self.keys.reset(p);
+        self.weights.clear();
+        self.hashes.clear();
+        self.lookup.clear();
+        self.shared.resize(p);
+        let mut buf = std::mem::take(&mut self.q);
+        buf.clear();
+        buf.resize(p, 0.0);
+        for (order, &wgt) in state.orders.iter().zip(&state.weights) {
+            let h = hash_key(order);
+            if let Some(i) = self.find_atom(h, order) {
+                self.weights[i] += wgt;
+                continue;
+            }
+            vertex_from_order(f, order, &mut self.shared.greedy_ws, &mut buf);
+            let idx = self.weights.len();
+            self.keys.push(order);
+            self.hashes.push(h);
+            self.atoms.push(&buf);
+            self.weights.push(wgt);
+            let hashes = &self.hashes;
+            let at = self
+                .lookup
+                .partition_point(|&i| (hashes[i as usize], i as usize) < (h, idx));
+            self.lookup.insert(at, idx as u32);
+        }
+        self.q = buf;
+        let total: f64 = self.weights.iter().sum();
+        anyhow::ensure!(total > 0.0, "snapshot atom weights sum to zero");
+        for wgt in self.weights.iter_mut() {
+            *wgt /= total;
+        }
+        self.x.iter_mut().for_each(|v| *v = 0.0);
+        for (wgt, v) in self.weights.iter().zip(self.atoms.iter()) {
+            axpy(*wgt, v, &mut self.x);
+        }
+        // Integrity gate: the regenerated combination must reproduce the
+        // stored dual — a deviation means the snapshot describes a
+        // different problem.
+        let mut err: f64 = 0.0;
+        for (a, b) in self.x.iter().zip(&state.dual) {
+            err = err.max((a - b).abs());
+        }
+        anyhow::ensure!(
+            err <= 1e-6,
+            "regenerated dual deviates from snapshot by {err:.3e} \
+             (corrupted or mismatched checkpoint)"
+        );
+        // Step-14 bookkeeping: adopt the restricted primal and close the
+        // gap against the restored dual point (weak duality holds for any
+        // x in B(F̂), so the gap is a valid screening radius).
+        let mut s0 = std::mem::take(&mut self.q);
+        let f_w = self.shared.reset_primal(f, w_init, &mut s0);
+        self.q = s0;
+        let primal = f_w + 0.5 * norm2_sq(w_init);
+        let dual = -0.5 * norm2_sq(&self.x);
+        self.shared.gap = primal - dual;
+        crate::lovasz::debug_assert_dual_feasible(f, &self.x, "FrankWolfe::restore");
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         match self.opts.variant {
             FwVariant::Plain => "frank-wolfe",
@@ -586,6 +725,44 @@ mod tests {
         assert!(fw.gap() < 1e-6, "away-step FW gap {}", fw.gap());
         let brute = brute_force_sfm(&f, 1e-9);
         assert_eq!(sup_level_set(fw.w(), 0.0), brute.minimal);
+    }
+
+    #[test]
+    fn export_restore_round_trip_pairwise() {
+        let f = IwataFn::new(12);
+        let mut fw = FrankWolfe::new(&f, FwOptions::default(), None);
+        for _ in 0..30 {
+            fw.step(&f);
+        }
+        let state = fw.export_state().expect("pairwise FW must export atoms");
+        assert_eq!(state.kind, "pairwise-fw");
+        let w_init = fw.w().to_vec();
+        let mut fresh = FrankWolfe::new(&f, FwOptions::default(), None);
+        fresh.restore(&f, &w_init, &state).expect("restore own export");
+        // The restored combination reproduces the snapshot dual exactly
+        // (same atoms regenerated on the same oracle).
+        for (a, b) in fresh.s().iter().zip(&state.dual) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert!(fresh.gap() >= -1e-9);
+        run(&mut fresh, &f, 3000, 1e-8);
+        assert!(fresh.gap() < 1e-8, "restored FW stalled: {}", fresh.gap());
+        let brute = brute_force_sfm(&f, 1e-9);
+        assert_eq!(sup_level_set(fresh.w(), 0.0), brute.minimal);
+    }
+
+    #[test]
+    fn plain_fw_exports_nothing() {
+        let f = IwataFn::new(8);
+        let mut fw = FrankWolfe::new(
+            &f,
+            FwOptions { variant: FwVariant::Plain, ..Default::default() },
+            None,
+        );
+        for _ in 0..5 {
+            fw.step(&f);
+        }
+        assert!(fw.export_state().is_none());
     }
 
     #[test]

@@ -513,6 +513,136 @@ impl ProxSolver for MinNormPoint {
         super::PhaseNs { oracle_ns: self.shared.take_oracle_ns(), kind_ns: [0; 4] }
     }
 
+    fn export_state(&self) -> Option<super::SolverState> {
+        let m = self.corral.len();
+        if m == 0 || self.orders.len() != m || self.lambda.len() != m {
+            return None;
+        }
+        Some(super::SolverState {
+            kind: self.name().to_string(),
+            orders: (0..m).map(|i| self.orders.row(i).to_vec()).collect(),
+            weights: self.lambda.clone(),
+            dual: self.x.clone(),
+            components: Vec::new(),
+        })
+    }
+
+    fn restore(
+        &mut self,
+        f: &dyn Submodular,
+        w_init: &[f64],
+        state: &super::SolverState,
+    ) -> anyhow::Result<()> {
+        let p = f.ground_size();
+        anyhow::ensure!(
+            state.kind == self.name(),
+            "snapshot kind '{}' does not match solver '{}'",
+            state.kind,
+            self.name()
+        );
+        anyhow::ensure!(
+            state.components.is_empty(),
+            "monolithic snapshot must not carry component state"
+        );
+        anyhow::ensure!(!state.orders.is_empty(), "snapshot has no atoms");
+        anyhow::ensure!(
+            state.weights.len() == state.orders.len(),
+            "snapshot has {} weights for {} atoms",
+            state.weights.len(),
+            state.orders.len()
+        );
+        anyhow::ensure!(
+            state.dual.len() == p && w_init.len() == p,
+            "snapshot dual has {} coordinates, problem has {p}",
+            state.dual.len()
+        );
+        let mut seen = vec![false; p];
+        for order in &state.orders {
+            anyhow::ensure!(
+                order.len() == p,
+                "atom order has {} entries, problem has {p}",
+                order.len()
+            );
+            seen.iter_mut().for_each(|s| *s = false);
+            for &j in order {
+                anyhow::ensure!(
+                    j < p && !seen[j],
+                    "atom order is not a permutation of 0..{p}"
+                );
+                seen[j] = true;
+            }
+        }
+        for &l in &state.weights {
+            anyhow::ensure!(
+                l.is_finite() && l >= 0.0,
+                "atom weight {l} is not finite and non-negative"
+            );
+        }
+        // Rebuild the corral by replaying each atom's generating order on
+        // the oracle — the regeneration invariant: any permutation yields
+        // a vertex of *this* base polytope, so every atom is feasible by
+        // construction (a stored coordinate vector would not be).
+        self.x.resize(p, 0.0);
+        self.corral.reset(p);
+        self.orders.reset(p);
+        self.lambda.clear();
+        self.chol.reset();
+        self.shared.resize(p);
+        let mut buf = std::mem::take(&mut self.q);
+        buf.clear();
+        buf.resize(p, 0.0);
+        for (order, &l) in state.orders.iter().zip(&state.weights) {
+            vertex_from_order(f, order, &mut self.shared.greedy_ws, &mut buf);
+            self.orders.push(order);
+            self.corral.push(&buf);
+            self.lambda.push(l);
+        }
+        self.q = buf;
+        // Revalidate the Gram factor (drops affinely dependent atoms)
+        // and renormalize the carried weights.
+        self.rebuild_chol();
+        let total: f64 = self.lambda.iter().sum();
+        anyhow::ensure!(total > 0.0, "snapshot atom weights sum to zero");
+        for l in self.lambda.iter_mut() {
+            *l /= total;
+        }
+        self.recompute_x();
+        // Integrity gate: the regenerated combination must reproduce the
+        // stored dual — same reduction, same atoms, same weights. A
+        // deviation means the snapshot describes a different problem.
+        let mut err: f64 = 0.0;
+        for (a, b) in self.x.iter().zip(&state.dual) {
+            err = err.max((a - b).abs());
+        }
+        anyhow::ensure!(
+            err <= 1e-6,
+            "regenerated dual deviates from snapshot by {err:.3e} \
+             (corrupted or mismatched checkpoint)"
+        );
+        // Step-14 bookkeeping: adopt the restricted primal, push the
+        // fresh greedy vertex, land on the min-norm point of the rebuilt
+        // corral, and close the gap so the screening radius is valid.
+        let mut s0 = std::mem::take(&mut self.q);
+        s0.clear();
+        s0.resize(p, 0.0);
+        let f_w = self.shared.reset_primal(f, w_init, &mut s0);
+        self.push_vertex(&s0);
+        self.q = s0;
+        if self.corral.len() > 1 {
+            self.minor_cycles();
+        } else {
+            if !self.lambda.is_empty() {
+                self.lambda[0] = 1.0;
+            }
+            self.recompute_x();
+        }
+        let primal = f_w + 0.5 * norm2_sq(w_init);
+        let dual = -0.5 * norm2_sq(&self.x);
+        self.shared.gap = primal - dual;
+        crate::lovasz::debug_assert_dual_feasible(f, &self.x, "MinNormPoint::restore");
+        Ok(())
+    }
+
     fn name(&self) -> &'static str {
         "min-norm"
     }
@@ -777,6 +907,70 @@ mod tests {
         solver.reset_translated(&g, &delta, &[0.0; 5]);
         assert_eq!(solver.s().len(), 5);
         assert!(solver.step(&g).gap.is_finite());
+    }
+
+    #[test]
+    fn export_restore_lands_on_snapshot_dual_and_converges() {
+        let mut rng = Pcg64::seeded(4242);
+        let p = 12;
+        let mut k = vec![0.0; p * p];
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let w = rng.uniform(0.0, 1.0);
+                k[i * p + j] = w;
+                k[j * p + i] = w;
+            }
+        }
+        let f = KernelCutFn::new(p, k, rng.uniform_vec(p, -2.0, 2.0));
+        let mut solver = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        for _ in 0..8 {
+            solver.step(&f);
+        }
+        let state = solver.export_state().expect("corral state to export");
+        assert_eq!(state.kind, "min-norm");
+        assert!(state.orders.len() > 1, "need a real corral to snapshot");
+        let w_init = solver.w().to_vec();
+        let mut fresh = MinNormPoint::new(&f, MinNormOptions::default(), None);
+        fresh.restore(&f, &w_init, &state).expect("restore must accept its own export");
+        assert!(crate::lovasz::in_base_polytope(&f, fresh.s(), 1e-7));
+        assert!(fresh.gap() >= -1e-9, "negative gap {}", fresh.gap());
+        let mut gap = f64::INFINITY;
+        for _ in 0..2000 {
+            gap = fresh.step(&f).gap;
+            if gap < 1e-9 {
+                break;
+            }
+        }
+        assert!(gap < 1e-9, "restored solver stalled: gap {gap}");
+        let brute = brute_force_sfm(&f, 1e-9);
+        let a = sup_level_set(fresh.w(), 0.0);
+        assert_eq!(a, brute.minimal, "restored solver found the wrong minimizer");
+    }
+
+    #[test]
+    fn restore_rejects_tampered_snapshot() {
+        let f = IwataFn::new(10);
+        let mut solver = solve(&f, 20, 1e-8);
+        let mut state = solver.export_state().expect("export");
+        state.dual[0] += 1.0;
+        let w_init = solver.w().to_vec();
+        let err = solver
+            .restore(&f, &w_init, &state)
+            .expect_err("tampered dual must be rejected");
+        assert!(
+            err.to_string().contains("deviates from snapshot"),
+            "unexpected error: {err}"
+        );
+        // And a snapshot of the wrong kind is rejected up front.
+        let mut wrong = solver.export_state().unwrap_or_else(|| {
+            solver.reset(&f, &w_init);
+            solver.export_state().expect("export after reset")
+        });
+        wrong.kind = "pairwise-fw".into();
+        let err = solver
+            .restore(&f, &w_init, &wrong)
+            .expect_err("kind mismatch must be rejected");
+        assert!(err.to_string().contains("does not match solver"), "{err}");
     }
 
     #[test]

@@ -58,6 +58,46 @@ pub struct PhaseNs {
     pub kind_ns: [u64; 4],
 }
 
+/// Portable snapshot of a solver's dual state at a major-iteration
+/// boundary, exported for checkpointing (see
+/// [`screening::checkpoint`](crate::screening::checkpoint)). Atoms are
+/// stored as their **generating greedy permutations** — the same
+/// combinatorial state the warm-restart machinery persists across
+/// contractions — never as raw coordinates: a restore replays each order
+/// on the (possibly contracted) oracle and obtains vertices of the
+/// *current* base polytope by construction, exactly the regeneration
+/// invariant of [`reset_mapped`](ProxSolver::reset_mapped).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolverState {
+    /// [`ProxSolver::name`] of the exporting solver; a restore rejects
+    /// snapshots of a different kind.
+    pub kind: String,
+    /// Generating greedy permutation per atom (corral rows / FW atoms),
+    /// in reduced coordinates of the checkpointed problem.
+    pub orders: Vec<Vec<usize>>,
+    /// Convex weight per atom, parallel to `orders`.
+    pub weights: Vec<f64>,
+    /// Dual iterate `ŝ = Σ λᵢ vᵢ` at export time. Restore validates the
+    /// regenerated convex combination against this vector — a mismatch
+    /// means the snapshot does not describe the given problem.
+    pub dual: Vec<f64>,
+    /// Decomposed runs only: per-component dual state, in component
+    /// order. Empty for monolithic solvers.
+    pub components: Vec<ComponentState>,
+}
+
+/// Per-component dual state of the block-prox solver (decomposed runs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComponentState {
+    /// Component dual `y_i ∈ B(F̂_i)`, in the component's local reduced
+    /// coordinates at the checkpointed reduction.
+    pub y: Vec<f64>,
+    /// Prox center the component's inner solver last warm-started from
+    /// (`z_prev`); restored for faithfulness, consumed only once the
+    /// inner solver warms back up.
+    pub z_prev: Vec<f64>,
+}
+
 /// A dual solver for (Q-D) that also maintains the PAV-refined primal.
 pub trait ProxSolver {
     /// One major iteration (exactly one greedy oracle pass).
@@ -137,6 +177,37 @@ pub trait ProxSolver {
     /// off.
     fn take_phase_ns(&mut self) -> PhaseNs {
         PhaseNs::default()
+    }
+
+    /// Export a portable snapshot of the dual state for checkpointing,
+    /// or `None` when the solver maintains no replayable atom
+    /// decomposition (plain Frank–Wolfe): a resume then falls back to
+    /// the cold step-14 reset at the checkpoint's reduction, which is
+    /// always safe — the screening progress lives in the element sets,
+    /// not the solver.
+    fn export_state(&self) -> Option<SolverState> {
+        None
+    }
+
+    /// Rebuild dual state from a checkpoint snapshot on `f` (the problem
+    /// at the checkpoint's reduction): replay each stored order on the
+    /// oracle, revalidate, land on the stored convex combination, then
+    /// run the step-14 bookkeeping against `w_init` so the gap is a
+    /// valid screening radius again. Errors mean the snapshot does not
+    /// describe a valid state of `f` (corrupted or mismatched
+    /// checkpoint); the solver must be reset before further use.
+    fn restore(
+        &mut self,
+        f: &dyn Submodular,
+        w_init: &[f64],
+        state: &SolverState,
+    ) -> anyhow::Result<()> {
+        let _ = (f, w_init);
+        anyhow::bail!(
+            "solver '{}' cannot restore snapshots of kind '{}'",
+            self.name(),
+            state.kind
+        )
     }
 
     /// Human-readable solver name (reports/benches).

@@ -10,12 +10,18 @@
 use sfm_screen::brute::brute_force_sfm;
 use sfm_screen::coordinator::json::Json;
 use sfm_screen::coordinator::serve::{ServeCore, ServeOptions};
+use sfm_screen::decompose::builders::grid_cut_components;
+use sfm_screen::decompose::{solve_decomposed, solve_decomposed_resumed, DecomposeOptions};
 use sfm_screen::rng::Pcg64;
 use sfm_screen::runtime::cancel::{CancelReason, CancelToken};
 use sfm_screen::runtime::failpoint::{self, FpAction};
+use sfm_screen::screening::checkpoint::{CheckpointConf, CheckpointSink};
 use sfm_screen::screening::iaes::{IaesEngine, IaesOptions, NumericFault};
 use sfm_screen::submodular::kernel_cut::KernelCutFn;
+use sfm_screen::workloads::grid::eight_neighbor_edges;
+use std::collections::HashSet;
 use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -356,6 +362,279 @@ fn slow_job_overflows_the_bounded_queue() {
     assert_eq!(error_kind(over), "queue_full");
     assert_eq!(status(by_id(&lines, "slow")), "ok");
     assert_eq!(status(by_id(&lines, "queued")), "ok");
+}
+
+/// Kill/resume matrix, monolithic arm: a solve killed by an injected
+/// panic at the Nth major-iteration boundary leaves a valid checkpoint
+/// behind; resuming from it reaches the brute-force-verified minimizer,
+/// and the checkpoint's screened sets are subsets of the final ones
+/// (resume loses no certificate and invents none).
+#[test]
+fn killed_monolithic_solve_resumes_to_the_brute_force_minimizer() {
+    let _g = serial();
+    let mut exercised = 0usize;
+    for seed in [4401u64, 4402, 4403] {
+        failpoint::reset();
+        let mut rng = Pcg64::seeded(seed);
+        let f = random_kernel_cut(14, &mut rng);
+        let brute = brute_force_sfm(&f, 1e-7);
+        let base = IaesOptions { eps: 1e-9, max_iters: 10_000, ..Default::default() };
+        let clean = IaesEngine::new(&f, base.clone()).run().unwrap();
+        let sink = CheckpointSink::in_memory();
+        let mut armed = base.clone();
+        armed.checkpoint = Some(CheckpointConf::new(sink.clone(), 1));
+        failpoint::arm("iaes-iter", FpAction::Panic, 4);
+        let killed = catch_unwind(AssertUnwindSafe(|| {
+            IaesEngine::new(&f, armed).run().unwrap()
+        }));
+        failpoint::reset();
+        if killed.is_ok() {
+            // Converged before the 4th boundary — nothing to resume.
+            continue;
+        }
+        exercised += 1;
+        let ck = sink.latest().expect("a killed 4-iteration solve left a checkpoint");
+        ck.validate().unwrap();
+        assert_eq!(ck.iter, 3, "seed {seed}: capture precedes the 4th boundary hit");
+        let resumed =
+            IaesEngine::new(&f, base.clone()).resume_from(ck.clone()).unwrap().run().unwrap();
+        assert!(
+            (resumed.minimum - brute.minimum).abs() < 1e-6,
+            "seed {seed}: resumed minimum {} vs brute {}",
+            resumed.minimum,
+            brute.minimum
+        );
+        assert_eq!(
+            resumed.minimizer, brute.minimal,
+            "seed {seed}: resumed run missed the minimal minimizer"
+        );
+        assert_eq!(
+            resumed.minimizer, clean.minimizer,
+            "seed {seed}: resumed and uninterrupted runs disagree"
+        );
+        // Checkpoint screened sets ⊆ final screened sets.
+        let minimal: HashSet<usize> = brute.minimal.iter().copied().collect();
+        let maximal: HashSet<usize> = brute.maximal.iter().copied().collect();
+        for &a in &ck.active {
+            assert!(minimal.contains(&a), "seed {seed}: checkpointed active {a} unsafe");
+        }
+        for &n in &ck.inactive {
+            assert!(!maximal.contains(&n), "seed {seed}: checkpointed inactive {n} unsafe");
+        }
+        assert!(
+            resumed.screened_active >= ck.active.len()
+                && resumed.screened_inactive >= ck.inactive.len(),
+            "seed {seed}: resumed run lost certified elements"
+        );
+    }
+    assert!(exercised > 0, "no seed survived to the 4th boundary — matrix untested");
+}
+
+/// Kill/resume matrix, decomposed arm (t ∈ {1, 4}): the block-prox
+/// solve killed mid-run resumes from its per-component checkpoint to
+/// the same brute-force-verified minimal minimizer.
+#[test]
+fn killed_decomposed_solve_resumes_to_the_brute_force_minimizer() {
+    let _g = serial();
+    let (h, w) = (3, 4);
+    let mut rng = Pcg64::seeded(4410);
+    let edges: Vec<(usize, usize, f64)> = eight_neighbor_edges(h, w)
+        .into_iter()
+        .map(|(a, b)| (a, b, rng.uniform(0.0, 1.2)))
+        .collect();
+    let unary = rng.uniform_vec(h * w, -1.5, 1.5);
+    let mono = sfm_screen::submodular::cut::CutFn::from_edges(h * w, &edges, unary.clone());
+    let dec = grid_cut_components(h, w, &edges, unary).unwrap();
+    let brute = brute_force_sfm(&mono, 1e-9);
+    let base = IaesOptions { eps: 1e-10, max_iters: 30_000, ..Default::default() };
+    let mut exercised = 0usize;
+    for threads in [1usize, 4] {
+        failpoint::reset();
+        let dopts = DecomposeOptions { threads, ..Default::default() };
+        let sink = CheckpointSink::in_memory();
+        let mut armed = base.clone();
+        armed.checkpoint = Some(CheckpointConf::new(sink.clone(), 1));
+        failpoint::arm("iaes-iter", FpAction::Panic, 3);
+        let killed = catch_unwind(AssertUnwindSafe(|| {
+            solve_decomposed(&dec, &armed, dopts).unwrap()
+        }));
+        failpoint::reset();
+        if killed.is_ok() {
+            continue;
+        }
+        exercised += 1;
+        let ck = sink.latest().expect("killed decomposed solve left a checkpoint");
+        ck.validate().unwrap();
+        assert!(
+            ck.solver.as_ref().is_some_and(|s| !s.components.is_empty()),
+            "t={threads}: decomposed checkpoint must carry component duals"
+        );
+        let resumed = solve_decomposed_resumed(&dec, &base, dopts, ck.clone()).unwrap();
+        assert!(
+            (resumed.minimum - brute.minimum).abs() < 1e-7,
+            "t={threads}: resumed minimum {} vs brute {}",
+            resumed.minimum,
+            brute.minimum
+        );
+        assert_eq!(
+            resumed.minimizer, brute.minimal,
+            "t={threads}: resumed decomposed run missed the minimal minimizer"
+        );
+        let minimal: HashSet<usize> = brute.minimal.iter().copied().collect();
+        let maximal: HashSet<usize> = brute.maximal.iter().copied().collect();
+        for &a in &ck.active {
+            assert!(minimal.contains(&a), "t={threads}: checkpointed active {a} unsafe");
+        }
+        for &n in &ck.inactive {
+            assert!(!maximal.contains(&n), "t={threads}: checkpointed inactive {n} unsafe");
+        }
+    }
+    assert!(exercised > 0, "no thread count survived to the 3rd boundary");
+}
+
+/// Serve retry, cold re-admission: a job killed by a panic *before* the
+/// solve starts (so no checkpoint exists yet) is retried cold and
+/// answers `status: "ok"` — the acceptance scenario for `--retries 1`.
+#[test]
+fn retried_panicked_job_answers_ok() {
+    let _g = serial();
+    failpoint::reset();
+    let direct = {
+        let f = sfm_screen::submodular::iwata::IwataFn::new(26);
+        sfm_screen::screening::iaes::solve_sfm_with_screening(&f, &IaesOptions::default())
+            .unwrap()
+    };
+    let buf = Buf::default();
+    let opts =
+        ServeOptions { workers: 1, retries: 1, retry_backoff_ms: 5, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("serve-job", FpAction::Panic, 1);
+    core.submit_line(r#"{"id": "flaky", "workload": {"kind": "iwata", "p": 26}}"#);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 1);
+    let flaky = by_id(&lines, "flaky");
+    assert_eq!(status(flaky), "ok", "retried job must answer ok, not surface the panic");
+    let min = flaky.get("report").unwrap().get("minimum").unwrap().as_num().unwrap();
+    assert_eq!(min.to_bits(), direct.minimum.to_bits());
+    let m = core.metrics();
+    assert_eq!(m.jobs_retried.get(), 1);
+    assert_eq!(m.jobs_panicked.get(), 1, "the contained panic stays accounted");
+    assert_eq!(m.jobs_ok.get(), 1);
+    assert_eq!(m.jobs_error.get(), 0, "a successful retry is not an error");
+    assert_eq!(m.resumes.get(), 0, "panic before the solve → nothing to resume from");
+}
+
+/// Serve retry, warm re-admission: a job killed *mid-solve* leaves
+/// in-memory boundary checkpoints behind; the retry resumes from the
+/// last one (`resumes == 1`, `checkpoints_written > 0`) and still lands
+/// on the uninterrupted solve's minimizer.
+#[test]
+fn retried_mid_solve_panic_resumes_from_its_checkpoint() {
+    let _g = serial();
+    failpoint::reset();
+    let direct = {
+        let f = sfm_screen::submodular::iwata::IwataFn::new(26);
+        sfm_screen::screening::iaes::solve_sfm_with_screening(&f, &IaesOptions::default())
+            .unwrap()
+    };
+    let buf = Buf::default();
+    let opts =
+        ServeOptions { workers: 1, retries: 1, retry_backoff_ms: 5, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("iaes-iter", FpAction::Panic, 2);
+    core.submit_line(r#"{"id": "killed", "workload": {"kind": "iwata", "p": 26}}"#);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 1);
+    let killed = by_id(&lines, "killed");
+    assert_eq!(status(killed), "ok");
+    let min = killed.get("report").unwrap().get("minimum").unwrap().as_num().unwrap();
+    assert!(
+        (min - direct.minimum).abs() < 1e-6,
+        "resumed retry minimum {min} vs direct {}",
+        direct.minimum
+    );
+    let m = core.metrics();
+    assert_eq!(m.jobs_retried.get(), 1);
+    assert_eq!(m.jobs_panicked.get(), 1);
+    assert_eq!(m.resumes.get(), 1, "the retry must resume warm, not restart cold");
+    assert!(
+        m.checkpoints_written.get() >= 1,
+        "a retry-armed job snapshots every boundary"
+    );
+    assert_eq!(m.jobs_ok.get(), 1);
+}
+
+/// Exhausted retry budget: when the retried attempt fails too (here
+/// with an injected NaN gap), the job answers a structured error and
+/// every faulted attempt stays accounted.
+#[test]
+fn exhausted_retry_budget_answers_a_structured_error() {
+    let _g = serial();
+    failpoint::reset();
+    let buf = Buf::default();
+    let opts =
+        ServeOptions { workers: 1, retries: 1, retry_backoff_ms: 5, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("serve-job", FpAction::Panic, 1);
+    failpoint::arm("iaes-gap", FpAction::Nan, 1);
+    core.submit_line(r#"{"id": "doomed", "workload": {"kind": "iwata", "p": 24}}"#);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 1);
+    let doomed = by_id(&lines, "doomed");
+    assert_eq!(status(doomed), "error");
+    assert_eq!(error_kind(doomed), "numeric", "the *final* attempt's fault classifies");
+    let m = core.metrics();
+    assert_eq!(m.jobs_retried.get(), 1, "one retry spent, budget exhausted");
+    assert_eq!(m.jobs_panicked.get(), 1);
+    assert_eq!(m.jobs_numeric_faulted.get(), 1);
+    assert_eq!(m.jobs_error.get(), 1);
+    assert_eq!(m.jobs_ok.get(), 0);
+}
+
+/// Regression (original-deadline preservation): a retry must never
+/// extend the job's admission deadline. The first attempt panics
+/// immediately; by the time the backoff elapses the original deadline
+/// has passed, so the retried attempt must come back `partial` with
+/// zero iterations — a re-armed (fresh) deadline would let this tiny
+/// solve finish and answer `ok`.
+#[test]
+fn retry_never_extends_the_original_admission_deadline() {
+    let _g = serial();
+    failpoint::reset();
+    let buf = Buf::default();
+    let opts =
+        ServeOptions { workers: 1, retries: 1, retry_backoff_ms: 100, ..Default::default() };
+    let core = ServeCore::start(&opts, Box::new(buf.clone()));
+    failpoint::arm("serve-job", FpAction::Panic, 1);
+    let line =
+        r#"{"id": "late", "deadline_ms": 40, "workload": {"kind": "iwata", "p": 24}}"#;
+    core.submit_line(line);
+    core.finish();
+    failpoint::reset();
+
+    let lines = buf.lines();
+    assert_eq!(lines.len(), 1);
+    let late = by_id(&lines, "late");
+    assert_eq!(
+        status(late),
+        "partial",
+        "a retry re-armed from re-admission would have answered ok"
+    );
+    let report = late.get("report").unwrap();
+    assert_eq!(report.get("cancel_reason").unwrap().as_str(), Some("deadline"));
+    assert_eq!(report.get("iters").unwrap().as_num(), Some(0.0));
+    let m = core.metrics();
+    assert_eq!(m.jobs_retried.get(), 1);
+    assert_eq!(m.jobs_partial.get(), 1);
 }
 
 /// Deadlines are armed at admission, so time spent queued behind a slow

@@ -348,6 +348,56 @@ fn traced_solve_steady_state_is_zero_alloc() {
     assert!(s.dropped > 0, "the measured window must have wrapped the ring");
 }
 
+/// An attached-but-not-due checkpoint sink is bitwise inert in the hot
+/// loop: the engine's per-boundary due check is two integer compares,
+/// and only a *due* boundary builds a snapshot (which clones freely —
+/// that cost is opt-in via the cadence). A solve round with a
+/// checkpoint conf attached whose cadence never comes due — the
+/// engine's exact boundary logic, same solver cadence as the traced
+/// round above — must allocate nothing at the high-water mark.
+#[test]
+fn checkpoint_armed_solve_rounds_are_zero_alloc_when_not_due() {
+    use sfm_screen::screening::checkpoint::{CheckpointConf, CheckpointSink};
+    let p = 48;
+    let inner = seeded_kernel_cut(p, 9933);
+    let kept_full: Vec<usize> = (0..p).collect();
+    let w_full = vec![0.0; p];
+    let mut scaled = ScaledFn::new(&inner, &[], kept_full.clone());
+    let mut solver = MinNormPoint::new(&scaled, MinNormOptions::default(), None);
+    let ckpt = Some(CheckpointConf::new(CheckpointSink::in_memory(), usize::MAX));
+    let mut total_iters = 0usize;
+    let last_ckpt_iter = 0usize;
+    let mut due = 0u64;
+    let mut round = || {
+        scaled.set_reduction(&[], &kept_full);
+        solver.reset(&scaled, &w_full);
+        for _ in 0..6 {
+            // The engine's boundary due check, verbatim: attached, never
+            // due at this cadence, so the snapshot branch never runs.
+            if let Some(conf) = ckpt.as_ref() {
+                if total_iters > last_ckpt_iter
+                    && total_iters % conf.every.max(1) == 0
+                {
+                    due += 1;
+                }
+            }
+            solver.step(&scaled);
+            total_iters += 1;
+        }
+    };
+    for _ in 0..4 {
+        round();
+    }
+    let n = count_allocs(&mut round);
+    assert_eq!(
+        n, 0,
+        "checkpoint-armed steady-state round allocated {n} times after warm-up"
+    );
+    assert_eq!(due, 0, "the cadence must never have come due in this test");
+    let conf = ckpt.as_ref().unwrap();
+    assert_eq!(conf.sink.written(), 0, "an inert sink must have stored nothing");
+}
+
 /// Same cycle for the Frank–Wolfe solver: with the atom keys interned in
 /// a flat `IndexMat` and the hash-sorted id lookup replacing the old
 /// owned-key HashMap, the FW contraction restart — including the
