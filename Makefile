@@ -1,7 +1,7 @@
 # Developer conveniences. The offline build container has no rust
 # toolchain — these targets are for CI / driver machines.
 
-.PHONY: baseline bench test lint miri tsan crash-resume
+.PHONY: baseline bench test lint lint-explain miri tsan crash-resume
 
 # Record BENCH_micro.baseline.json at CI's smoke sizes so the
 # compare_bench gate fails regressions instead of only self-diffing.
@@ -22,10 +22,20 @@ test:
 
 # Invariant lint pass over the crate's own sources (see LINTS.md):
 # SAFETY comments on unsafe sites, poison-adopting lock discipline,
-# hot-path allocation bans, and panic-free serve job paths. Exits
-# nonzero with file:line diagnostics on any violation.
+# transitive hot-path allocation bans, panic-free serve job paths, and
+# the boundary-coupling rule — all driven by the whole-crate call
+# graph. Exits nonzero with file:line diagnostics (plus the offending
+# call chain for transitive findings); also writes the machine-readable
+# findings to lint-report.json, which CI uploads as an artifact.
 lint:
 	cd rust && cargo run --bin sfm_lint
+	cd rust && cargo run --bin sfm_lint -- --json > ../lint-report.json
+
+# Why is a function subject to the hot-path rules? Prints the shortest
+# call chain from a hot root, e.g.:
+#   make lint-explain FN=src/lovasz.rs::accumulate_pass
+lint-explain:
+	cd rust && cargo run --bin sfm_lint -- --explain '$(FN)'
 
 # Crash-resume smoke (RELIABILITY.md): an armed failpoint kills a
 # checkpointed solve at the 4th boundary; resuming from the snapshot it

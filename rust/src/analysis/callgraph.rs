@@ -1,0 +1,1019 @@
+//! Whole-crate call graph over the [`super::lexer`] token stream.
+//!
+//! This is the interprocedural layer under the transitive lint rules
+//! (`hot-path-alloc`, `no-panic-paths`, `boundary-coupling`): function
+//! items are extracted per file (module path from the file layout,
+//! impl-block self-type attribution), call sites are classified as free
+//! (`foo(…)`), associated (`Type::foo(…)`), or method (`.foo(…)`)
+//! calls, and name-based conservative resolution wires them into a
+//! graph with deterministic iteration order (files sorted, functions in
+//! source order, edges in call order). Reachability from a root set —
+//! with parent pointers, so every reached function carries its
+//! *shortest* call chain back to a root — is what turns the PR-7
+//! per-body allowlists into computed properties.
+//!
+//! Three deliberate analysis decisions, all visible in the tests:
+//!
+//! * **The production build is the subject.** Items and statements
+//!   gated behind `#[cfg(test)]` or a diagnostic feature
+//!   (`debug-invariants`, `failpoint`) are stripped from the token
+//!   stream before anything looks at it — the armed failpoint registry
+//!   and the dual-feasibility assert allocate *by design* and only
+//!   exist under their features (LINTS.md).
+//! * **Method calls resolve conservatively but not promiscuously.**
+//!   A `.foo(…)` call resolves to every in-crate *method* named `foo`
+//!   (same-file candidates preferred), except for names on
+//!   [`METHOD_STOP`] — `push`, `load`, `sqrt`, … — whose receivers are
+//!   overwhelmingly std types; resolving those would wire every
+//!   `Vec::push` to the crate's own `push` methods and drown the graph
+//!   in false edges.
+//! * **`catch_unwind` contains panics, not allocations.** Call edges
+//!   whose call site sits syntactically inside a `catch_unwind(…)`
+//!   argument list are marked `contained`; the no-panic reachability
+//!   pass skips them (the panic cannot escape), the hot-path pass does
+//!   not (the allocation still happens).
+
+use super::lexer::{Token, TokenKind};
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// Features whose gated code is invisible to the analysis: both are
+/// diagnostic-only builds (runtime invariant asserts, fault injection)
+/// that allocate and panic by design and are off in production.
+pub const CFG_OFF_FEATURES: &[&str] = &["debug-invariants", "failpoint"];
+
+/// Method-call names that never resolve to in-crate methods: receivers
+/// with these names are overwhelmingly std types (`Vec`, slices,
+/// atomics, floats, iterators), so name-based resolution would produce
+/// a false edge for nearly every call site. In-crate hot methods with
+/// colliding names (`IncrementalCholesky::push`/`remove`/`retain`) are
+/// covered by being hot *roots* themselves; scratch-state names
+/// (`reset`, `clear`, `resize`) fall under the amortized-reuse
+/// carve-out documented in LINTS.md.
+pub const METHOD_STOP: &[&str] = &[
+    "abs",
+    "and_then",
+    "as_mut",
+    "as_ref",
+    "borrow",
+    "ceil",
+    "clear",
+    "clone",
+    "cmp",
+    "contains",
+    "count",
+    "default",
+    "drain",
+    "drop",
+    "eq",
+    "exp",
+    "extend",
+    "fill",
+    "filter",
+    "finish",
+    "first",
+    "floor",
+    "flush",
+    "fmt",
+    "fold",
+    "from",
+    "get",
+    "get_mut",
+    "hash",
+    "insert",
+    "into",
+    "is_empty",
+    "iter",
+    "iter_mut",
+    "join",
+    "last",
+    "len",
+    "ln",
+    "load",
+    "lock",
+    "map",
+    "max",
+    "min",
+    "new",
+    "next",
+    "pop",
+    "position",
+    "powf",
+    "powi",
+    "product",
+    "push",
+    "read",
+    "recv",
+    "remove",
+    "replace",
+    "reserve",
+    "reset",
+    "resize",
+    "retain",
+    "round",
+    "send",
+    "sort",
+    "sort_by",
+    "sort_unstable",
+    "sort_unstable_by",
+    "split_off",
+    "sqrt",
+    "store",
+    "sum",
+    "swap",
+    "take",
+    "to_bits",
+    "truncate",
+    "wait",
+    "write",
+];
+
+// ---------------------------------------------------------------------
+// cfg stripping
+// ---------------------------------------------------------------------
+
+/// Whether the attribute body `inner` (the tokens between `[` and `]`)
+/// is a `cfg(…)` predicate that is **off** in the production build.
+/// `cfg(not(…))` is conservatively kept (the negated form is exactly
+/// how the no-op stubs are gated in).
+fn cfg_is_off(inner: &[&Token]) -> bool {
+    if !inner.first().is_some_and(|t| t.is_ident("cfg")) {
+        return false;
+    }
+    if !inner.get(1).is_some_and(|t| t.is_punct('(')) {
+        return false;
+    }
+    let args = &inner[2..];
+    let first_ident = args.iter().find(|t| t.kind == TokenKind::Ident);
+    if first_ident.is_some_and(|t| t.is_ident("not")) {
+        return false;
+    }
+    if args.iter().any(|t| t.is_ident("test")) {
+        return true;
+    }
+    args.iter().any(|t| {
+        t.kind == TokenKind::StrLit && CFG_OFF_FEATURES.contains(&t.text.trim_matches('"'))
+    })
+}
+
+/// With `code[i]` a `#`: return the index just past the attribute's
+/// closing `]` and the inner tokens, or `None` if no `[` follows.
+fn attr_span<'a>(code: &'a [Token], i: usize) -> Option<(usize, Vec<&'a Token>)> {
+    let mut j = i + 1;
+    if code.get(j).is_some_and(|t| t.is_punct('!')) {
+        j += 1;
+    }
+    if !code.get(j).is_some_and(|t| t.is_punct('[')) {
+        return None;
+    }
+    let mut depth = 1usize;
+    j += 1;
+    let start = j;
+    while j < code.len() && depth > 0 {
+        if code[j].is_punct('[') {
+            depth += 1;
+        } else if code[j].is_punct(']') {
+            depth -= 1;
+        }
+        j += 1;
+    }
+    let inner = code[start..j.saturating_sub(1)].iter().collect();
+    Some((j, inner))
+}
+
+/// With `j` just past a stripped attribute's `]`: consume any further
+/// attributes plus one item / statement / struct field, returning the
+/// index just past it. An item body (`{ … }`) ends the node; so does a
+/// `;` or `,` at bracket depth zero (angle brackets tracked shallowly,
+/// enough for `field: Mutex<Vec<(usize, usize)>>,`); so does the close
+/// of the enclosing group.
+fn skip_node(code: &[Token], mut j: usize) -> usize {
+    let n = code.len();
+    while j < n && code[j].is_punct('#') {
+        match attr_span(code, j) {
+            Some((end, _)) => j = end,
+            None => break,
+        }
+    }
+    let mut depth = 0i32;
+    let mut angle = 0i32;
+    while j < n {
+        let t = &code[j];
+        match t.kind {
+            TokenKind::Punct('(') | TokenKind::Punct('[') => depth += 1,
+            TokenKind::Punct(')') | TokenKind::Punct(']') => {
+                if depth == 0 {
+                    return j;
+                }
+                depth -= 1;
+            }
+            TokenKind::Punct('<') => angle += 1,
+            TokenKind::Punct('>') => angle = (angle - 1).max(0),
+            TokenKind::Punct('{') if depth == 0 => {
+                let mut braces = 1i32;
+                j += 1;
+                while j < n && braces > 0 {
+                    if code[j].is_punct('{') {
+                        braces += 1;
+                    } else if code[j].is_punct('}') {
+                        braces -= 1;
+                    }
+                    j += 1;
+                }
+                return j;
+            }
+            TokenKind::Punct('}') if depth == 0 => return j,
+            TokenKind::Punct(';') | TokenKind::Punct(',') if depth == 0 && angle == 0 => {
+                return j + 1;
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Drop every node gated behind an off `cfg(…)` attribute (see
+/// [`cfg_is_off`]) from a comment-free token stream.
+pub fn strip_cfg_off(code: Vec<Token>) -> Vec<Token> {
+    let mut out = Vec::with_capacity(code.len());
+    let mut i = 0;
+    while i < code.len() {
+        if code[i].is_punct('#') {
+            if let Some((end, inner)) = attr_span(&code, i) {
+                if cfg_is_off(&inner) {
+                    i = skip_node(&code, end);
+                    continue;
+                }
+                out.extend(code[i..end].iter().cloned());
+                i = end;
+                continue;
+            }
+        }
+        out.push(code[i].clone());
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// fn-item extraction
+// ---------------------------------------------------------------------
+
+/// One extracted function item. `body` holds the token indices of the
+/// opening and closing braces in the owning file's code-token stream.
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    /// `/`-normalized file label.
+    pub file: String,
+    /// Function name (raw-ident prefix stripped: `fn r#loop` → `loop`).
+    pub name: String,
+    /// Self type when defined inside an `impl` block.
+    pub self_type: Option<String>,
+    /// 1-based line of the `fn` keyword.
+    pub line: u32,
+    /// Token indices of the body's `{` and `}` in the file's stream.
+    pub body: (usize, usize),
+    /// First parameter is (some form of) `self`.
+    pub has_self: bool,
+    /// Defined in test code: a `mod tests`, a test/bench source file.
+    pub is_test: bool,
+    /// Body ranges of functions nested inside this one (token scans of
+    /// this body must skip them — they are items of their own).
+    pub nested: Vec<(usize, usize)>,
+}
+
+enum FrameKind {
+    Impl,
+    Mod,
+    Fn,
+    Brace,
+}
+
+struct Frame {
+    kind: FrameKind,
+    self_type: Option<String>,
+    test: bool,
+}
+
+fn is_test_file(file: &str) -> bool {
+    file.contains("/tests/") || file.contains("/benches/") || file.ends_with("build.rs")
+}
+
+/// Scan an `impl` header starting just past the `impl` keyword: returns
+/// `(self type, index of the opening '{' or terminating ';')`. The self
+/// type is the last path segment at angle depth 0 before the brace; an
+/// `impl Trait for Type` header takes the segment after `for`.
+fn scan_impl_header(code: &[Token], mut j: usize) -> (Option<String>, usize) {
+    let mut angle = 0i32;
+    let mut last_ident: Option<String> = None;
+    let mut after_for = false;
+    let mut for_ident: Option<String> = None;
+    let mut in_where = false;
+    while j < code.len() {
+        let t = &code[j];
+        match t.kind {
+            TokenKind::Punct('<') => angle += 1,
+            TokenKind::Punct('>') => angle = (angle - 1).max(0),
+            TokenKind::Ident if angle == 0 => {
+                if t.is_ident("for") {
+                    after_for = true;
+                    for_ident = None;
+                } else if t.is_ident("where") {
+                    in_where = true;
+                } else if !in_where {
+                    if after_for && for_ident.is_none() {
+                        for_ident = Some(t.ident_name().to_string());
+                    }
+                    last_ident = Some(t.ident_name().to_string());
+                }
+            }
+            TokenKind::Punct('{') | TokenKind::Punct(';') if angle == 0 => break,
+            _ => {}
+        }
+        j += 1;
+    }
+    let self_type = if after_for && for_ident.is_some() {
+        for_ident
+    } else {
+        last_ident
+    };
+    (self_type, j)
+}
+
+/// Extract every fn item from one file's (comment-free, cfg-stripped)
+/// token stream, in source order.
+pub fn extract_fns(file: &str, code: &[Token]) -> Vec<FnItem> {
+    let mut fns: Vec<FnItem> = Vec::new();
+    let test_file = is_test_file(file);
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut i = 0;
+    let n = code.len();
+    while i < n {
+        let t = &code[i];
+        if t.is_punct('#') {
+            if let Some((end, _)) = attr_span(code, i) {
+                i = end;
+                continue;
+            }
+        }
+        if t.is_ident("impl") {
+            let (self_type, j) = scan_impl_header(code, i + 1);
+            if code.get(j).is_some_and(|t| t.is_punct('{')) {
+                stack.push(Frame { kind: FrameKind::Impl, self_type, test: false });
+                i = j + 1;
+            } else {
+                i = j.max(i + 1);
+            }
+            continue;
+        }
+        if t.is_ident("mod") {
+            let mut j = i + 1;
+            let mut name = String::new();
+            if let Some(id) = code.get(j).filter(|t| t.kind == TokenKind::Ident) {
+                name = id.ident_name().to_string();
+                j += 1;
+            }
+            if code.get(j).is_some_and(|t| t.is_punct('{')) {
+                stack.push(Frame {
+                    kind: FrameKind::Mod,
+                    self_type: None,
+                    test: name == "tests",
+                });
+                i = j + 1;
+            } else {
+                i = j;
+            }
+            continue;
+        }
+        if t.is_ident("fn") {
+            if let Some(name_tok) = code.get(i + 1).filter(|t| t.kind == TokenKind::Ident) {
+                let name = name_tok.ident_name().to_string();
+                let mut j = i + 2;
+                let mut depth = 0i32;
+                let mut open_idx = None;
+                let mut first_paren = None;
+                while j < n {
+                    match code[j].kind {
+                        TokenKind::Punct('(') | TokenKind::Punct('[') => {
+                            if first_paren.is_none() && code[j].is_punct('(') {
+                                first_paren = Some(j);
+                            }
+                            depth += 1;
+                        }
+                        TokenKind::Punct(')') | TokenKind::Punct(']') => depth -= 1,
+                        TokenKind::Punct(';') if depth == 0 => break,
+                        TokenKind::Punct('{') if depth == 0 => {
+                            open_idx = Some(j);
+                            break;
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                let has_self = first_paren.is_some_and(|p| {
+                    let mut m = p + 1;
+                    while code.get(m).is_some_and(|t| {
+                        t.is_punct('&') || t.kind == TokenKind::Lifetime || t.is_ident("mut")
+                    }) {
+                        m += 1;
+                    }
+                    code.get(m).is_some_and(|t| t.is_ident("self"))
+                });
+                if let Some(open) = open_idx {
+                    let mut braces = 1i32;
+                    let mut k = open + 1;
+                    while k < n && braces > 0 {
+                        if code[k].is_punct('{') {
+                            braces += 1;
+                        } else if code[k].is_punct('}') {
+                            braces -= 1;
+                        }
+                        k += 1;
+                    }
+                    let in_test = test_file || stack.iter().any(|f| f.test);
+                    let self_type = stack
+                        .iter()
+                        .rev()
+                        .find(|f| matches!(f.kind, FrameKind::Impl))
+                        .and_then(|f| f.self_type.clone());
+                    fns.push(FnItem {
+                        file: file.to_string(),
+                        name,
+                        self_type,
+                        line: t.line,
+                        body: (open, k.saturating_sub(1)),
+                        has_self,
+                        is_test: in_test,
+                        nested: Vec::new(),
+                    });
+                    // Keep scanning *inside* the body for nested items;
+                    // the frame keeps test-ness and brace depth right.
+                    stack.push(Frame {
+                        kind: FrameKind::Fn,
+                        self_type: None,
+                        test: in_test,
+                    });
+                    i = open + 1;
+                    continue;
+                }
+                i = j;
+                continue;
+            }
+        }
+        if t.is_punct('{') {
+            stack.push(Frame { kind: FrameKind::Brace, self_type: None, test: false });
+            i += 1;
+            continue;
+        }
+        if t.is_punct('}') {
+            stack.pop();
+            i += 1;
+            continue;
+        }
+        i += 1;
+    }
+    // Record nested-fn body ranges so body scans can skip them.
+    let ranges: Vec<(usize, usize)> = fns.iter().map(|f| f.body).collect();
+    for f in &mut fns {
+        for &(lo, hi) in &ranges {
+            if lo > f.body.0 && hi < f.body.1 {
+                f.nested.push((lo, hi));
+            }
+        }
+    }
+    fns
+}
+
+// ---------------------------------------------------------------------
+// call-site extraction
+// ---------------------------------------------------------------------
+
+/// How a call site is spelled, which determines resolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    /// `foo(…)`.
+    Free,
+    /// `Type::foo(…)` (the qualifier is the path segment before `::`).
+    Assoc,
+    /// `recv.foo(…)`.
+    Method,
+}
+
+/// One syntactic call site inside a function body.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    pub kind: CallKind,
+    /// Path segment before `::` for associated calls.
+    pub qual: Option<String>,
+    pub name: String,
+    pub line: u32,
+    /// Sits inside a `catch_unwind(…)` argument list.
+    pub contained: bool,
+}
+
+/// Keywords that can precede `(` without forming a call (`if (…)`,
+/// `match (…)`, `return (…)`, …).
+const KEYWORDS_NONCALL: &[&str] = &[
+    "Self", "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn",
+    "else", "enum", "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match",
+    "mod", "move", "mut", "pub", "ref", "return", "self", "static", "struct", "super",
+    "trait", "type", "union", "unsafe", "use", "where", "while", "yield",
+];
+
+/// Ranges of `catch_unwind(…)` argument tokens within `lo..=hi`.
+fn contained_ranges(code: &[Token], lo: usize, hi: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut k = lo;
+    while k < hi {
+        if code[k].is_ident("catch_unwind") && code.get(k + 1).is_some_and(|t| t.is_punct('(')) {
+            let mut d = 1i32;
+            let mut j = k + 2;
+            while j <= hi && d > 0 {
+                if code[j].is_punct('(') {
+                    d += 1;
+                } else if code[j].is_punct(')') {
+                    d -= 1;
+                }
+                j += 1;
+            }
+            out.push((k + 1, j.saturating_sub(1)));
+            k = j;
+        } else {
+            k += 1;
+        }
+    }
+    out
+}
+
+/// Extract the call sites in `item`'s body, skipping nested fn items.
+pub fn extract_calls(code: &[Token], item: &FnItem) -> Vec<CallSite> {
+    let (lo, hi) = item.body;
+    let contained = contained_ranges(code, lo, hi);
+    let in_contained = |k: usize| contained.iter().any(|&(a, b)| a <= k && k <= b);
+    let in_nested = |k: usize| item.nested.iter().any(|&(a, b)| a <= k && k <= b);
+    let mut out = Vec::new();
+    let mut k = lo + 1;
+    while k < hi {
+        if in_nested(k) {
+            k += 1;
+            continue;
+        }
+        let t = &code[k];
+        if t.kind == TokenKind::Ident && code.get(k + 1).is_some_and(|n| n.is_punct('(')) {
+            let name = t.ident_name().to_string();
+            let prev = &code[k - 1];
+            if prev.is_punct('.') {
+                out.push(CallSite {
+                    kind: CallKind::Method,
+                    qual: None,
+                    name,
+                    line: t.line,
+                    contained: in_contained(k),
+                });
+            } else if prev.is_punct(':') && k >= 2 && code[k - 2].is_punct(':') {
+                let qual = (k >= 3)
+                    .then(|| &code[k - 3])
+                    .filter(|q| q.kind == TokenKind::Ident)
+                    .map(|q| q.ident_name().to_string());
+                out.push(CallSite {
+                    kind: CallKind::Assoc,
+                    qual,
+                    name,
+                    line: t.line,
+                    contained: in_contained(k),
+                });
+            } else if !prev.is_ident("fn") && !KEYWORDS_NONCALL.contains(&name.as_str()) {
+                out.push(CallSite {
+                    kind: CallKind::Free,
+                    qual: None,
+                    name,
+                    line: t.line,
+                    contained: in_contained(k),
+                });
+            }
+        }
+        k += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// the graph
+// ---------------------------------------------------------------------
+
+/// One resolved call edge.
+#[derive(Debug, Clone, Copy)]
+pub struct Edge {
+    /// Callee's index into [`CallGraph::fns`].
+    pub callee: usize,
+    /// Line of the call site (in the caller's file).
+    pub line: u32,
+    /// Call site sits inside a `catch_unwind(…)` argument list.
+    pub contained: bool,
+}
+
+/// The whole-crate call graph. Iteration order is deterministic: files
+/// in sorted order, functions in source order, edges in call order.
+pub struct CallGraph {
+    pub fns: Vec<FnItem>,
+    edges: Vec<Vec<Edge>>,
+    code: BTreeMap<String, Vec<Token>>,
+}
+
+impl CallGraph {
+    /// Build the graph from `label → source` pairs. Labels should be
+    /// `/`-normalized paths; sources are lexed, comment-stripped, and
+    /// cfg-stripped before extraction.
+    pub fn build(files: &BTreeMap<String, String>) -> CallGraph {
+        let mut code_map: BTreeMap<String, Vec<Token>> = BTreeMap::new();
+        for (label, src) in files {
+            let toks: Vec<Token> =
+                super::lexer::lex(src).into_iter().filter(|t| !t.is_comment()).collect();
+            code_map.insert(label.clone(), strip_cfg_off(toks));
+        }
+        let mut fns: Vec<FnItem> = Vec::new();
+        for (label, code) in &code_map {
+            fns.extend(extract_fns(label, code));
+        }
+        // Name index over non-test fns, in deterministic order.
+        let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (idx, f) in fns.iter().enumerate() {
+            if !f.is_test {
+                by_name.entry(f.name.as_str()).or_default().push(idx);
+            }
+        }
+        let mut edges: Vec<Vec<Edge>> = vec![Vec::new(); fns.len()];
+        for (caller, f) in fns.iter().enumerate() {
+            let code = &code_map[&f.file];
+            for call in extract_calls(code, f) {
+                let Some(cands) = by_name.get(call.name.as_str()) else {
+                    continue;
+                };
+                let resolved: Vec<usize> = match call.kind {
+                    CallKind::Free => {
+                        let same: Vec<usize> = cands
+                            .iter()
+                            .copied()
+                            .filter(|&c| fns[c].file == f.file)
+                            .collect();
+                        if same.is_empty() { cands.clone() } else { same }
+                    }
+                    CallKind::Assoc => match call.qual.as_deref() {
+                        None => cands.clone(),
+                        Some("Self") => {
+                            let same_impl: Vec<usize> = cands
+                                .iter()
+                                .copied()
+                                .filter(|&c| {
+                                    fns[c].file == f.file && fns[c].self_type == f.self_type
+                                })
+                                .collect();
+                            if same_impl.is_empty() {
+                                cands
+                                    .iter()
+                                    .copied()
+                                    .filter(|&c| fns[c].self_type == f.self_type)
+                                    .collect()
+                            } else {
+                                same_impl
+                            }
+                        }
+                        Some(q) => {
+                            let by_type: Vec<usize> = cands
+                                .iter()
+                                .copied()
+                                .filter(|&c| fns[c].self_type.as_deref() == Some(q))
+                                .collect();
+                            if by_type.is_empty() {
+                                // Module-qualified free fn (`pav::run`);
+                                // no fallback — an unmatched qualifier
+                                // is a std/extern type.
+                                let file_name = format!("{q}.rs");
+                                cands
+                                    .iter()
+                                    .copied()
+                                    .filter(|&c| {
+                                        fns[c].file.rsplit('/').next() == Some(&file_name)
+                                    })
+                                    .collect()
+                            } else {
+                                by_type
+                            }
+                        }
+                    },
+                    CallKind::Method => {
+                        if METHOD_STOP.contains(&call.name.as_str()) {
+                            Vec::new()
+                        } else {
+                            let methods: Vec<usize> = cands
+                                .iter()
+                                .copied()
+                                .filter(|&c| fns[c].self_type.is_some() && fns[c].has_self)
+                                .collect();
+                            let same: Vec<usize> = methods
+                                .iter()
+                                .copied()
+                                .filter(|&c| fns[c].file == f.file)
+                                .collect();
+                            if same.is_empty() { methods } else { same }
+                        }
+                    }
+                };
+                for callee in resolved {
+                    edges[caller].push(Edge {
+                        callee,
+                        line: call.line,
+                        contained: call.contained,
+                    });
+                }
+            }
+        }
+        CallGraph { fns, edges, code: code_map }
+    }
+
+    /// The (comment-free, cfg-stripped) token stream of `file`, which
+    /// [`FnItem::body`] indices refer into.
+    pub fn file_code(&self, file: &str) -> &[Token] {
+        self.code.get(file).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Outgoing edges of fn `idx`.
+    pub fn edges_of(&self, idx: usize) -> &[Edge] {
+        &self.edges[idx]
+    }
+
+    /// Indices of non-test fns named `name` in files whose label
+    /// contains `pattern`.
+    pub fn find(&self, pattern: &str, name: &str) -> Vec<usize> {
+        self.fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| !f.is_test && f.name == name && f.file.contains(pattern))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// BFS reachability from `roots`. Parent pointers record, for each
+    /// reached fn, the caller and call line it was first discovered
+    /// through — BFS order makes the resulting chain a *shortest* one.
+    /// `skip_contained` drops edges whose call site is inside a
+    /// `catch_unwind(…)` argument list (panic propagation stops there;
+    /// allocation does not).
+    pub fn reach(&self, roots: &[usize], skip_contained: bool) -> Reach {
+        let mut seen = vec![false; self.fns.len()];
+        let mut parent: Vec<Option<(usize, u32)>> = vec![None; self.fns.len()];
+        let mut queue = VecDeque::new();
+        for &r in roots {
+            if !seen[r] {
+                seen[r] = true;
+                queue.push_back(r);
+            }
+        }
+        let mut order = Vec::new();
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for e in &self.edges[u] {
+                if skip_contained && e.contained {
+                    continue;
+                }
+                if !seen[e.callee] {
+                    seen[e.callee] = true;
+                    parent[e.callee] = Some((u, e.line));
+                    queue.push_back(e.callee);
+                }
+            }
+        }
+        Reach { seen, parent, order }
+    }
+
+    /// The call chain from a root to fn `idx` under `reach`, one
+    /// rendered hop per element: `file::name (root @line)` for the
+    /// root, `file::name (called at caller_file:line)` for each step.
+    pub fn chain(&self, reach: &Reach, idx: usize) -> Vec<String> {
+        let mut hops = Vec::new();
+        let mut cur = idx;
+        loop {
+            let f = &self.fns[cur];
+            match reach.parent[cur] {
+                None => {
+                    hops.push(format!("{}::{} (root @{})", f.file, f.name, f.line));
+                    break;
+                }
+                Some((caller, line)) => {
+                    hops.push(format!(
+                        "{}::{} (called at {}:{})",
+                        f.file, f.name, self.fns[caller].file, line
+                    ));
+                    cur = caller;
+                }
+            }
+        }
+        hops.reverse();
+        hops
+    }
+}
+
+/// Reachability result: `seen[i]` / `order` (BFS discovery order) /
+/// parent pointers for chain reconstruction.
+pub struct Reach {
+    pub seen: Vec<bool>,
+    parent: Vec<Option<(usize, u32)>>,
+    pub order: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(files: &[(&str, &str)]) -> CallGraph {
+        let map: BTreeMap<String, String> =
+            files.iter().map(|&(l, s)| (l.to_string(), s.to_string())).collect();
+        CallGraph::build(&map)
+    }
+
+    fn idx(g: &CallGraph, file: &str, name: &str) -> usize {
+        let found = g.find(file, name);
+        assert_eq!(found.len(), 1, "{file}::{name}: {found:?}");
+        found[0]
+    }
+
+    #[test]
+    fn extracts_fns_with_impl_self_types() {
+        let g = graph(&[(
+            "src/a.rs",
+            "struct S;\nimpl S {\n    fn m(&self) {}\n    fn assoc() {}\n}\n\
+             impl Clone for S {\n    fn clone(&self) -> S { S }\n}\nfn free() {}\n",
+        )]);
+        let m = &g.fns[idx(&g, "a.rs", "m")];
+        assert_eq!(m.self_type.as_deref(), Some("S"));
+        assert!(m.has_self);
+        let assoc = &g.fns[idx(&g, "a.rs", "assoc")];
+        assert_eq!(assoc.self_type.as_deref(), Some("S"));
+        assert!(!assoc.has_self);
+        let clone = &g.fns[idx(&g, "a.rs", "clone")];
+        assert_eq!(clone.self_type.as_deref(), Some("S"), "impl Trait for Type");
+        assert!(g.fns[idx(&g, "a.rs", "free")].self_type.is_none());
+    }
+
+    #[test]
+    fn raw_ident_fn_names_are_stripped() {
+        let g = graph(&[("src/a.rs", "fn r#loop() {}\nfn caller() { r#loop(); }\n")]);
+        let target = idx(&g, "a.rs", "loop");
+        let caller = idx(&g, "a.rs", "caller");
+        assert!(g.edges_of(caller).iter().any(|e| e.callee == target));
+    }
+
+    #[test]
+    fn cfg_test_and_diag_features_are_stripped() {
+        let g = graph(&[(
+            "src/a.rs",
+            "fn live() {}\n\
+             #[cfg(test)]\nmod tests {\n    fn helper() {}\n}\n\
+             #[cfg(feature = \"debug-invariants\")]\nfn armed() {}\n\
+             #[cfg(not(feature = \"debug-invariants\"))]\nfn stub() {}\n\
+             #[cfg(feature = \"failpoint\")]\nmod imp {\n    pub fn hit() {}\n}\n",
+        )]);
+        let names: Vec<&str> = g.fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["live", "stub"]);
+    }
+
+    #[test]
+    fn cfg_stripped_statements_and_fields() {
+        // A gated statement and a gated struct field (generic type with
+        // commas) disappear; the surrounding tokens stay intact.
+        let g = graph(&[(
+            "src/a.rs",
+            "struct D {\n    ptr: usize,\n    #[cfg(feature = \"debug-invariants\")]\n    \
+             claims: Mutex<Vec<(usize, usize)>>,\n    len: usize,\n}\n\
+             fn f() {\n    #[cfg(feature = \"debug-invariants\")]\n    \
+             assert_eq!(1, 1);\n    g();\n}\nfn g() {}\n",
+        )]);
+        let f = idx(&g, "a.rs", "f");
+        let code = g.file_code("src/a.rs");
+        let (lo, hi) = g.fns[f].body;
+        assert!(!code[lo..=hi].iter().any(|t| t.is_ident("assert_eq")));
+        assert!(g.edges_of(f).iter().any(|e| e.callee == idx(&g, "a.rs", "g")));
+        assert!(!code.iter().any(|t| t.is_ident("claims")));
+        assert!(code.iter().any(|t| t.is_ident("len")));
+    }
+
+    #[test]
+    fn free_assoc_and_method_calls_resolve() {
+        let g = graph(&[
+            (
+                "src/a.rs",
+                "pub fn entry(s: &S) {\n    helper();\n    S::assoc();\n    s.work();\n}\n\
+                 fn helper() {}\n",
+            ),
+            (
+                "src/b.rs",
+                "pub struct S;\nimpl S {\n    pub fn assoc() {}\n    \
+                 pub fn work(&self) {}\n}\n",
+            ),
+        ]);
+        let entry = idx(&g, "a.rs", "entry");
+        let callees: Vec<usize> = g.edges_of(entry).iter().map(|e| e.callee).collect();
+        assert!(callees.contains(&idx(&g, "a.rs", "helper")));
+        assert!(callees.contains(&idx(&g, "b.rs", "assoc")));
+        assert!(callees.contains(&idx(&g, "b.rs", "work")));
+    }
+
+    #[test]
+    fn method_stop_list_blocks_std_colliding_names() {
+        let g = graph(&[
+            ("src/a.rs", "pub fn entry(v: &mut Vec<u32>, c: &mut C) { v.push(1); c.step(); }\n"),
+            (
+                "src/b.rs",
+                "pub struct C;\npub struct K;\nimpl C {\n    pub fn push(&mut self) {}\n    \
+                 pub fn step(&mut self) {}\n}\nimpl K {\n    pub fn step(&mut self) {}\n}\n",
+            ),
+        ]);
+        let entry = idx(&g, "a.rs", "entry");
+        let callees: Vec<usize> = g.edges_of(entry).iter().map(|e| e.callee).collect();
+        // `.push(` never resolves (std-colliding); `.step(` resolves to
+        // every in-crate method of that name.
+        assert!(!callees.contains(&idx(&g, "b.rs", "push")));
+        let steps = g.find("b.rs", "step");
+        assert_eq!(steps.len(), 2);
+        for s in steps {
+            assert!(callees.contains(&s), "conservative fan-out to all `step` methods");
+        }
+    }
+
+    #[test]
+    fn method_resolution_requires_a_self_param() {
+        // `Config::load` takes no self — a `.load(…)` method call (an
+        // atomic, in practice) must not resolve to it even off the
+        // stop list (`load` is on it; use a distinctive name here).
+        let g = graph(&[
+            ("src/a.rs", "pub fn entry(x: &X) { x.ingest(); }\n"),
+            ("src/b.rs", "pub struct B;\nimpl B {\n    pub fn ingest(path: &str) {}\n}\n"),
+        ]);
+        let entry = idx(&g, "a.rs", "entry");
+        assert!(g.edges_of(entry).is_empty());
+    }
+
+    #[test]
+    fn catch_unwind_marks_contained_edges() {
+        let g = graph(&[(
+            "src/a.rs",
+            "fn outer() {\n    let r = catch_unwind(AssertUnwindSafe(|| inner()));\n    \
+             after();\n}\nfn inner() {}\nfn after() {}\n",
+        )]);
+        let outer = idx(&g, "a.rs", "outer");
+        let inner = idx(&g, "a.rs", "inner");
+        let after = idx(&g, "a.rs", "after");
+        let contained = g.reach(&[outer], true);
+        assert!(!contained.seen[inner], "contained edge skipped");
+        assert!(contained.seen[after]);
+        let full = g.reach(&[outer], false);
+        assert!(full.seen[inner], "hot reachability keeps contained edges");
+    }
+
+    #[test]
+    fn test_mod_fns_are_excluded_from_resolution() {
+        let g = graph(&[(
+            "src/a.rs",
+            "fn entry() { helper(); }\n\
+             mod tests {\n    fn helper() { panic!(\"test-only\"); }\n}\n\
+             fn helper() {}\n",
+        )]);
+        let entry = idx(&g, "a.rs", "entry");
+        // idx() asserts exactly one non-test `helper` matched; the edge
+        // goes to it.
+        assert_eq!(g.edges_of(entry).len(), 1);
+    }
+
+    #[test]
+    fn reach_chain_is_shortest_and_renders_hops() {
+        let g = graph(&[(
+            "src/a.rs",
+            "fn root() {\n    mid();\n    leaf();\n}\n\
+             fn mid() {\n    leaf();\n}\nfn leaf() {}\n",
+        )]);
+        let root = idx(&g, "a.rs", "root");
+        let leaf = idx(&g, "a.rs", "leaf");
+        let r = g.reach(&[root], false);
+        let chain = g.chain(&r, leaf);
+        // BFS finds the direct root→leaf edge, not the root→mid→leaf one.
+        assert_eq!(chain.len(), 2, "{chain:?}");
+        assert!(chain[0].contains("::root (root @1)"), "{chain:?}");
+        assert!(chain[1].contains("::leaf (called at src/a.rs:3)"), "{chain:?}");
+    }
+
+    #[test]
+    fn nested_fn_bodies_are_not_scanned_as_the_parent() {
+        let g = graph(&[(
+            "src/a.rs",
+            "fn outer() {\n    fn inner() {\n        target();\n    }\n    other();\n}\n\
+             fn target() {}\nfn other() {}\n",
+        )]);
+        let outer = idx(&g, "a.rs", "outer");
+        let callees: Vec<usize> = g.edges_of(outer).iter().map(|e| e.callee).collect();
+        assert!(callees.contains(&idx(&g, "a.rs", "other")));
+        assert!(!callees.contains(&idx(&g, "a.rs", "target")));
+        let inner = idx(&g, "a.rs", "inner");
+        assert!(g.edges_of(inner).iter().any(|e| e.callee == idx(&g, "a.rs", "target")));
+    }
+}

@@ -61,6 +61,22 @@ impl Token {
     pub fn is_punct(&self, c: char) -> bool {
         self.kind == TokenKind::Punct(c)
     }
+
+    /// The identifier's *name*: raw identifiers (`r#fn`, `r#match`)
+    /// drop their `r#` prefix, everything else is the text verbatim.
+    ///
+    /// Name-driven analyses (fn-item extraction, call resolution) must
+    /// match on this — `fn r#loop()` defines a function named `loop`.
+    /// Keyword-driven rules must keep matching on [`Token::is_ident`]
+    /// (exact text): `r#unsafe` is a plain identifier, *not* the
+    /// `unsafe` keyword, and must not trip the safety-comment rule.
+    pub fn ident_name(&self) -> &str {
+        if self.kind == TokenKind::Ident {
+            self.text.strip_prefix("r#").unwrap_or(&self.text)
+        } else {
+            &self.text
+        }
+    }
 }
 
 struct Cursor<'a> {
@@ -351,7 +367,10 @@ fn lex_number(cur: &mut Cursor<'_>) {
 
 fn lex_ident(cur: &mut Cursor<'_>) {
     // Raw-ident prefix: `r#fn`.
-    if cur.peek(0) == Some(b'r') && cur.peek(1) == Some(b'#') && cur.peek(2).is_some_and(is_ident_start) {
+    if cur.peek(0) == Some(b'r')
+        && cur.peek(1) == Some(b'#')
+        && cur.peek(2).is_some_and(is_ident_start)
+    {
         cur.bump();
         cur.bump();
     }
@@ -391,6 +410,33 @@ mod tests {
         // Nothing inside the raw string leaked out as separate tokens.
         assert!(!toks.iter().any(|t| t.is_ident("quote")));
         assert!(toks.last().unwrap().is_punct(';'));
+    }
+
+    #[test]
+    fn raw_idents_lex_as_plain_identifiers() {
+        // `r#fn` / `r#unsafe` are identifiers, not keywords: keyword
+        // checks (exact text) must miss them, name checks must strip
+        // the prefix.
+        let toks = lex("fn r#fn() { r#unsafe(); let r#match = 1; }");
+        assert!(toks[0].is_ident("fn"));
+        assert_eq!(toks[1].kind, TokenKind::Ident);
+        assert_eq!(toks[1].text, "r#fn");
+        assert!(!toks[1].is_ident("fn"));
+        assert_eq!(toks[1].ident_name(), "fn");
+        let raw_unsafe = toks.iter().find(|t| t.text == "r#unsafe").unwrap();
+        assert!(!raw_unsafe.is_ident("unsafe"));
+        assert_eq!(raw_unsafe.ident_name(), "unsafe");
+        let raw_match = toks.iter().find(|t| t.text == "r#match").unwrap();
+        assert_eq!(raw_match.ident_name(), "match");
+    }
+
+    #[test]
+    fn ident_name_leaves_normal_idents_alone() {
+        let toks = lex("range r#range rx");
+        assert_eq!(toks[0].ident_name(), "range");
+        assert_eq!(toks[1].ident_name(), "range");
+        assert_eq!(toks[1].text, "r#range");
+        assert_eq!(toks[2].ident_name(), "rx");
     }
 
     #[test]

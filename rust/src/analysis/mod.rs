@@ -2,11 +2,19 @@
 //!
 //! The `sfm_lint` binary (and the `tests/lint.rs` self-check) drive
 //! this module: [`lexer`] turns Rust source into a line-annotated token
-//! stream, [`rules`] runs the project-specific invariant checks over
-//! it. No external dependencies — the same hand-rolled discipline as
+//! stream, [`callgraph`] builds a whole-crate call graph over it
+//! (fn items, impl self-type attribution, conservatively resolved
+//! call sites, reachability with shortest-chain parents), and [`rules`]
+//! runs the project-specific invariant checks — the hot-path and
+//! no-panic rules are *transitive* over the graph, so only root sets
+//! are configured and everything they reach is derived. No external
+//! dependencies — the same hand-rolled discipline as
 //! `coordinator::json`.
 
+pub mod callgraph;
 pub mod lexer;
 pub mod rules;
 
-pub use rules::{lint_source, lint_tree, Config, Diagnostic, RULES};
+pub use rules::{
+    collect_sources, hot_reach, lint_crate, lint_source, lint_tree, Config, Diagnostic, RULES,
+};

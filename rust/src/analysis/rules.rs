@@ -1,99 +1,189 @@
 //! Rule engine for the `sfm_lint` static-analysis pass.
 //!
-//! Consumes the token stream from [`super::lexer`] and checks the
-//! project-specific invariants that the runtime test suite cannot see
-//! statically:
+//! Consumes the token stream from [`super::lexer`] and the whole-crate
+//! call graph from [`super::callgraph`] and checks the project-specific
+//! invariants that the runtime test suite cannot see statically. Every
+//! rule carries a stable code (`SFM001`…) so findings can be tracked
+//! across renames:
 //!
-//! * **safety-comment** — every `unsafe` keyword (block, fn, impl) is
-//!   immediately preceded by a `// SAFETY:` comment or a `# Safety` doc
-//!   section (attribute lines between comment and item are skipped).
-//! * **lock-poison** — every `.lock()` in `src/runtime/`,
-//!   `src/coordinator/`, `src/screening/`, and `src/decompose/` adopts
-//!   poison via `.unwrap_or_else(…into_inner…)`: a sibling worker panic
-//!   must surface as the original panic, never as a masking
-//!   `PoisonError` unwrap.
-//! * **hot-path-alloc** — no allocation-capable, wall-clock, or RNG
-//!   calls inside a configured allowlist of hot functions (the static
-//!   complement of the counting-allocator tests in
-//!   `tests/zero_alloc.rs`, which only see executed paths).
-//! * **no-panic-paths** — no bare `unwrap()` / `expect()`, panicking
-//!   macro, or panicking index expression inside the
-//!   `coordinator/serve.rs` job-handling functions: panic containment
-//!   there must stay typed (`Outcome`/`ServeError`), not implicit.
-//! * **waiver-syntax** — waiver comments are well-formed and name known
-//!   rules.
+//! * **SFM001 safety-comment** — every `unsafe` keyword (block, fn,
+//!   impl) is immediately preceded by a `// SAFETY:` comment or a
+//!   `# Safety` doc section (attribute lines between comment and item
+//!   are skipped).
+//! * **SFM002 lock-poison** — every `.lock()` in `src/runtime/`,
+//!   `src/coordinator/`, `src/screening/`, `src/decompose/`, and
+//!   `src/obs/` adopts poison via `.unwrap_or_else(…into_inner…)`: a
+//!   sibling worker panic must surface as the original panic, never as
+//!   a masking `PoisonError` unwrap.
+//! * **SFM003 hot-path-alloc** — *transitive*: no allocation-capable,
+//!   wall-clock, RNG, or observability calls in any function reachable
+//!   from the hot **root set** (the documented zero-alloc kernels).
+//!   PR 7's per-body allowlist is gone: helpers a kernel calls are hot
+//!   because the graph says so, and each finding carries the shortest
+//!   call chain that makes its function hot.
+//! * **SFM004 no-panic-paths** — *transitive*: no bare `unwrap()` /
+//!   `expect()` or panicking macro in any function reachable from the
+//!   serve job roots, where reachability stops at `catch_unwind(…)`
+//!   call sites (the panic cannot escape). Panicking *index*
+//!   expressions are a direct-body check on the roots and on the
+//!   configured panic-contained functions only — interior parsers
+//!   index with proven bounds and return typed errors for the rest.
+//! * **SFM005 waiver-syntax** — waiver comments are well-formed and
+//!   name known rules.
+//! * **SFM006 boundary-coupling** — cancellation polls (`.check()`),
+//!   trace emission (`.record(…)`), and checkpoint stores
+//!   (`sink.store(…)`) appear only in the designated boundary
+//!   functions (engine `run`/`resume_from`, block-solver round sites),
+//!   and no function consulting them is reachable from the hot root
+//!   set. Tracing is boundary-sampled by design (OBSERVABILITY.md);
+//!   this rule is the static proof that the discipline holds.
+//! * **SFM007 stale-waiver** — a waiver that suppresses zero findings
+//!   must be deleted, so the waiver inventory never outlives the code
+//!   it excused.
+//!
+//! The graph rules analyze the **production build**: tokens under
+//! `#[cfg(test)]` or a diagnostic feature are stripped first (see
+//! [`super::callgraph::CFG_OFF_FEATURES`]). The per-file rules
+//! (SFM001/SFM002/SFM005) stay cfg-blind — stricter, and currently
+//! clean.
 //!
 //! A finding can be waived at its site with a comment of the form
 //! `lint: allow(<rule>[, <rule>]) — <reason>` (after `//`); the reason
 //! is mandatory. The waiver covers its own line and the first code line
 //! below its comment block.
 
+use super::callgraph::{CallGraph, Reach};
 use super::lexer::{lex, Token, TokenKind};
+use std::collections::BTreeMap;
 use std::fmt;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-/// `(name, summary)` for every rule the engine knows.
-pub const RULES: &[(&str, &str)] = &[
+/// `(code, name, summary)` for every rule the engine knows. Codes are
+/// stable across renames; names are what waivers cite.
+pub const RULES: &[(&str, &str, &str)] = &[
     (
+        "SFM001",
         "safety-comment",
         "every `unsafe` block/fn/impl is immediately preceded by a SAFETY comment",
     ),
     (
+        "SFM002",
         "lock-poison",
-        "`.lock()` in runtime/coordinator/screening/decompose adopts poison via unwrap_or_else(..into_inner..)",
+        "`.lock()` in runtime/coordinator/screening/decompose/obs adopts poison via unwrap_or_else(..into_inner..)",
     ),
     (
+        "SFM003",
         "hot-path-alloc",
-        "no allocation, wall-clock, or RNG calls inside the hot-path fn allowlist",
+        "no allocation, wall-clock, RNG, or observability calls reachable from the hot root set",
     ),
     (
+        "SFM004",
         "no-panic-paths",
-        "no bare unwrap/expect, panicking macro, or panicking index in serve job paths",
+        "no bare unwrap/expect or panicking macro reachable from the serve roots (catch_unwind contains); no panicking index in root bodies",
     ),
     (
+        "SFM005",
         "waiver-syntax",
         "waiver comments are well-formed and name known rules",
+    ),
+    (
+        "SFM006",
+        "boundary-coupling",
+        "cancel polls, trace records, and checkpoint stores appear only in designated boundary fns, unreachable from hot roots",
+    ),
+    (
+        "SFM007",
+        "stale-waiver",
+        "a waiver that suppresses zero findings must be removed",
     ),
 ];
 
 fn known_rule(name: &str) -> Option<&'static str> {
-    RULES.iter().map(|&(n, _)| n).find(|&n| n == name)
+    RULES.iter().map(|&(_, n, _)| n).find(|&n| n == name)
 }
 
-/// One lint finding, printed as `file:line: [rule] message`.
+fn code_of(rule: &str) -> &'static str {
+    RULES
+        .iter()
+        .find(|&&(_, n, _)| n == rule)
+        .map(|&(c, _, _)| c)
+        .unwrap_or("SFM000")
+}
+
+/// One lint finding, printed as `file:line: [code rule] message`, with
+/// the offending call chain (when the finding is transitive) on
+/// indented follow-up lines.
 #[derive(Debug, Clone)]
 pub struct Diagnostic {
     pub file: String,
     pub line: u32,
     pub rule: &'static str,
+    pub code: &'static str,
     pub msg: String,
+    /// Root-first call chain for transitive findings; empty for
+    /// per-file findings.
+    pub chain: Vec<String>,
+}
+
+impl Diagnostic {
+    fn new(file: &str, line: u32, rule: &'static str, msg: String) -> Diagnostic {
+        Diagnostic {
+            file: file.to_string(),
+            line,
+            rule,
+            code: code_of(rule),
+            msg,
+            chain: Vec::new(),
+        }
+    }
 }
 
 impl fmt::Display for Diagnostic {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+        write!(f, "{}:{}: [{} {}] {}", self.file, self.line, self.code, self.rule, self.msg)?;
+        for (i, hop) in self.chain.iter().enumerate() {
+            let head = if i == 0 { "chain:" } else { "   ->" };
+            write!(f, "\n      {head} {hop}")?;
+        }
+        Ok(())
     }
 }
 
-/// Where each scoped rule applies. Paths are matched against the
-/// `/`-normalized file label: `lock_paths` by substring, the fn lists by
-/// path suffix.
+/// Where each scoped rule applies. `lock_paths` and the root-set
+/// patterns match by substring against the `/`-normalized file label;
+/// boundary designations and definition files match by path suffix.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
-    /// `(path suffix, fn name)` — bodies subject to **hot-path-alloc**.
-    pub hot_fns: Vec<(String, String)>,
-    /// Path substrings subject to **lock-poison**.
+    /// `(path substring, fn name)` — the **hot root set**: functions
+    /// whose entire call closure is subject to SFM003.
+    pub hot_roots: Vec<(String, String)>,
+    /// Path substrings subject to SFM002.
     pub lock_paths: Vec<String>,
-    /// `(path suffix, fn name)` — bodies subject to **no-panic-paths**.
-    pub no_panic_fns: Vec<(String, String)>,
+    /// `(path substring, fn name)` — the **no-panic root set** for
+    /// SFM004 (transitive, `catch_unwind` edges excluded).
+    pub no_panic_roots: Vec<(String, String)>,
+    /// `(path substring, fn name)` — functions whose *callers* wrap
+    /// them in `catch_unwind`: their own body gets the full direct
+    /// SFM004 check (a panic there is an outcome, not a crash, but
+    /// must still be deliberate), and nothing propagates through them.
+    pub contained_fns: Vec<(String, String)>,
+    /// `(path suffix, fn name)` — the designated boundary functions
+    /// for SFM006.
+    pub boundary_fns: Vec<(String, String)>,
+    /// Path suffixes of the files *defining* the boundary machinery
+    /// (cancel tokens, trace sinks, checkpoint sinks) — exempt from
+    /// SFM006.
+    pub boundary_def_files: Vec<String>,
 }
 
 impl Config {
-    /// The allowlists for this repository: the verified-allocation-free
-    /// kernels (greedy pass, prox inner loops, pooled reducers) and the
-    /// serve job path. `argsort_desc` and `CholeskyFactor::solve` are
-    /// deliberately absent — they are the documented allocating
-    /// conveniences; the `_into` variants are the hot ones.
+    /// The root sets for this repository. These replace PR 7's manual
+    /// per-body allowlists: only the *entry points* are named, and the
+    /// call graph derives the rest (`tests/lint.rs` pins that the
+    /// derived hot set is a superset of the retired allowlist).
+    /// `argsort_desc` and `CholeskyFactor::solve` are deliberately
+    /// absent — they are the documented allocating conveniences; the
+    /// `_into` variants are the hot ones.
     pub fn default_for_repo() -> Config {
         let hot: &[(&str, &[&str])] = &[
             (
@@ -110,8 +200,6 @@ impl Config {
                     "cover_gain4",
                     "relu_mac_col4",
                     "max_update_col4",
-                    "insertion_repair",
-                    "argsort_desc_into",
                     "argsort_desc_adaptive",
                     "argsort_desc_remap",
                     "project_indices",
@@ -121,32 +209,31 @@ impl Config {
             ("src/decompose/chain.rs", &["tv_prox_into"]),
             ("src/solvers/pav.rs", &["run"]),
             ("src/lovasz.rs", &["accumulate_pass"]),
-            ("src/submodular/kernel_cut.rs", &["prefix_gains_scratch"]),
-            (
-                "src/submodular/cut.rs",
-                &["prefix_gains_scratch", "chunked_adjacency_sum", "fold_partials"],
-            ),
+            // Both the kernelized and the graph-cut oracle keep their
+            // scratch prefix-gain pass hot; the directory pattern
+            // covers both files.
+            ("src/submodular/", &["prefix_gains_scratch"]),
         ];
-        let mut hot_fns = Vec::new();
+        let mut hot_roots = Vec::new();
         for &(file, fns) in hot {
             for &f in fns {
-                hot_fns.push((file.to_string(), f.to_string()));
+                hot_roots.push((file.to_string(), f.to_string()));
             }
         }
         let no_panic = [
             "worker_loop",
             "serve_one",
-            "run_job",
-            "retry_backoff",
             "submit_line_with",
+            "handle_op",
             "split_envelope",
             "envelope",
             "reject",
             "write_line",
             "make_pool",
+            "retry_backoff",
         ];
         Config {
-            hot_fns,
+            hot_roots,
             lock_paths: [
                 "src/runtime/",
                 "src/coordinator/",
@@ -157,10 +244,32 @@ impl Config {
             .iter()
             .map(|s| s.to_string())
             .collect(),
-            no_panic_fns: no_panic
+            no_panic_roots: no_panic
                 .iter()
                 .map(|f| ("src/coordinator/serve.rs".to_string(), f.to_string()))
                 .collect(),
+            // `serve_one` wraps `run_job` in `catch_unwind`: a panic in
+            // the job body is a contained outcome, so it is checked
+            // directly but does not propagate to its callees.
+            contained_fns: vec![("src/coordinator/serve.rs".to_string(), "run_job".to_string())],
+            boundary_fns: [
+                ("src/screening/iaes.rs", "run"),
+                ("src/screening/iaes.rs", "resume_from"),
+                ("src/decompose/solver.rs", "step"),
+                ("src/decompose/solver.rs", "close_gap"),
+            ]
+            .iter()
+            .map(|&(p, n)| (p.to_string(), n.to_string()))
+            .collect(),
+            boundary_def_files: [
+                "src/runtime/cancel.rs",
+                "src/obs/trace.rs",
+                "src/obs/metrics.rs",
+                "src/screening/checkpoint.rs",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
         }
     }
 }
@@ -277,6 +386,8 @@ fn annotated_code_line(lines: &[LineInfo], line: usize) -> Option<usize> {
 #[derive(Debug)]
 struct Waiver {
     rules: Vec<&'static str>,
+    /// Line of the waiver comment itself (for stale-waiver reporting).
+    line: usize,
     /// Lines this waiver covers (its own line + the annotated code line).
     covers: Vec<usize>,
 }
@@ -351,14 +462,11 @@ fn collect_waivers(
                     if let Some(code) = annotated_code_line(lines, lno) {
                         covers.push(code);
                     }
-                    waivers.push(Waiver { rules, covers });
+                    waivers.push(Waiver { rules, line: lno, covers });
                 }
-                Err(msg) => diags.push(Diagnostic {
-                    file: file.to_string(),
-                    line: lno as u32,
-                    rule: "waiver-syntax",
-                    msg,
-                }),
+                Err(msg) => {
+                    diags.push(Diagnostic::new(file, lno as u32, "waiver-syntax", msg));
+                }
             }
         }
     }
@@ -366,7 +474,7 @@ fn collect_waivers(
 }
 
 // ---------------------------------------------------------------------
-// Rule passes (over the comment-free code view)
+// Per-file rule passes (over the comment-free, cfg-blind code view)
 // ---------------------------------------------------------------------
 
 /// Rust keywords that can legally precede `[` without forming an index
@@ -380,7 +488,7 @@ const NON_INDEX_KEYWORDS: &[&str] = &[
 
 fn rule_safety_comment(
     file: &str,
-    code: &[&Token],
+    code: &[Token],
     lines: &[LineInfo],
     diags: &mut Vec<Diagnostic>,
 ) {
@@ -390,19 +498,18 @@ fn rule_safety_comment(
                 c.contains("SAFETY") || c.contains("# Safety")
             });
             if !has {
-                diags.push(Diagnostic {
-                    file: file.to_string(),
-                    line: t.line,
-                    rule: "safety-comment",
-                    msg: "`unsafe` without an immediately preceding `// SAFETY:` comment"
-                        .to_string(),
-                });
+                diags.push(Diagnostic::new(
+                    file,
+                    t.line,
+                    "safety-comment",
+                    "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+                ));
             }
         }
     }
 }
 
-fn rule_lock_poison(file: &str, code: &[&Token], diags: &mut Vec<Diagnostic>) {
+fn rule_lock_poison(file: &str, code: &[Token], diags: &mut Vec<Diagnostic>) {
     for i in 0..code.len() {
         // `.lock()` …
         if !(code[i].is_punct('.')
@@ -420,62 +527,21 @@ fn rule_lock_poison(file: &str, code: &[&Token], diags: &mut Vec<Diagnostic>) {
                 .iter()
                 .any(|t| t.is_ident("into_inner"));
         if !ok {
-            diags.push(Diagnostic {
-                file: file.to_string(),
-                line: code[i + 1].line,
-                rule: "lock-poison",
-                msg: "`.lock()` must adopt poison via `.unwrap_or_else(..into_inner..)` \
-                      so sibling-panic shutdown re-raises the original panic"
+            diags.push(Diagnostic::new(
+                file,
+                code[i + 1].line,
+                "lock-poison",
+                "`.lock()` must adopt poison via `.unwrap_or_else(..into_inner..)` \
+                 so sibling-panic shutdown re-raises the original panic"
                     .to_string(),
-            });
+            ));
         }
     }
 }
 
-/// Find the token range `(start, end)` of the body of `fn name`, i.e.
-/// the indices of its opening and closing braces in `code`. Returns all
-/// bodies when the file defines the name more than once.
-fn fn_bodies(code: &[&Token], name: &str) -> Vec<(usize, usize)> {
-    let mut out = Vec::new();
-    let mut i = 0;
-    while i + 1 < code.len() {
-        if code[i].is_ident("fn") && code[i + 1].is_ident(name) {
-            let mut depth = 0i32; // parens + brackets (generics carry no braces here)
-            let mut j = i + 2;
-            let mut open = None;
-            while j < code.len() {
-                match code[j].kind {
-                    TokenKind::Punct('(') | TokenKind::Punct('[') => depth += 1,
-                    TokenKind::Punct(')') | TokenKind::Punct(']') => depth -= 1,
-                    TokenKind::Punct(';') if depth == 0 => break, // bodyless decl
-                    TokenKind::Punct('{') if depth == 0 => {
-                        open = Some(j);
-                        break;
-                    }
-                    _ => {}
-                }
-                j += 1;
-            }
-            if let Some(open) = open {
-                let mut braces = 1i32;
-                let mut k = open + 1;
-                while k < code.len() && braces > 0 {
-                    match code[k].kind {
-                        TokenKind::Punct('{') => braces += 1,
-                        TokenKind::Punct('}') => braces -= 1,
-                        _ => {}
-                    }
-                    k += 1;
-                }
-                out.push((open, k.saturating_sub(1)));
-                i = k;
-                continue;
-            }
-        }
-        i += 1;
-    }
-    out
-}
+// ---------------------------------------------------------------------
+// Token-level violation predicates (shared by the graph passes)
+// ---------------------------------------------------------------------
 
 /// Forbidden calls for **hot-path-alloc**. `.clone()` and
 /// `push`/`extend`/`resize` are deliberately not listed: amortized
@@ -495,12 +561,12 @@ const HOT_TYPES: &[&str] = &[
     "Instant", "SystemTime", "Pcg64", "TraceSink", "MetricsRegistry", "CheckpointSink",
 ];
 
-fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
-    let t = code[k];
+fn hot_path_violation(code: &[Token], k: usize) -> Option<String> {
+    let t = &code[k];
     if t.kind != TokenKind::Ident {
         return None;
     }
-    let name = t.text.as_str();
+    let name = t.ident_name();
     if HOT_MACROS.contains(&name) && code.get(k + 1).is_some_and(|n| n.is_punct('!')) {
         return Some(format!("`{name}!` allocates"));
     }
@@ -526,7 +592,7 @@ fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
         && code.get(k + 2).is_some_and(|n| n.is_punct(':'))
     {
         if let Some(m) = code.get(k + 3).filter(|m| m.kind == TokenKind::Ident) {
-            let assoc = m.text.as_str();
+            let assoc = m.ident_name();
             let bad = match name {
                 "Instant" | "SystemTime" => assoc == "now",
                 "Pcg64" => true, // any RNG construction/use is nondeterministic state
@@ -545,90 +611,233 @@ fn hot_path_violation(code: &[&Token], k: usize) -> Option<String> {
     None
 }
 
-fn rule_hot_path(
-    file: &str,
-    code: &[&Token],
-    cfg: &Config,
-    diags: &mut Vec<Diagnostic>,
-) {
-    for (suffix, fname) in &cfg.hot_fns {
-        if !file.ends_with(suffix.as_str()) {
-            continue;
-        }
-        for (open, close) in fn_bodies(code, fname) {
-            for k in open + 1..close {
-                if let Some(what) = hot_path_violation(code, k) {
-                    diags.push(Diagnostic {
-                        file: file.to_string(),
-                        line: code[k].line,
-                        rule: "hot-path-alloc",
-                        msg: format!("{what} (hot fn `{fname}`)"),
-                    });
-                }
-            }
-        }
-    }
-}
-
 const PANIC_MACROS: &[&str] = &[
     "panic", "unreachable", "todo", "unimplemented", "assert", "assert_eq", "assert_ne",
 ];
 
-fn no_panic_violation(code: &[&Token], k: usize) -> Option<String> {
-    let t = code[k];
-    match &t.kind {
-        TokenKind::Ident => {
-            let name = t.text.as_str();
-            if (name == "unwrap" || name == "expect")
-                && k > 0
-                && code[k - 1].is_punct('.')
-                && code.get(k + 1).is_some_and(|n| n.is_punct('('))
-            {
-                return Some(format!("bare `.{name}()` can panic"));
-            }
-            if PANIC_MACROS.contains(&name) && code.get(k + 1).is_some_and(|n| n.is_punct('!'))
-            {
-                return Some(format!("`{name}!` panics"));
-            }
-            None
-        }
-        TokenKind::Punct('[') if k > 0 => {
-            let prev = code[k - 1];
-            let indexes = match &prev.kind {
-                TokenKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()),
-                TokenKind::Punct(')') | TokenKind::Punct(']') => true,
-                _ => false,
-            };
-            if indexes {
-                return Some("panicking index expression (use `get`/typed errors)".to_string());
-            }
-            None
-        }
-        _ => None,
+/// Unwrap/expect and panicking macros — the *transitive* half of
+/// SFM004.
+fn panic_call_violation(code: &[Token], k: usize) -> Option<String> {
+    let t = &code[k];
+    if t.kind != TokenKind::Ident {
+        return None;
+    }
+    let name = t.ident_name();
+    if (name == "unwrap" || name == "expect")
+        && k > 0
+        && code[k - 1].is_punct('.')
+        && code.get(k + 1).is_some_and(|n| n.is_punct('('))
+    {
+        return Some(format!("bare `.{name}()` can panic"));
+    }
+    if PANIC_MACROS.contains(&name) && code.get(k + 1).is_some_and(|n| n.is_punct('!')) {
+        return Some(format!("`{name}!` panics"));
+    }
+    None
+}
+
+/// Panicking index expressions — the *direct-body* half of SFM004,
+/// applied only to root and contained bodies (interior parsers index
+/// with proven bounds).
+fn panic_index_violation(code: &[Token], k: usize) -> Option<String> {
+    if !code[k].is_punct('[') || k == 0 {
+        return None;
+    }
+    let prev = &code[k - 1];
+    let indexes = match &prev.kind {
+        TokenKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.ident_name()),
+        TokenKind::Punct(')') | TokenKind::Punct(']') => true,
+        _ => false,
+    };
+    if indexes {
+        Some("panicking index expression (use `get`/typed errors)".to_string())
+    } else {
+        None
     }
 }
 
-fn rule_no_panic(
-    file: &str,
-    code: &[&Token],
-    cfg: &Config,
-    diags: &mut Vec<Diagnostic>,
-) {
-    for (suffix, fname) in &cfg.no_panic_fns {
-        if !file.ends_with(suffix.as_str()) {
+/// Boundary tokens for SFM006: cancellation polls, trace emission,
+/// checkpoint stores. `sink.store(…)` is matched through its receiver
+/// name so plain atomic `.store(…)` calls stay out of scope.
+fn boundary_token_violation(code: &[Token], k: usize) -> Option<String> {
+    let t = &code[k];
+    if t.kind != TokenKind::Ident {
+        return None;
+    }
+    let name = t.ident_name();
+    if k > 0 && code[k - 1].is_punct('.') && code.get(k + 1).is_some_and(|n| n.is_punct('(')) {
+        if name == "check" && code.get(k + 2).is_some_and(|n| n.is_punct(')')) {
+            return Some("cancellation poll `.check()`".to_string());
+        }
+        if name == "record" {
+            return Some("trace emission `.record(…)`".to_string());
+        }
+    }
+    if name == "sink"
+        && code.get(k + 1).is_some_and(|n| n.is_punct('.'))
+        && code.get(k + 2).is_some_and(|n| n.is_ident("store"))
+        && code.get(k + 3).is_some_and(|n| n.is_punct('('))
+    {
+        return Some("checkpoint store `sink.store(…)`".to_string());
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// Graph passes
+// ---------------------------------------------------------------------
+
+fn match_roots(graph: &CallGraph, specs: &[(String, String)]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (pat, name) in specs {
+        for idx in graph.find(pat, name) {
+            if !out.contains(&idx) {
+                out.push(idx);
+            }
+        }
+    }
+    out
+}
+
+/// Hot-closure reachability (all edges; `catch_unwind` contains panics,
+/// not allocations). Shared by SFM003, SFM006, and `sfm_lint --explain`.
+pub fn hot_reach(graph: &CallGraph, cfg: &Config) -> Reach {
+    graph.reach(&match_roots(graph, &cfg.hot_roots), false)
+}
+
+/// Run `check` over every body token of fn `idx` (nested fn items
+/// skipped — they are scanned as their own items).
+fn body_violations(
+    graph: &CallGraph,
+    idx: usize,
+    check: fn(&[Token], usize) -> Option<String>,
+) -> Vec<(u32, String)> {
+    let item = &graph.fns[idx];
+    let code = graph.file_code(&item.file);
+    let (lo, hi) = item.body;
+    let mut out = Vec::new();
+    let mut k = lo + 1;
+    while k < hi {
+        if item.nested.iter().any(|&(a, b)| a <= k && k <= b) {
+            k += 1;
             continue;
         }
-        for (open, close) in fn_bodies(code, fname) {
-            for k in open + 1..close {
-                if let Some(what) = no_panic_violation(code, k) {
-                    diags.push(Diagnostic {
-                        file: file.to_string(),
-                        line: code[k].line,
-                        rule: "no-panic-paths",
-                        msg: format!("{what} (job path `{fname}`)"),
-                    });
-                }
+        if let Some(what) = check(code, k) {
+            out.push((code[k].line, what));
+        }
+        k += 1;
+    }
+    out
+}
+
+fn rule_hot_transitive(graph: &CallGraph, hot: &Reach, diags: &mut Vec<Diagnostic>) {
+    for &idx in &hot.order {
+        let item = &graph.fns[idx];
+        if item.is_test {
+            continue;
+        }
+        for (line, what) in body_violations(graph, idx, hot_path_violation) {
+            let mut d = Diagnostic::new(
+                &item.file,
+                line,
+                "hot-path-alloc",
+                format!("{what} (in `{}`, reachable from the hot root set)", item.name),
+            );
+            d.chain = graph.chain(hot, idx);
+            diags.push(d);
+        }
+    }
+}
+
+fn rule_no_panic_transitive(graph: &CallGraph, cfg: &Config, diags: &mut Vec<Diagnostic>) {
+    let roots = match_roots(graph, &cfg.no_panic_roots);
+    let reach = graph.reach(&roots, true);
+    for &idx in &reach.order {
+        let item = &graph.fns[idx];
+        if item.is_test {
+            continue;
+        }
+        for (line, what) in body_violations(graph, idx, panic_call_violation) {
+            let mut d = Diagnostic::new(
+                &item.file,
+                line,
+                "no-panic-paths",
+                format!("{what} (in `{}`, on a no-panic path)", item.name),
+            );
+            d.chain = graph.chain(&reach, idx);
+            diags.push(d);
+        }
+    }
+    // The index ban is a direct-body check on the roots themselves.
+    for &idx in &roots {
+        let item = &graph.fns[idx];
+        for (line, what) in body_violations(graph, idx, panic_index_violation) {
+            let mut d = Diagnostic::new(
+                &item.file,
+                line,
+                "no-panic-paths",
+                format!("{what} (in job root `{}`)", item.name),
+            );
+            d.chain = graph.chain(&reach, idx);
+            diags.push(d);
+        }
+    }
+    // Contained fns: a panic there is caught by the caller's
+    // `catch_unwind`, but the body must still be deliberate — full
+    // direct check, no propagation through its callees.
+    for &idx in &match_roots(graph, &cfg.contained_fns) {
+        let item = &graph.fns[idx];
+        let mut found = body_violations(graph, idx, panic_call_violation);
+        found.extend(body_violations(graph, idx, panic_index_violation));
+        for (line, what) in found {
+            let mut d = Diagnostic::new(
+                &item.file,
+                line,
+                "no-panic-paths",
+                format!("{what} (in panic-contained fn `{}`)", item.name),
+            );
+            d.chain =
+                vec![format!("{}::{} (panic-contained @{})", item.file, item.name, item.line)];
+            diags.push(d);
+        }
+    }
+}
+
+fn rule_boundary(graph: &CallGraph, cfg: &Config, hot: &Reach, diags: &mut Vec<Diagnostic>) {
+    for (idx, item) in graph.fns.iter().enumerate() {
+        if item.is_test || cfg.boundary_def_files.iter().any(|d| item.file.ends_with(d)) {
+            continue;
+        }
+        let toks = body_violations(graph, idx, boundary_token_violation);
+        if toks.is_empty() {
+            continue;
+        }
+        let designated = cfg
+            .boundary_fns
+            .iter()
+            .any(|(p, n)| item.file.ends_with(p.as_str()) && item.name == *n);
+        if !designated {
+            for (line, what) in &toks {
+                diags.push(Diagnostic::new(
+                    &item.file,
+                    *line,
+                    "boundary-coupling",
+                    format!("{what} outside a designated boundary fn (in `{}`)", item.name),
+                ));
             }
+        }
+        if hot.seen[idx] {
+            let mut d = Diagnostic::new(
+                &item.file,
+                item.line,
+                "boundary-coupling",
+                format!(
+                    "`{}` consults boundary tokens and is reachable from the hot root set",
+                    item.name
+                ),
+            );
+            d.chain = graph.chain(hot, idx);
+            diags.push(d);
         }
     }
 }
@@ -637,56 +846,99 @@ fn rule_no_panic(
 // Entry points
 // ---------------------------------------------------------------------
 
-/// Lint one source file. `file_label` is used for both path-scoped rule
-/// matching (normalized to `/` separators) and diagnostics.
-pub fn lint_source(file_label: &str, src: &str, cfg: &Config) -> Vec<Diagnostic> {
-    let file = file_label.replace('\\', "/");
-    let tokens = lex(src);
-    let lines = classify_lines(&tokens);
-    let code: Vec<&Token> = tokens.iter().filter(|t| !t.is_comment()).collect();
-
+/// Lint a whole crate given `label → source` pairs: per-file rules on
+/// each file, graph rules on the crate-wide call graph, then waiver
+/// application and stale-waiver detection.
+pub fn lint_crate(files: &BTreeMap<String, String>, cfg: &Config) -> Vec<Diagnostic> {
     let mut diags = Vec::new();
-    let waivers = collect_waivers(&file, &lines, &mut diags);
-    rule_safety_comment(&file, &code, &lines, &mut diags);
-    rule_lock_poison_scoped(&file, &code, cfg, &mut diags);
-    rule_hot_path(&file, &code, cfg, &mut diags);
-    rule_no_panic(&file, &code, cfg, &mut diags);
+    let mut waivers: Vec<(String, Waiver)> = Vec::new();
+    for (label, src) in files {
+        let tokens = lex(src);
+        let lines = classify_lines(&tokens);
+        let code: Vec<Token> = tokens.iter().filter(|t| !t.is_comment()).cloned().collect();
+        for w in collect_waivers(label, &lines, &mut diags) {
+            waivers.push((label.clone(), w));
+        }
+        rule_safety_comment(label, &code, &lines, &mut diags);
+        if cfg.lock_paths.iter().any(|p| label.contains(p.as_str())) {
+            rule_lock_poison(label, &code, &mut diags);
+        }
+    }
 
+    let graph = CallGraph::build(files);
+    let hot = hot_reach(&graph, cfg);
+    rule_hot_transitive(&graph, &hot, &mut diags);
+    rule_no_panic_transitive(&graph, cfg, &mut diags);
+    rule_boundary(&graph, cfg, &hot, &mut diags);
+
+    let mut used = vec![false; waivers.len()];
     diags.retain(|d| {
-        d.rule == "waiver-syntax"
-            || !waivers
-                .iter()
-                .any(|w| w.rules.contains(&d.rule) && w.covers.contains(&(d.line as usize)))
+        if d.rule == "waiver-syntax" {
+            return true;
+        }
+        let mut waived = false;
+        for (wi, (wfile, w)) in waivers.iter().enumerate() {
+            if wfile == &d.file
+                && w.rules.contains(&d.rule)
+                && w.covers.contains(&(d.line as usize))
+            {
+                used[wi] = true;
+                waived = true;
+            }
+        }
+        !waived
     });
-    diags.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    for (wi, (wfile, w)) in waivers.iter().enumerate() {
+        if !used[wi] {
+            diags.push(Diagnostic::new(
+                wfile,
+                w.line as u32,
+                "stale-waiver",
+                format!(
+                    "waiver for [{}] suppresses no findings — remove it",
+                    w.rules.join(", ")
+                ),
+            ));
+        }
+    }
+
+    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    diags.dedup_by(|a, b| {
+        a.file == b.file && a.line == b.line && a.rule == b.rule && a.msg == b.msg
+    });
     diags
 }
 
-fn rule_lock_poison_scoped(
-    file: &str,
-    code: &[&Token],
-    cfg: &Config,
-    diags: &mut Vec<Diagnostic>,
-) {
-    if cfg.lock_paths.iter().any(|p| file.contains(p.as_str())) {
-        rule_lock_poison(file, code, diags);
-    }
+/// Lint one source file (a single-file crate as far as the graph rules
+/// are concerned). `file_label` is used for both path-scoped rule
+/// matching (normalized to `/` separators) and diagnostics.
+pub fn lint_source(file_label: &str, src: &str, cfg: &Config) -> Vec<Diagnostic> {
+    let file = file_label.replace('\\', "/");
+    let mut files = BTreeMap::new();
+    files.insert(file, src.to_string());
+    lint_crate(&files, cfg)
 }
 
-/// Recursively lint every `*.rs` file under `root`, skipping `target`,
-/// `vendor`, and VCS directories. Diagnostics come back sorted by
-/// `(file, line, rule)`.
-pub fn lint_tree(root: &Path, cfg: &Config) -> std::io::Result<(usize, Vec<Diagnostic>)> {
+/// Read every `*.rs` file under each root into a `label → source` map
+/// (labels `/`-normalized; `target`, `vendor`, and VCS dirs skipped).
+pub fn collect_sources(roots: &[PathBuf]) -> std::io::Result<BTreeMap<String, String>> {
     let mut files = Vec::new();
-    collect_rs_files(root, &mut files)?;
-    files.sort();
-    let mut diags = Vec::new();
-    for f in &files {
-        let src = std::fs::read_to_string(f)?;
-        let label = f.to_string_lossy().replace('\\', "/");
-        diags.extend(lint_source(&label, &src, cfg));
+    for root in roots {
+        collect_rs_files(root, &mut files)?;
     }
-    diags.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    let mut map = BTreeMap::new();
+    for f in files {
+        let src = std::fs::read_to_string(&f)?;
+        map.insert(f.to_string_lossy().replace('\\', "/"), src);
+    }
+    Ok(map)
+}
+
+/// Recursively lint every `*.rs` file under `root` as one crate.
+/// Diagnostics come back sorted by `(file, line, rule)`.
+pub fn lint_tree(root: &Path, cfg: &Config) -> std::io::Result<(usize, Vec<Diagnostic>)> {
+    let files = collect_sources(std::slice::from_ref(&root.to_path_buf()))?;
+    let diags = lint_crate(&files, cfg);
     Ok((files.len(), diags))
 }
 
@@ -713,7 +965,7 @@ mod tests {
     use super::*;
 
     fn cfg_hot(file: &str, f: &str) -> Config {
-        Config { hot_fns: vec![(file.to_string(), f.to_string())], ..Config::default() }
+        Config { hot_roots: vec![(file.to_string(), f.to_string())], ..Config::default() }
     }
 
     fn rules_of(diags: &[Diagnostic]) -> Vec<&'static str> {
@@ -726,6 +978,7 @@ mod tests {
         let d = lint_source("src/a.rs", src, &Config::default());
         assert_eq!(rules_of(&d), vec!["safety-comment"]);
         assert_eq!(d[0].line, 2);
+        assert_eq!(d[0].code, "SFM001");
     }
 
     #[test]
@@ -761,6 +1014,7 @@ mod tests {
         let d = lint_source("src/runtime/x.rs", src, &Config::default_for_repo());
         assert_eq!(rules_of(&d), vec!["lock-poison"]);
         assert_eq!(d[0].line, 2);
+        assert_eq!(d[0].code, "SFM002");
         // Same source outside the scoped dirs: clean.
         assert!(lint_source("tests/x.rs", src, &Config::default_for_repo()).is_empty());
     }
@@ -784,19 +1038,28 @@ mod tests {
         );
         assert_eq!(d[0].line, 2);
         assert_eq!(d[1].line, 3);
+        assert_eq!(d[0].code, "SFM003");
+        // The root itself carries a one-hop chain.
+        assert_eq!(d[0].chain.len(), 1);
+        assert!(d[0].chain[0].contains("::hot (root @1)"), "{:?}", d[0].chain);
     }
 
     #[test]
-    fn hot_path_flags_observability_calls() {
-        // Any obs token in a hot body trips the rule: sink construction,
-        // `.record()`, and `.observe()` — tracing is boundary-sampled.
-        let src = "fn hot(xs: &[f64], sink: &TraceSink, h: &Histogram) -> f64 {\n    let s = TraceSink::clone(sink);\n    sink.record(&ev);\n    h.observe(0.1);\n    0.0\n}\n";
-        let d = lint_source("src/x.rs", src, &cfg_hot("src/x.rs", "hot"));
-        assert_eq!(rules_of(&d), vec!["hot-path-alloc", "hot-path-alloc", "hot-path-alloc"]);
-        assert!(d[1].msg.contains("observability"), "{}", d[1].msg);
-        // The same calls outside a hot body stay clean.
-        let cold = "fn cold(sink: &TraceSink) { sink.record(&ev); }\n";
-        assert!(lint_source("src/x.rs", cold, &cfg_hot("src/x.rs", "hot")).is_empty());
+    fn hot_path_propagates_through_call_chain() {
+        // The root is clean; the allocation sits two hops away. PR 7
+        // would have needed `helper` and `leaf` on the allowlist — the
+        // graph derives them.
+        let src = "fn hot() {\n    helper();\n}\nfn helper() {\n    leaf();\n}\n\
+                   fn leaf() {\n    let v = Vec::new();\n}\n";
+        let d = lint_source("src/k.rs", src, &cfg_hot("src/k.rs", "hot"));
+        assert_eq!(rules_of(&d), vec!["hot-path-alloc"]);
+        assert_eq!(d[0].line, 8);
+        assert!(d[0].msg.contains("`leaf`"), "{}", d[0].msg);
+        let chain = &d[0].chain;
+        assert_eq!(chain.len(), 3, "{chain:?}");
+        assert!(chain[0].contains("::hot (root @1)"), "{chain:?}");
+        assert!(chain[1].contains("::helper (called at src/k.rs:2)"), "{chain:?}");
+        assert!(chain[2].contains("::leaf (called at src/k.rs:5)"), "{chain:?}");
     }
 
     #[test]
@@ -814,7 +1077,7 @@ mod tests {
     #[test]
     fn no_panic_flags_unwrap_expect_macros_and_indexing() {
         let cfg = Config {
-            no_panic_fns: vec![("src/coordinator/serve.rs".into(), "run_job".into())],
+            no_panic_roots: vec![("src/coordinator/serve.rs".into(), "run_job".into())],
             ..Config::default()
         };
         let src = "fn run_job(xs: &[u8]) {\n    let a = xs.first().unwrap();\n    let b = xs.iter().next().expect(\"x\");\n    let c = xs[0];\n    panic!(\"no\");\n}\n";
@@ -822,16 +1085,100 @@ mod tests {
         assert_eq!(rules_of(&d).len(), 4);
         assert_eq!(d[0].line, 2);
         assert_eq!(d[2].line, 4);
+        assert_eq!(d[0].code, "SFM004");
     }
 
     #[test]
     fn no_panic_allows_typed_fallbacks() {
         let cfg = Config {
-            no_panic_fns: vec![("serve.rs".into(), "run_job".into())],
+            no_panic_roots: vec![("serve.rs".into(), "run_job".into())],
             ..Config::default()
         };
         let src = "fn run_job(xs: &[u8]) {\n    let a = xs.first().unwrap_or(&0);\n    let b = xs.get(0).unwrap_or_else(|| &0);\n    for x in [1, 2] { let _ = x; }\n    let v = vec![0u8; 3];\n    let _ = (a, b, v);\n}\n";
         assert!(lint_source("src/coordinator/serve.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn no_panic_propagates_but_index_stays_at_roots() {
+        // `helper` is two files of chain away in spirit: its unwrap is
+        // flagged transitively, its indexing is not (interior fns index
+        // with proven bounds); the root's own indexing *is* flagged.
+        let cfg = Config {
+            no_panic_roots: vec![("src/s.rs".into(), "root".into())],
+            ..Config::default()
+        };
+        let src = "fn root(xs: &[u8]) {\n    let a = xs[0];\n    helper();\n}\n\
+                   fn helper() {\n    let v: Option<u8> = None;\n    v.unwrap();\n    \
+                   let ys = [1u8];\n    let b = ys[0];\n}\n";
+        let d = lint_source("src/s.rs", src, &cfg);
+        assert_eq!(rules_of(&d), vec!["no-panic-paths", "no-panic-paths"]);
+        assert_eq!(d[0].line, 2, "root index flagged");
+        assert_eq!(d[1].line, 7, "helper unwrap flagged, helper index not");
+        assert_eq!(d[1].chain.len(), 2, "{:?}", d[1].chain);
+        assert!(d[1].chain[1].contains("::helper (called at src/s.rs:3)"), "{:?}", d[1].chain);
+    }
+
+    #[test]
+    fn catch_unwind_stops_propagation_and_contained_fns_check_directly() {
+        let cfg = Config {
+            no_panic_roots: vec![("src/s.rs".into(), "serve_one".into())],
+            contained_fns: vec![("src/s.rs".into(), "run_job".into())],
+            ..Config::default()
+        };
+        // `deep` is only reachable through the contained edge: clean.
+        // `run_job`'s own body is still checked directly.
+        let src = "fn serve_one() {\n    let r = catch_unwind(AssertUnwindSafe(|| run_job()));\n}\n\
+                   fn run_job() {\n    deep();\n    unreachable!(\"boom\");\n}\n\
+                   fn deep() {\n    let v: Option<u8> = None;\n    v.unwrap();\n}\n";
+        let d = lint_source("src/s.rs", src, &cfg);
+        assert_eq!(rules_of(&d), vec!["no-panic-paths"]);
+        assert_eq!(d[0].line, 6);
+        assert!(d[0].msg.contains("panic-contained fn `run_job`"), "{}", d[0].msg);
+        assert!(d[0].chain[0].contains("panic-contained"), "{:?}", d[0].chain);
+    }
+
+    #[test]
+    fn boundary_tokens_flagged_outside_designated_fns() {
+        let cfg = Config {
+            boundary_fns: vec![("src/engine.rs".into(), "run".into())],
+            ..Config::default()
+        };
+        let src = "fn run(sink: &TraceSink, c: &CancelToken, conf: &Ck) {\n    \
+                   if let Some(r) = c.check() { return; }\n    sink.record(&ev);\n    \
+                   conf.sink.store(ck);\n}\n\
+                   fn rogue(sink: &TraceSink) {\n    sink.record(&ev);\n}\n";
+        let d = lint_source("src/engine.rs", src, &cfg);
+        assert_eq!(rules_of(&d), vec!["boundary-coupling"]);
+        assert_eq!(d[0].line, 7);
+        assert_eq!(d[0].code, "SFM006");
+        assert!(d[0].msg.contains("`rogue`"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn boundary_fn_reachable_from_hot_roots_is_flagged() {
+        let cfg = Config {
+            hot_roots: vec![("src/engine.rs".into(), "kernel".into())],
+            boundary_fns: vec![("src/engine.rs".into(), "round".into())],
+            ..Config::default()
+        };
+        let src = "fn kernel() {\n    round();\n}\n\
+                   fn round(sink: &TraceSink) {\n    sink.record(&ev);\n}\n";
+        let d = lint_source("src/engine.rs", src, &cfg);
+        // `.record(` in a hot-reachable body also trips SFM003; the
+        // designated-but-hot conflict is the SFM006 finding.
+        let boundary: Vec<_> = d.iter().filter(|x| x.rule == "boundary-coupling").collect();
+        assert_eq!(boundary.len(), 1, "{d:?}");
+        assert!(boundary[0].msg.contains("reachable from the hot root set"));
+        assert_eq!(boundary[0].chain.len(), 2, "{:?}", boundary[0].chain);
+        assert!(d.iter().any(|x| x.rule == "hot-path-alloc"));
+    }
+
+    #[test]
+    fn boundary_definition_files_are_exempt() {
+        let src = "impl CancelToken {\n    pub fn poll(&self) -> bool {\n        \
+                   self.inner.check().is_some()\n    }\n}\n";
+        let d = lint_source("src/runtime/cancel.rs", src, &Config::default_for_repo());
+        assert!(d.is_empty(), "{d:?}");
     }
 
     #[test]
@@ -841,10 +1188,14 @@ mod tests {
     }
 
     #[test]
-    fn waiver_only_covers_named_rules() {
+    fn waiver_covering_nothing_is_stale() {
         let src = "fn f() {\n    // lint: allow(lock-poison) - wrong rule.\n    let x = unsafe { g() };\n}\n";
         let d = lint_source("src/a.rs", src, &Config::default());
-        assert_eq!(rules_of(&d), vec!["safety-comment"]);
+        assert_eq!(rules_of(&d), vec!["stale-waiver", "safety-comment"]);
+        assert_eq!(d[0].line, 2);
+        assert_eq!(d[0].code, "SFM007");
+        assert!(d[0].msg.contains("lock-poison"), "{}", d[0].msg);
+        assert_eq!(d[1].line, 3);
     }
 
     #[test]
@@ -859,6 +1210,7 @@ mod tests {
             let d = lint_source("src/a.rs", &src, &Config::default());
             assert_eq!(rules_of(&d), vec!["waiver-syntax"], "case: {bad}");
             assert_eq!(d[0].line, 2);
+            assert_eq!(d[0].code, "SFM005");
         }
     }
 
@@ -874,7 +1226,7 @@ mod tests {
     }
 
     #[test]
-    fn fn_bodies_skip_trait_declarations() {
+    fn trait_declarations_have_no_bodies_to_scan() {
         let src = "trait T {\n    fn hot(&self);\n}\nimpl T for S {\n    fn hot(&self) { let v = Vec::new(); let _ = v; }\n}\n";
         let d = lint_source("src/x.rs", src, &cfg_hot("src/x.rs", "hot"));
         assert_eq!(rules_of(&d), vec!["hot-path-alloc"]);
@@ -882,13 +1234,33 @@ mod tests {
     }
 
     #[test]
-    fn default_repo_config_names_known_rules_only() {
+    fn display_renders_code_rule_and_chain() {
+        let src = "fn hot() {\n    helper();\n}\nfn helper() {\n    let v = Vec::new();\n}\n";
+        let d = lint_source("src/k.rs", src, &cfg_hot("src/k.rs", "hot"));
+        assert_eq!(d.len(), 1);
+        let text = d[0].to_string();
+        assert!(text.starts_with("src/k.rs:5: [SFM003 hot-path-alloc]"), "{text}");
+        assert!(text.contains("chain: src/k.rs::hot (root @1)"), "{text}");
+        assert!(text.contains("-> src/k.rs::helper (called at src/k.rs:2)"), "{text}");
+    }
+
+    #[test]
+    fn default_repo_config_is_well_formed() {
         let cfg = Config::default_for_repo();
-        assert!(!cfg.hot_fns.is_empty());
+        assert!(!cfg.hot_roots.is_empty());
         assert!(!cfg.lock_paths.is_empty());
-        assert!(!cfg.no_panic_fns.is_empty());
-        for (name, _) in RULES {
+        assert!(!cfg.no_panic_roots.is_empty());
+        assert!(!cfg.contained_fns.is_empty());
+        assert!(!cfg.boundary_fns.is_empty());
+        assert!(!cfg.boundary_def_files.is_empty());
+        for (code, name, _) in RULES {
             assert!(known_rule(name).is_some());
+            assert!(code.starts_with("SFM"), "{code}");
         }
+        // Codes are unique.
+        let mut codes: Vec<&str> = RULES.iter().map(|&(c, _, _)| c).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), RULES.len());
     }
 }

@@ -3,28 +3,47 @@
 //! Usage:
 //!
 //! ```text
-//! sfm_lint [--root <dir>]... [--hot <file-suffix>::<fn>]... [--list-rules]
+//! sfm_lint [--root <dir>]... [--hot] [--json]
+//!          [--explain <file-suffix>::<fn>] [--list-rules]
 //! ```
 //!
 //! With no `--root`, lints the crate's own `src/`, `tests/`, and
 //! `benches/` directories (located via `CARGO_MANIFEST_DIR` when run
-//! through `cargo run --bin sfm_lint`, else the current directory).
+//! through `cargo run --bin sfm_lint`, else the current directory) as
+//! one crate — the transitive rules need the whole call graph, so all
+//! roots are analyzed together.
+//!
+//! * `--hot` prints the *computed* transitive hot set (every function
+//!   reachable from the hot root set), one `file::fn` per line.
+//! * `--explain src/foo.rs::bar` prints the shortest call chain that
+//!   makes `bar` hot, or says it is not hot-reachable.
+//! * `--json` emits the findings as a JSON array on stdout (one object
+//!   per finding: `file`, `line`, `rule`, `code`, `msg`, `chain`);
+//!   CI uploads this as the `lint-report` artifact.
 //!
 //! Exit codes: `0` clean, `1` violations found, `2` usage or I/O error.
 
-use sfm_screen::analysis::{lint_tree, Config, RULES};
+use sfm_screen::analysis::callgraph::CallGraph;
+use sfm_screen::analysis::{collect_sources, hot_reach, lint_crate, Config, RULES};
+use sfm_screen::coordinator::json::Json;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+const USAGE: &str = "sfm_lint [--root <dir>]... [--hot] [--json] \
+                     [--explain <file-suffix>::<fn>] [--list-rules]";
+
 fn main() -> ExitCode {
     let mut roots: Vec<PathBuf> = Vec::new();
-    let mut cfg = Config::default_for_repo();
+    let cfg = Config::default_for_repo();
+    let mut json_out = false;
+    let mut print_hot = false;
+    let mut explain: Option<(String, String)> = None;
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
         match arg.as_str() {
             "--list-rules" => {
-                for (name, summary) in RULES {
-                    println!("{name:16} {summary}");
+                for (code, name, summary) in RULES {
+                    println!("{code}  {name:18} {summary}");
                 }
                 return ExitCode::SUCCESS;
             }
@@ -32,15 +51,17 @@ fn main() -> ExitCode {
                 Some(dir) => roots.push(PathBuf::from(dir)),
                 None => return usage("--root needs a directory"),
             },
-            "--hot" => {
+            "--json" => json_out = true,
+            "--hot" => print_hot = true,
+            "--explain" => {
                 let spec = args.next();
-                match spec.as_deref().and_then(|s| s.split_once("::")) {
-                    Some((f, n)) => cfg.hot_fns.push((f.to_string(), n.to_string())),
-                    None => return usage("--hot needs <file-suffix>::<fn>"),
+                match spec.as_deref().and_then(|s| s.rsplit_once("::")) {
+                    Some((f, n)) => explain = Some((f.to_string(), n.to_string())),
+                    None => return usage("--explain needs <file-suffix>::<fn>"),
                 }
             }
             "--help" | "-h" => {
-                println!("sfm_lint [--root <dir>]... [--hot <file-suffix>::<fn>]... [--list-rules]");
+                println!("{USAGE}");
                 return ExitCode::SUCCESS;
             }
             other => return usage(&format!("unknown argument `{other}`")),
@@ -58,34 +79,92 @@ fn main() -> ExitCode {
         }
     }
 
-    let mut total_files = 0usize;
-    let mut diags = Vec::new();
-    for root in &roots {
-        match lint_tree(root, &cfg) {
-            Ok((n, d)) => {
-                total_files += n;
-                diags.extend(d);
-            }
-            Err(e) => {
-                eprintln!("sfm_lint: error reading {}: {e}", root.display());
-                return ExitCode::from(2);
+    let files = match collect_sources(&roots) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("sfm_lint: error reading sources: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if print_hot {
+        let graph = CallGraph::build(&files);
+        let reach = hot_reach(&graph, &cfg);
+        let mut hot: Vec<String> = reach
+            .order
+            .iter()
+            .map(|&i| &graph.fns[i])
+            .filter(|f| !f.is_test)
+            .map(|f| format!("{}::{}", f.file, f.name))
+            .collect();
+        hot.sort();
+        hot.dedup();
+        for line in &hot {
+            println!("{line}");
+        }
+        println!("sfm_lint: {} fns in the transitive hot set", hot.len());
+        return ExitCode::SUCCESS;
+    }
+
+    if let Some((pat, name)) = explain {
+        let graph = CallGraph::build(&files);
+        let reach = hot_reach(&graph, &cfg);
+        let matches = graph.find(&pat, &name);
+        if matches.is_empty() {
+            eprintln!("sfm_lint: no fn matching `{pat}::{name}`");
+            return ExitCode::from(2);
+        }
+        for idx in matches {
+            let f = &graph.fns[idx];
+            if reach.seen[idx] {
+                println!("{}::{} is hot — shortest chain:", f.file, f.name);
+                for hop in graph.chain(&reach, idx) {
+                    println!("    {hop}");
+                }
+            } else {
+                println!("{}::{} is not reachable from the hot root set", f.file, f.name);
             }
         }
+        return ExitCode::SUCCESS;
     }
-    for d in &diags {
-        println!("{d}");
+
+    let diags = lint_crate(&files, &cfg);
+    if json_out {
+        let arr: Vec<Json> = diags
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::Str(d.file.clone())),
+                    ("line", Json::Num(d.line as f64)),
+                    ("rule", Json::Str(d.rule.to_string())),
+                    ("code", Json::Str(d.code.to_string())),
+                    ("msg", Json::Str(d.msg.clone())),
+                    (
+                        "chain",
+                        Json::Arr(d.chain.iter().map(|h| Json::Str(h.clone())).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        println!("{}", Json::Arr(arr).to_string());
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
     }
     if diags.is_empty() {
-        println!("sfm_lint: {total_files} files clean ({} rules)", RULES.len());
+        if !json_out {
+            println!("sfm_lint: {} files clean ({} rules)", files.len(), RULES.len());
+        }
         ExitCode::SUCCESS
     } else {
-        eprintln!("sfm_lint: {} violation(s) in {total_files} files", diags.len());
+        eprintln!("sfm_lint: {} violation(s) in {} files", diags.len(), files.len());
         ExitCode::FAILURE
     }
 }
 
 fn usage(msg: &str) -> ExitCode {
     eprintln!("sfm_lint: {msg}");
-    eprintln!("usage: sfm_lint [--root <dir>]... [--hot <file-suffix>::<fn>]... [--list-rules]");
+    eprintln!("usage: {USAGE}");
     ExitCode::from(2)
 }

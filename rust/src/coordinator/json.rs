@@ -282,10 +282,11 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                                 }
                                 let scalar =
                                     0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
-                                out.push(
-                                    char::from_u32(scalar)
-                                        .expect("combined surrogates are a valid scalar"),
-                                );
+                                out.push(char::from_u32(scalar).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "bad surrogate pair at byte {esc_at}"
+                                    )
+                                })?);
                                 *pos += 10;
                             }
                             0xDC00..=0xDFFF => bail!(
@@ -294,10 +295,11 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                                  surrogate"
                             ),
                             c => {
-                                out.push(
-                                    char::from_u32(c)
-                                        .expect("non-surrogate BMP code is a scalar"),
-                                );
+                                out.push(char::from_u32(c).ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "bad \\u escape \\u{c:04X} at byte {esc_at}"
+                                    )
+                                })?);
                                 *pos += 4;
                             }
                         }
@@ -331,8 +333,10 @@ fn parse_hex4(b: &[u8], at: usize) -> Result<u32> {
     if !hex.iter().all(u8::is_ascii_hexdigit) {
         bail!("bad \\u escape at byte {at} (four hex digits required)");
     }
-    let s = std::str::from_utf8(hex).expect("hex digits are ascii");
-    Ok(u32::from_str_radix(s, 16).expect("validated hex digits"))
+    let s = std::str::from_utf8(hex)
+        .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {at} (non-ascii)"))?;
+    u32::from_str_radix(s, 16)
+        .map_err(|_| anyhow::anyhow!("bad \\u escape at byte {at} (not hex)"))
 }
 
 /// Parse a number following the exact JSON grammar
@@ -353,7 +357,8 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
     if scan == start {
         bail!("expected a value at byte {start}");
     }
-    let token = std::str::from_utf8(&b[start..scan]).expect("ascii number run");
+    let token = std::str::from_utf8(&b[start..scan])
+        .map_err(|_| anyhow::anyhow!("bad number at byte {start} (non-ascii)"))?;
     let mut i = start;
     if b.get(i) == Some(&b'-') {
         i += 1;
@@ -399,7 +404,8 @@ fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
     if i < scan {
         bail!("bad number `{token}` at byte {start} (not a JSON number)");
     }
-    let text = std::str::from_utf8(&b[start..i]).expect("ascii number");
+    let text = std::str::from_utf8(&b[start..i])
+        .map_err(|_| anyhow::anyhow!("bad number at byte {start} (non-ascii)"))?;
     let x: f64 = text
         .parse()
         .map_err(|_| anyhow::anyhow!("bad number `{text}` at byte {start}"))?;

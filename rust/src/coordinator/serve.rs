@@ -357,7 +357,9 @@ impl ServeHandle {
             Some(other) => {
                 return fail(format!("op: expected a string, got {}", kind_name(other)));
             }
-            None => unreachable!("handle_op is only called when `op` is present"),
+            // The dispatcher only routes here when `op` is present; if
+            // that ever changes, reject instead of panicking.
+            None => return fail("op: missing".to_string()),
         }
         let text = match v.get("format") {
             None => false,
@@ -503,9 +505,13 @@ fn write_line(sink: &Sink, env: &Json) {
     }
 }
 
-/// Per-worker greedy-oracle pool (`None` when the oracle is sequential).
+/// Per-worker greedy-oracle pool (`None` when the oracle is sequential,
+/// or when the pool threads cannot be spawned — jobs then run with
+/// in-thread oracle evaluation instead of taking the worker down).
 fn make_pool(oracle_threads: usize) -> Option<Arc<WorkerPool>> {
-    (oracle_threads > 1).then(|| Arc::new(WorkerPool::new(oracle_threads - 1)))
+    (oracle_threads > 1)
+        .then(|| WorkerPool::try_new(oracle_threads - 1).ok().map(Arc::new))
+        .flatten()
 }
 
 fn worker_loop(shared: &Arc<Shared>) {

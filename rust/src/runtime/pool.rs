@@ -106,6 +106,22 @@ impl WorkerPool {
     /// Spawn `workers ≥ 1` parked threads.
     pub fn new(workers: usize) -> Self {
         assert!(workers >= 1, "a pool needs at least one worker");
+        Self::try_new(workers).expect("spawning pool worker")
+    }
+
+    /// Fallible [`new`](Self::new): `Err` on zero workers or a
+    /// thread-spawn failure instead of panicking, with any
+    /// already-spawned workers shut down and joined first. The serve
+    /// loop builds its oracle pool through this so resource exhaustion
+    /// degrades to sequential evaluation rather than killing the worker
+    /// thread (SERVING.md).
+    pub fn try_new(workers: usize) -> std::io::Result<Self> {
+        if workers < 1 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "a pool needs at least one worker",
+            ));
+        }
         let shared = Arc::new(Shared {
             ctrl: Mutex::new(Ctrl {
                 epoch: 0,
@@ -118,16 +134,30 @@ impl WorkerPool {
             done: Condvar::new(),
             dispatches: AtomicU64::new(0),
         });
-        let handles = (0..workers)
-            .map(|w| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("sfm-pool-{w}"))
-                    .spawn(move || worker_loop(&sh, w))
-                    .expect("spawning pool worker")
-            })
-            .collect();
-        WorkerPool { shared, handles }
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let sh = Arc::clone(&shared);
+            match std::thread::Builder::new()
+                .name(format!("sfm-pool-{w}"))
+                .spawn(move || worker_loop(&sh, w))
+            {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Unwind the partial spawn the way Drop would: wake
+                    // the parked workers so none of them leaks.
+                    {
+                        let mut c = lock_ctrl(&shared.ctrl);
+                        c.shutdown = true;
+                    }
+                    shared.go.notify_all();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(WorkerPool { shared, handles })
     }
 
     /// Number of worker threads.

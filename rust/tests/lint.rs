@@ -2,12 +2,17 @@
 //!
 //! Seeded-violation sources are written to a temp tree whose layout
 //! mimics the crate (`src/runtime/…`, `src/coordinator/serve.rs`, …) so
-//! the path-scoped rules trigger; diagnostics must come back with the
-//! exact file and line. The fixtures live in raw strings here — string
-//! literals are invisible to the lexer-driven rules, so this file stays
-//! lint-clean itself (`repo_sources_are_lint_clean` checks that).
+//! the path-scoped rules and root sets trigger; diagnostics must come
+//! back with the exact file and line, and the transitive rules must
+//! carry the cross-module call chain that produced them. The fixtures
+//! live in raw strings here — string literals are invisible to the
+//! lexer-driven rules, so this file stays lint-clean itself
+//! (`repo_sources_are_lint_clean` checks that).
 
-use sfm_screen::analysis::{lint_tree, Config, Diagnostic};
+use sfm_screen::analysis::callgraph::CallGraph;
+use sfm_screen::analysis::{collect_sources, hot_reach, lint_crate, lint_tree, Config, Diagnostic};
+use sfm_screen::coordinator::json::Json;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 
 const BAD_LOCK: &str = r#"fn f(m: &std::sync::Mutex<u32>) -> u32 {
@@ -20,18 +25,47 @@ const BAD_UNSAFE: &str = r#"fn f(p: *const u32) -> u32 {
 }
 "#;
 
-const BAD_HOT: &str = r#"pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    let scratch: Vec<f64> = Vec::new();
-    let _ = scratch;
+/// Hot root whose own body is clean — the allocation sits two calls and
+/// one module away, in `HOT_HELPERS`.
+const HOT_ROOT: &str = r#"pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    stage(a);
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 "#;
 
-const BAD_SERVE: &str = r#"pub fn run_job(xs: &[u8]) -> u8 {
+const HOT_HELPERS: &str = r#"pub fn stage(a: &[f64]) {
+    scratch(a);
+}
+
+pub fn scratch(a: &[f64]) {
+    let v: Vec<f64> = Vec::new();
+    let _ = (v, a);
+}
+"#;
+
+/// `serve_one` is a no-panic root (its unwrap sits in `WIRE`); `run_job`
+/// is the panic-contained job body, checked directly (index + unwrap).
+const BAD_SERVE: &str = r#"pub fn serve_one(xs: &[u8]) -> u8 {
+    decode(xs)
+}
+
+pub fn run_job(xs: &[u8]) -> u8 {
     let first = xs[0];
     let parsed = std::str::from_utf8(xs).unwrap();
     let _ = parsed.len();
     first
+}
+"#;
+
+const WIRE: &str = r#"pub fn decode(xs: &[u8]) -> u8 {
+    let n = xs.first().unwrap();
+    *n
+}
+"#;
+
+/// A trace emission outside the designated boundary fns.
+const BAD_BOUNDARY: &str = r#"pub fn probe(sink: &TraceSink, ev: &Event) {
+    sink.record(ev);
 }
 "#;
 
@@ -44,6 +78,12 @@ fn g() {
     // lint: allow(lock-poison)
     let x = 1;
     let _ = x;
+}
+
+fn h() {
+    // lint: allow(safety-comment) — nothing unsafe is left here.
+    let y = 2;
+    let _ = y;
 }
 "#;
 
@@ -71,8 +111,11 @@ impl FixtureTree {
         let files: &[(&str, &str)] = &[
             ("src/runtime/bad_lock.rs", BAD_LOCK),
             ("src/runtime/bad_unsafe.rs", BAD_UNSAFE),
-            ("src/linalg/vecops.rs", BAD_HOT),
+            ("src/linalg/vecops.rs", HOT_ROOT),
+            ("src/linalg/helpers.rs", HOT_HELPERS),
             ("src/coordinator/serve.rs", BAD_SERVE),
+            ("src/coordinator/wire.rs", WIRE),
+            ("src/screening/probe.rs", BAD_BOUNDARY),
             ("src/screening/waived.rs", WAIVED),
             ("src/clean.rs", CLEAN),
         ];
@@ -97,29 +140,79 @@ fn has(diags: &[Diagnostic], suffix: &str, line: u32, rule: &str) -> bool {
 }
 
 #[test]
-fn fixture_violations_reported_with_file_and_line() {
+fn fixture_violations_cover_every_rule_with_file_and_line() {
     let tree = FixtureTree::new("engine");
     let (nfiles, diags) =
         lint_tree(&tree.root, &Config::default_for_repo()).expect("lint fixture tree");
-    assert_eq!(nfiles, 6);
+    assert_eq!(nfiles, 9);
 
     assert!(has(&diags, "src/runtime/bad_lock.rs", 2, "lock-poison"), "{diags:?}");
     assert!(has(&diags, "src/runtime/bad_unsafe.rs", 2, "safety-comment"), "{diags:?}");
-    assert!(has(&diags, "src/linalg/vecops.rs", 2, "hot-path-alloc"), "{diags:?}");
-    assert!(has(&diags, "src/coordinator/serve.rs", 2, "no-panic-paths"), "{diags:?}");
-    assert!(has(&diags, "src/coordinator/serve.rs", 3, "no-panic-paths"), "{diags:?}");
-    // The waived violation is suppressed; the reason-less waiver is not.
-    assert!(!diags.iter().any(|d| d.file.ends_with("waived.rs") && d.rule == "lock-poison"));
+    // The transitive hot finding lands on the leaf, two hops from the
+    // root, in a different module.
+    assert!(has(&diags, "src/linalg/helpers.rs", 6, "hot-path-alloc"), "{diags:?}");
+    // `run_job` is panic-contained: both its index and its unwrap are
+    // direct-body findings. `decode` is reached from `serve_one`.
+    assert!(has(&diags, "src/coordinator/serve.rs", 6, "no-panic-paths"), "{diags:?}");
+    assert!(has(&diags, "src/coordinator/serve.rs", 7, "no-panic-paths"), "{diags:?}");
+    assert!(has(&diags, "src/coordinator/wire.rs", 2, "no-panic-paths"), "{diags:?}");
+    assert!(has(&diags, "src/screening/probe.rs", 2, "boundary-coupling"), "{diags:?}");
     assert!(has(&diags, "src/screening/waived.rs", 7, "waiver-syntax"), "{diags:?}");
-    // The clean fixture contributes nothing.
+    assert!(has(&diags, "src/screening/waived.rs", 13, "stale-waiver"), "{diags:?}");
+    assert_eq!(diags.len(), 9, "{diags:?}");
+
+    // The waived lock-poison violation is suppressed; the hot root's
+    // own body and the clean fixture contribute nothing.
+    assert!(!diags.iter().any(|d| d.file.ends_with("waived.rs") && d.rule == "lock-poison"));
+    assert!(!diags.iter().any(|d| d.file.ends_with("vecops.rs")), "{diags:?}");
     assert!(!diags.iter().any(|d| d.file.ends_with("clean.rs")), "{diags:?}");
-    // Every rule fired somewhere in the tree, and the rendered form is
-    // the documented `file:line: [rule] message`.
-    for rule in ["safety-comment", "lock-poison", "hot-path-alloc", "no-panic-paths", "waiver-syntax"]
-    {
-        let d = diags.iter().find(|d| d.rule == rule).expect(rule);
+
+    // Every rule in the registry fired exactly here, and the rendered
+    // form is the documented `file:line: [code rule] message`.
+    let codes: BTreeSet<&str> = diags.iter().map(|d| d.code).collect();
+    assert_eq!(codes.len(), 7, "{codes:?}");
+    for d in &diags {
         let shown = d.to_string();
-        assert!(shown.contains(&format!(":{}: [{}] ", d.line, d.rule)), "{shown}");
+        assert!(shown.contains(&format!(":{}: [{} {}] ", d.line, d.code, d.rule)), "{shown}");
+    }
+}
+
+#[test]
+fn transitive_findings_carry_cross_module_chains() {
+    let tree = FixtureTree::new("chains");
+    let (_, diags) =
+        lint_tree(&tree.root, &Config::default_for_repo()).expect("lint fixture tree");
+
+    // Hot: dot (vecops.rs) -> stage (helpers.rs) -> scratch, which
+    // allocates. PR 7 would have needed `stage` and `scratch` on a
+    // manual allowlist; the graph derives them and names every hop.
+    let hot = diags.iter().find(|d| d.rule == "hot-path-alloc").expect("hot finding");
+    assert!(hot.file.ends_with("src/linalg/helpers.rs"), "{}", hot.file);
+    assert_eq!(hot.line, 6);
+    assert!(hot.msg.contains("`scratch`"), "{}", hot.msg);
+    assert_eq!(hot.chain.len(), 3, "{:?}", hot.chain);
+    assert!(hot.chain[0].contains("vecops.rs::dot (root @1)"), "{:?}", hot.chain);
+    assert!(hot.chain[1].contains("helpers.rs::stage (called at"), "{:?}", hot.chain);
+    assert!(hot.chain[1].contains("vecops.rs:2)"), "{:?}", hot.chain);
+    assert!(hot.chain[2].contains("helpers.rs::scratch (called at"), "{:?}", hot.chain);
+    assert!(hot.chain[2].contains("helpers.rs:2)"), "{:?}", hot.chain);
+
+    // No-panic: serve_one (serve.rs) -> decode (wire.rs), which unwraps.
+    let wire = diags.iter().find(|d| d.file.ends_with("wire.rs")).expect("wire finding");
+    assert_eq!((wire.line, wire.rule), (2, "no-panic-paths"));
+    assert!(wire.msg.contains("on a no-panic path"), "{}", wire.msg);
+    assert_eq!(wire.chain.len(), 2, "{:?}", wire.chain);
+    assert!(wire.chain[0].contains("serve.rs::serve_one (root @1)"), "{:?}", wire.chain);
+    assert!(wire.chain[1].contains("wire.rs::decode (called at"), "{:?}", wire.chain);
+
+    // Contained job body: direct findings, panic-contained chain tag.
+    let contained: Vec<&Diagnostic> =
+        diags.iter().filter(|d| d.file.ends_with("serve.rs")).collect();
+    assert_eq!(contained.len(), 2, "{contained:?}");
+    assert_eq!((contained[0].line, contained[1].line), (6, 7));
+    for d in contained {
+        assert!(d.msg.contains("panic-contained fn `run_job`"), "{}", d.msg);
+        assert!(d.chain[0].contains("panic-contained"), "{:?}", d.chain);
     }
 }
 
@@ -134,8 +227,13 @@ fn lint_binary_flags_fixtures_and_passes_repo() {
         .expect("run sfm_lint on fixtures");
     assert_eq!(bad.status.code(), Some(1), "fixtures must fail the lint");
     let stdout = String::from_utf8_lossy(&bad.stdout);
-    assert!(stdout.contains("bad_lock.rs:2: [lock-poison]"), "{stdout}");
-    assert!(stdout.contains("bad_unsafe.rs:2: [safety-comment]"), "{stdout}");
+    assert!(stdout.contains("bad_lock.rs:2: [SFM002 lock-poison]"), "{stdout}");
+    assert!(stdout.contains("bad_unsafe.rs:2: [SFM001 safety-comment]"), "{stdout}");
+    assert!(stdout.contains("helpers.rs:6: [SFM003 hot-path-alloc]"), "{stdout}");
+    assert!(stdout.contains("wire.rs:2: [SFM004 no-panic-paths]"), "{stdout}");
+    assert!(stdout.contains("probe.rs:2: [SFM006 boundary-coupling]"), "{stdout}");
+    assert!(stdout.contains("waived.rs:13: [SFM007 stale-waiver]"), "{stdout}");
+    assert!(stdout.contains("chain:") && stdout.contains("->"), "{stdout}");
 
     let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
     let mut repo = std::process::Command::new(exe);
@@ -151,17 +249,156 @@ fn lint_binary_flags_fixtures_and_passes_repo() {
 }
 
 #[test]
+fn lint_binary_json_round_trips() {
+    let tree = FixtureTree::new("json");
+    let exe = env!("CARGO_BIN_EXE_sfm_lint");
+    let out = std::process::Command::new(exe)
+        .args(["--root", tree.root.to_str().expect("utf8 tmp path"), "--json"])
+        .output()
+        .expect("run sfm_lint --json");
+    assert_eq!(out.status.code(), Some(1), "fixtures must still fail under --json");
+
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let parsed = Json::parse(stdout.trim()).expect("stdout parses as JSON");
+    let arr = parsed.as_array().expect("top level is an array");
+    let (_, diags) =
+        lint_tree(&tree.root, &Config::default_for_repo()).expect("lint fixture tree");
+    assert_eq!(arr.len(), diags.len());
+    for (j, d) in arr.iter().zip(&diags) {
+        assert_eq!(j.get("file").and_then(Json::as_str), Some(d.file.as_str()));
+        assert_eq!(j.get("line").and_then(Json::as_num), Some(f64::from(d.line)));
+        assert_eq!(j.get("rule").and_then(Json::as_str), Some(d.rule));
+        assert_eq!(j.get("code").and_then(Json::as_str), Some(d.code));
+        assert_eq!(j.get("msg").and_then(Json::as_str), Some(d.msg.as_str()));
+        let chain = j.get("chain").and_then(Json::as_array).expect("chain is an array");
+        assert_eq!(chain.len(), d.chain.len());
+        for (hop, expect) in chain.iter().zip(&d.chain) {
+            assert_eq!(hop.as_str(), Some(expect.as_str()));
+        }
+    }
+}
+
+#[test]
+fn lint_binary_explains_hot_membership() {
+    let tree = FixtureTree::new("explain");
+    let exe = env!("CARGO_BIN_EXE_sfm_lint");
+    let root = tree.root.to_str().expect("utf8 tmp path");
+
+    let hot = std::process::Command::new(exe)
+        .args(["--root", root, "--explain", "helpers.rs::scratch"])
+        .output()
+        .expect("run sfm_lint --explain");
+    assert!(hot.status.success(), "{hot:?}");
+    let stdout = String::from_utf8_lossy(&hot.stdout);
+    assert!(stdout.contains("is hot"), "{stdout}");
+    assert!(stdout.contains("(root @1)"), "{stdout}");
+    assert!(stdout.contains("called at"), "{stdout}");
+
+    let cold = std::process::Command::new(exe)
+        .args(["--root", root, "--explain", "wire.rs::decode"])
+        .output()
+        .expect("run sfm_lint --explain on a cold fn");
+    assert!(cold.status.success(), "{cold:?}");
+    let stdout = String::from_utf8_lossy(&cold.stdout);
+    assert!(stdout.contains("not reachable from the hot root set"), "{stdout}");
+
+    let missing = std::process::Command::new(exe)
+        .args(["--root", root, "--explain", "nope.rs::zzz"])
+        .output()
+        .expect("run sfm_lint --explain on a missing fn");
+    assert_eq!(missing.status.code(), Some(2), "unknown fn is a usage error");
+}
+
+#[test]
+fn lint_binary_lists_rules_with_codes() {
+    let exe = env!("CARGO_BIN_EXE_sfm_lint");
+    let out = std::process::Command::new(exe)
+        .arg("--list-rules")
+        .output()
+        .expect("run sfm_lint --list-rules");
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for code in ["SFM001", "SFM002", "SFM003", "SFM004", "SFM005", "SFM006", "SFM007"] {
+        assert!(stdout.contains(code), "{stdout}");
+    }
+    assert!(stdout.contains("hot-path-alloc"), "{stdout}");
+    assert!(stdout.contains("boundary-coupling"), "{stdout}");
+}
+
+/// PR 7's manual per-body allowlist for `hot-path-alloc`, retired by
+/// the call-graph rewrite. The derived transitive hot set must cover
+/// every function that used to be listed by hand — otherwise the
+/// rewrite silently *narrowed* the rule.
+const RETIRED_PR7_ALLOWLIST: &[(&str, &[&str])] = &[
+    (
+        "src/linalg/vecops.rs",
+        &[
+            "dot",
+            "dot4",
+            "dot_gather4",
+            "norm2_sq",
+            "axpy",
+            "axpy4",
+            "add_assign4",
+            "sweep4",
+            "cover_gain4",
+            "relu_mac_col4",
+            "max_update_col4",
+            "argsort_desc_adaptive",
+            "argsort_desc_into",
+            "argsort_desc_remap",
+            "insertion_repair",
+            "project_indices",
+        ],
+    ),
+    ("src/linalg/cholesky.rs", &["push", "remove", "retain", "solve_into"]),
+    ("src/decompose/chain.rs", &["tv_prox_into"]),
+    ("src/solvers/pav.rs", &["run"]),
+    ("src/lovasz.rs", &["accumulate_pass"]),
+    ("src/submodular/kernel_cut.rs", &["prefix_gains_scratch"]),
+    (
+        "src/submodular/cut.rs",
+        &["prefix_gains_scratch", "chunked_adjacency_sum", "fold_partials"],
+    ),
+];
+
+#[test]
+fn derived_hot_set_covers_retired_pr7_allowlist() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let roots: Vec<PathBuf> = ["src", "tests", "benches"]
+        .iter()
+        .map(|s| manifest.join(s))
+        .filter(|p| p.is_dir())
+        .collect();
+    let files = collect_sources(&roots).expect("read repo sources");
+    let graph = CallGraph::build(&files);
+    let reach = hot_reach(&graph, &Config::default_for_repo());
+    for &(pat, fns) in RETIRED_PR7_ALLOWLIST {
+        for &name in fns {
+            let matches = graph.find(pat, name);
+            assert!(!matches.is_empty(), "{pat}::{name} no longer exists in the crate");
+            assert!(
+                matches.iter().any(|&i| reach.seen[i]),
+                "{pat}::{name} was on PR 7's manual allowlist but fell out of the \
+                 derived hot set — the transitive rewrite narrowed the rule",
+            );
+        }
+    }
+}
+
+#[test]
 fn repo_sources_are_lint_clean() {
     let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
-    let cfg = Config::default_for_repo();
-    let mut all = Vec::new();
-    for sub in ["src", "tests", "benches"] {
-        let (_, diags) = lint_tree(&manifest.join(sub), &cfg).expect("lint repo tree");
-        all.extend(diags);
-    }
+    let roots: Vec<PathBuf> = ["src", "tests", "benches"]
+        .iter()
+        .map(|s| manifest.join(s))
+        .filter(|p| p.is_dir())
+        .collect();
+    let files = collect_sources(&roots).expect("read repo sources");
+    let diags = lint_crate(&files, &Config::default_for_repo());
     assert!(
-        all.is_empty(),
+        diags.is_empty(),
         "repository sources must be lint-clean:\n{}",
-        all.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n"),
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n"),
     );
 }
